@@ -1,0 +1,54 @@
+//! End-to-end driver (the repo's flagship run): rank-adaptive DLRT on the
+//! paper's 5-layer 500-neuron fully-connected net, MNIST-shaped data.
+//!
+//! Regenerates the *shape* of Fig. 2 (per-layer rank evolution) and one row
+//! of Fig. 3 / Table 5 (accuracy vs compression). Real MNIST is used if
+//! `data/mnist/*-ubyte` exists; otherwise the synthetic renderer stands in
+//! (DESIGN.md §3).
+//!
+//! ```bash
+//! cargo run --release --example mnist_mlp -- --tau 0.15 --epochs 5
+//! DLRT_FULL=1 cargo run --release --example mnist_mlp   # paper-sized run
+//! ```
+
+use dlrt::config::{presets, DataSource};
+use dlrt::coordinator::experiments;
+use dlrt::coordinator::Trainer;
+use dlrt::util::cli::Args;
+
+fn main() -> dlrt::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let tau = args.get_f32("tau")?.unwrap_or(0.15);
+    let arch = args.get_or("arch", "mlp500").to_string();
+    let full = experiments::full_mode();
+    let epochs = args.get_usize("epochs")?.unwrap_or(if full { 30 } else { 12 });
+    let n_data = if full { 70_000 } else { 10_000 };
+
+    let mut cfg = presets::fig2_rank_evolution(tau);
+    cfg.arch = arch.clone();
+    cfg.epochs = epochs;
+    cfg.data = DataSource::Mnist { root: "data/mnist".into(), n_synth: n_data };
+    if let Some(r) = args.get_usize("init-rank")? {
+        cfg.init_rank = r;
+    }
+    println!("=== DLRT on {arch}: τ = {tau}, {epochs} epochs, {n_data} samples ===");
+
+    let mut trainer = Trainer::new(cfg)?;
+    let record = trainer.run(&format!("mnist_{arch}_tau{tau}"), |e| {
+        println!(
+            "epoch {:>3}: train loss {:.4} acc {:.3} | val loss {:.4} acc {:.3} | ranks {:?} | {:.1}s",
+            e.epoch, e.train_loss, e.train_acc, e.val_loss, e.val_acc, e.ranks, e.train_seconds
+        );
+    })?;
+
+    println!("\n--- rank evolution (Fig. 2 shape) ---");
+    for e in &record.epochs {
+        println!("epoch {:>3}: {:?}", e.epoch, e.ranks);
+    }
+    println!("\n{}", record.summary());
+    let out = format!("runs/mnist_{arch}_tau{tau}");
+    record.save_json(std::path::Path::new(&format!("{out}.json")))?;
+    record.save_epochs_csv(std::path::Path::new(&format!("{out}_epochs.csv")))?;
+    println!("records -> {out}.json / _epochs.csv");
+    Ok(())
+}

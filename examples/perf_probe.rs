@@ -1,0 +1,72 @@
+//! §Perf probe: per-phase wall-clock breakdown of one KLS training step
+//! across architectures and buckets — the L3 profile that drives the
+//! optimization log in EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! cargo run --release --example perf_probe -- --arch mlp500 --steps 5
+//! ```
+
+use dlrt::config::{presets, DataSource, Mode};
+use dlrt::coordinator::{ModelState, Trainer};
+use dlrt::data::Batcher;
+use dlrt::util::bench::{fmt_secs, Table};
+use dlrt::util::cli::Args;
+
+fn main() -> dlrt::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let archs: Vec<String> = match args.get("arch") {
+        Some(a) => vec![a.to_string()],
+        None => vec!["mlp500".into(), "lenet".into(), "mlp5120".into()],
+    };
+    let steps = args.get_usize("steps")?.unwrap_or(5);
+
+    let mut table = Table::new(&[
+        "arch", "mode", "kl graph", "host K/L (QR)", "s graph", "host S (SVD)", "total/step",
+    ]);
+    for arch in &archs {
+        for (mode, label) in [(Mode::AdaptiveDlrt, "adaptive"), (Mode::FixedDlrt, "fixed r=32")] {
+            let mut cfg = presets::quickstart();
+            cfg.arch = arch.clone();
+            cfg.mode = mode;
+            cfg.init_rank = 64;
+            cfg.fixed_rank = 32;
+            cfg.integrator = dlrt::config::Integrator::Adam;
+            cfg.lr = 0.001;
+            cfg.data = match arch.as_str() {
+                "vggs" | "alexs" => DataSource::SynthCifar { n: 1_500 },
+                "mlp_tiny" => DataSource::Toy { n: 1_500 },
+                _ => DataSource::Mnist { root: "data/mnist".into(), n_synth: 1_500 },
+            };
+            cfg.epochs = 1;
+            let mut t = Trainer::new(cfg)?;
+            let mut batcher = Batcher::new(t.split.train.len(), 256, false, 3);
+            let batches: Vec<_> = batcher.epoch(&t.split.train).collect();
+            let lr = 0.001;
+            if let ModelState::Kls(k) = &mut t.model {
+                // warmup (compiles executables)
+                k.step(&t.rt, &batches[0], lr)?;
+                let mut acc = dlrt::dlrt::StepTimings::default();
+                for batch in batches.iter().cycle().take(steps) {
+                    let st = k.step(&t.rt, batch, lr)?;
+                    acc.kl_graph_s += st.timings.kl_graph_s;
+                    acc.host_kl_s += st.timings.host_kl_s;
+                    acc.s_graph_s += st.timings.s_graph_s;
+                    acc.host_s_s += st.timings.host_s_s;
+                }
+                let n = steps as f64;
+                let total = (acc.kl_graph_s + acc.host_kl_s + acc.s_graph_s + acc.host_s_s) / n;
+                table.row(&[
+                    arch.clone(),
+                    label.into(),
+                    fmt_secs(acc.kl_graph_s / n),
+                    fmt_secs(acc.host_kl_s / n),
+                    fmt_secs(acc.s_graph_s / n),
+                    fmt_secs(acc.host_s_s / n),
+                    fmt_secs(total),
+                ]);
+            }
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Table 8: low-rank pruning of a trained dense net.
+//!
+//! 1. Train the 5-layer 784-neuron dense reference.
+//! 2. SVD-truncate every layer at rank r — accuracy collapses to ~chance
+//!    (the paper's point: low-rank winning tickets exist but raw truncation
+//!    does not find them).
+//! 3. Retrain the truncated factors with fixed-rank DLRT — accuracy
+//!    recovers to near the dense baseline.
+//!
+//! ```bash
+//! cargo run --release --example pruning -- --ranks 10,40,100
+//! DLRT_FULL=1 cargo run --release --example pruning
+//! ```
+
+use dlrt::coordinator::experiments;
+use dlrt::util::bench::Table;
+use dlrt::util::cli::Args;
+
+fn main() -> dlrt::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let full = experiments::full_mode();
+    let ranks: Vec<usize> = match args.get("ranks") {
+        Some(s) => s.split(',').map(|x| x.parse().expect("rank list")).collect(),
+        None if full => vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
+        None => vec![10, 40, 100],
+    };
+    let dense_epochs = args.get_usize("dense-epochs")?.unwrap_or(if full { 20 } else { 3 });
+    let retrain_epochs = args.get_usize("retrain-epochs")?.unwrap_or(if full { 10 } else { 2 });
+    let n_data = if full { 70_000 } else { 10_000 };
+
+    println!("=== Table 8: SVD prune vs DLRT retrain (784-net), ranks {ranks:?} ===");
+    let (dense_acc, rows) =
+        experiments::tab8_pruning(&ranks, dense_epochs, retrain_epochs, n_data)?;
+
+    let mut table = Table::new(&[
+        "ranks", "SVD acc", "retrained acc", "eval params", "c.r.",
+    ]);
+    for row in &rows {
+        table.row(&[
+            format!("[{0}, {0}, {0}, {0}, 10]", row.rank),
+            format!("{:.2}%", 100.0 * row.svd_acc),
+            format!("{:.2}%", 100.0 * row.retrained_acc),
+            row.eval_params.to_string(),
+            format!("{:.2}%", row.compression),
+        ]);
+    }
+    println!("\ndense baseline test accuracy: {:.2}%\n", 100.0 * dense_acc);
+    table.print();
+    println!(
+        "\npaper Table 8 shape: SVD column collapses to ~10%, retraining recovers to ≥95%"
+    );
+    Ok(())
+}

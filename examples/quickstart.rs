@@ -1,0 +1,32 @@
+//! Quickstart: train a tiny MLP with rank-adaptive DLRT end-to-end.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! What happens: the Rust coordinator loads the AOT-compiled JAX graphs
+//! from `artifacts/`, runs Algorithm 1 (K/L gradient steps through the
+//! compiled `kl_grads` graph, host-side QR + basis augmentation, `s_grads`
+//! S-step, SVD truncation at ϑ = τ‖Σ‖_F) on a 10-class toy task, and prints
+//! the rank trajectory and the final compression/accuracy. Expect ~100%
+//! test accuracy with the wide layers compressed to roughly half their
+//! full rank within seconds.
+
+use dlrt::config::presets;
+use dlrt::coordinator::Trainer;
+
+fn main() -> dlrt::Result<()> {
+    let cfg = presets::quickstart();
+    println!("config:\n{}", cfg.to_toml());
+    let mut trainer = Trainer::new(cfg)?;
+    let record = trainer.run("quickstart", |e| {
+        println!(
+            "epoch {:>2}: train loss {:.4} acc {:.3} | val acc {:.3} | ranks {:?}",
+            e.epoch, e.train_loss, e.train_acc, e.val_acc, e.ranks
+        );
+    })?;
+    println!("\n{}", record.summary());
+    record.save_json(std::path::Path::new("runs/quickstart.json"))?;
+    println!("record -> runs/quickstart.json");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig. 1 / Tables 3-4: training-batch and prediction wall-clock vs rank on
+//! the 5-layer 5120-neuron net, against the full-rank reference.
+//!
+//! The paper's claims are *shape* claims — cost scales linearly in r, and
+//! below a crossover rank DLRT beats dense training/prediction — which hold
+//! on any dense-linear-algebra backend (DESIGN.md §3).
+//!
+//! ```bash
+//! cargo run --release --example timing -- --ranks 16,64,256 --iters 3
+//! DLRT_FULL=1 cargo run --release --example timing
+//! ```
+
+use dlrt::coordinator::experiments;
+use dlrt::util::bench::{fmt_secs, Table};
+use dlrt::util::cli::Args;
+
+fn main() -> dlrt::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let full = experiments::full_mode();
+    let ranks: Vec<usize> = match args.get("ranks") {
+        Some(s) => s.split(',').map(|x| x.parse().expect("rank list")).collect(),
+        None if full => vec![8, 16, 32, 64, 128, 256, 512],
+        None => vec![16, 64, 256],
+    };
+    let iters = args.get_usize("iters")?.unwrap_or(if full { 10 } else { 2 });
+    let predict_iters = args.get_usize("predict-iters")?.unwrap_or(if full { 5 } else { 1 });
+    let n_pred = if full { 60_000 } else { 2_560 };
+    let arch = args.get_or("arch", "mlp5120").to_string();
+
+    println!("=== Fig. 1: timing vs rank on {arch} (batch 256, predict over {n_pred}) ===");
+    let rows = experiments::fig1_timing(&arch, &ranks, iters, predict_iters, n_pred)?;
+
+    let mut table = Table::new(&[
+        "config", "train s/batch", "±", "predict s/dataset", "±",
+    ]);
+    for row in &rows {
+        table.row(&[
+            row.label.clone(),
+            fmt_secs(row.train_batch.mean),
+            fmt_secs(row.train_batch.std),
+            fmt_secs(row.predict.mean),
+            fmt_secs(row.predict.std),
+        ]);
+    }
+    println!();
+    table.print();
+    println!("\npaper Tables 3-4 shape: linear in rank; crossover vs full-rank at moderate r");
+    Ok(())
+}

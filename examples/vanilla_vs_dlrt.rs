@@ -1,0 +1,54 @@
+//! Fig. 4: DLRT vs the vanilla two-factor `W = U Vᵀ` parameterization on
+//! LeNet5, with and without an exponentially-decaying initial spectrum.
+//!
+//! The vanilla factorization's conditioning degrades as `1/σ_min` (the
+//! curvature of the low-rank manifold), so the "decay" initialization
+//! cripples its convergence while DLRT — whose error constants are
+//! independent of the singular values (Thm 1) — is unaffected.
+//!
+//! ```bash
+//! cargo run --release --example vanilla_vs_dlrt -- --rank 16 --steps 30
+//! ```
+
+use dlrt::coordinator::experiments;
+use dlrt::util::cli::Args;
+use std::io::Write;
+
+fn main() -> dlrt::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let full = experiments::full_mode();
+    let rank = args.get_usize("rank")?.unwrap_or(16);
+    let steps = args.get_usize("steps")?.unwrap_or(if full { 400 } else { 25 });
+    let n_data = if full { 70_000 } else { 6_000 };
+
+    println!("=== Fig. 4: DLRT vs vanilla UVᵀ on LeNet5 (rank {rank}, {steps} steps) ===");
+    let curves = experiments::fig4_curves(rank, steps, n_data)?;
+
+    // console sparkline-ish dump + CSV
+    std::fs::create_dir_all("runs")?;
+    let mut csv = std::fs::File::create("runs/fig4_curves.csv")?;
+    write!(csv, "step")?;
+    for c in &curves {
+        write!(csv, ",{}", c.label.replace(',', ";"))?;
+    }
+    writeln!(csv)?;
+    for i in 0..steps {
+        write!(csv, "{i}")?;
+        for c in &curves {
+            write!(csv, ",{:.6}", c.losses[i])?;
+        }
+        writeln!(csv)?;
+    }
+    for c in &curves {
+        let first = c.losses.first().copied().unwrap_or(0.0);
+        let last = c.losses.last().copied().unwrap_or(0.0);
+        let mid = c.losses[c.losses.len() / 2];
+        println!(
+            "{:<22} loss: start {first:.4} -> mid {mid:.4} -> end {last:.4}",
+            c.label
+        );
+    }
+    println!("\ncurves -> runs/fig4_curves.csv");
+    println!("paper Fig. 4 shape: DLRT converges fastest; vanilla with decayed spectrum slowest");
+    Ok(())
+}

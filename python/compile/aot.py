@@ -1,0 +1,153 @@
+"""AOT lowering: every (arch × graph × bucket) tuple -> artifacts/*.hlo.txt.
+
+Run once at build time (``make artifacts``); the Rust coordinator then loads
+the HLO text through the PJRT C API and Python never runs again.
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the HLO files a ``manifest.json`` records, for every artifact, the
+exact ordered input/output names, shapes and dtypes — the packing contract
+``rust/src/runtime`` validates against at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from .model import ARCHS, GRAPH_BUILDERS, Arch, Conv, Dense
+
+# ----------------------------------------------------------- artifact matrix
+#
+# Which graphs get compiled for which architecture, at which buckets, which
+# batch size and which kernel backend. The "pallas" entries are the L1
+# validation set (DESIGN.md §2, kernel-backend policy); "jnp" entries are the
+# production experiment set.
+
+LOWRANK_GRAPHS = ("forward", "kl_grads", "s_grads")
+DENSE_GRAPHS = ("dense_grads", "dense_forward")
+
+ARTIFACT_SETS = [
+    # (arch, backend, batch, buckets, graphs)
+    ("mlp_tiny", "jnp", 32, [4, 8, 16, 32],
+     LOWRANK_GRAPHS + ("vanilla_grads",) + DENSE_GRAPHS),
+    ("mlp_tiny", "pallas", 32, [4, 8, 16], LOWRANK_GRAPHS),
+    ("mlp500", "jnp", 256, [8, 16, 32, 64, 128, 256, 512],
+     LOWRANK_GRAPHS + ("vanilla_grads",) + DENSE_GRAPHS),
+    ("mlp784", "jnp", 256, [8, 16, 32, 64, 128, 256, 512],
+     LOWRANK_GRAPHS + ("vanilla_grads",) + DENSE_GRAPHS),
+    ("mlp5120", "jnp", 256, [8, 16, 32, 64, 128, 256, 512],
+     LOWRANK_GRAPHS + DENSE_GRAPHS),
+    ("lenet", "jnp", 256, [4, 8, 16, 32, 64],
+     LOWRANK_GRAPHS + ("vanilla_grads",) + DENSE_GRAPHS),
+    ("vggs", "jnp", 256, [8, 16, 32, 64, 128], LOWRANK_GRAPHS + DENSE_GRAPHS),
+    ("alexs", "jnp", 256, [8, 16, 32, 64, 128], LOWRANK_GRAPHS + DENSE_GRAPHS),
+]
+
+
+def to_hlo_text(fn, input_specs) -> str:
+    """jit -> stablehlo -> XlaComputation -> HLO text (see module doc)."""
+    lowered = jax.jit(fn).lower(*input_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def artifact_name(arch: str, graph: str, bucket: int, batch: int,
+                  backend: str) -> str:
+    if graph.startswith("dense"):
+        return f"{arch}_{graph}_B{batch}_{backend}"
+    return f"{arch}_{graph}_b{bucket}_B{batch}_{backend}"
+
+
+def arch_manifest(arch: Arch) -> dict:
+    layers = []
+    for l in arch.layers:
+        if isinstance(l, Conv):
+            layers.append({
+                "kind": "conv", "m": l.matrix_shape[0], "n": l.matrix_shape[1],
+                "in_ch": l.in_ch, "out_ch": l.out_ch, "ksize": l.ksize,
+                "in_h": l.in_h, "in_w": l.in_w, "pool": l.pool,
+                "out_h": l.out_h, "out_w": l.out_w,
+            })
+        else:
+            layers.append({"kind": "dense", "m": l.n_out, "n": l.n_in})
+    return {
+        "layers": layers,
+        "input_dim": arch.input_dim,
+        "num_classes": arch.num_classes,
+        "image_hwc": list(arch.image_hwc) if arch.image_hwc else None,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only-arch", default=None,
+                    help="comma-separated arch filter (e.g. mlp_tiny,mlp500)")
+    ap.add_argument("--only-graph", default=None,
+                    help="comma-separated graph filter")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt already exists")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    arch_filter = set(args.only_arch.split(",")) if args.only_arch else None
+    graph_filter = set(args.only_graph.split(",")) if args.only_graph else None
+
+    manifest = {"version": 1, "archs": {}, "artifacts": []}
+    n_lowered = n_cached = 0
+    t_start = time.time()
+
+    for arch_name, backend, batch, buckets, graphs in ARTIFACT_SETS:
+        if arch_filter and arch_name not in arch_filter:
+            continue
+        arch = ARCHS[arch_name]
+        manifest["archs"].setdefault(arch_name, arch_manifest(arch))
+        for graph in graphs:
+            if graph_filter and graph not in graph_filter:
+                continue
+            # dense graphs are bucket-independent: lower once
+            graph_buckets = [0] if graph.startswith("dense") else buckets
+            for bucket in graph_buckets:
+                name = artifact_name(arch_name, graph, bucket, batch, backend)
+                path = outdir / f"{name}.hlo.txt"
+                fn, spec = GRAPH_BUILDERS[graph](arch, bucket, batch, backend)
+                entry = {
+                    "name": name, "file": path.name, "arch": arch_name,
+                    "graph": graph, "bucket": bucket, "batch": batch,
+                    "backend": backend,
+                    "inputs": spec.inputs, "outputs": spec.outputs,
+                }
+                manifest["artifacts"].append(entry)
+                if path.exists() and not args.force:
+                    n_cached += 1
+                    continue
+                t0 = time.time()
+                text = to_hlo_text(fn, spec.input_shapes())
+                path.write_text(text)
+                n_lowered += 1
+                print(f"[aot] {name}: {len(text)/1024:.0f} KiB "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] done: {n_lowered} lowered, {n_cached} cached, "
+          f"{len(manifest['artifacts'])} total in {time.time()-t_start:.0f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for DLRT (interpret=True; see module docs)."""
+
+from .matmul import matmul, vmem_bytes
+from .lowrank import apply_kform, apply_sform, project_grad
+
+__all__ = [
+    "matmul",
+    "vmem_bytes",
+    "apply_kform",
+    "apply_sform",
+    "project_grad",
+]

@@ -1,0 +1,110 @@
+"""Fused low-rank layer kernels (L1) with Pallas forward *and* backward.
+
+These are the compute hot-spots of DLRT (paper §4.2): every K/L/S training
+step evaluates the network with one layer parameterization swapped in, and
+tapes gradients with respect to the low-rank factors only — the full matrix
+``W = U S Vᵀ`` is never materialized.
+
+Three fused ops, all built on the tiled Pallas matmul and wired with
+``jax.custom_vjp`` so the backward pass also runs through L1 kernels:
+
+* ``apply_kform(z, K, V, b)``  ->  ``(z V) Kᵀ + b``      (K-step forward)
+* ``apply_sform(z, U, S, V, b)`` -> ``((z V) Sᵀ) Uᵀ + b`` (S-step / inference)
+* ``project_grad(U, G, V)``    ->  ``Uᵀ G V``             (Galerkin projection)
+
+Row-major batch convention: ``z`` is ``(B, n_in)`` and ``W z`` in the paper
+is ``z @ Wᵀ`` here, hence the transposed factor order.
+
+The L-step needs no extra op: with ``W = U Lᵀ`` the layer map is
+``z L Uᵀ + b`` which is exactly ``apply_kform(z, K=U, V=L, b)``.
+
+Gradient identities implemented in the VJPs (paper §6.5):
+    ∂K = gᵀ (z V)            ∂L-form analogous by symmetry
+    ∂S = (z V)ᵀ (g U)
+    ∂U = gᵀ ((z V) Sᵀ)
+    ∂V = zᵀ (g K)  resp.  zᵀ ((g U) S)
+    ∂z = (g K) Vᵀ  resp.  ((g U) S) Vᵀ
+    ∂b = Σ_batch g
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+# --------------------------------------------------------------------------
+# K-form: y = (z @ V) @ K.T + b     (also serves the L-step, see module doc)
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def apply_kform(z: jax.Array, K: jax.Array, V: jax.Array,
+                b: jax.Array) -> jax.Array:
+    """Low-rank affine map with ``W = K Vᵀ``. z:(B,n) K:(m,r) V:(n,r) b:(m,)."""
+    proj = matmul(z, V)               # (B, r)  rank-r bottleneck
+    return matmul(proj, K.T) + b[None, :]
+
+
+def _kform_fwd(z, K, V, b):
+    proj = matmul(z, V)
+    y = matmul(proj, K.T) + b[None, :]
+    return y, (z, K, V, proj)
+
+
+def _kform_bwd(res, g):
+    z, K, V, proj = res
+    dK = matmul(g.T, proj)            # (m, r)
+    gK = matmul(g, K)                 # (B, r)
+    dz = matmul(gK, V.T)              # (B, n)
+    dV = matmul(z.T, gK)              # (n, r)
+    db = jnp.sum(g, axis=0)
+    return dz, dK, dV, db
+
+
+apply_kform.defvjp(_kform_fwd, _kform_bwd)
+
+
+# --------------------------------------------------------------------------
+# S-form: y = ((z @ V) @ S.T) @ U.T + b   (S-step training + inference path)
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def apply_sform(z: jax.Array, U: jax.Array, S: jax.Array, V: jax.Array,
+                b: jax.Array) -> jax.Array:
+    """Low-rank affine map with ``W = U S Vᵀ``. U:(m,r) S:(r,r) V:(n,r)."""
+    p1 = matmul(z, V)                 # (B, r)
+    p2 = matmul(p1, S.T)              # (B, r)
+    return matmul(p2, U.T) + b[None, :]
+
+
+def _sform_fwd(z, U, S, V, b):
+    p1 = matmul(z, V)
+    p2 = matmul(p1, S.T)
+    y = matmul(p2, U.T) + b[None, :]
+    return y, (z, U, S, V, p1, p2)
+
+
+def _sform_bwd(res, g):
+    z, U, S, V, p1, p2 = res
+    gU = matmul(g, U)                 # (B, r)
+    dU = matmul(g.T, p2)              # (m, r)
+    dS = matmul(p1.T, gU).T           # (r, r):  dS = (p1ᵀ gU)ᵀ = gUᵀ p1
+    dp1 = matmul(gU, S)               # (B, r)
+    dz = matmul(dp1, V.T)             # (B, n)
+    dV = matmul(z.T, dp1)             # (n, r)
+    db = jnp.sum(g, axis=0)
+    return dz, dU, dS, dV, db
+
+
+apply_sform.defvjp(_sform_fwd, _sform_bwd)
+
+
+# --------------------------------------------------------------------------
+# Galerkin projection of a full gradient onto the current bases
+# --------------------------------------------------------------------------
+
+def project_grad(U: jax.Array, G: jax.Array, V: jax.Array) -> jax.Array:
+    """``Uᵀ G V`` — the S-equation right-hand side of the DLRA system (6)."""
+    return matmul(matmul(U.T, G), V)

@@ -1,0 +1,102 @@
+"""Tiled Pallas matmul — the L1 building block of every DLRT compute graph.
+
+TPU-minded design, executed with ``interpret=True`` (the CPU PJRT client
+cannot run Mosaic custom-calls, see /opt/xla-example/README.md):
+
+* blocks are MXU-shaped (multiples of 128 where the operand allows it) so
+  the same kernel lowers efficiently on a real TPU;
+* the K reduction runs as the innermost grid dimension with an f32 VMEM
+  accumulator initialized under ``pl.when`` — the canonical Pallas matmul
+  schedule (HBM->VMEM double-buffering is implied by the grid + BlockSpec);
+* operands are zero-padded up to block multiples by the host wrapper so the
+  kernel body never masks. Zero padding is exact for matmul.
+
+The DLRT low-rank hot path is a chain of *skinny* matmuls
+``(B,n)x(n,r) -> (B,r)x(r,m)`` with ``r << n,m``; the rank-r intermediate
+stays VMEM-resident (r<=512 => <0.5 MB per 256-row batch tile, far below
+the ~16 MB VMEM budget). DESIGN.md §Hardware-Adaptation discusses the
+mapping from the paper's CUDA view to this schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest MXU-friendly block not exceeding the (padded) dimension."""
+    if dim >= preferred:
+        return preferred
+    # small dims: round up to the next power of two (min 8) so grids stay tiny
+    b = 8
+    while b < dim:
+        b *= 2
+    return b
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid = (M/bm, N/bn, K/bk); the K axis is innermost (sequential)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bk: int = 128,
+           bn: int = 128) -> jax.Array:
+    """``x @ y`` via the tiled Pallas kernel. x: (M,K), y: (K,N) -> (M,N)."""
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm_ = _pick_block(m, bm)
+    bk_ = _pick_block(k, bk)
+    bn_ = _pick_block(n, bn)
+    mp, kp, np_ = _ceil_to(m, bm_), _ceil_to(k, bk_), _ceil_to(n, bn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+    n_k = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm_, np_ // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (x tile + y tile + out + acc).
+
+    Used by the §Perf roofline estimate in EXPERIMENTS.md; the doubled
+    in/out tiles model Pallas' implicit double buffering.
+    """
+    return 2 * (bm * bk + bk * bn) * dtype_bytes + bm * bn * dtype_bytes + bm * bn * 4

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in :mod:`compile.kernels` must match these references to
+float tolerance; pytest + hypothesis sweep shapes and dtypes against them
+(``python/tests/test_kernel.py``). Keep these boring and obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x, y)
+
+
+def apply_kform_ref(z, K, V, b):
+    """(z V) Kᵀ + b, computed densely: z @ (K Vᵀ)ᵀ + b."""
+    W = K @ V.T
+    return z @ W.T + b[None, :]
+
+
+def apply_sform_ref(z, U, S, V, b):
+    W = U @ S @ V.T
+    return z @ W.T + b[None, :]
+
+
+def project_grad_ref(U, G, V):
+    return U.T @ G @ V
+
+
+def mlp_forward_ref(weights, biases, x, activation=jax.nn.relu):
+    """Dense reference forward: z_{k+1} = σ(W z + b); logits on last layer."""
+    z = x
+    n = len(weights)
+    for i, (W, b) in enumerate(zip(weights, biases)):
+        z = z @ W.T + b[None, :]
+        if i < n - 1:
+            z = activation(z)
+    return z
+
+
+def softmax_xent_ref(logits, labels, weights):
+    """Weighted mean softmax cross-entropy with integer labels.
+
+    ``weights`` masks padded rows of the final partial batch (see
+    DESIGN.md §2 — eval batches are padded to the compiled batch size).
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)

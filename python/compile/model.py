@@ -1,0 +1,533 @@
+"""L2: DLRT network definitions and training-step compute graphs.
+
+Every graph the Rust coordinator executes is defined here and lowered AOT by
+:mod:`compile.aot`. Python never runs on the training path.
+
+Graph families (per architecture × rank bucket; see DESIGN.md §2):
+
+* ``forward``        — S-form inference: logits, weighted loss, #correct.
+* ``kl_grads``       — K-step & L-step gradients for *all* layers in two
+                       backward passes (the K/L identity of DESIGN.md §4).
+* ``s_grads``        — S-step gradients (∂S, ∂bias) on the (augmented) bases.
+* ``dense_grads`` /
+  ``dense_forward``  — full-rank reference trainer (baseline of every table).
+* ``vanilla_grads``  — two-factor ``W = U Vᵀ`` baseline [Wang+21, Khodak+21]
+                       whose ill-conditioning Fig. 4 demonstrates.
+
+Rank buckets: a graph compiled at bucket ``b`` carries per-layer factor slots
+of width ``b_k = min(b, n_in, n_out)``. The host zero-pads factors into the
+slots; zero columns are exactly inert in forward values *and* gradients, so
+bucketed execution is bit-for-bit the true-rank computation (tested in
+``python/tests`` and in Rust integration tests).
+
+Convolutions are trained on the low-rank *matrix* manifold by flattening the
+kernel tensor ``(F,C,J,K) -> (F, CJK)`` and applying it to im2col patches —
+paper §6.6, same reshaping as [Idelbayev & Carreira-Perpiñán 2020].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import apply_kform, apply_sform
+
+
+# ============================================================= architectures
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Fully-connected layer mapping n_in -> n_out (low-rank trainable)."""
+    n_in: int
+    n_out: int
+
+    @property
+    def matrix_shape(self) -> Tuple[int, int]:
+        return (self.n_out, self.n_in)
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """Valid-padding conv + optional 2x2 maxpool, trained as an
+    ``(out_ch, in_ch*k*k)`` low-rank matrix over im2col patches (§6.6)."""
+    in_ch: int
+    out_ch: int
+    ksize: int
+    in_h: int
+    in_w: int
+    pool: bool = True
+
+    @property
+    def out_h(self) -> int:
+        h = self.in_h - self.ksize + 1
+        return h // 2 if self.pool else h
+
+    @property
+    def out_w(self) -> int:
+        w = self.in_w - self.ksize + 1
+        return w // 2 if self.pool else w
+
+    @property
+    def matrix_shape(self) -> Tuple[int, int]:
+        return (self.out_ch, self.in_ch * self.ksize * self.ksize)
+
+
+Layer = object  # Dense | Conv
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    layers: Tuple[Layer, ...]
+    input_dim: int          # flat input size fed by the host
+    num_classes: int
+    image_hwc: Tuple[int, int, int] | None = None  # set for conv nets
+
+    def matrix_shapes(self) -> List[Tuple[int, int]]:
+        return [l.matrix_shape for l in self.layers]
+
+    def slot(self, k: int, bucket: int) -> int:
+        """Factor-slot width of layer k at this bucket (capped at min dim)."""
+        m, n = self.layers[k].matrix_shape
+        return min(bucket, m, n)
+
+
+def mlp(name: str, dims: Sequence[int]) -> Arch:
+    layers = tuple(Dense(dims[i], dims[i + 1]) for i in range(len(dims) - 1))
+    return Arch(name, layers, dims[0], dims[-1])
+
+
+def lenet() -> Arch:
+    """LeNet5 (Caffe variant) as in paper §5.1 Table 1: ranks [20,50,500,10],
+    430.5K full-rank params: conv(1→20,5), pool, conv(20→50,5), pool,
+    fc(800→500), fc(500→10)."""
+    c1 = Conv(1, 20, 5, 28, 28, pool=True)    # -> 12x12x20
+    c2 = Conv(20, 50, 5, 12, 12, pool=True)   # -> 4x4x50 = 800
+    return Arch("lenet", (c1, c2, Dense(800, 500), Dense(500, 10)),
+                28 * 28 * 1, 10, image_hwc=(28, 28, 1))
+
+
+def vggs() -> Arch:
+    """Scaled VGG-style net for 32x32x3 (Table 2 Cifar10 substitution,
+    DESIGN.md §3): three conv blocks + two FC heads."""
+    c1 = Conv(3, 32, 3, 32, 32, pool=True)    # -> 15x15x32
+    c2 = Conv(32, 64, 3, 15, 15, pool=True)   # -> 6x6x64
+    c3 = Conv(64, 128, 3, 6, 6, pool=True)    # -> 2x2x128 = 512
+    return Arch("vggs", (c1, c2, c3, Dense(512, 256), Dense(256, 10)),
+                32 * 32 * 3, 10, image_hwc=(32, 32, 3))
+
+
+def alexs() -> Arch:
+    """Scaled AlexNet-style net for 32x32x3 (Table 2 substitution): two
+    big-kernel convs + wide FC layers (AlexNet's params live in the FCs)."""
+    c1 = Conv(3, 48, 5, 32, 32, pool=True)    # -> 14x14x48
+    c2 = Conv(48, 96, 5, 14, 14, pool=True)   # -> 5x5x96 = 2400
+    return Arch("alexs", (c1, c2, Dense(2400, 1024), Dense(1024, 10)),
+                32 * 32 * 3, 10, image_hwc=(32, 32, 3))
+
+
+ARCHS = {
+    "mlp_tiny": mlp("mlp_tiny", [64, 32, 32, 10]),
+    "mlp500": mlp("mlp500", [784, 500, 500, 500, 500, 10]),
+    "mlp784": mlp("mlp784", [784, 784, 784, 784, 784, 10]),
+    "mlp5120": mlp("mlp5120", [784, 5120, 5120, 5120, 5120, 10]),
+    "lenet": lenet(),
+    "vggs": vggs(),
+    "alexs": alexs(),
+}
+
+
+# ============================================================ forward engine
+
+def _affine_jnp(z, Wt_parts, b):
+    """z @ (product of parts) + b where parts are already transposed right."""
+    for p in Wt_parts:
+        z = z @ p
+    return z + b[None, :]
+
+
+def _layer_apply(backend: str, form: str, params, z):
+    """Apply one low-rank layer in the given parameterization.
+
+    form='k': params=(K, V)      W = K Vᵀ      y = z V Kᵀ + b
+    form='s': params=(U, S, V)   W = U S Vᵀ    y = z V Sᵀ Uᵀ + b
+    form='w': params=(W,)        dense         y = z Wᵀ + b
+    """
+    b = params[-1]
+    if form == "w":
+        (W,) = params[:-1]
+        return z @ W.T + b[None, :]
+    if backend == "pallas":
+        if form == "k":
+            K, V = params[:-1]
+            return apply_kform(z, K, V, b)
+        U, S, V = params[:-1]
+        return apply_sform(z, U, S, V, b)
+    if form == "k":
+        K, V = params[:-1]
+        return _affine_jnp(z, [V, K.T], b)
+    U, S, V = params[:-1]
+    return _affine_jnp(z, [V, S.T, U.T], b)
+
+
+def _unfold(z_img: jax.Array, conv: Conv) -> jax.Array:
+    """im2col: (B,H,W,C) -> (B*L, C*J*K) patches, valid padding, stride 1.
+
+    Feature order is channel-major (c,j,k) to match the kernel reshape
+    ``(F,C,J,K) -> (F,CJK)`` used by the Rust factor initialiser.
+    """
+    B = z_img.shape[0]
+    nchw = jnp.transpose(z_img, (0, 3, 1, 2))
+    patches = jax.lax.conv_general_dilated_patches(
+        nchw, (conv.ksize, conv.ksize), (1, 1), "VALID")
+    # patches: (B, C*J*K, H', W')
+    hp = conv.in_h - conv.ksize + 1
+    wp = conv.in_w - conv.ksize + 1
+    patches = jnp.transpose(patches, (0, 2, 3, 1))       # (B, H', W', CJK)
+    return patches.reshape(B * hp * wp, -1), (B, hp, wp)
+
+
+def _conv_apply(backend: str, form: str, params, z_img, conv: Conv):
+    """Low-rank conv layer: materialize the (tiny) kernel from the factors
+    and run a native convolution.
+
+    §Perf iteration 3 (L2): the paper's im2col formulation (§6.6) lowered to
+    gather/scatter-heavy HLO on CPU (~3.3 s per LeNet kl_grads call). The
+    identity ``W^resh · unfold(x) == conv(x, reshape(W^resh))`` lets us keep
+    the *training* math on the low-rank matrix manifold while executing the
+    layer as `lax.conv_general_dilated` (the fused fast path; 5-10x faster,
+    gradients flow through the kernel reconstruction into the factors).
+    Equivalence vs the im2col path is asserted in python/tests/test_model.py.
+
+    Conv kernels are small (≤ 0.4 MB here) so transiently materializing
+    `W^resh (F x CJK)` does not change the memory story the paper tells —
+    activations, not kernels, dominate conv-layer memory.
+    """
+    b = params[-1]
+    if form == "w":
+        (W,) = params[:-1]
+        wresh = W
+    elif form == "k":
+        K, V = params[:-1]
+        wresh = K @ V.T
+    else:
+        U, S, V = params[:-1]
+        wresh = U @ (S @ V.T)
+    # (F, C*J*K) -> OIHW kernel
+    kernel = wresh.reshape(conv.out_ch, conv.in_ch, conv.ksize, conv.ksize)
+    nchw = jnp.transpose(z_img, (0, 3, 1, 2))
+    out = jax.lax.conv_general_dilated(
+        nchw, kernel, (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    out = jnp.transpose(out, (0, 2, 3, 1))               # (B, H', W', F)
+    return out + b[None, None, None, :]
+
+
+def _maxpool2(z_img: jax.Array) -> jax.Array:
+    """2x2 max-pool, stride 2, NHWC (drops trailing odd row/col like torch)."""
+    return jax.lax.reduce_window(
+        z_img, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def network_forward(arch: Arch, backend: str, form: str,
+                    layer_params: Sequence, x: jax.Array) -> jax.Array:
+    """Run the whole network with every trainable matrix in ``form``.
+
+    ``layer_params[k]`` is the parameter tuple for layer k (incl. bias last).
+    Hidden activations are ReLU; the output layer emits raw logits (softmax
+    lives inside the loss).
+    """
+    B = x.shape[0]
+    n_layers = len(arch.layers)
+    if arch.image_hwc is not None:
+        h, w, c = arch.image_hwc
+        z = x.reshape(B, h, w, c)
+    else:
+        z = x
+    for k, layer in enumerate(arch.layers):
+        last = k == n_layers - 1
+        if isinstance(layer, Conv):
+            z = _conv_apply(backend, form, layer_params[k], z, layer)
+            z = jax.nn.relu(z)
+            if layer.pool:
+                z = _maxpool2(z)
+        else:
+            if z.ndim == 4:
+                z = z.reshape(B, -1)
+            z = _layer_apply(backend, form, layer_params[k], z)
+            if not last:
+                z = jax.nn.relu(z)
+    return z
+
+
+# ================================================================== the loss
+
+def weighted_xent(logits, labels, weights):
+    """Weighted-mean softmax CE; weights mask padded rows (DESIGN.md §2)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def ncorrect(logits, labels, weights):
+    pred = jnp.argmax(logits, axis=-1).astype(labels.dtype)
+    return jnp.sum(weights * (pred == labels).astype(jnp.float32))
+
+
+# ==================================================== graph builders (+specs)
+
+class IOSpec:
+    """Ordered input/output descriptions for one artifact — the contract the
+    Rust runtime packs literals against (serialized into manifest.json)."""
+
+    def __init__(self):
+        self.inputs: List[dict] = []
+        self.outputs: List[dict] = []
+
+    def inp(self, name: str, shape: Tuple[int, ...], dtype: str = "f32"):
+        self.inputs.append({"name": name, "shape": list(shape), "dtype": dtype})
+
+    def out(self, name: str, shape: Tuple[int, ...], dtype: str = "f32"):
+        self.outputs.append({"name": name, "shape": list(shape), "dtype": dtype})
+
+    def input_shapes(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}
+        return [jax.ShapeDtypeStruct(tuple(i["shape"]), dt[i["dtype"]])
+                for i in self.inputs]
+
+
+def _factor_inputs(spec: IOSpec, arch: Arch, bucket: int, names=("U", "S", "V")):
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        if "U" in names:
+            spec.inp(f"layer{k}/U", (m, r))
+        if "S" in names:
+            spec.inp(f"layer{k}/S", (r, r))
+        if "V" in names:
+            spec.inp(f"layer{k}/V", (n, r))
+        spec.inp(f"layer{k}/b", (m,))
+
+
+def _batch_inputs(spec: IOSpec, arch: Arch, batch: int, with_labels=True):
+    spec.inp("x", (batch, arch.input_dim))
+    if with_labels:
+        spec.inp("y", (batch,), "i32")
+        spec.inp("w", (batch,))
+
+
+def build_forward(arch: Arch, bucket: int, batch: int, backend: str):
+    """S-form inference graph: (factors..., x, y, w) -> (logits, loss, ncorrect)."""
+    spec = IOSpec()
+    _factor_inputs(spec, arch, bucket)
+    _batch_inputs(spec, arch, batch)
+    spec.out("logits", (batch, arch.num_classes))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+    L = len(arch.layers)
+
+    def fn(*flat):
+        ps = [tuple(flat[4 * k: 4 * k + 4]) for k in range(L)]
+        x, y, w = flat[4 * L:]
+        logits = network_forward(arch, backend, "s", ps, x)
+        return (logits, weighted_xent(logits, y, w), ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+def build_kl_grads(arch: Arch, bucket: int, batch: int, backend: str):
+    """K&L-step gradients for all layers (two taped forwards, paper §4.2).
+
+    Inputs:  per layer (U, S, V, b), then x, y, w.
+    Outputs: per layer dK, per layer dL, then loss, ncorrect.
+    The host forms K⁰=US, L⁰=VSᵀ itself? No — the graph does it (cheap r×r
+    matmuls) so the host ships factors once and reads only gradients back.
+    """
+    spec = IOSpec()
+    _factor_inputs(spec, arch, bucket)
+    _batch_inputs(spec, arch, batch)
+    L = len(arch.layers)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        spec.out(f"layer{k}/dK", (m, r))
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        spec.out(f"layer{k}/dL", (n, r))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+
+    def fn(*flat):
+        Us = [flat[4 * k + 0] for k in range(L)]
+        Ss = [flat[4 * k + 1] for k in range(L)]
+        Vs = [flat[4 * k + 2] for k in range(L)]
+        bs = [flat[4 * k + 3] for k in range(L)]
+        x, y, w = flat[4 * L:]
+        Ks = [U @ S for U, S in zip(Us, Ss)]
+        Ls = [V @ S.T for V, S in zip(Vs, Ss)]
+
+        def loss_k(Ks_):
+            ps = [(K, V, b) for K, V, b in zip(Ks_, Vs, bs)]
+            logits = network_forward(arch, backend, "k", ps, x)
+            return weighted_xent(logits, y, w), logits
+
+        def loss_l(Ls_):
+            # W = U Lᵀ: the layer map z ↦ z L Uᵀ is K-form with (K=U, V=L).
+            ps = [(U, Lk, b) for U, Lk, b in zip(Us, Ls_, bs)]
+            logits = network_forward(arch, backend, "k", ps, x)
+            return weighted_xent(logits, y, w)
+
+        (lossv, logits), dKs = jax.value_and_grad(loss_k, has_aux=True)(Ks)
+        dLs = jax.grad(loss_l)(Ls)
+        return (*dKs, *dLs, lossv, ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+def build_s_grads(arch: Arch, bucket: int, batch: int, backend: str):
+    """S-step gradients on the (augmented) bases: ∂S and ∂b per layer.
+
+    In adaptive mode the host calls this at the bucket covering the augmented
+    rank 2r (DESIGN.md §2); in fixed-rank mode at the layer's own bucket.
+    """
+    spec = IOSpec()
+    _factor_inputs(spec, arch, bucket)
+    _batch_inputs(spec, arch, batch)
+    L = len(arch.layers)
+    for k in range(L):
+        r = arch.slot(k, bucket)
+        spec.out(f"layer{k}/dS", (r, r))
+    for k, layer in enumerate(arch.layers):
+        spec.out(f"layer{k}/db", (layer.matrix_shape[0],))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+
+    def fn(*flat):
+        Us = [flat[4 * k + 0] for k in range(L)]
+        Ss = [flat[4 * k + 1] for k in range(L)]
+        Vs = [flat[4 * k + 2] for k in range(L)]
+        bs = [flat[4 * k + 3] for k in range(L)]
+        x, y, w = flat[4 * L:]
+
+        def loss_s(Ss_, bs_):
+            ps = [(U, S, V, b) for U, S, V, b in zip(Us, Ss_, Vs, bs_)]
+            logits = network_forward(arch, backend, "s", ps, x)
+            return weighted_xent(logits, y, w), logits
+
+        ((lossv, logits), (dSs, dbs)) = jax.value_and_grad(
+            loss_s, argnums=(0, 1), has_aux=True)(Ss, bs)
+        return (*dSs, *dbs, lossv, ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+def build_dense_grads(arch: Arch, batch: int, backend: str):
+    """Full-rank reference trainer: (W..., b..., x, y, w) -> (dW..., db..., loss, nc)."""
+    spec = IOSpec()
+    L = len(arch.layers)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        spec.inp(f"layer{k}/W", (m, n))
+        spec.inp(f"layer{k}/b", (m,))
+    _batch_inputs(spec, arch, batch)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        spec.out(f"layer{k}/dW", (m, n))
+    for k, layer in enumerate(arch.layers):
+        spec.out(f"layer{k}/db", (layer.matrix_shape[0],))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+
+    def fn(*flat):
+        Ws = [flat[2 * k] for k in range(L)]
+        bs = [flat[2 * k + 1] for k in range(L)]
+        x, y, w = flat[2 * L:]
+
+        def loss_w(Ws_, bs_):
+            ps = [(W, b) for W, b in zip(Ws_, bs_)]
+            logits = network_forward(arch, backend, "w", ps, x)
+            return weighted_xent(logits, y, w), logits
+
+        ((lossv, logits), (dWs, dbs)) = jax.value_and_grad(
+            loss_w, argnums=(0, 1), has_aux=True)(Ws, bs)
+        return (*dWs, *dbs, lossv, ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+def build_dense_forward(arch: Arch, batch: int, backend: str):
+    spec = IOSpec()
+    L = len(arch.layers)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        spec.inp(f"layer{k}/W", (m, n))
+        spec.inp(f"layer{k}/b", (m,))
+    _batch_inputs(spec, arch, batch)
+    spec.out("logits", (batch, arch.num_classes))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+
+    def fn(*flat):
+        ps = [tuple(flat[2 * k: 2 * k + 2]) for k in range(L)]
+        x, y, w = flat[2 * L:]
+        logits = network_forward(arch, backend, "w", ps, x)
+        return (logits, weighted_xent(logits, y, w), ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+def build_vanilla_grads(arch: Arch, bucket: int, batch: int, backend: str):
+    """Two-factor baseline ``W = U Vᵀ`` (no S, no reorthogonalization):
+    the 'vanilla low-rank parametrization' whose ill-conditioning near small
+    singular values Fig. 4 exhibits. Outputs dU, dV, db per layer."""
+    spec = IOSpec()
+    L = len(arch.layers)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        spec.inp(f"layer{k}/U", (m, r))
+        spec.inp(f"layer{k}/V", (n, r))
+        spec.inp(f"layer{k}/b", (m,))
+    _batch_inputs(spec, arch, batch)
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        spec.out(f"layer{k}/dU", (m, r))
+        spec.out(f"layer{k}/dV", (n, r))
+        spec.out(f"layer{k}/db", (m,))
+    spec.out("loss", ())
+    spec.out("ncorrect", ())
+
+    def fn(*flat):
+        Us = [flat[3 * k + 0] for k in range(L)]
+        Vs = [flat[3 * k + 1] for k in range(L)]
+        bs = [flat[3 * k + 2] for k in range(L)]
+        x, y, w = flat[3 * L:]
+
+        def loss_uv(Us_, Vs_, bs_):
+            ps = [(U, V, b) for U, V, b in zip(Us_, Vs_, bs_)]
+            logits = network_forward(arch, backend, "k", ps, x)
+            return weighted_xent(logits, y, w), logits
+
+        ((lossv, logits), (dUs, dVs, dbs)) = jax.value_and_grad(
+            loss_uv, argnums=(0, 1, 2), has_aux=True)(Us, Vs, bs)
+        outs = []
+        for dU, dV, db in zip(dUs, dVs, dbs):
+            outs += [dU, dV, db]
+        return (*outs, lossv, ncorrect(logits, y, w))
+
+    return fn, spec
+
+
+GRAPH_BUILDERS = {
+    "forward": lambda arch, bucket, batch, backend: build_forward(arch, bucket, batch, backend),
+    "kl_grads": lambda arch, bucket, batch, backend: build_kl_grads(arch, bucket, batch, backend),
+    "s_grads": lambda arch, bucket, batch, backend: build_s_grads(arch, bucket, batch, backend),
+    "vanilla_grads": lambda arch, bucket, batch, backend: build_vanilla_grads(arch, bucket, batch, backend),
+    "dense_grads": lambda arch, bucket, batch, backend: build_dense_grads(arch, batch, backend),
+    "dense_forward": lambda arch, bucket, batch, backend: build_dense_forward(arch, batch, backend),
+}

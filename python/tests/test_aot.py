@@ -1,0 +1,83 @@
+"""AOT pipeline tests: manifest consistency and HLO-text emission.
+
+The manifest is the packing contract the Rust runtime trusts blindly, so
+these tests re-derive every artifact's I/O spec from the graph builders and
+check the emitted file set (when artifacts/ exists).
+"""
+
+import json
+import pathlib
+
+import jax
+import pytest
+
+from compile import aot, model
+
+ARTDIR = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def iter_artifact_tuples():
+    for arch_name, backend, batch, buckets, graphs in aot.ARTIFACT_SETS:
+        for graph in graphs:
+            graph_buckets = [0] if graph.startswith("dense") else buckets
+            for bucket in graph_buckets:
+                yield arch_name, backend, batch, bucket, graph
+
+
+def test_artifact_names_are_unique():
+    names = [aot.artifact_name(a, g, bu, ba, be)
+             for a, be, ba, bu, g in iter_artifact_tuples()]
+    assert len(names) == len(set(names))
+
+
+def test_spec_shapes_match_eval_shape_for_small_archs():
+    """For the cheap archs, re-trace every graph and compare out-specs."""
+    for arch_name, backend, batch, bucket, graph in iter_artifact_tuples():
+        if arch_name not in ("mlp_tiny", "lenet"):
+            continue
+        if backend == "pallas":
+            continue  # pallas tracing is slow; covered by test_model
+        arch = model.ARCHS[arch_name]
+        fn, spec = model.GRAPH_BUILDERS[graph](arch, bucket, batch, backend)
+        shaped = jax.eval_shape(fn, *spec.input_shapes())
+        assert len(shaped) == len(spec.outputs), (arch_name, graph, bucket)
+        for got, want in zip(shaped, spec.outputs):
+            assert tuple(got.shape) == tuple(want["shape"]), (
+                arch_name, graph, bucket, want["name"])
+
+
+@pytest.mark.skipif(not (ARTDIR / "manifest.json").exists(),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_covers_every_artifact_file():
+    manifest = json.loads((ARTDIR / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    files = {a["file"] for a in manifest["artifacts"]}
+    for f in files:
+        assert (ARTDIR / f).exists(), f"missing artifact file {f}"
+    # spot-check a known artifact's spec against the builder
+    entry = next(a for a in manifest["artifacts"]
+                 if a["arch"] == "mlp_tiny" and a["graph"] == "kl_grads"
+                 and a["bucket"] == 8 and a["backend"] == "jnp")
+    arch = model.ARCHS["mlp_tiny"]
+    _, spec = model.GRAPH_BUILDERS["kl_grads"](arch, 8, entry["batch"], "jnp")
+    assert entry["inputs"] == spec.inputs
+    assert entry["outputs"] == spec.outputs
+
+
+@pytest.mark.skipif(not (ARTDIR / "manifest.json").exists(),
+                    reason="artifacts not built")
+def test_hlo_text_is_parseable_prefix():
+    """Every emitted file must be HLO text (starts with `HloModule`)."""
+    manifest = json.loads((ARTDIR / "manifest.json").read_text())
+    for a in manifest["artifacts"][:20]:
+        head = (ARTDIR / a["file"]).read_text()[:200]
+        assert "HloModule" in head, a["file"]
+
+
+def test_to_hlo_text_roundtrip_tiny():
+    arch = model.ARCHS["mlp_tiny"]
+    fn, spec = model.GRAPH_BUILDERS["forward"](arch, 4, 8, "jnp")
+    text = aot.to_hlo_text(fn, spec.input_shapes())
+    assert text.startswith("HloModule")
+    # parameter count of the entry computation matches the spec
+    assert text.count("parameter(") >= len(spec.inputs)

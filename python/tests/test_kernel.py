@@ -1,0 +1,217 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts — every HLO
+module the Rust coordinator executes is built from these kernels. Hypothesis
+sweeps shapes (including non-block-aligned and degenerate ones) and dtypes;
+gradients are checked through the custom VJPs against jax.grad on the dense
+reference.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import apply_kform, apply_sform, matmul, project_grad
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+DIMS = st.integers(min_value=1, max_value=97)
+RANKS = st.integers(min_value=1, max_value=33)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+def test_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = keys(seed, 2)
+    x, y = rand(k1, m, k), rand(k2, k, n)
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), **tol(x.dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 64, 32), (1, 1, 1),
+                                   (130, 257, 9), (8, 513, 128)])
+def test_matmul_shapes_dtypes(shape, dtype):
+    m, k, n = shape
+    k1, k2 = keys(7, 2)
+    x, y = rand(k1, m, k, dtype=dtype), rand(k2, k, n, dtype=dtype)
+    out = matmul(x, y)
+    assert out.dtype == dtype and out.shape == (m, n)
+    expect = ref.matmul_ref(x.astype(jnp.float32), y.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), expect, **tol(dtype))
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (32, 128, 16), (128, 128, 128)])
+def test_matmul_block_invariance(blocks):
+    """Result must not depend on the tiling schedule."""
+    bm, bk, bn = blocks
+    k1, k2 = keys(3, 2)
+    x, y = rand(k1, 100, 90, dtype=jnp.float32), rand(k2, 90, 70)
+    np.testing.assert_allclose(
+        matmul(x, y, bm=bm, bk=bk, bn=bn), ref.matmul_ref(x, y), **tol(x.dtype))
+
+
+def test_matmul_shape_mismatch_raises():
+    x, y = jnp.zeros((3, 4)), jnp.zeros((5, 6))
+    with pytest.raises(ValueError):
+        matmul(x, y)
+
+
+# --------------------------------------------------------------------- K-form
+
+@settings(max_examples=20, deadline=None)
+@given(B=DIMS, n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_kform_forward(B, n, m, r, seed):
+    k1, k2, k3, k4 = keys(seed, 4)
+    z, K, V, b = rand(k1, B, n), rand(k2, m, r), rand(k3, n, r), rand(k4, m)
+    np.testing.assert_allclose(
+        apply_kform(z, K, V, b), ref.apply_kform_ref(z, K, V, b),
+        rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(2, 17), n=st.integers(2, 41), m=st.integers(2, 37),
+       r=st.integers(1, 9), seed=SEEDS)
+def test_kform_gradients(B, n, m, r, seed):
+    """Custom-VJP grads wrt every input vs autodiff on the dense reference."""
+    k1, k2, k3, k4 = keys(seed, 4)
+    z, K, V, b = rand(k1, B, n), rand(k2, m, r), rand(k3, n, r), rand(k4, m)
+
+    def loss_kernel(z, K, V, b):
+        return jnp.sum(jnp.tanh(apply_kform(z, K, V, b)))
+
+    def loss_ref(z, K, V, b):
+        return jnp.sum(jnp.tanh(ref.apply_kform_ref(z, K, V, b)))
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(z, K, V, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(z, K, V, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- S-form
+
+@settings(max_examples=20, deadline=None)
+@given(B=DIMS, n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_sform_forward(B, n, m, r, seed):
+    k1, k2, k3, k4, k5 = keys(seed, 5)
+    z, U, S, V, b = (rand(k1, B, n), rand(k2, m, r), rand(k3, r, r),
+                     rand(k4, n, r), rand(k5, m))
+    np.testing.assert_allclose(
+        apply_sform(z, U, S, V, b), ref.apply_sform_ref(z, U, S, V, b),
+        rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(2, 17), n=st.integers(2, 41), m=st.integers(2, 37),
+       r=st.integers(1, 9), seed=SEEDS)
+def test_sform_gradients(B, n, m, r, seed):
+    k1, k2, k3, k4, k5 = keys(seed, 5)
+    z, U, S, V, b = (rand(k1, B, n), rand(k2, m, r), rand(k3, r, r),
+                     rand(k4, n, r), rand(k5, m))
+
+    def loss_kernel(z, U, S, V, b):
+        return jnp.sum(jnp.tanh(apply_sform(z, U, S, V, b)))
+
+    def loss_ref(z, U, S, V, b):
+        return jnp.sum(jnp.tanh(ref.apply_sform_ref(z, U, S, V, b)))
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(z, U, S, V, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(z, U, S, V, b)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(a, e, rtol=2e-3, atol=2e-3)
+
+
+def test_sform_zero_padded_rank_is_inert():
+    """Zero-padding S (the bucket trick, DESIGN.md §2) must not change y."""
+    k1, k2, k3, k4, k5 = keys(11, 5)
+    B, n, m, r, pad = 9, 31, 23, 5, 11
+    z, U, S, V, b = (rand(k1, B, n), rand(k2, m, r + pad), rand(k3, r, r),
+                     rand(k4, n, r + pad), rand(k5, m))
+    Spad = jnp.zeros((r + pad, r + pad)).at[:r, :r].set(S)
+    y_pad = apply_sform(z, U, Spad, V, b)
+    y_true = apply_sform(z, U[:, :r], S, V[:, :r], b)
+    np.testing.assert_allclose(y_pad, y_true, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ proj grad
+
+@settings(max_examples=15, deadline=None)
+@given(n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_project_grad(n, m, r, seed):
+    k1, k2, k3 = keys(seed, 3)
+    U, G, V = rand(k1, m, r), rand(k2, m, n), rand(k3, n, r)
+    np.testing.assert_allclose(
+        project_grad(U, G, V), ref.project_grad_ref(U, G, V),
+        rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------- K/L/S identity (paper §4)
+
+def test_kl_grads_equal_projected_dense_grads():
+    """∇_K L = ∇_W L · V and ∇_L L = ∇_W Lᵀ · U (paper §6.5), on a real
+    2-layer network with softmax CE — the identity the kl_grads artifact
+    relies on."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    B, n0, n1, n2, r = 8, 12, 10, 7, 4
+    U1, S1, V1 = rand(ks[0], n1, r), rand(ks[1], r, r), rand(ks[2], n0, r)
+    U2, S2, V2 = rand(ks[3], n2, r), rand(ks[4], r, r), rand(ks[5], n0 if False else n1, r)
+    b1, b2 = rand(ks[6], n1), rand(ks[7], n2)
+    x = rand(jax.random.PRNGKey(9), B, n0)
+    y = jax.random.randint(jax.random.PRNGKey(10), (B,), 0, n2)
+    w = jnp.ones((B,))
+
+    def net_dense(W1, W2):
+        z = jax.nn.relu(x @ W1.T + b1[None])
+        logits = z @ W2.T + b2[None]
+        return ref.softmax_xent_ref(logits, y, w)
+
+    def net_kform(K1, K2):
+        z = jax.nn.relu(apply_kform(x, K1, V1, b1))
+        logits = apply_kform(z, K2, V2, b2)
+        return ref.softmax_xent_ref(logits, y, w)
+
+    W1, W2 = U1 @ S1 @ V1.T, U2 @ S2 @ V2.T
+    dW1, dW2 = jax.grad(net_dense, argnums=(0, 1))(W1, W2)
+    dK1, dK2 = jax.grad(net_kform, argnums=(0, 1))(U1 @ S1, U2 @ S2)
+    np.testing.assert_allclose(dK1, dW1 @ V1, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(dK2, dW2 @ V2, rtol=1e-3, atol=1e-4)
+
+    def net_lform(L1, L2):
+        z = jax.nn.relu(apply_kform(x, U1, L1, b1))
+        logits = apply_kform(z, U2, L2, b2)
+        return ref.softmax_xent_ref(logits, y, w)
+
+    dL1, dL2 = jax.grad(net_lform, argnums=(0, 1))(V1 @ S1.T, V2 @ S2.T)
+    np.testing.assert_allclose(dL1, dW1.T @ U1, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(dL2, dW2.T @ U2, rtol=1e-3, atol=1e-4)
+
+    def net_sform(S1_, S2_):
+        z = jax.nn.relu(apply_sform(x, U1, S1_, V1, b1))
+        logits = apply_sform(z, U2, S2_, V2, b2)
+        return ref.softmax_xent_ref(logits, y, w)
+
+    dS1, dS2 = jax.grad(net_sform, argnums=(0, 1))(S1, S2)
+    np.testing.assert_allclose(dS1, U1.T @ dW1 @ V1, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(dS2, U2.T @ dW2 @ V2, rtol=1e-3, atol=1e-4)

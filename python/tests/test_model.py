@@ -1,0 +1,256 @@
+"""L2 correctness: graph builders vs dense-reference math + spec contracts.
+
+Checks the properties the Rust coordinator depends on:
+  * kl/s gradient outputs equal the projected dense gradients (paper §6.5);
+  * bucket zero-padding is exactly inert (the bucket trick, DESIGN.md §2);
+  * jnp and pallas backends agree on identical inputs;
+  * IOSpec shapes match what the traced graphs actually consume/produce;
+  * conv nets (im2col path) reduce loss under plain SGD on the factors.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.model import (ARCHS, build_dense_grads, build_forward,
+                           build_kl_grads, build_s_grads, build_vanilla_grads,
+                           network_forward, weighted_xent)
+
+TINY = ARCHS["mlp_tiny"]
+LENET = ARCHS["lenet"]
+
+
+def init_factors(arch, bucket, seed=0, scale=0.5):
+    """Random factors with orthonormal U/V (host-side init contract)."""
+    rng = np.random.RandomState(seed)
+    flat = []
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        U = np.linalg.qr(rng.randn(m, r))[0].astype(np.float32)
+        V = np.linalg.qr(rng.randn(n, r))[0].astype(np.float32)
+        S = (scale * rng.randn(r, r) / np.sqrt(r)).astype(np.float32)
+        b = (0.01 * rng.randn(m)).astype(np.float32)
+        flat += [U, S, V, b]
+    return flat
+
+
+def batch_for(arch, batch, seed=1):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, arch.input_dim).astype(np.float32)
+    y = rng.randint(0, arch.num_classes, size=batch).astype(np.int32)
+    w = np.ones(batch, dtype=np.float32)
+    return x, y, w
+
+
+def dense_weights_of(flat, n_layers):
+    Ws, bs = [], []
+    for k in range(n_layers):
+        U, S, V, b = flat[4 * k: 4 * k + 4]
+        Ws.append(U @ S @ V.T)
+        bs.append(b)
+    return Ws, bs
+
+
+# ------------------------------------------------------------------ identity
+
+@pytest.mark.parametrize("arch_name", ["mlp_tiny", "lenet"])
+def test_kl_grads_match_projected_dense(arch_name):
+    arch = ARCHS[arch_name]
+    bucket, B = 8, 16
+    flat = init_factors(arch, bucket)
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+
+    fn, spec = build_kl_grads(arch, bucket, B, "jnp")
+    outs = fn(*flat, x, y, w)
+    dKs, dLs, loss, nc = outs[:L], outs[L:2 * L], outs[2 * L], outs[2 * L + 1]
+
+    dfn, _ = build_dense_grads(arch, B, "jnp")
+    Ws, bs = dense_weights_of(flat, L)
+    dflat = []
+    for W, b in zip(Ws, bs):
+        dflat += [W, b]
+    douts = dfn(*dflat, x, y, w)
+    dWs, dloss = douts[:L], douts[2 * L]
+
+    np.testing.assert_allclose(loss, dloss, rtol=1e-5)
+    for k in range(L):
+        U, S, V, _ = flat[4 * k: 4 * k + 4]
+        np.testing.assert_allclose(dKs[k], dWs[k] @ V, rtol=2e-3, atol=1e-5)
+        np.testing.assert_allclose(dLs[k], dWs[k].T @ U, rtol=2e-3, atol=1e-5)
+
+
+def test_s_grads_match_projected_dense():
+    arch = TINY
+    bucket, B = 8, 16
+    flat = init_factors(arch, bucket)
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+
+    fn, _ = build_s_grads(arch, bucket, B, "jnp")
+    outs = fn(*flat, x, y, w)
+    dSs, dbs = outs[:L], outs[L:2 * L]
+
+    dfn, _ = build_dense_grads(arch, B, "jnp")
+    Ws, bs = dense_weights_of(flat, L)
+    dflat = []
+    for W, b in zip(Ws, bs):
+        dflat += [W, b]
+    douts = dfn(*dflat, x, y, w)
+    dWs, dbs_ref = douts[:L], douts[L:2 * L]
+
+    for k in range(L):
+        U, S, V, _ = flat[4 * k: 4 * k + 4]
+        np.testing.assert_allclose(dSs[k], U.T @ dWs[k] @ V, rtol=2e-3, atol=1e-5)
+        np.testing.assert_allclose(dbs[k], dbs_ref[k], rtol=2e-3, atol=1e-5)
+
+
+# ------------------------------------------------------------ bucket padding
+
+def test_bucket_padding_is_inert():
+    """Zero-padding factors into a wider bucket changes nothing (fwd + grads)."""
+    arch = TINY
+    B = 16
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+    flat8 = init_factors(arch, 8)
+
+    # embed the bucket-8 factors into bucket-16 slots with zero padding
+    flat16 = []
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r8, r16 = arch.slot(k, 8), arch.slot(k, 16)
+        U, S, V, b = flat8[4 * k: 4 * k + 4]
+        U16 = np.zeros((m, r16), np.float32)
+        U16[:, :r8] = U
+        V16 = np.zeros((n, r16), np.float32)
+        V16[:, :r8] = V
+        S16 = np.zeros((r16, r16), np.float32)
+        S16[:r8, :r8] = S
+        flat16 += [U16, S16, V16, b]
+
+    f8, _ = build_forward(arch, 8, B, "jnp")
+    f16, _ = build_forward(arch, 16, B, "jnp")
+    o8, o16 = f8(*flat8, x, y, w), f16(*flat16, x, y, w)
+    np.testing.assert_allclose(o8[0], o16[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(o8[1], o16[1], rtol=1e-5)
+
+    g8, _ = build_kl_grads(arch, 8, B, "jnp")
+    g16, _ = build_kl_grads(arch, 16, B, "jnp")
+    out8, out16 = g8(*flat8, x, y, w), g16(*flat16, x, y, w)
+    for k in range(L):
+        r8 = arch.slot(k, 8)
+        np.testing.assert_allclose(out16[k][:, :r8], out8[k], rtol=1e-4,
+                                   atol=1e-5)
+        # padded gradient columns must be exactly zero (V/U pad cols are zero)
+        assert np.abs(np.asarray(out16[k][:, r8:])).max() == 0.0
+
+
+# ------------------------------------------------------- backend equivalence
+
+def test_pallas_and_jnp_backends_agree():
+    arch = TINY
+    bucket, B = 8, 16
+    flat = init_factors(arch, bucket)
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+    for builder in (build_forward, build_kl_grads, build_s_grads):
+        fj, _ = builder(arch, bucket, B, "jnp")
+        fp, _ = builder(arch, bucket, B, "pallas")
+        oj, op = fj(*flat, x, y, w), fp(*flat, x, y, w)
+        for a, b in zip(oj, op):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-4)
+
+
+# -----------------------------------------------------------------契约 specs
+
+@pytest.mark.parametrize("graph", ["forward", "kl_grads", "s_grads",
+                                   "vanilla_grads", "dense_grads",
+                                   "dense_forward"])
+def test_iospec_matches_traced_shapes(graph):
+    arch = TINY
+    fn, spec = model.GRAPH_BUILDERS[graph](arch, 8, 16, "jnp")
+    shaped = jax.eval_shape(fn, *spec.input_shapes())
+    assert len(shaped) == len(spec.outputs)
+    for got, want in zip(shaped, spec.outputs):
+        assert tuple(got.shape) == tuple(want["shape"]), (graph, want["name"])
+
+
+# --------------------------------------------------- conv == im2col identity
+
+@pytest.mark.parametrize("form", ["s", "k", "w"])
+def test_conv_apply_equals_im2col(form):
+    """§Perf iteration 3 contract: the native-conv layer equals the paper's
+    im2col formulation (§6.6) for every parameterization."""
+    from compile.model import Conv, _conv_apply, _layer_apply, _unfold
+
+    rng = np.random.RandomState(0)
+    conv = Conv(3, 7, 5, 12, 12, pool=False)
+    z = jnp.asarray(rng.randn(4, 12, 12, 3).astype(np.float32))
+    m, n = conv.matrix_shape
+    r = 4
+    U = jnp.asarray(np.linalg.qr(rng.randn(m, r))[0].astype(np.float32))
+    V = jnp.asarray(np.linalg.qr(rng.randn(n, r))[0].astype(np.float32))
+    S = jnp.asarray(rng.randn(r, r).astype(np.float32))
+    b = jnp.asarray(rng.randn(m).astype(np.float32))
+    params = {
+        "s": (U, S, V, b),
+        "k": (U @ S, V, b),
+        "w": (U @ S @ V.T, b),
+    }[form]
+    patches, (Bp, hp, wp) = _unfold(z, conv)
+    ref = _layer_apply("jnp", form, params, patches).reshape(Bp, hp, wp, conv.out_ch)
+    got = _conv_apply("jnp", form, params, z, conv)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- learnability
+
+def test_lenet_sgd_on_factors_reduces_loss():
+    """Three S-form SGD steps on (S, b) must reduce the loss on a fixed batch
+    — exercises the conv/im2col path end-to-end."""
+    arch = LENET
+    bucket, B = 8, 16
+    flat = init_factors(arch, bucket, scale=1.0)
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+    fn, _ = build_s_grads(arch, bucket, B, "jnp")
+    losses = []
+    lr = 0.05
+    for _ in range(4):
+        outs = fn(*flat, x, y, w)
+        dSs, dbs, loss = outs[:L], outs[L:2 * L], outs[2 * L]
+        losses.append(float(loss))
+        for k in range(L):
+            flat[4 * k + 1] = flat[4 * k + 1] - lr * np.asarray(dSs[k])
+            flat[4 * k + 3] = flat[4 * k + 3] - lr * np.asarray(dbs[k])
+    assert losses[-1] < losses[0], losses
+
+
+def test_vanilla_grads_shapes_and_descent():
+    arch = TINY
+    bucket, B = 8, 16
+    rng = np.random.RandomState(0)
+    flat = []
+    for k, layer in enumerate(arch.layers):
+        m, n = layer.matrix_shape
+        r = arch.slot(k, bucket)
+        flat += [0.3 * rng.randn(m, r).astype(np.float32),
+                 0.3 * rng.randn(n, r).astype(np.float32),
+                 np.zeros(m, np.float32)]
+    x, y, w = batch_for(arch, B)
+    L = len(arch.layers)
+    fn, _ = build_vanilla_grads(arch, bucket, B, "jnp")
+    losses = []
+    for _ in range(4):
+        outs = fn(*flat, x, y, w)
+        losses.append(float(outs[3 * L]))
+        for k in range(L):
+            for j in range(3):
+                flat[3 * k + j] = flat[3 * k + j] - 0.05 * np.asarray(
+                    outs[3 * k + j])
+    assert losses[-1] < losses[0], losses

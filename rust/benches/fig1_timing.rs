@@ -1,0 +1,43 @@
+//! Bench: Fig. 1 (a,b) / Tables 3-4 — train-batch & predict timing vs rank,
+//! 5-layer 5120-neuron net, against the dense reference.
+//!
+//! Smoke budget by default (3 ranks, few iters); `DLRT_FULL=1 cargo bench
+//! --bench fig1_timing` sweeps the paper's rank grid. The claim checked is
+//! the *shape*: cost grows ~linearly with rank and the low ranks beat the
+//! full-rank baseline on both phases.
+
+use dlrt::coordinator::experiments::{self, fig1_timing};
+use dlrt::util::bench::{fmt_secs, Table};
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let ranks: Vec<usize> =
+        if full { vec![8, 16, 32, 64, 128, 256, 512] } else { vec![16, 64, 256] };
+    let (iters, pred_iters, n_pred) = if full { (8, 4, 60_000) } else { (2, 1, 2_560) };
+
+    println!("fig1_timing: ranks {ranks:?} on mlp5120 (batch 256)");
+    let rows = fig1_timing("mlp5120", &ranks, iters, pred_iters, n_pred)?;
+
+    let mut table = Table::new(&["config", "train s/batch", "predict s/dataset"]);
+    for r in &rows {
+        table.row(&[r.label.clone(), fmt_secs(r.train_batch.mean), fmt_secs(r.predict.mean)]);
+    }
+    table.print();
+
+    // shape assertions (reported, not fatal — timing is machine-dependent)
+    let dense = rows.last().unwrap();
+    let smallest = &rows[0];
+    let ok_train = smallest.train_batch.mean < dense.train_batch.mean;
+    let ok_pred = smallest.predict.mean < dense.predict.mean;
+    println!(
+        "shape check: rank-{} train {} dense ({} vs {}); predict {} dense ({} vs {})",
+        ranks[0],
+        if ok_train { "beats" } else { "DOES NOT beat" },
+        fmt_secs(smallest.train_batch.mean),
+        fmt_secs(dense.train_batch.mean),
+        if ok_pred { "beats" } else { "DOES NOT beat" },
+        fmt_secs(smallest.predict.mean),
+        fmt_secs(dense.predict.mean),
+    );
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Bench: Fig. 2 (a,b) / Fig. 6 — per-layer rank evolution of the adaptive
+//! integrator on the 5-layer 500-neuron net for τ ∈ {0.05, 0.15}.
+//!
+//! Shape claims checked: ranks collapse from the init within the first
+//! epoch(s); larger τ yields lower converged ranks; the classifier head
+//! stays pinned at 10.
+
+use dlrt::coordinator::experiments::{self, fig2_rank_evolution};
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let (n_epochs, n_data) = if full { (30, 70_000) } else { (3, 8_000) };
+    let mut converged = Vec::new();
+    for tau in [0.05f32, 0.15] {
+        println!("fig2_rank_evolution: τ = {tau}, {n_epochs} epochs");
+        let rec = fig2_rank_evolution(tau, n_epochs, n_data)?;
+        for e in &rec.epochs {
+            println!("  epoch {:>3}: ranks {:?}", e.epoch, e.ranks);
+        }
+        let first = &rec.epochs.first().unwrap().ranks;
+        let last = &rec.epochs.last().unwrap().ranks;
+        println!("  init rank 256 -> epoch0 {first:?} -> final {last:?}");
+        assert!(
+            first[0] < 256,
+            "ranks must collapse within the first epoch (got {first:?})"
+        );
+        assert_eq!(*last.last().unwrap(), 10, "classifier head must stay rank 10");
+        converged.push((tau, last.clone()));
+    }
+    let sum = |v: &[usize]| v.iter().sum::<usize>();
+    let (t_small, r_small) = &converged[0];
+    let (t_big, r_big) = &converged[1];
+    println!(
+        "shape check: τ={t_big} ranks (Σ={}) {} τ={t_small} ranks (Σ={})",
+        sum(r_big),
+        if sum(r_big) < sum(r_small) { "below" } else { "NOT below" },
+        sum(r_small),
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Bench: Fig. 3 / Tables 5-6 — test accuracy vs parameter count &
+//! compression rate for the 500- and 784-neuron nets across τ.
+//!
+//! Shape claims checked: eval compression grows with τ; accuracy degrades
+//! gracefully (small loss at high compression, approaching the dense
+//! baseline at small τ).
+
+use dlrt::coordinator::experiments::{self, fig3_sweep};
+use dlrt::util::bench::Table;
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let taus: Vec<f32> = if full {
+        vec![0.03, 0.05, 0.07, 0.09, 0.11, 0.13, 0.15, 0.17]
+    } else {
+        vec![0.07, 0.15]
+    };
+    let archs: Vec<&str> = if full { vec!["mlp500", "mlp784"] } else { vec!["mlp500"] };
+    let (n_epochs, n_data) = if full { (25, 70_000) } else { (10, 8_000) };
+
+    for arch in archs {
+        println!("fig3 sweep on {arch}: τ ∈ {taus:?}, {n_epochs} epochs");
+        let recs = fig3_sweep(arch, &taus, n_epochs, n_data)?;
+        let mut table = Table::new(&[
+            "run", "test acc", "ranks", "eval params", "eval c.r.", "train c.r.",
+        ]);
+        for rec in &recs {
+            table.row(&[
+                rec.name.clone(),
+                format!("{:.2}%", 100.0 * rec.test_acc),
+                format!("{:?}", rec.final_ranks),
+                rec.eval_params.to_string(),
+                format!("{:.1}%", rec.eval_compression()),
+                format!("{:.1}%", rec.train_compression()),
+            ]);
+            rec.save_json(std::path::Path::new(&format!("runs/{}.json", rec.name)))?;
+        }
+        table.print();
+        // shape: compression strictly increases with τ
+        let crs: Vec<f64> =
+            recs[..taus.len()].iter().map(|r| r.eval_compression()).collect();
+        let monotone = crs.windows(2).all(|w| w[1] >= w[0] - 1.0);
+        println!("shape check: compression increases with τ: {monotone} ({crs:?})");
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Bench: host-side hot paths of the KLS integrator (§Perf, L3 profile).
+//!
+//! Per training step the host performs, per layer: two `n x r` GEMMs
+//! (K = U S, L = V Sᵀ), two thin QRs of `n x 2r`, two `2r x r` projections,
+//! one `2r x 2r` Jacobi SVD and two basis rotations. This bench times each
+//! primitive at the paper's real shapes so EXPERIMENTS.md §Perf can show
+//! where the host budget goes relative to the compiled-graph calls.
+
+use dlrt::linalg::{householder_qr, jacobi_svd, matmul, matmul_tn, Rng};
+use dlrt::util::bench::{fmt_secs, time_fn, Table};
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let full = std::env::var("DLRT_FULL").map(|v| v == "1").unwrap_or(false);
+    let iters = if full { 20 } else { 3 };
+
+    let mut table = Table::new(&["op", "shape", "mean", "std"]);
+
+    // shapes from the paper's nets: (n, r) pairs seen by QR/GEMM
+    for &(n, r) in &[(500usize, 64usize), (784, 128), (5120, 64), (5120, 256)] {
+        let a = rng.normal_matrix(n, 2 * r);
+        let s = time_fn(1, iters, || householder_qr(&a));
+        table.row(&[
+            "householder_qr".into(),
+            format!("{n}x{}", 2 * r),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+        ]);
+
+        let u = rng.normal_matrix(n, r);
+        let core = rng.normal_matrix(r, r);
+        let s = time_fn(1, iters, || matmul(&u, &core));
+        table.row(&["matmul (K=US)".into(), format!("{n}x{r} * {r}x{r}"), fmt_secs(s.mean), fmt_secs(s.std)]);
+
+        let q = rng.normal_matrix(n, 2 * r);
+        let s = time_fn(1, iters, || matmul_tn(&q, &u));
+        table.row(&[
+            "matmul_tn (M=QᵀU)".into(),
+            format!("({n}x{})ᵀ * {n}x{r}", 2 * r),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+        ]);
+    }
+
+    for &r in &[32usize, 64, 128] {
+        let core = rng.normal_matrix(2 * r, 2 * r);
+        let s = time_fn(1, iters, || jacobi_svd(&core));
+        table.row(&[
+            "jacobi_svd".into(),
+            format!("{0}x{0}", 2 * r),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+        ]);
+    }
+
+    table.print();
+}

@@ -1,0 +1,122 @@
+//! Full-rank reference trainer — the baseline row of every paper table.
+//!
+//! Uses the `dense_grads` / `dense_forward` artifacts; weights live on the
+//! host and the optimizer is the same [`FactorOptimizer`] machinery the
+//! integrator uses, so timing comparisons (Fig. 1) measure the algorithms,
+//! not different plumbing.
+
+use crate::data::{Batch, Batcher, Dataset};
+use crate::dlrt::{FactorOptimizer, OptKind};
+use crate::linalg::{Matrix, Rng};
+use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Dense trainer state.
+pub struct DenseTrainer {
+    pub arch_name: String,
+    pub backend: String,
+    pub arch: ArchInfo,
+    pub ws: Vec<Matrix>,
+    pub bs: Vec<Vec<f32>>,
+    opt_w: Vec<FactorOptimizer>,
+    opt_b: Vec<FactorOptimizer>,
+}
+
+impl DenseTrainer {
+    /// He-normal initialization.
+    pub fn new(
+        rt: &Runtime,
+        arch_name: &str,
+        backend: &str,
+        opt: OptKind,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let arch = rt
+            .manifest()
+            .arch(arch_name)
+            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
+            .clone();
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for l in &arch.layers {
+            let std = (2.0 / l.n as f32).sqrt();
+            let mut w = rng.normal_matrix(l.m, l.n);
+            w.scale(std);
+            ws.push(w);
+            bs.push(vec![0.0; l.m]);
+        }
+        let n = arch.layers.len();
+        Ok(DenseTrainer {
+            arch_name: arch_name.into(),
+            backend: backend.into(),
+            arch,
+            ws,
+            bs,
+            opt_w: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
+            opt_b: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
+        })
+    }
+
+    fn pack(&self, exe: &Executable, batch: &Batch) -> Result<Vec<xla::Literal>> {
+        let info = &exe.info;
+        let n_layers = self.ws.len();
+        ensure!(
+            info.inputs.len() == 2 * n_layers + 3,
+            "{}: unexpected input arity",
+            info.name
+        );
+        let mut lits = Vec::with_capacity(info.inputs.len());
+        for k in 0..n_layers {
+            lits.push(literals::pack_matrix(&info.inputs[2 * k], &self.ws[k])?);
+            lits.push(literals::pack_f32(&info.inputs[2 * k + 1], &self.bs[k])?);
+        }
+        let base = 2 * n_layers;
+        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+        Ok(lits)
+    }
+
+    /// One SGD/momentum/Adam step on the full weights. Returns (loss, ncorrect).
+    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
+        let exe = rt.load(&self.arch_name, "dense_grads", &self.backend, 0)?;
+        let n_layers = self.ws.len();
+        let inputs = self.pack(&exe, batch)?;
+        let outs = exe.run(&inputs)?;
+        for k in 0..n_layers {
+            let dw = literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?;
+            let db = literals::unpack_matrix(&exe.info.outputs[n_layers + k], &outs[n_layers + k])?;
+            self.opt_w[k].update(&mut self.ws[k], &dw, lr);
+            self.opt_b[k].update_vec(&mut self.bs[k], db.data(), lr);
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n_layers], &outs[2 * n_layers])?;
+        let nc =
+            literals::unpack_scalar(&exe.info.outputs[2 * n_layers + 1], &outs[2 * n_layers + 1])?;
+        Ok((loss, nc))
+    }
+
+    /// Mean loss / accuracy over a dataset via `dense_forward`.
+    pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
+        let exe = rt.load(&self.arch_name, "dense_forward", &self.backend, 0)?;
+        let cap = exe.info.batch;
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0.0f64;
+        for batch in Batcher::sequential(data, cap) {
+            let inputs = self.pack(&exe, &batch)?;
+            let outs = exe.run(&inputs)?;
+            let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
+            let nc = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
+            total_loss += loss * batch.count as f64;
+            total_correct += nc;
+            total += batch.count as f64;
+        }
+        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    }
+
+    /// Total dense parameter count (paper convention, no bias).
+    pub fn param_count(&self) -> usize {
+        self.ws.iter().map(|w| w.rows() * w.cols()).sum()
+    }
+}

@@ -1,0 +1,17 @@
+//! Baselines the paper compares against (and that every table needs):
+//!
+//! * [`dense`] — full-rank reference training (the "LeNet5" / "full-rank"
+//!   rows of Tables 1, 5, 6; the red dots of Fig. 3).
+//! * [`vanilla`] — the two-factor `W = U Vᵀ` parameterization of
+//!   [Wang+ 2021, Khodak+ 2021], whose ill-conditioning near small singular
+//!   values Fig. 4 demonstrates.
+//! * [`svd_prune`] — post-hoc SVD truncation of a trained dense net
+//!   (Table 8's first column) and its DLRT retraining counterpart.
+
+pub mod dense;
+pub mod svd_prune;
+pub mod vanilla;
+
+pub use dense::DenseTrainer;
+pub use svd_prune::svd_prune_factors;
+pub use vanilla::{VanillaInit, VanillaTrainer};

@@ -1,0 +1,208 @@
+//! Vanilla two-factor low-rank baseline: `W = U Vᵀ`, plain descent on both
+//! factors (the strategy of [Wang+ 2021, Khodak+ 2021]).
+//!
+//! Fig. 4's point: this parameterization is ill-conditioned when `W` has
+//! small singular values — the manifold curvature is `∝ 1/σ_min` — so a
+//! "decay" initialization (exponentially decaying spectrum) slows vanilla
+//! training badly while DLRT is unaffected. [`VanillaInit`] reproduces both
+//! of the figure's initializations.
+
+use crate::data::{Batch, Batcher, Dataset};
+use crate::dlrt::{FactorOptimizer, OptKind};
+use crate::linalg::{householder_qr, matmul, Matrix, Rng};
+use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Fig. 4's two weight initializations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VanillaInit {
+    /// Completely random factors ("no decay").
+    Plain,
+    /// Factors forced to have an exponential decay on the singular values
+    /// of `W = U Vᵀ`: `σ_i ∝ decay^i` ("decay").
+    Decay { rate: f32 },
+}
+
+/// Two-factor trainer state.
+pub struct VanillaTrainer {
+    pub arch_name: String,
+    pub backend: String,
+    pub arch: ArchInfo,
+    pub us: Vec<Matrix>,
+    pub vs: Vec<Matrix>,
+    pub bs: Vec<Vec<f32>>,
+    opt_u: Vec<FactorOptimizer>,
+    opt_v: Vec<FactorOptimizer>,
+    opt_b: Vec<FactorOptimizer>,
+    bucket: usize,
+}
+
+impl VanillaTrainer {
+    pub fn new(
+        rt: &Runtime,
+        arch_name: &str,
+        backend: &str,
+        opt: OptKind,
+        rank: usize,
+        init: VanillaInit,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let arch = rt
+            .manifest()
+            .arch(arch_name)
+            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
+            .clone();
+        let bucket = rt
+            .bucket_for(arch_name, "vanilla_grads", backend, rank)
+            .ok_or_else(|| anyhow!("no vanilla_grads artifacts for {arch_name}"))?;
+        let mut us = Vec::new();
+        let mut vs = Vec::new();
+        let mut bs = Vec::new();
+        for l in &arch.layers {
+            let r = l.slot(bucket.min(rank.max(1)));
+            let he = (2.0 / l.n as f32).sqrt();
+            let (u, v) = match init {
+                VanillaInit::Plain => {
+                    let mut u = rng.normal_matrix(l.m, r);
+                    let mut v = rng.normal_matrix(l.n, r);
+                    // scale so W = U Vᵀ has He-like magnitude
+                    let scale = (he / (r as f32).sqrt()).sqrt();
+                    u.scale(scale);
+                    v.scale(scale);
+                    (u, v)
+                }
+                VanillaInit::Decay { rate } => {
+                    // W = Q1 D² Q2ᵀ with σ_i = σ_max(He) · rate^i: the top
+                    // singular value matches a dense He matrix's edge
+                    // (Marchenko-Pastur: σ_max ≈ √(2/n)(√m+√n)) while the
+                    // tail decays exponentially — the paper's "random
+                    // choice forced to have an exponential decay on the
+                    // singular values". Most of the He energy is missing,
+                    // which is exactly what makes this run slow (Fig. 4).
+                    let q1 = householder_qr(&rng.normal_matrix(l.m, r));
+                    let q2 = householder_qr(&rng.normal_matrix(l.n, r));
+                    let sig_max =
+                        (2.0 / l.n as f32).sqrt() * ((l.m as f32).sqrt() + (l.n as f32).sqrt());
+                    let mut d = Matrix::zeros(r, r);
+                    for i in 0..r {
+                        d[(i, i)] = (sig_max * rate.powi(i as i32)).sqrt();
+                    }
+                    (matmul(&q1, &d), matmul(&q2, &d))
+                }
+            };
+            us.push(u);
+            vs.push(v);
+            bs.push(vec![0.0; l.m]);
+        }
+        let n = arch.layers.len();
+        Ok(VanillaTrainer {
+            arch_name: arch_name.into(),
+            backend: backend.into(),
+            arch,
+            us,
+            vs,
+            bs,
+            opt_u: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
+            opt_v: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
+            opt_b: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
+            bucket,
+        })
+    }
+
+    pub fn ranks(&self) -> Vec<usize> {
+        self.us.iter().map(|u| u.cols()).collect()
+    }
+
+    fn pack(&self, exe: &Executable, batch: &Batch) -> Result<Vec<xla::Literal>> {
+        let info = &exe.info;
+        let n_layers = self.us.len();
+        ensure!(info.inputs.len() == 3 * n_layers + 3, "{}: input arity", info.name);
+        let mut lits = Vec::with_capacity(info.inputs.len());
+        for k in 0..n_layers {
+            let specs = &info.inputs[3 * k..3 * k + 3];
+            let slot = specs[0].shape[1];
+            lits.push(literals::pack_matrix(&specs[0], &self.us[k].pad_to(self.us[k].rows(), slot))?);
+            lits.push(literals::pack_matrix(&specs[1], &self.vs[k].pad_to(self.vs[k].rows(), slot))?);
+            lits.push(literals::pack_f32(&specs[2], &self.bs[k])?);
+        }
+        let base = 3 * n_layers;
+        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+        Ok(lits)
+    }
+
+    /// One simultaneous descent step on `U, V, b`. Returns (loss, ncorrect).
+    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
+        let exe = rt.load(&self.arch_name, "vanilla_grads", &self.backend, self.bucket)?;
+        let n_layers = self.us.len();
+        let inputs = self.pack(&exe, batch)?;
+        let outs = exe.run(&inputs)?;
+        for k in 0..n_layers {
+            let slot = exe.info.inputs[3 * k].shape[1];
+            let r = self.us[k].cols();
+            let du = literals::unpack_matrix(&exe.info.outputs[3 * k], &outs[3 * k])?;
+            let dv = literals::unpack_matrix(&exe.info.outputs[3 * k + 1], &outs[3 * k + 1])?;
+            let db = literals::unpack_matrix(&exe.info.outputs[3 * k + 2], &outs[3 * k + 2])?;
+            let mut u = self.us[k].pad_to(self.us[k].rows(), slot);
+            self.opt_u[k].update(&mut u, &du, lr);
+            self.us[k] = u.take_cols(r);
+            let mut v = self.vs[k].pad_to(self.vs[k].rows(), slot);
+            self.opt_v[k].update(&mut v, &dv, lr);
+            self.vs[k] = v.take_cols(r);
+            self.opt_b[k].update_vec(&mut self.bs[k], db.data(), lr);
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[3 * n_layers], &outs[3 * n_layers])?;
+        let nc = literals::unpack_scalar(
+            &exe.info.outputs[3 * n_layers + 1],
+            &outs[3 * n_layers + 1],
+        )?;
+        Ok((loss, nc))
+    }
+
+    /// Evaluate via the S-form `forward` artifact by lifting `U Vᵀ` to
+    /// `U · I · Vᵀ` (identity core) — padding handles the slot shapes.
+    pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
+        let max_r = self.us.iter().map(|u| u.cols()).max().unwrap_or(1);
+        let bucket = rt
+            .bucket_for(&self.arch_name, "forward", &self.backend, max_r)
+            .ok_or_else(|| anyhow!("no forward buckets"))?;
+        let exe = rt.load(&self.arch_name, "forward", &self.backend, bucket)?;
+        let cap = exe.info.batch;
+        let n_layers = self.us.len();
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0.0f64;
+        for batch in Batcher::sequential(data, cap) {
+            let mut lits = Vec::with_capacity(exe.info.inputs.len());
+            for k in 0..n_layers {
+                let specs = &exe.info.inputs[4 * k..4 * k + 4];
+                let slot = specs[0].shape[1];
+                let r = self.us[k].cols();
+                let eye = Matrix::eye(r, r);
+                lits.push(literals::pack_matrix(
+                    &specs[0],
+                    &self.us[k].pad_to(self.us[k].rows(), slot),
+                )?);
+                lits.push(literals::pack_matrix(&specs[1], &eye.pad_to(slot, slot))?);
+                lits.push(literals::pack_matrix(
+                    &specs[2],
+                    &self.vs[k].pad_to(self.vs[k].rows(), slot),
+                )?);
+                lits.push(literals::pack_f32(&specs[3], &self.bs[k])?);
+            }
+            let base = 4 * n_layers;
+            lits.push(literals::pack_f32(&exe.info.inputs[base], &batch.x)?);
+            lits.push(literals::pack_i32(&exe.info.inputs[base + 1], &batch.y)?);
+            lits.push(literals::pack_f32(&exe.info.inputs[base + 2], &batch.w)?);
+            let outs = exe.run(&lits)?;
+            let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
+            let nc = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
+            total_loss += loss * batch.count as f64;
+            total_correct += nc;
+            total += batch.count as f64;
+        }
+        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    }
+}

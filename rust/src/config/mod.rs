@@ -1,0 +1,316 @@
+//! Configuration system: flat-TOML experiment configs + presets for every
+//! paper experiment (DESIGN.md §6).
+//!
+//! A config fully determines a run: architecture, kernel backend, training
+//! mode (adaptive DLRT / fixed-rank DLRT / dense / vanilla), optimizer,
+//! τ-threshold, schedule, data source and seed. `presets::all()` enumerates
+//! the configurations the benches and examples use, keyed by the paper
+//! table/figure they regenerate.
+
+pub mod presets;
+
+use crate::util::kv::{KvDoc, KvValue};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::path::Path;
+
+/// Which training algorithm drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Rank-adaptive DLRT (Algorithm 1 with `adaptive = true`).
+    AdaptiveDlrt,
+    /// Fixed-rank DLRT (Algorithm 1 with `adaptive = false`).
+    FixedDlrt,
+    /// Full-rank reference training (the baseline of every table).
+    Dense,
+    /// Two-factor `W = U Vᵀ` baseline (Fig. 4).
+    Vanilla,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::AdaptiveDlrt => "adaptive_dlrt",
+            Mode::FixedDlrt => "fixed_dlrt",
+            Mode::Dense => "dense",
+            Mode::Vanilla => "vanilla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "adaptive_dlrt" => Mode::AdaptiveDlrt,
+            "fixed_dlrt" => Mode::FixedDlrt,
+            "dense" => Mode::Dense,
+            "vanilla" => Mode::Vanilla,
+            _ => bail!("unknown mode '{s}'"),
+        })
+    }
+}
+
+/// Optimizer applied to each factor's ODE step ("one-step-integrate").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Integrator {
+    /// Explicit Euler == one SGD step (paper §4.3, choice 1).
+    Sgd,
+    /// SGD with heavy-ball momentum (Table 2 uses momentum 0.1).
+    Momentum,
+    /// Adam-modified Euler step (paper §4.3, choice 2).
+    Adam,
+}
+
+impl Integrator {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Integrator::Sgd => "sgd",
+            Integrator::Momentum => "momentum",
+            Integrator::Adam => "adam",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Integrator> {
+        Ok(match s {
+            "sgd" => Integrator::Sgd,
+            "momentum" => Integrator::Momentum,
+            "adam" => Integrator::Adam,
+            _ => bail!("unknown integrator '{s}'"),
+        })
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// `lr * decay^epoch` (Table 7 uses 0.05 with 0.96 exponential decay).
+    Exponential { decay: f32 },
+}
+
+/// Data source for the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataSource {
+    /// Real MNIST under `root` if present, else synthetic (DESIGN.md §3).
+    Mnist { root: String, n_synth: usize },
+    /// Synthetic Cifar10 stand-in.
+    SynthCifar { n: usize },
+    /// Tiny synthetic set for smoke tests (64-dim features).
+    Toy { n: usize },
+}
+
+/// A complete experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Architecture name — must exist in the artifact manifest.
+    pub arch: String,
+    /// Kernel backend of the artifacts to load: "jnp" or "pallas".
+    pub backend: String,
+    pub mode: Mode,
+    pub integrator: Integrator,
+    /// Learning rate (η, the ODE time-step — paper §4.3).
+    pub lr: f32,
+    pub lr_schedule: LrSchedule,
+    /// Momentum factor (used when `integrator = momentum`).
+    pub momentum: f32,
+    /// Singular-value truncation fraction τ (ϑ = τ‖Σ‖_F, §5.1).
+    pub tau: f32,
+    /// Initial rank per layer (clamped to layer dims & max bucket).
+    pub init_rank: usize,
+    /// Fixed rank for `FixedDlrt` / `Vanilla` modes.
+    pub fixed_rank: usize,
+    /// Floor for adaptive rank truncation.
+    pub min_rank: usize,
+    pub epochs: usize,
+    /// Optional cap on optimizer steps per epoch (paper's `iter`); 0 = all.
+    pub max_steps_per_epoch: usize,
+    pub data: DataSource,
+    pub seed: u64,
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: String,
+    /// Freeze rank adaptation after this many epochs (0 = never; §5.1 notes
+    /// ranks settle within the first epochs, after which fixed-rank steps
+    /// are cheaper).
+    pub freeze_rank_after_epochs: usize,
+    /// Extra orthonormality checks each step (slow; tests/debugging).
+    pub paranoid: bool,
+}
+
+impl Config {
+    pub fn from_toml_str(s: &str) -> Result<Self> {
+        let doc = KvDoc::parse(s).context("parsing config")?;
+        let str_or = |key: &str, default: &str| -> String {
+            doc.get_str(key).unwrap_or(default).to_string()
+        };
+        let data = match doc.get_str("data_kind").unwrap_or("mnist") {
+            "mnist" => DataSource::Mnist {
+                root: str_or("data_root", "data/mnist"),
+                n_synth: doc.get_usize("data_n").unwrap_or(12_000),
+            },
+            "synth_cifar" => {
+                DataSource::SynthCifar { n: doc.get_usize("data_n").unwrap_or(8_000) }
+            }
+            "toy" => DataSource::Toy { n: doc.get_usize("data_n").unwrap_or(2_000) },
+            other => bail!("unknown data_kind '{other}'"),
+        };
+        let lr_schedule = match doc.get_f32("lr_decay") {
+            Some(d) => LrSchedule::Exponential { decay: d },
+            None => LrSchedule::Constant,
+        };
+        let cfg = Config {
+            arch: doc
+                .get_str("arch")
+                .ok_or_else(|| anyhow::anyhow!("config needs `arch`"))?
+                .to_string(),
+            backend: str_or("backend", "jnp"),
+            mode: Mode::parse(doc.get_str("mode").unwrap_or("adaptive_dlrt"))?,
+            integrator: Integrator::parse(doc.get_str("integrator").unwrap_or("adam"))?,
+            lr: doc.get_f32("lr").unwrap_or(0.001),
+            lr_schedule,
+            momentum: doc.get_f32("momentum").unwrap_or(0.9),
+            tau: doc.get_f32("tau").unwrap_or(0.1),
+            init_rank: doc.get_usize("init_rank").unwrap_or(128),
+            fixed_rank: doc.get_usize("fixed_rank").unwrap_or(32),
+            min_rank: doc.get_usize("min_rank").unwrap_or(2),
+            epochs: doc.get_usize("epochs").unwrap_or(5),
+            max_steps_per_epoch: doc.get_usize("max_steps_per_epoch").unwrap_or(0),
+            data,
+            seed: doc.get_u64("seed").unwrap_or(0),
+            artifacts_dir: str_or("artifacts_dir", "artifacts"),
+            freeze_rank_after_epochs: doc.get_usize("freeze_rank_after_epochs").unwrap_or(0),
+            paranoid: doc.get_bool("paranoid").unwrap_or(false),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_path(path: &Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&s)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut doc = KvDoc::default();
+        doc.insert("arch", KvValue::Str(self.arch.clone()));
+        doc.insert("backend", KvValue::Str(self.backend.clone()));
+        doc.insert("mode", KvValue::Str(self.mode.as_str().into()));
+        doc.insert("integrator", KvValue::Str(self.integrator.as_str().into()));
+        doc.insert("lr", KvValue::Num(self.lr as f64));
+        if let LrSchedule::Exponential { decay } = self.lr_schedule {
+            doc.insert("lr_decay", KvValue::Num(decay as f64));
+        }
+        doc.insert("momentum", KvValue::Num(self.momentum as f64));
+        doc.insert("tau", KvValue::Num(self.tau as f64));
+        doc.insert("init_rank", KvValue::Num(self.init_rank as f64));
+        doc.insert("fixed_rank", KvValue::Num(self.fixed_rank as f64));
+        doc.insert("min_rank", KvValue::Num(self.min_rank as f64));
+        doc.insert("epochs", KvValue::Num(self.epochs as f64));
+        doc.insert("max_steps_per_epoch", KvValue::Num(self.max_steps_per_epoch as f64));
+        match &self.data {
+            DataSource::Mnist { root, n_synth } => {
+                doc.insert("data_kind", KvValue::Str("mnist".into()));
+                doc.insert("data_root", KvValue::Str(root.clone()));
+                doc.insert("data_n", KvValue::Num(*n_synth as f64));
+            }
+            DataSource::SynthCifar { n } => {
+                doc.insert("data_kind", KvValue::Str("synth_cifar".into()));
+                doc.insert("data_n", KvValue::Num(*n as f64));
+            }
+            DataSource::Toy { n } => {
+                doc.insert("data_kind", KvValue::Str("toy".into()));
+                doc.insert("data_n", KvValue::Num(*n as f64));
+            }
+        }
+        doc.insert("seed", KvValue::Num(self.seed as f64));
+        doc.insert("artifacts_dir", KvValue::Str(self.artifacts_dir.clone()));
+        doc.insert(
+            "freeze_rank_after_epochs",
+            KvValue::Num(self.freeze_rank_after_epochs as f64),
+        );
+        doc.insert("paranoid", KvValue::Bool(self.paranoid));
+        doc.to_string()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.lr > 0.0, "lr must be positive (got {})", self.lr);
+        ensure!(self.epochs > 0, "epochs must be >= 1");
+        ensure!((0.0..1.0).contains(&self.tau), "tau must be in [0, 1) (got {})", self.tau);
+        ensure!(self.init_rank >= 1, "init_rank must be >= 1");
+        ensure!(self.fixed_rank >= 1, "fixed_rank must be >= 1");
+        ensure!(self.min_rank >= 1, "min_rank must be >= 1");
+        ensure!(
+            self.backend == "jnp" || self.backend == "pallas",
+            "backend must be jnp|pallas (got {})",
+            self.backend
+        );
+        if let LrSchedule::Exponential { decay } = self.lr_schedule {
+            ensure!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        }
+        Ok(())
+    }
+
+    /// Learning rate at a given epoch under the schedule.
+    pub fn lr_at_epoch(&self, epoch: usize) -> f32 {
+        match self.lr_schedule {
+            LrSchedule::Constant => self.lr,
+            LrSchedule::Exponential { decay } => self.lr * decay.powi(epoch as i32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Config {
+        presets::quickstart()
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        for (_, cfg) in presets::all() {
+            let s = cfg.to_toml();
+            let back = Config::from_toml_str(&s).unwrap();
+            assert_eq!(back.arch, cfg.arch);
+            assert_eq!(back.mode, cfg.mode);
+            assert_eq!(back.tau, cfg.tau);
+            assert_eq!(back.lr_schedule, cfg.lr_schedule);
+            assert_eq!(back.data, cfg.data);
+            assert_eq!(back.seed, cfg.seed);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut cfg = base();
+        cfg.lr = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.tau = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.backend = "cuda".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parse_requires_arch() {
+        assert!(Config::from_toml_str("lr = 0.1").is_err());
+        assert!(Config::from_toml_str("arch = \"mlp_tiny\"").is_ok());
+    }
+
+    #[test]
+    fn lr_schedule_decays() {
+        let mut cfg = base();
+        cfg.lr = 1.0;
+        cfg.lr_schedule = LrSchedule::Exponential { decay: 0.5 };
+        assert_eq!(cfg.lr_at_epoch(0), 1.0);
+        assert_eq!(cfg.lr_at_epoch(2), 0.25);
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        for (name, cfg) in presets::all() {
+            cfg.validate().unwrap_or_else(|e| panic!("preset {name}: {e}"));
+        }
+    }
+}

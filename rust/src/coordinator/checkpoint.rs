@@ -1,0 +1,135 @@
+//! Factor checkpoints: JSON serialization of the per-layer `U, S, V, b`.
+//!
+//! JSON keeps checkpoints human-inspectable and diff-able; the low-rank
+//! nets the paper produces are small (tens of KB to a few MB), so no binary
+//! format is warranted.
+
+use crate::dlrt::LowRankFactors;
+use crate::linalg::Matrix;
+use crate::util::Json;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+fn matrix_to_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows() as f64)),
+        ("cols", Json::num(m.cols() as f64)),
+        ("data", Json::f32_array(m.data())),
+    ])
+}
+
+fn matrix_from_json(v: &Json) -> Result<Matrix> {
+    let rows = v.req("rows")?.as_usize()?;
+    let cols = v.req("cols")?.as_usize()?;
+    let data = v.req("data")?.to_f32_vec()?;
+    anyhow::ensure!(data.len() == rows * cols, "matrix payload size mismatch");
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Save factors to a JSON checkpoint.
+pub fn save_factors(path: &Path, arch: &str, layers: &[LowRankFactors]) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("arch", Json::str(arch)),
+        (
+            "layers",
+            Json::arr(layers.iter().map(|f| {
+                Json::obj(vec![
+                    ("rank", Json::num(f.rank() as f64)),
+                    ("u", matrix_to_json(&f.u)),
+                    ("s", matrix_to_json(&f.s)),
+                    ("v", matrix_to_json(&f.v)),
+                    ("bias", Json::f32_array(&f.bias)),
+                ])
+            })),
+        ),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load factors from a JSON checkpoint; returns `(arch_name, layers)`.
+pub fn load_factors(path: &Path) -> Result<(String, Vec<LowRankFactors>)> {
+    let s = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let v = Json::parse(&s).context("parsing checkpoint")?;
+    let arch = v.req("arch")?.as_str()?.to_string();
+    let layers = v
+        .req("layers")?
+        .as_arr()?
+        .iter()
+        .map(|l| -> Result<LowRankFactors> {
+            let f = LowRankFactors {
+                u: matrix_from_json(l.req("u")?)?,
+                s: matrix_from_json(l.req("s")?)?,
+                v: matrix_from_json(l.req("v")?)?,
+                bias: l.req("bias")?.to_f32_vec()?,
+            };
+            anyhow::ensure!(
+                f.s.rows() == f.s.cols()
+                    && f.u.cols() == f.s.rows()
+                    && f.v.cols() == f.s.rows()
+                    && f.bias.len() == f.u.rows(),
+                "inconsistent factor shapes in checkpoint"
+            );
+            Ok(f)
+        })
+        .collect::<Result<_>>()?;
+    Ok((arch, layers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+    use crate::util::testutil::TestDir;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(3);
+        let layers = vec![
+            LowRankFactors::random(8, 6, 3, &mut rng),
+            LowRankFactors::random(4, 8, 2, &mut rng),
+        ];
+        let dir = TestDir::new();
+        let p = dir.join("ckpt/model.json");
+        save_factors(&p, "mlp_tiny", &layers).unwrap();
+        let (arch, back) = load_factors(&p).unwrap();
+        assert_eq!(arch, "mlp_tiny");
+        assert_eq!(back.len(), 2);
+        for (a, b) in layers.iter().zip(&back) {
+            assert_eq!(a.rank(), b.rank());
+            assert!(a.u.fro_dist(&b.u) == 0.0);
+            assert!(a.s.fro_dist(&b.s) == 0.0);
+            assert!(a.v.fro_dist(&b.v) == 0.0);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+
+    #[test]
+    fn load_missing_fails_cleanly() {
+        assert!(load_factors(Path::new("/nonexistent/x.json")).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_shapes() {
+        let dir = TestDir::new();
+        let p = dir.join("bad.json");
+        // u says rank 3, s is 2x2
+        std::fs::write(
+            &p,
+            r#"{"version":1,"arch":"a","layers":[{"rank":3,
+                "u":{"rows":4,"cols":3,"data":[0,0,0,0,0,0,0,0,0,0,0,0]},
+                "s":{"rows":2,"cols":2,"data":[0,0,0,0]},
+                "v":{"rows":5,"cols":3,"data":[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0]},
+                "bias":[0,0,0,0]}]}"#,
+        )
+        .unwrap();
+        assert!(load_factors(&p).is_err());
+    }
+}

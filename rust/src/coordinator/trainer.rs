@@ -1,0 +1,293 @@
+//! The training loop.
+
+use crate::baselines::{DenseTrainer, VanillaInit, VanillaTrainer};
+use crate::config::{Config, DataSource, Integrator, Mode};
+use crate::data::{self, Batcher, Dataset, Split};
+use crate::dlrt::{KlsIntegrator, LowRankFactors, OptKind, PIN_THRESHOLD};
+use crate::linalg::Rng;
+use crate::metrics::params::LayerCount;
+use crate::metrics::{self, EpochRecord, RunRecord, StepTimer};
+use crate::runtime::Runtime;
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// The model being trained, by mode.
+pub enum ModelState {
+    Kls(KlsIntegrator),
+    Dense(DenseTrainer),
+    Vanilla(VanillaTrainer),
+}
+
+impl ModelState {
+    pub fn ranks(&self) -> Vec<usize> {
+        match self {
+            ModelState::Kls(k) => k.ranks(),
+            ModelState::Dense(_) => vec![],
+            ModelState::Vanilla(v) => v.ranks(),
+        }
+    }
+}
+
+/// Orchestrates one experiment run.
+pub struct Trainer {
+    pub cfg: Config,
+    pub rt: Runtime,
+    pub split: Split,
+    pub model: ModelState,
+    rng: Rng,
+}
+
+/// Map config optimizer to the factor-optimizer kind.
+fn opt_kind(cfg: &Config) -> OptKind {
+    match cfg.integrator {
+        Integrator::Sgd => OptKind::Sgd,
+        Integrator::Momentum => OptKind::Momentum { beta: cfg.momentum },
+        Integrator::Adam => OptKind::adam_default(),
+    }
+}
+
+/// Load + split + normalize data per the config (paper §5.1: 50K/10K/10K
+/// proportions, pixelwise normalization with train statistics).
+pub fn load_split(cfg: &Config) -> Result<Split> {
+    let data = match &cfg.data {
+        DataSource::Mnist { root, n_synth } => {
+            data::mnist_or_synthetic(Path::new(root), *n_synth, cfg.seed)?
+        }
+        DataSource::SynthCifar { n } => data::synth_cifar(*n, cfg.seed),
+        DataSource::Toy { n } => data::toy(*n, cfg.seed),
+    };
+    let mut split = data.split(5.0 / 7.0, 1.0 / 7.0, cfg.seed ^ 0x5EED);
+    let (mean, std) = split.train.normalize_pixelwise();
+    split.val.apply_normalization(&mean, &std);
+    split.test.apply_normalization(&mean, &std);
+    Ok(split)
+}
+
+impl Trainer {
+    pub fn new(cfg: Config) -> Result<Self> {
+        cfg.validate()?;
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let mut rng = Rng::new(cfg.seed);
+        let split = load_split(&cfg)?;
+        let arch = rt
+            .manifest()
+            .arch(&cfg.arch)
+            .ok_or_else(|| anyhow!("arch {} not in manifest", cfg.arch))?;
+        anyhow::ensure!(
+            split.train.dim == arch.input_dim,
+            "data dim {} != arch input dim {}",
+            split.train.dim,
+            arch.input_dim
+        );
+        let model = match cfg.mode {
+            Mode::AdaptiveDlrt => ModelState::Kls(KlsIntegrator::new(
+                &rt,
+                &cfg.arch,
+                &cfg.backend,
+                opt_kind(&cfg),
+                cfg.init_rank,
+                true,
+                cfg.tau,
+                cfg.min_rank,
+                &mut rng,
+            )?),
+            Mode::FixedDlrt => ModelState::Kls(KlsIntegrator::new(
+                &rt,
+                &cfg.arch,
+                &cfg.backend,
+                opt_kind(&cfg),
+                cfg.fixed_rank,
+                false,
+                cfg.tau,
+                cfg.min_rank,
+                &mut rng,
+            )?),
+            Mode::Dense => ModelState::Dense(DenseTrainer::new(
+                &rt,
+                &cfg.arch,
+                &cfg.backend,
+                opt_kind(&cfg),
+                &mut rng,
+            )?),
+            Mode::Vanilla => ModelState::Vanilla(VanillaTrainer::new(
+                &rt,
+                &cfg.arch,
+                &cfg.backend,
+                opt_kind(&cfg),
+                cfg.fixed_rank,
+                VanillaInit::Plain,
+                &mut rng,
+            )?),
+        };
+        Ok(Trainer { cfg, rt, split, model, rng })
+    }
+
+    /// Replace the model with a pre-built integrator (pruning/retraining).
+    pub fn with_factors(mut self, layers: Vec<LowRankFactors>, adaptive: bool) -> Result<Self> {
+        let arch = self
+            .rt
+            .manifest()
+            .arch(&self.cfg.arch)
+            .ok_or_else(|| anyhow!("arch {} not in manifest", self.cfg.arch))?
+            .clone();
+        self.model = ModelState::Kls(KlsIntegrator::from_layers(
+            &self.cfg.arch,
+            &self.cfg.backend,
+            arch,
+            layers,
+            opt_kind(&self.cfg),
+            adaptive,
+            self.cfg.tau,
+            self.cfg.min_rank,
+        ));
+        Ok(self)
+    }
+
+    /// Run the configured number of epochs; returns the full record.
+    /// `on_epoch` observes each epoch record (rank-evolution figures tap it).
+    pub fn run(&mut self, name: &str, mut on_epoch: impl FnMut(&EpochRecord)) -> Result<RunRecord> {
+        let batch_cap = self.train_batch_cap()?;
+        let mut batcher =
+            Batcher::new(self.split.train.len(), batch_cap, true, self.rng.next_u64());
+        let mut epochs = Vec::new();
+        for epoch in 0..self.cfg.epochs {
+            let lr = self.cfg.lr_at_epoch(epoch);
+            if self.cfg.freeze_rank_after_epochs > 0
+                && epoch >= self.cfg.freeze_rank_after_epochs
+            {
+                if let ModelState::Kls(k) = &mut self.model {
+                    k.adaptive = false;
+                }
+            }
+            let mut train_timer = StepTimer::new();
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0.0f64;
+            let mut seen = 0.0f64;
+            let mut steps = 0usize;
+            // collect batches first: Batcher borrows; fine for in-memory data
+            let batches: Vec<_> = batcher.epoch(&self.split.train).collect();
+            for batch in &batches {
+                if self.cfg.max_steps_per_epoch > 0 && steps >= self.cfg.max_steps_per_epoch {
+                    break;
+                }
+                train_timer.start();
+                let (loss, nc) = match &mut self.model {
+                    ModelState::Kls(k) => {
+                        let st = k.step(&self.rt, batch, lr)?;
+                        (st.loss, st.ncorrect)
+                    }
+                    ModelState::Dense(d) => d.step(&self.rt, batch, lr)?,
+                    ModelState::Vanilla(v) => v.step(&self.rt, batch, lr)?,
+                };
+                train_timer.stop();
+                loss_sum += loss as f64 * batch.count as f64;
+                correct += nc as f64;
+                seen += batch.count as f64;
+                steps += 1;
+            }
+            let mut eval_timer = StepTimer::new();
+            eval_timer.start();
+            let (val_loss, val_acc) = self.evaluate(&ValOrTest::Val)?;
+            eval_timer.stop();
+            let rec = EpochRecord {
+                epoch,
+                train_loss: (loss_sum / seen.max(1.0)) as f32,
+                train_acc: (correct / seen.max(1.0)) as f32,
+                val_loss,
+                val_acc,
+                ranks: self.model.ranks(),
+                train_seconds: train_timer.samples().iter().sum(),
+                eval_seconds: eval_timer.samples().iter().sum(),
+            };
+            on_epoch(&rec);
+            epochs.push(rec);
+        }
+        let (test_loss, test_acc) = self.evaluate(&ValOrTest::Test)?;
+        let (eval_params, train_params, dense_params) = self.param_accounting();
+        Ok(RunRecord {
+            name: name.into(),
+            config_toml: self.cfg.to_toml(),
+            epochs,
+            test_loss,
+            test_acc,
+            final_ranks: self.model.ranks(),
+            eval_params,
+            train_params,
+            dense_params,
+        })
+    }
+
+    fn train_batch_cap(&self) -> Result<usize> {
+        // every graph family of an arch shares one batch size; read it off
+        // any artifact of this arch+backend
+        self.rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.arch == self.cfg.arch && a.backend == self.cfg.backend)
+            .map(|a| a.batch)
+            .ok_or_else(|| anyhow!("no artifacts for {}/{}", self.cfg.arch, self.cfg.backend))
+    }
+
+    pub fn evaluate(&self, which: &ValOrTest) -> Result<(f32, f32)> {
+        let data = match which {
+            ValOrTest::Val => &self.split.val,
+            ValOrTest::Test => &self.split.test,
+        };
+        self.evaluate_on(data)
+    }
+
+    pub fn evaluate_on(&self, data: &Dataset) -> Result<(f32, f32)> {
+        match &self.model {
+            ModelState::Kls(k) => k.evaluate(&self.rt, data),
+            ModelState::Dense(d) => d.evaluate(&self.rt, data),
+            ModelState::Vanilla(v) => v.evaluate(&self.rt, data),
+        }
+    }
+
+    /// (eval, train, dense) parameter counts under the paper's conventions
+    /// (see `metrics::params`): conv archs use the compact train count
+    /// (Table 1), MLP archs the augmented one (Tables 5-6); pinned MLP
+    /// heads are counted dense, conv heads low-rank — exactly how the
+    /// paper's tables break down (verified digit-for-digit in params.rs).
+    pub fn param_accounting(&self) -> (usize, usize, usize) {
+        let arch = self.rt.manifest().arch(&self.cfg.arch).expect("arch exists");
+        let is_conv = arch.layers.iter().any(|l| l.kind == "conv");
+        let ranks = self.model.ranks();
+        let layers: Vec<LayerCount> = arch
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(k, l)| {
+                let pinned = l.max_rank() <= PIN_THRESHOLD;
+                let r = ranks.get(k).copied().unwrap_or(l.max_rank());
+                if ranks.is_empty() || (pinned && !is_conv) {
+                    LayerCount::Dense { m: l.m, n: l.n }
+                } else {
+                    LayerCount::LowRank { m: l.m, n: l.n, r }
+                }
+            })
+            .collect();
+        let eval = metrics::params::network_eval_params(&layers);
+        let train = if is_conv {
+            metrics::params::network_train_params_compact(&layers)
+        } else {
+            metrics::params::network_train_params_augmented(&layers)
+        };
+        let dense = metrics::params::network_dense_params(&layers);
+        (eval, train, dense)
+    }
+}
+
+/// Which split to evaluate.
+pub enum ValOrTest {
+    Val,
+    Test,
+}
+
+/// One-call convenience: build a trainer from a config and run it.
+pub fn train(cfg: Config, name: &str) -> Result<RunRecord> {
+    let mut t = Trainer::new(cfg)?;
+    t.run(name, |_| {})
+}

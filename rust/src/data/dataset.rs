@@ -1,0 +1,249 @@
+//! In-memory dataset container + padded batching for fixed-shape graphs.
+
+use crate::linalg::Rng;
+
+/// A labeled dataset with flat `f32` features (row-major, one row per item).
+#[derive(Clone)]
+pub struct Dataset {
+    /// `n * dim` features.
+    pub features: Vec<f32>,
+    /// `n` integer labels in `[0, num_classes)`.
+    pub labels: Vec<i32>,
+    pub dim: usize,
+    pub num_classes: usize,
+}
+
+/// A train/val/test split (paper §5.1 uses 50K/10K/10K for MNIST).
+pub struct Split {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feature_row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Pixelwise standardization: per-feature mean 0 / std 1, computed on
+    /// `self` ("images are pixelwise normalized", paper §5.1). Returns the
+    /// (mean, std) so val/test can reuse the train statistics.
+    pub fn normalize_pixelwise(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.len().max(1) as f64;
+        let mut mean = vec![0.0f64; self.dim];
+        for i in 0..self.len() {
+            for (m, &x) in mean.iter_mut().zip(self.feature_row(i)) {
+                *m += x as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0f64; self.dim];
+        for i in 0..self.len() {
+            for (v, (&x, &m)) in var.iter_mut().zip(self.feature_row(i).iter().zip(&mean)) {
+                let d = x as f64 - m;
+                *v += d * d;
+            }
+        }
+        let std: Vec<f32> = var.iter().map(|&v| ((v / n).sqrt() as f32).max(1e-4)).collect();
+        let mean: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+        self.apply_normalization(&mean, &std);
+        (mean, std)
+    }
+
+    /// Apply precomputed per-feature statistics (for val/test splits).
+    pub fn apply_normalization(&mut self, mean: &[f32], std: &[f32]) {
+        assert_eq!(mean.len(), self.dim);
+        for i in 0..self.len() {
+            let row = &mut self.features[i * self.dim..(i + 1) * self.dim];
+            for ((x, &m), &s) in row.iter_mut().zip(mean).zip(std) {
+                *x = (*x - m) / s;
+            }
+        }
+    }
+
+    /// Deterministic shuffled split by fractions (sums to <= 1.0).
+    pub fn split(mut self, train_frac: f64, val_frac: f64, seed: u64) -> Split {
+        let n = self.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut order);
+        let n_train = (n as f64 * train_frac) as usize;
+        let n_val = (n as f64 * val_frac) as usize;
+        let take = |idxs: &[usize], src: &Dataset| -> Dataset {
+            let mut features = Vec::with_capacity(idxs.len() * src.dim);
+            let mut labels = Vec::with_capacity(idxs.len());
+            for &i in idxs {
+                features.extend_from_slice(src.feature_row(i));
+                labels.push(src.labels[i]);
+            }
+            Dataset { features, labels, dim: src.dim, num_classes: src.num_classes }
+        };
+        let me = std::mem::replace(
+            &mut self,
+            Dataset { features: vec![], labels: vec![], dim: 0, num_classes: 0 },
+        );
+        Split {
+            train: take(&order[..n_train], &me),
+            val: take(&order[n_train..n_train + n_val], &me),
+            test: take(&order[n_train + n_val..], &me),
+        }
+    }
+}
+
+/// One padded batch, shaped for a compiled graph with batch size `cap`.
+pub struct Batch {
+    /// `cap * dim` features; rows past `count` are zero.
+    pub x: Vec<f32>,
+    /// `cap` labels; entries past `count` are 0 (masked by `w`).
+    pub y: Vec<i32>,
+    /// `cap` weights: 1.0 for real rows, 0.0 for padding.
+    pub w: Vec<f32>,
+    /// Number of real rows.
+    pub count: usize,
+}
+
+/// Epoch iterator producing padded batches; reshuffles on every `epoch()`.
+pub struct Batcher {
+    order: Vec<usize>,
+    batch: usize,
+    drop_last: bool,
+    rng: Rng,
+}
+
+impl Batcher {
+    /// `drop_last=true` for training (uniform batch statistics), `false`
+    /// for evaluation (every sample counted once, padding masked by `w`).
+    pub fn new(n: usize, batch: usize, drop_last: bool, seed: u64) -> Self {
+        Batcher { order: (0..n).collect(), batch, drop_last, rng: Rng::new(seed) }
+    }
+
+    /// Shuffle and iterate one epoch over `data`.
+    pub fn epoch<'a>(&'a mut self, data: &'a Dataset) -> impl Iterator<Item = Batch> + 'a {
+        self.rng.shuffle(&mut self.order);
+        let batch = self.batch;
+        let drop_last = self.drop_last;
+        let order = &self.order;
+        (0..order.len().div_ceil(batch)).filter_map(move |bi| {
+            let lo = bi * batch;
+            let hi = (lo + batch).min(order.len());
+            if drop_last && hi - lo < batch {
+                return None;
+            }
+            Some(make_batch(data, &order[lo..hi], batch))
+        })
+    }
+
+    /// Iterate in index order without shuffling (evaluation).
+    pub fn sequential<'a>(data: &'a Dataset, batch: usize) -> impl Iterator<Item = Batch> + 'a {
+        (0..data.len().div_ceil(batch)).map(move |bi| {
+            let lo = bi * batch;
+            let hi = (lo + batch).min(data.len());
+            let idxs: Vec<usize> = (lo..hi).collect();
+            make_batch(data, &idxs, batch)
+        })
+    }
+}
+
+fn make_batch(data: &Dataset, idxs: &[usize], cap: usize) -> Batch {
+    let mut x = vec![0.0f32; cap * data.dim];
+    let mut y = vec![0i32; cap];
+    let mut w = vec![0.0f32; cap];
+    for (row, &i) in idxs.iter().enumerate() {
+        x[row * data.dim..(row + 1) * data.dim].copy_from_slice(data.feature_row(i));
+        y[row] = data.labels[i];
+        w[row] = 1.0;
+    }
+    Batch { x, y, w, count: idxs.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        Dataset {
+            features: (0..n * 3).map(|i| i as f32).collect(),
+            labels: (0..n).map(|i| (i % 4) as i32).collect(),
+            dim: 3,
+            num_classes: 4,
+        }
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let s = toy(100).split(0.7, 0.1, 1);
+        assert_eq!(s.train.len(), 70);
+        assert_eq!(s.val.len(), 10);
+        assert_eq!(s.test.len(), 20);
+        // all labels preserved as a multiset
+        let mut all: Vec<i32> = s
+            .train
+            .labels
+            .iter()
+            .chain(&s.val.labels)
+            .chain(&s.test.labels)
+            .copied()
+            .collect();
+        all.sort();
+        let mut want: Vec<i32> = (0..100).map(|i| (i % 4) as i32).collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut d = toy(50);
+        d.normalize_pixelwise();
+        for j in 0..d.dim {
+            let col: Vec<f32> = (0..d.len()).map(|i| d.feature_row(i)[j]).collect();
+            let mean: f32 = col.iter().sum::<f32>() / col.len() as f32;
+            let var: f32 = col.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / col.len() as f32;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn batcher_drop_last_uniform() {
+        let d = toy(25);
+        let mut b = Batcher::new(d.len(), 8, true, 3);
+        let batches: Vec<Batch> = b.epoch(&d).collect();
+        assert_eq!(batches.len(), 3); // 25/8 -> 3 full batches
+        for batch in &batches {
+            assert_eq!(batch.count, 8);
+            assert!(batch.w.iter().all(|&w| w == 1.0));
+        }
+    }
+
+    #[test]
+    fn sequential_covers_all_with_padding_mask() {
+        let d = toy(10);
+        let batches: Vec<Batch> = Batcher::sequential(&d, 4).collect();
+        assert_eq!(batches.len(), 3);
+        let total: f32 = batches.iter().map(|b| b.w.iter().sum::<f32>()).sum();
+        assert_eq!(total, 10.0);
+        assert_eq!(batches[2].count, 2);
+        assert_eq!(batches[2].w, vec![1.0, 1.0, 0.0, 0.0]);
+        // padded feature rows are zero
+        assert!(batches[2].x[2 * 3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let d = toy(32);
+        let mut b = Batcher::new(d.len(), 32, true, 5);
+        let e1: Vec<i32> = b.epoch(&d).flat_map(|bt| bt.y).collect();
+        let e2: Vec<i32> = b.epoch(&d).flat_map(|bt| bt.y).collect();
+        assert_ne!(e1, e2);
+    }
+}

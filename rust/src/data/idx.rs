@@ -1,0 +1,116 @@
+//! IDX (MNIST) file-format loader.
+//!
+//! If real MNIST files are placed under `data/mnist/` the experiment
+//! binaries use them automatically (`data::mnist_or_synthetic`); otherwise
+//! the synthetic renderer stands in (DESIGN.md §3). Format reference:
+//! <http://yann.lecun.com/exdb/mnist/> — big-endian magic, dims, raw u8.
+
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::path::Path;
+
+use super::Dataset;
+
+fn read_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+}
+
+/// Parse an `idx3-ubyte` images file into (n, rows, cols, pixels/255).
+pub fn load_images(path: &Path) -> Result<(usize, usize, usize, Vec<f32>)> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(buf.len() >= 16, "images file too short: {}", path.display());
+    let magic = read_u32(&buf, 0);
+    if magic != 0x0000_0803 {
+        bail!("bad images magic {magic:#x} in {}", path.display());
+    }
+    let n = read_u32(&buf, 4) as usize;
+    let rows = read_u32(&buf, 8) as usize;
+    let cols = read_u32(&buf, 12) as usize;
+    ensure!(buf.len() == 16 + n * rows * cols, "images payload size mismatch");
+    let pixels = buf[16..].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok((n, rows, cols, pixels))
+}
+
+/// Parse an `idx1-ubyte` labels file.
+pub fn load_labels(path: &Path) -> Result<Vec<i32>> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(buf.len() >= 8, "labels file too short: {}", path.display());
+    let magic = read_u32(&buf, 0);
+    if magic != 0x0000_0801 {
+        bail!("bad labels magic {magic:#x} in {}", path.display());
+    }
+    let n = read_u32(&buf, 4) as usize;
+    ensure!(buf.len() == 8 + n, "labels payload size mismatch");
+    Ok(buf[8..].iter().map(|&b| b as i32).collect())
+}
+
+/// Load the standard 4-file MNIST layout from `root`, concatenating the
+/// train and t10k portions into one dataset (the caller re-splits 50/10/10
+/// like the paper §5.1).
+pub fn load_mnist_dir(root: &Path) -> Result<Dataset> {
+    let (n1, r, c, mut px) = load_images(&root.join("train-images-idx3-ubyte"))?;
+    let mut labels = load_labels(&root.join("train-labels-idx1-ubyte"))?;
+    ensure!(labels.len() == n1, "train images/labels count mismatch");
+    let test_img = root.join("t10k-images-idx3-ubyte");
+    if test_img.exists() {
+        let (n2, r2, c2, px2) = load_images(&test_img)?;
+        ensure!((r2, c2) == (r, c), "train/test image shape mismatch");
+        let l2 = load_labels(&root.join("t10k-labels-idx1-ubyte"))?;
+        ensure!(l2.len() == n2, "t10k images/labels count mismatch");
+        px.extend_from_slice(&px2);
+        labels.extend_from_slice(&l2);
+    }
+    Ok(Dataset { features: px, labels, dim: r * c, num_classes: 10 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx3(path: &Path, n: usize, rows: usize, cols: usize, data: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0803u32.to_be_bytes()).unwrap();
+        f.write_all(&(n as u32).to_be_bytes()).unwrap();
+        f.write_all(&(rows as u32).to_be_bytes()).unwrap();
+        f.write_all(&(cols as u32).to_be_bytes()).unwrap();
+        f.write_all(data).unwrap();
+    }
+
+    fn write_idx1(path: &Path, labels: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0801u32.to_be_bytes()).unwrap();
+        f.write_all(&(labels.len() as u32).to_be_bytes()).unwrap();
+        f.write_all(labels).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_synthetic_idx() {
+        let dir = crate::util::testutil::TestDir::new();
+        let n = 5;
+        let img: Vec<u8> = (0..n * 4 * 3).map(|i| (i % 256) as u8).collect();
+        write_idx3(&dir.join("train-images-idx3-ubyte"), n, 4, 3, &img);
+        write_idx1(&dir.join("train-labels-idx1-ubyte"), &[0, 1, 2, 3, 4]);
+        let d = load_mnist_dir(&dir.path).unwrap();
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.dim, 12);
+        assert_eq!(d.labels, vec![0, 1, 2, 3, 4]);
+        assert!((d.features[1] - 1.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = crate::util::testutil::TestDir::new();
+        let p = dir.join("train-images-idx3-ubyte");
+        std::fs::write(&p, [0u8; 32]).unwrap();
+        assert!(load_images(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let dir = crate::util::testutil::TestDir::new();
+        let p = dir.join("x");
+        write_idx3(&p, 10, 4, 3, &[0u8; 5]); // wrong payload size
+        assert!(load_images(&p).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Data pipeline substrate.
+//!
+//! The paper's experiments run on MNIST, Cifar10 and ImageNet1k. Per the
+//! substitution table in DESIGN.md §3, this module provides:
+//!
+//! * [`idx`] — a loader for the real MNIST IDX files (used automatically if
+//!   `data/mnist/*-ubyte` files are present);
+//! * [`synth_mnist`] — a procedural 28x28 digit renderer (glyph bitmaps +
+//!   random affine jitter + noise) matching MNIST's dimensionality and
+//!   class structure;
+//! * [`synth_cifar`] — a 32x32x3 textured-shape generator standing in for
+//!   Cifar10;
+//! * [`dataset`] — the in-memory [`Dataset`] container, pixelwise
+//!   normalization, deterministic splits, and the padded [`Batcher`] that
+//!   feeds the fixed-batch compiled graphs.
+
+pub mod dataset;
+pub mod idx;
+pub mod synth_cifar;
+pub mod synth_mnist;
+
+pub use dataset::{Batch, Batcher, Dataset, Split};
+pub use synth_cifar::synth_cifar;
+pub use synth_mnist::synth_mnist;
+
+use crate::linalg::Rng;
+use crate::Result;
+
+/// Tiny gaussian-blob dataset (64 features, 10 classes) for the `mlp_tiny`
+/// smoke architecture: class c lives around a random unit-ish centroid.
+pub fn toy(n: usize, seed: u64) -> Dataset {
+    const DIM: usize = 64;
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let centroids: Vec<Vec<f32>> =
+        (0..10).map(|_| (0..DIM).map(|_| 1.5 * rng.normal()).collect()).collect();
+    let mut features = Vec::with_capacity(n * DIM);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 10;
+        for j in 0..DIM {
+            features.push(centroids[c][j] + 0.6 * rng.normal());
+        }
+        labels.push(c as i32);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut f2 = Vec::with_capacity(features.len());
+    let mut l2 = Vec::with_capacity(n);
+    for &i in &order {
+        f2.extend_from_slice(&features[i * DIM..(i + 1) * DIM]);
+        l2.push(labels[i]);
+    }
+    Dataset { features: f2, labels: l2, dim: DIM, num_classes: 10 }
+}
+
+/// Load MNIST-shaped data: real IDX files when available under `root`,
+/// otherwise the deterministic synthetic set (`n` samples, seeded).
+pub fn mnist_or_synthetic(root: &std::path::Path, n: usize, seed: u64) -> Result<Dataset> {
+    let train_images = root.join("train-images-idx3-ubyte");
+    if train_images.exists() {
+        idx::load_mnist_dir(root)
+    } else {
+        Ok(synth_mnist(n, seed))
+    }
+}

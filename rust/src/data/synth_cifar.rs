@@ -1,0 +1,158 @@
+//! Procedural Cifar10 substitute: 32x32x3 textured shapes (DESIGN.md §3).
+//!
+//! Ten classes pair a geometric mask with a texture family so that neither
+//! color statistics nor shape alone solve the task — conv layers have to
+//! learn localized filters, which is the property Table 2's compression
+//! experiments exercise.
+
+use super::Dataset;
+use crate::linalg::Rng;
+
+const SIDE: usize = 32;
+const CH: usize = 3;
+
+#[derive(Clone, Copy)]
+enum Shape {
+    Disk,
+    Square,
+    Triangle,
+    Ring,
+    Cross,
+}
+
+#[derive(Clone, Copy)]
+enum Texture {
+    Flat,
+    HStripes,
+    Checker,
+}
+
+/// class -> (shape, texture, base RGB)
+const CLASSES: [(Shape, Texture, [f32; 3]); 10] = [
+    (Shape::Disk, Texture::Flat, [0.9, 0.3, 0.3]),
+    (Shape::Disk, Texture::HStripes, [0.3, 0.9, 0.4]),
+    (Shape::Square, Texture::Flat, [0.3, 0.4, 0.9]),
+    (Shape::Square, Texture::Checker, [0.9, 0.8, 0.2]),
+    (Shape::Triangle, Texture::Flat, [0.8, 0.3, 0.8]),
+    (Shape::Triangle, Texture::HStripes, [0.2, 0.8, 0.8]),
+    (Shape::Ring, Texture::Flat, [0.9, 0.6, 0.3]),
+    (Shape::Ring, Texture::Checker, [0.5, 0.9, 0.5]),
+    (Shape::Cross, Texture::Flat, [0.7, 0.7, 0.9]),
+    (Shape::Cross, Texture::HStripes, [0.9, 0.5, 0.6]),
+];
+
+fn inside(shape: Shape, x: f32, y: f32, r: f32) -> bool {
+    match shape {
+        Shape::Disk => x * x + y * y <= r * r,
+        Shape::Square => x.abs() <= r && y.abs() <= r,
+        Shape::Triangle => y >= -r && y <= r && x.abs() <= (r - y) * 0.6,
+        Shape::Ring => {
+            let d2 = x * x + y * y;
+            d2 <= r * r && d2 >= (0.55 * r) * (0.55 * r)
+        }
+        Shape::Cross => (x.abs() <= 0.35 * r && y.abs() <= r) || (y.abs() <= 0.35 * r && x.abs() <= r),
+    }
+}
+
+fn texture_gain(tex: Texture, ix: usize, iy: usize, phase: usize) -> f32 {
+    match tex {
+        Texture::Flat => 1.0,
+        Texture::HStripes => {
+            if (iy + phase) % 4 < 2 {
+                1.0
+            } else {
+                0.35
+            }
+        }
+        Texture::Checker => {
+            if ((ix / 3) + (iy / 3) + phase) % 2 == 0 {
+                1.0
+            } else {
+                0.35
+            }
+        }
+    }
+}
+
+/// Render one sample as HWC-flattened f32 in [0,1].
+pub fn render_sample(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let (shape, tex, base) = CLASSES[class % 10];
+    let cx = 16.0 + (rng.uniform() - 0.5) * 10.0;
+    let cy = 16.0 + (rng.uniform() - 0.5) * 10.0;
+    let r = 6.0 + rng.uniform() * 5.0;
+    let phase = rng.below(4);
+    let bg: [f32; 3] = [0.15 + 0.2 * rng.uniform(), 0.15 + 0.2 * rng.uniform(), 0.15 + 0.2 * rng.uniform()];
+    let jitter: [f32; 3] =
+        [1.0 + 0.2 * (rng.uniform() - 0.5), 1.0 + 0.2 * (rng.uniform() - 0.5), 1.0 + 0.2 * (rng.uniform() - 0.5)];
+    let noise = 0.04;
+
+    let mut img = vec![0.0f32; SIDE * SIDE * CH];
+    for iy in 0..SIDE {
+        for ix in 0..SIDE {
+            let inside_shape = inside(shape, ix as f32 + 0.5 - cx, iy as f32 + 0.5 - cy, r);
+            let gain = texture_gain(tex, ix, iy, phase);
+            for c in 0..CH {
+                let v = if inside_shape { base[c] * jitter[c] * gain } else { bg[c] };
+                img[(iy * SIDE + ix) * CH + c] = (v + noise * rng.normal()).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// Generate `n` samples with balanced classes (HWC layout, matching the
+/// graphs' `image_hwc` input convention).
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = SIDE * SIDE * CH;
+    let mut features = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = if i < n / 10 * 10 { i % 10 } else { rng.below(10) };
+        features.extend_from_slice(&render_sample(class, &mut rng));
+        labels.push(class as i32);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut f2 = Vec::with_capacity(features.len());
+    let mut l2 = Vec::with_capacity(n);
+    for &i in &order {
+        f2.extend_from_slice(&features[i * dim..(i + 1) * dim]);
+        l2.push(labels[i]);
+    }
+    Dataset { features: f2, labels: l2, dim, num_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = synth_cifar(200, 3);
+        let b = synth_cifar(200, 3);
+        assert_eq!(a.features, b.features);
+        let mut counts = [0usize; 10];
+        for &l in &a.labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts, [20; 10]);
+    }
+
+    #[test]
+    fn range_and_dim() {
+        let d = synth_cifar(32, 1);
+        assert_eq!(d.dim, 32 * 32 * 3);
+        assert!(d.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn shape_masks_differ_between_classes() {
+        let mut rng = Rng::new(2);
+        let disk = render_sample(0, &mut rng);
+        let mut rng = Rng::new(2);
+        let cross = render_sample(8, &mut rng);
+        let diff: f32 = disk.iter().zip(&cross).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 10.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! The rank-adaptive KLS integrator (paper Algorithm 1).
+//!
+//! One training step on a batch:
+//!
+//! 1. **K & L steps** — one `kl_grads` graph execution returns every
+//!    layer's `∂K` and `∂L` (two taped backward passes, §4.2); the host
+//!    applies the per-factor optimizer to `K⁰ = U S` and `L⁰ = V Sᵀ`.
+//! 2. **Basis update** — Householder QR of `K¹` (fixed-rank) or of the
+//!    augmented `[K¹ | U⁰]` (adaptive, Alg. 1 lines 9-10); projections
+//!    `M = U¹ᵀU⁰`, `N = V¹ᵀV⁰`, `S̃ = M S⁰ Nᵀ`.
+//! 3. **S step** — one `s_grads` graph execution on the new bases returns
+//!    `∂S` and `∂bias`; optimizer applied on the host.
+//! 4. **Truncation** (adaptive) — Jacobi SVD of `S¹`, truncate at
+//!    `ϑ = τ‖Σ‖_F` (Alg. 1 lines 17-21), rotate `U, V` by the singular
+//!    vectors. The new core is diagonal.
+//!
+//! Buckets: factors are zero-padded into the compiled slot shapes; padding
+//! is exactly inert (see `optimizer.rs` and the L2 tests), so the math is
+//! the true-rank computation regardless of the bucket executed.
+//!
+//! Layers whose matrix is tiny (`min(m,n) ≤ PIN_THRESHOLD`, e.g. the
+//! 10-class classifier head) are *pinned*: trained at full rank, never
+//! augmented or truncated — matching §5.1 where the final layer's rank
+//! stays at 10 in every table.
+
+use super::{FactorOptimizer, LowRankFactors, OptKind};
+use crate::data::Batch;
+use crate::linalg::{householder_qr, jacobi_svd, matmul, matmul_tn, orthonormality_error, Matrix, Rng};
+use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// Layers at or below this max-rank are trained at full rank and excluded
+/// from adaptation (classifier heads).
+pub const PIN_THRESHOLD: usize = 16;
+
+/// Metrics of one integrator step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Loss measured by the K-form forward (before any update this step).
+    pub loss: f32,
+    /// Weighted #correct on this batch (same forward).
+    pub ncorrect: f32,
+    /// Loss measured by the S-step forward (after the K/L update).
+    pub loss_after_kl: f32,
+    /// Per-phase wall clock (§Perf breakdown).
+    pub timings: StepTimings,
+}
+
+/// Where one integrator step's wall clock went.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTimings {
+    /// kl_grads graph execution (incl. literal packing).
+    pub kl_graph_s: f64,
+    /// Host K/L optimizer + QR + projections.
+    pub host_kl_s: f64,
+    /// s_grads graph execution (incl. literal packing).
+    pub s_graph_s: f64,
+    /// Host S optimizer + SVD truncation + basis rotation.
+    pub host_s_s: f64,
+}
+
+/// Per-layer staged state between the K/L and S phases.
+struct Staged {
+    u1: Matrix,
+    v1: Matrix,
+    s_tilde: Matrix,
+}
+
+/// The integrator: factor state + optimizer states + rank policy.
+pub struct KlsIntegrator {
+    pub arch_name: String,
+    pub backend: String,
+    pub arch: ArchInfo,
+    pub layers: Vec<LowRankFactors>,
+    opt_k: Vec<FactorOptimizer>,
+    opt_l: Vec<FactorOptimizer>,
+    opt_s: Vec<FactorOptimizer>,
+    opt_b: Vec<FactorOptimizer>,
+    /// Rank adaptation on/off (Alg. 1's `adaptive` flag). Mutable so the
+    /// trainer can freeze ranks after the settling epochs (§5.1).
+    pub adaptive: bool,
+    pub tau: f32,
+    pub min_rank: usize,
+    /// Extra orthonormality assertions each step.
+    pub paranoid: bool,
+}
+
+impl KlsIntegrator {
+    /// Random initialization at `init_rank` (clamped per layer).
+    pub fn new(
+        rt: &Runtime,
+        arch_name: &str,
+        backend: &str,
+        opt: OptKind,
+        init_rank: usize,
+        adaptive: bool,
+        tau: f32,
+        min_rank: usize,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let arch = rt
+            .manifest()
+            .arch(arch_name)
+            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
+            .clone();
+        // the initial rank cannot exceed the largest compiled kl_grads slot
+        let max_bucket = rt
+            .manifest()
+            .buckets(arch_name, "kl_grads", backend)
+            .last()
+            .copied()
+            .ok_or_else(|| anyhow!("no kl_grads artifacts for {arch_name}/{backend}"))?;
+        let layers: Vec<LowRankFactors> = arch
+            .layers
+            .iter()
+            .map(|l| {
+                let r = if l.max_rank() <= PIN_THRESHOLD {
+                    l.max_rank()
+                } else {
+                    init_rank.min(max_bucket)
+                };
+                LowRankFactors::random(l.m, l.n, r, rng)
+            })
+            .collect();
+        Ok(Self::from_layers(arch_name, backend, arch, layers, opt, adaptive, tau, min_rank))
+    }
+
+    /// Build from existing factors (pruning/retraining paths).
+    pub fn from_layers(
+        arch_name: &str,
+        backend: &str,
+        arch: ArchInfo,
+        layers: Vec<LowRankFactors>,
+        opt: OptKind,
+        adaptive: bool,
+        tau: f32,
+        min_rank: usize,
+    ) -> Self {
+        let n = layers.len();
+        let mk = |_| FactorOptimizer::new(opt);
+        KlsIntegrator {
+            arch_name: arch_name.into(),
+            backend: backend.into(),
+            arch,
+            layers,
+            opt_k: (0..n).map(mk).collect(),
+            opt_l: (0..n).map(mk).collect(),
+            opt_s: (0..n).map(mk).collect(),
+            opt_b: (0..n).map(mk).collect(),
+            adaptive,
+            tau,
+            min_rank,
+            paranoid: false,
+        }
+    }
+
+    /// Current per-layer ranks.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.layers.iter().map(|f| f.rank()).collect()
+    }
+
+    /// Is layer `k` excluded from rank adaptation?
+    pub fn pinned(&self, k: usize) -> bool {
+        self.arch.layers[k].max_rank() <= PIN_THRESHOLD
+    }
+
+    fn max_rank(&self) -> usize {
+        self.layers.iter().map(|f| f.rank()).max().unwrap_or(1)
+    }
+
+    /// Pack factor inputs (padded to slots) + batch into literal list
+    /// following the artifact's input spec order.
+    fn pack_factors(
+        &self,
+        exe: &Executable,
+        factors: &[(&Matrix, &Matrix, &Matrix, &[f32])],
+        batch: &Batch,
+    ) -> Result<Vec<xla::Literal>> {
+        let info = &exe.info;
+        let n_layers = factors.len();
+        ensure!(
+            info.inputs.len() == 4 * n_layers + 3,
+            "{}: unexpected input arity {}",
+            info.name,
+            info.inputs.len()
+        );
+        let mut lits = Vec::with_capacity(info.inputs.len());
+        for (k, (u, s, v, b)) in factors.iter().enumerate() {
+            let specs = &info.inputs[4 * k..4 * k + 4];
+            debug_assert!(specs[0].name.ends_with("/U"));
+            let (m, slot) = (specs[0].shape[0], specs[0].shape[1]);
+            let n = specs[2].shape[0];
+            lits.push(literals::pack_matrix(&specs[0], &u.pad_to(m, slot))?);
+            lits.push(literals::pack_matrix(&specs[1], &s.pad_to(slot, slot))?);
+            lits.push(literals::pack_matrix(&specs[2], &v.pad_to(n, slot))?);
+            lits.push(literals::pack_f32(&specs[3], b)?);
+        }
+        let base = 4 * n_layers;
+        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+        Ok(lits)
+    }
+
+    /// One full KLS training step on a batch.
+    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let n_layers = self.layers.len();
+        let bucket = rt
+            .bucket_for(&self.arch_name, "kl_grads", &self.backend, self.max_rank())
+            .ok_or_else(|| anyhow!("no kl_grads buckets for {}", self.arch_name))?;
+        let exe_kl = rt.load(&self.arch_name, "kl_grads", &self.backend, bucket)?;
+        let mut timings = StepTimings::default();
+        let t0 = std::time::Instant::now();
+
+        // ---- K & L gradient evaluation (one graph run) -------------------
+        let factor_refs: Vec<_> = self
+            .layers
+            .iter()
+            .map(|f| (&f.u, &f.s, &f.v, f.bias.as_slice()))
+            .collect();
+        let inputs = self.pack_factors(&exe_kl, &factor_refs, batch)?;
+        let outs = exe_kl.run(&inputs)?;
+        let loss = literals::unpack_scalar(
+            &exe_kl.info.outputs[2 * n_layers],
+            &outs[2 * n_layers],
+        )?;
+        let ncorrect = literals::unpack_scalar(
+            &exe_kl.info.outputs[2 * n_layers + 1],
+            &outs[2 * n_layers + 1],
+        )?;
+        timings.kl_graph_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+
+        // ---- host K/L optimizer steps + basis update ---------------------
+        let mut staged = Vec::with_capacity(n_layers);
+        for k in 0..n_layers {
+            let f = &self.layers[k];
+            let r = f.rank();
+            let (m, n) = (f.m(), f.n());
+            let slot = exe_kl.info.inputs[4 * k].shape[1];
+            let dk = literals::unpack_matrix(&exe_kl.info.outputs[k], &outs[k])?;
+            let dl =
+                literals::unpack_matrix(&exe_kl.info.outputs[n_layers + k], &outs[n_layers + k])?;
+
+            let mut k1 = f.k().pad_to(m, slot);
+            self.opt_k[k].update(&mut k1, &dk, lr);
+            let mut l1 = f.l().pad_to(n, slot);
+            self.opt_l[k].update(&mut l1, &dl, lr);
+            let k1 = k1.take_cols(r);
+            let l1 = l1.take_cols(r);
+
+            // The augmented rank is capped by the largest compiled s_grads
+            // bucket: the basis can only grow as far as an artifact exists
+            // to evaluate its S-step (DESIGN.md §2, bucket policy).
+            let max_sbucket = rt
+                .manifest()
+                .buckets(&self.arch_name, "s_grads", &self.backend)
+                .last()
+                .copied()
+                .unwrap_or(r);
+            let raug = (2 * r).min(m).min(n).min(max_sbucket);
+            let augment = self.adaptive && !self.pinned(k) && raug > r;
+            let (u1, v1) = if augment {
+                let u1 = householder_qr(&k1.hcat(&f.u)).take_cols(raug);
+                let v1 = householder_qr(&l1.hcat(&f.v)).take_cols(raug);
+                (u1, v1)
+            } else {
+                (householder_qr(&k1), householder_qr(&l1))
+            };
+            if self.paranoid {
+                ensure!(orthonormality_error(&u1) < 1e-3, "layer {k}: U1 lost orthonormality");
+                ensure!(orthonormality_error(&v1) < 1e-3, "layer {k}: V1 lost orthonormality");
+            }
+            // S̃ = (U¹ᵀ U⁰) S⁰ (V⁰ᵀ V¹) — Alg. 1 lines 11-15
+            let m_k = matmul_tn(&u1, &f.u);
+            let n_k = matmul_tn(&v1, &f.v);
+            let s_tilde = matmul(&matmul(&m_k, &f.s), &n_k.transpose());
+            staged.push(Staged { u1, v1, s_tilde });
+        }
+
+        timings.host_kl_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+
+        // ---- S step (one graph run on the staged bases) ------------------
+        let max_staged = staged.iter().map(|s| s.s_tilde.rows()).max().unwrap_or(1);
+        let sbucket = rt
+            .bucket_for(&self.arch_name, "s_grads", &self.backend, max_staged)
+            .ok_or_else(|| anyhow!("no s_grads buckets for {}", self.arch_name))?;
+        let exe_s = rt.load(&self.arch_name, "s_grads", &self.backend, sbucket)?;
+        let staged_refs: Vec<_> = staged
+            .iter()
+            .zip(&self.layers)
+            .map(|(st, f)| (&st.u1, &st.s_tilde, &st.v1, f.bias.as_slice()))
+            .collect();
+        let inputs = self.pack_factors(&exe_s, &staged_refs, batch)?;
+        let souts = exe_s.run(&inputs)?;
+        let loss_after_kl = literals::unpack_scalar(
+            &exe_s.info.outputs[2 * n_layers],
+            &souts[2 * n_layers],
+        )?;
+
+        timings.s_graph_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+
+        // ---- host S/bias optimizer steps + truncation --------------------
+        for (k, st) in staged.into_iter().enumerate() {
+            let raug = st.s_tilde.rows();
+            let slot = exe_s.info.inputs[4 * k].shape[1];
+            let ds = literals::unpack_matrix(&exe_s.info.outputs[k], &souts[k])?;
+            let db = literals::unpack_matrix(
+                &exe_s.info.outputs[self.layers.len() + k],
+                &souts[self.layers.len() + k],
+            )?;
+
+            let mut s1 = st.s_tilde.pad_to(slot, slot);
+            self.opt_s[k].update(&mut s1, &ds, lr);
+            let s1 = s1.take_block(raug, raug);
+            let truncate = self.adaptive && !self.pinned(k);
+            let f = &mut self.layers[k];
+            self.opt_b[k].update_vec(&mut f.bias, db.data(), lr);
+
+            if truncate {
+                // Alg. 1 lines 17-21: SVD-truncate the core, rotate bases.
+                let svd = jacobi_svd(&s1);
+                let theta = self.tau * svd.sigma_fro();
+                let r_new = svd.truncation_rank(theta, self.min_rank);
+                let mut s_next = Matrix::zeros(r_new, r_new);
+                for i in 0..r_new {
+                    s_next[(i, i)] = svd.sigma[i];
+                }
+                f.u = matmul(&st.u1, &svd.u.take_cols(r_new));
+                f.v = matmul(&st.v1, &svd.vt.transpose().take_cols(r_new));
+                f.s = s_next;
+            } else {
+                f.u = st.u1;
+                f.v = st.v1;
+                f.s = s1;
+            }
+        }
+
+        timings.host_s_s = t0.elapsed().as_secs_f64();
+        Ok(StepStats { loss, ncorrect, loss_after_kl, timings })
+    }
+
+    /// Evaluate loss/accuracy over a dataset via the `forward` artifact.
+    /// Returns `(mean_loss, accuracy)`.
+    pub fn evaluate(&self, rt: &Runtime, data: &crate::data::Dataset) -> Result<(f32, f32)> {
+        let bucket = rt
+            .bucket_for(&self.arch_name, "forward", &self.backend, self.max_rank())
+            .ok_or_else(|| anyhow!("no forward buckets for {}", self.arch_name))?;
+        let exe = rt.load(&self.arch_name, "forward", &self.backend, bucket)?;
+        let batch_cap = exe.info.batch;
+        let n_layers = self.layers.len();
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0.0f64;
+        for batch in crate::data::Batcher::sequential(data, batch_cap) {
+            let factor_refs: Vec<_> = self
+                .layers
+                .iter()
+                .map(|f| (&f.u, &f.s, &f.v, f.bias.as_slice()))
+                .collect();
+            let inputs = self.pack_factors(&exe, &factor_refs, &batch)?;
+            let outs = exe.run(&inputs)?;
+            let loss =
+                literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
+            let ncorr =
+                literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
+            let _ = n_layers;
+            total_loss += loss * batch.count as f64;
+            total_correct += ncorr;
+            total += batch.count as f64;
+        }
+        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    }
+}

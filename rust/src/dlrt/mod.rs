@@ -1,0 +1,21 @@
+//! The DLRT core: low-rank factor state, per-factor optimizers, and the
+//! KLS basis-update & Galerkin integrator (paper Algorithm 1).
+//!
+//! The heavy gradient evaluations run inside the compiled L2 graphs
+//! (`kl_grads`, `s_grads`); this module owns everything the graphs cannot:
+//! the dynamically-shaped host linear algebra (QR re-orthogonalization,
+//! basis augmentation, SVD truncation), the optimizer states, and the rank
+//! bookkeeping that drives bucket selection.
+
+mod factors;
+mod integrator;
+mod optimizer;
+
+pub use factors::LowRankFactors;
+pub use integrator::{KlsIntegrator, StepStats, StepTimings, PIN_THRESHOLD};
+pub use optimizer::{FactorOptimizer, OptKind};
+
+/// Rank at or below which a layer is pinned (see [`integrator`] docs).
+pub fn integrator_pin_threshold() -> usize {
+    PIN_THRESHOLD
+}

@@ -1,0 +1,181 @@
+//! Per-factor optimizers — the "one-step-integrate" of Algorithm 1.
+//!
+//! Paper §4.3: explicit Euler on the gradient flow *is* one SGD step; the
+//! Adam variant modifies the Euler step with the usual moment estimates.
+//! One [`FactorOptimizer`] instance is kept per (layer, factor) tensor; its
+//! state lives at the *bucket slot* shape so zero-padded columns update to
+//! exactly zero (zero grad + zero moments ⇒ zero step), keeping padding
+//! inert across steps. When the slot shape changes (bucket hot-swap) the
+//! moments reset — the basis has rotated anyway (documented in DESIGN.md).
+
+use crate::linalg::Matrix;
+
+/// Which update rule to apply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptKind {
+    Sgd,
+    /// Heavy-ball momentum.
+    Momentum { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptKind {
+    pub fn adam_default() -> Self {
+        OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Optimizer state for one tensor.
+pub struct FactorOptimizer {
+    kind: OptKind,
+    /// First moment / velocity (momentum & adam).
+    m: Option<Matrix>,
+    /// Second moment (adam).
+    v: Option<Matrix>,
+    /// Adam step counter (for bias correction).
+    t: u64,
+}
+
+impl FactorOptimizer {
+    pub fn new(kind: OptKind) -> Self {
+        FactorOptimizer { kind, m: None, v: None, t: 0 }
+    }
+
+    pub fn kind(&self) -> OptKind {
+        self.kind
+    }
+
+    /// Drop state (rank/bucket change).
+    pub fn reset(&mut self) {
+        self.m = None;
+        self.v = None;
+        self.t = 0;
+    }
+
+    fn ensure_shape(&mut self, shape: (usize, usize)) {
+        let stale = self.m.as_ref().map(|m| m.shape() != shape).unwrap_or(false);
+        if stale {
+            self.reset();
+        }
+    }
+
+    /// In-place update `param -= lr * step(grad)`.
+    pub fn update(&mut self, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        assert_eq!(param.shape(), grad.shape(), "optimizer shape mismatch");
+        self.ensure_shape(param.shape());
+        match self.kind {
+            OptKind::Sgd => {
+                param.axpy(-lr, grad);
+            }
+            OptKind::Momentum { beta } => {
+                let vel = self.m.get_or_insert_with(|| Matrix::zeros(param.rows(), param.cols()));
+                // v <- beta v + g ; p <- p - lr v
+                for (v, &g) in vel.data_mut().iter_mut().zip(grad.data()) {
+                    *v = beta * *v + g;
+                }
+                param.axpy(-lr, vel);
+            }
+            OptKind::Adam { beta1, beta2, eps } => {
+                let (rows, cols) = param.shape();
+                let m = self.m.get_or_insert_with(|| Matrix::zeros(rows, cols));
+                let v = self.v.get_or_insert_with(|| Matrix::zeros(rows, cols));
+                self.t += 1;
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                let pdata = param.data_mut();
+                for i in 0..pdata.len() {
+                    let g = grad.data()[i];
+                    let mi = &mut m.data_mut()[i];
+                    *mi = beta1 * *mi + (1.0 - beta1) * g;
+                    let vi = &mut v.data_mut()[i];
+                    *vi = beta2 * *vi + (1.0 - beta2) * g * g;
+                    let mhat = *mi / bc1;
+                    let vhat = *vi / bc2;
+                    pdata[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+
+    /// Vector convenience (biases).
+    pub fn update_vec(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
+        let mut p = Matrix::from_vec(1, param.len(), param.to_vec());
+        let g = Matrix::from_vec(1, grad.len(), grad.to_vec());
+        self.update(&mut p, &g, lr);
+        param.copy_from_slice(p.data());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_of(p: &Matrix) -> Matrix {
+        // quadratic bowl: f = 0.5 ||p - 3||²; grad = p - 3
+        let mut g = p.clone();
+        for x in g.data_mut() {
+            *x -= 3.0;
+        }
+        g
+    }
+
+    fn converges(kind: OptKind, lr: f32, steps: usize) -> f32 {
+        let mut p = Matrix::zeros(2, 2);
+        let mut opt = FactorOptimizer::new(kind);
+        for _ in 0..steps {
+            let g = grad_of(&p);
+            opt.update(&mut p, &g, lr);
+        }
+        p.data().iter().map(|&x| (x - 3.0).abs()).fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn sgd_is_plain_euler() {
+        let mut p = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = Matrix::from_vec(1, 2, vec![0.5, -1.0]);
+        FactorOptimizer::new(OptKind::Sgd).update(&mut p, &g, 0.1);
+        assert!((p.data()[0] - 0.95).abs() < 1e-6);
+        assert!((p.data()[1] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_kinds_converge_on_quadratic() {
+        assert!(converges(OptKind::Sgd, 0.1, 200) < 1e-3);
+        assert!(converges(OptKind::Momentum { beta: 0.9 }, 0.02, 400) < 1e-3);
+        assert!(converges(OptKind::adam_default(), 0.05, 600) < 1e-2);
+    }
+
+    #[test]
+    fn zero_grad_zero_moments_gives_zero_step() {
+        // the padding-inertness contract (module docs)
+        for kind in [OptKind::Sgd, OptKind::Momentum { beta: 0.9 }, OptKind::adam_default()] {
+            let mut p = Matrix::zeros(3, 3);
+            let g = Matrix::zeros(3, 3);
+            let mut opt = FactorOptimizer::new(kind);
+            for _ in 0..5 {
+                opt.update(&mut p, &g, 0.5);
+            }
+            assert_eq!(p.max_abs(), 0.0);
+        }
+    }
+
+    #[test]
+    fn shape_change_resets_state() {
+        let mut opt = FactorOptimizer::new(OptKind::Momentum { beta: 0.9 });
+        let mut p = Matrix::zeros(2, 2);
+        let g = Matrix::from_vec(2, 2, vec![1.0; 4]);
+        opt.update(&mut p, &g, 0.1);
+        assert!(opt.m.is_some());
+        let mut p2 = Matrix::zeros(3, 2);
+        let g2 = Matrix::from_vec(3, 2, vec![1.0; 6]);
+        opt.update(&mut p2, &g2, 0.1); // must not panic; state resets
+        assert_eq!(opt.m.as_ref().unwrap().shape(), (3, 2));
+    }
+
+    #[test]
+    fn update_vec_roundtrips() {
+        let mut b = vec![1.0f32, 1.0];
+        FactorOptimizer::new(OptKind::Sgd).update_vec(&mut b, &[1.0, -1.0], 0.5);
+        assert_eq!(b, vec![0.5, 1.5]);
+    }
+}

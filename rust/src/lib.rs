@@ -1,0 +1,30 @@
+//! # DLRT — Dynamical Low-Rank Training
+//!
+//! Production-grade reproduction of *"Low-rank lottery tickets: finding
+//! efficient low-rank neural networks via matrix differential equations"*
+//! (Schotthöfer, Zangrando, Kusch, Ceruti, Tudisco — NeurIPS 2022).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — the training coordinator: KLS integrator
+//!   sequencing, rank adaptation, bucketed executable management, optimizers,
+//!   data pipeline, metrics, CLI.
+//! * **L2** — JAX compute graphs, AOT-lowered to HLO text under
+//!   `artifacts/` by `python/compile/aot.py`.
+//! * **L1** — Pallas kernels inside those graphs.
+//!
+//! Python never runs on the training path: the coordinator executes the
+//! compiled graphs through the PJRT C API (`xla` crate) and performs the
+//! host-side linear algebra (thin QR, small SVD) in [`linalg`].
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dlrt;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

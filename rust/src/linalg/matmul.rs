@@ -1,0 +1,135 @@
+//! Blocked, rayon-parallel dense products for host-side integrator math.
+//!
+//! Shapes here are thin (`n x 2r` bases, `2r x 2r` cores), so the kernels
+//! optimize for cache reuse on tall-skinny operands rather than giant GEMM.
+//! f64 accumulation keeps the QR/SVD downstream numerically clean in f32.
+
+use super::Matrix;
+use crate::util::pool;
+
+/// Total-flops threshold below which threading overhead dominates.
+const PAR_THRESHOLD: usize = 64 * 64 * 64;
+
+/// `A * B` — (m,k) x (k,n) -> (m,n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut out = Matrix::zeros(m, n);
+    let work = m * n * k;
+    let body = |i: usize, row_out: &mut [f32]| {
+        // accumulate row i: out[i,:] += a[i,l] * b[l,:]  (SAXPY order — B rows
+        // stream sequentially, friendly to hardware prefetch)
+        let mut acc = vec![0.0f64; n];
+        let arow = a.row(i);
+        for (l, &ail) in arow.iter().enumerate() {
+            if ail == 0.0 {
+                continue; // bucket-padded zero columns cost nothing
+            }
+            let brow = b.row(l);
+            let ail = ail as f64;
+            for (j, &blj) in brow.iter().enumerate() {
+                acc[j] += ail * blj as f64;
+            }
+        }
+        for (o, v) in row_out.iter_mut().zip(acc) {
+            *o = v as f32;
+        }
+    };
+    let threads = if work >= PAR_THRESHOLD { pool::default_threads() } else { 1 };
+    pool::par_rows_mut(out.data_mut(), n, threads, body);
+    out
+}
+
+/// `A * Bᵀ` — (m,k) x (n,k) -> (m,n). Both operands stream row-major.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch {:?} x {:?}ᵀ", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    let work = m * n * k;
+    let body = |i: usize, row_out: &mut [f32]| {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f64;
+            for l in 0..k {
+                acc += arow[l] as f64 * brow[l] as f64;
+            }
+            row_out[j] = acc as f32;
+        }
+    };
+    let threads = if work >= PAR_THRESHOLD { pool::default_threads() } else { 1 };
+    pool::par_rows_mut(out.data_mut(), n, threads, body);
+    out
+}
+
+/// `Aᵀ * B` — (k,m) x (k,n) -> (m,n). Used for Galerkin projections `UᵀGV`.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch {:?}ᵀ x {:?}", a.shape(), b.shape());
+    let (k, m) = a.shape();
+    let n = b.cols();
+    // accumulate in f64 then downcast once
+    let mut acc = vec![0.0f64; m * n];
+    for l in 0..k {
+        let arow = a.row(l);
+        let brow = b.row(l);
+        for (i, &ali) in arow.iter().enumerate() {
+            if ali == 0.0 {
+                continue;
+            }
+            let ali = ali as f64;
+            let dst = &mut acc[i * n..(i + 1) * n];
+            for (j, &blj) in brow.iter().enumerate() {
+                dst[j] += ali * blj as f64;
+            }
+        }
+    }
+    Matrix::from_vec(m, n, acc.into_iter().map(|v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                for l in 0..a.cols() {
+                    c[(i, j)] += a[(i, l)] * b[(l, j)];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 9, 23), (64, 128, 8), (130, 70, 3)] {
+            let a = rng.normal_matrix(m, k);
+            let b = rng.normal_matrix(k, n);
+            assert!(matmul(&a, &b).fro_dist(&naive(&a, &b)) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = Rng::new(2);
+        let a = rng.normal_matrix(20, 13);
+        let b = rng.normal_matrix(31, 13);
+        let c = rng.normal_matrix(20, 7);
+        assert!(matmul_nt(&a, &b).fro_dist(&matmul(&a, &b.transpose())) < 1e-4);
+        assert!(matmul_tn(&a, &c).fro_dist(&matmul(&a.transpose(), &c)) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = rng.normal_matrix(9, 9);
+        assert!(matmul(&a, &Matrix::eye(9, 9)).fro_dist(&a) < 1e-6);
+        assert!(matmul(&Matrix::eye(9, 9), &a).fro_dist(&a) < 1e-6);
+    }
+}

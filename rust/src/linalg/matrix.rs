@@ -1,0 +1,273 @@
+//! Row-major `f32` dense matrix — the host-side currency of the coordinator.
+//!
+//! Row-major matches the layout `xla::Literal` expects for rank-2 arrays, so
+//! factor matrices move between the host integrator and the PJRT runtime
+//! without transposition (see `runtime::literals`).
+
+use std::fmt;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (rectangular allowed: ones on the main diagonal).
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` out (rows are contiguous, columns are strided).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm with f64 accumulation.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// `‖self − other‖_F`.
+    pub fn fro_dist(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// `self += alpha * other` (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale every entry.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Copy of the leading `r` columns (the truncation step's workhorse).
+    pub fn take_cols(&self, r: usize) -> Matrix {
+        assert!(r <= self.cols, "take_cols({r}) of {}-col matrix", self.cols);
+        Matrix::from_fn(self.rows, r, |i, j| self[(i, j)])
+    }
+
+    /// Copy of the leading `r x c` principal submatrix.
+    pub fn take_block(&self, r: usize, c: usize) -> Matrix {
+        assert!(r <= self.rows && c <= self.cols);
+        Matrix::from_fn(r, c, |i, j| self[(i, j)])
+    }
+
+    /// Horizontal concatenation `[self | other]` — the basis-augmentation
+    /// step `[K | U]` of the rank-adaptive integrator (Alg. 1 lines 9-10).
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "hcat row mismatch");
+        Matrix::from_fn(self.rows, self.cols + other.cols, |i, j| {
+            if j < self.cols {
+                self[(i, j)]
+            } else {
+                other[(i, j - self.cols)]
+            }
+        })
+    }
+
+    /// Zero-pad to `(rows, cols)` keeping data in the top-left block — the
+    /// bucket-padding contract of DESIGN.md §2.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            m.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(&a, &b)| (a as f64) * (b as f64))
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4}", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { " ..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(2, 1)] = 7.0;
+        assert_eq!(m[(2, 1)], 7.0);
+        assert_eq!(m.row(2), &[0.0, 7.0, 0.0, 0.0]);
+        assert_eq!(m.col(1), vec![0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn hcat_then_take_cols_recovers() {
+        let a = Matrix::from_fn(4, 2, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(4, 3, |i, j| (i * j) as f32);
+        let c = a.hcat(&b);
+        assert_eq!(c.shape(), (4, 5));
+        assert_eq!(c.take_cols(2), a);
+        assert_eq!(c[(2, 3)], b[(2, 1)]);
+    }
+
+    #[test]
+    fn pad_to_keeps_block_and_zeroes_rest() {
+        let a = Matrix::from_fn(2, 2, |i, j| (1 + i + j) as f32);
+        let p = a.pad_to(4, 3);
+        assert_eq!(p.take_block(2, 2), a);
+        assert_eq!(p[(3, 2)], 0.0);
+        assert_eq!(p.fro_norm(), a.fro_norm());
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        Matrix::from_vec(2, 3, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,21 @@
+//! Host-side dense linear algebra substrate.
+//!
+//! The KLS integrator needs, *on the host and at the current true rank*:
+//! thin Householder QR of `n x 2r` basis candidates, SVD of tiny `2r x 2r`
+//! cores (rank truncation), and small dense products. These are
+//! `O(n r^2)`/`O(r^3)` — negligible next to the `O(B n r)` gradient graphs —
+//! but they must run on dynamically-shaped views, which static-shape HLO
+//! cannot express (DESIGN.md §2). Everything here is built from scratch:
+//! no BLAS/LAPACK dependency.
+
+mod matmul;
+mod matrix;
+mod qr;
+mod rng;
+mod svd;
+
+pub use matmul::{matmul, matmul_nt, matmul_tn};
+pub use matrix::Matrix;
+pub use qr::{householder_qr, orthonormality_error};
+pub use rng::Rng;
+pub use svd::{jacobi_svd, randomized_svd, Svd};

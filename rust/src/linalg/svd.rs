@@ -1,0 +1,321 @@
+//! One-sided Jacobi SVD — the rank-truncation engine of Algorithm 1.
+//!
+//! The adaptive integrator SVDs the augmented core `S (2r x 2r)` every step
+//! (Alg. 1 line 18) and truncates to the smallest `r'` with
+//! `(Σ_{i>r'} σ_i²)^{1/2} ≤ ϑ = τ‖Σ‖_F` (§4.3). Cores are tiny, so a
+//! high-accuracy one-sided Jacobi (Hestenes) iteration is the right tool:
+//! simple, cache-friendly, and it computes *all* singular values to full
+//! f64 working precision — important because the truncation decision reads
+//! the tail of the spectrum.
+//!
+//! Also used by `baselines::svd_prune` on full `n x n` weight matrices
+//! (Table 8), where O(n³) Jacobi on n ≤ 1024 is a few seconds — fine for a
+//! one-shot pruning pass.
+
+use super::{Matrix, matmul};
+
+/// Result of a (thin) SVD: `a = u * diag(sigma) * vt`.
+pub struct Svd {
+    /// `m x k` left singular vectors (orthonormal columns).
+    pub u: Matrix,
+    /// Singular values, descending; length `k = min(m, n)`.
+    pub sigma: Vec<f32>,
+    /// `k x n` right singular vectors (orthonormal rows).
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// `‖Σ‖_F` — the truncation threshold's reference norm.
+    pub fn sigma_fro(&self) -> f32 {
+        self.sigma.iter().map(|&s| (s as f64) * (s as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Smallest rank `r` with tail energy `(Σ_{i>r} σ_i²)^{1/2} ≤ threshold`,
+    /// clamped to `[min_rank, k]`. This is exactly Alg. 1 line 19.
+    pub fn truncation_rank(&self, threshold: f32, min_rank: usize) -> usize {
+        let k = self.sigma.len();
+        let thr2 = (threshold as f64) * (threshold as f64);
+        // tail2[r] = sum_{i>=r} sigma_i^2
+        let mut tail2 = 0.0f64;
+        let mut rank = k;
+        for r in (0..k).rev() {
+            tail2 += (self.sigma[r] as f64) * (self.sigma[r] as f64);
+            if tail2 <= thr2 {
+                rank = r; // dropping sigma_r..sigma_{k-1} still fits
+            } else {
+                break;
+            }
+        }
+        rank.max(min_rank).min(k)
+    }
+
+    /// Reconstruct `u[:, :r] * diag(sigma[:r]) * vt[:r, :]`.
+    pub fn reconstruct(&self, r: usize) -> Matrix {
+        let r = r.min(self.sigma.len());
+        let mut us = self.u.take_cols(r);
+        for i in 0..us.rows() {
+            for j in 0..r {
+                us[(i, j)] *= self.sigma[j];
+            }
+        }
+        matmul(&us, &self.vt.take_block(r, self.vt.cols()))
+    }
+}
+
+/// Maximum Jacobi sweeps before declaring convergence failure (in practice
+/// well-conditioned cores converge in 6-10 sweeps).
+const MAX_SWEEPS: usize = 60;
+/// Off-diagonal orthogonality tolerance (relative).
+const JACOBI_TOL: f64 = 1e-12;
+
+/// One-sided Jacobi SVD of a general matrix.
+///
+/// For `m < n` the transpose is decomposed and the roles of `u`/`vt` are
+/// swapped back, so columns are always the long side during iteration.
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        let svd_t = jacobi_svd(&a.transpose());
+        return Svd { u: svd_t.vt.transpose(), sigma: svd_t.sigma, vt: svd_t.u.transpose() };
+    }
+    let k = n;
+    // One-sided Jacobi orthogonalizes the columns of W = A*V by plane
+    // rotations accumulated into V. Both W and V are kept **column-major**
+    // so every rotation is two contiguous slice walks (§Perf iteration 2:
+    // 512x512 went 17.3 s -> sub-second; the row-major version touched one
+    // cache line per element).
+    let mut w = vec![0.0f64; m * n]; // column-major: col j = w[j*m..(j+1)*m]
+    for i in 0..m {
+        let row = a.row(i);
+        for (j, &x) in row.iter().enumerate() {
+            w[j * m + i] = x as f64;
+        }
+    }
+    let mut v = vec![0.0f64; n * n]; // column-major as well
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..k {
+            for q in (p + 1)..k {
+                // 2x2 Gram block of columns p, q — split_at_mut gives us
+                // both columns as disjoint contiguous slices
+                let (wl, wr) = w.split_at_mut(q * m);
+                let colp = &mut wl[p * m..p * m + m];
+                let colq = &mut wr[..m];
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for (wp, wq) in colp.iter().zip(colq.iter()) {
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= JACOBI_TOL * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation that annihilates the (p,q) Gram entry
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for (wp, wq) in colp.iter_mut().zip(colq.iter_mut()) {
+                    let (a_, b_) = (*wp, *wq);
+                    *wp = c * a_ - s * b_;
+                    *wq = s * a_ + c * b_;
+                }
+                let (vl, vr) = v.split_at_mut(q * n);
+                let vcolp = &mut vl[p * n..p * n + n];
+                let vcolq = &mut vr[..n];
+                for (vp, vq) in vcolp.iter_mut().zip(vcolq.iter_mut()) {
+                    let (a_, b_) = (*vp, *vq);
+                    *vp = c * a_ - s * b_;
+                    *vq = s * a_ + c * b_;
+                }
+            }
+        }
+        if off < JACOBI_TOL * 10.0 {
+            break;
+        }
+    }
+
+    // Singular values = column norms of W; U = W normalized.
+    let mut order: Vec<usize> = (0..k).collect();
+    let mut sig = vec![0.0f64; k];
+    for j in 0..k {
+        sig[j] = w[j * m..(j + 1) * m].iter().map(|x| x * x).sum::<f64>().sqrt();
+    }
+    order.sort_by(|&a_, &b_| sig[b_].partial_cmp(&sig[a_]).unwrap());
+
+    let mut u = Matrix::zeros(m, k);
+    let mut vt = Matrix::zeros(k, n);
+    let mut sigma = Vec::with_capacity(k);
+    for (jj, &j) in order.iter().enumerate() {
+        let s = sig[j];
+        sigma.push(s as f32);
+        if s > 1e-300 {
+            let col = &w[j * m..(j + 1) * m];
+            for i in 0..m {
+                u[(i, jj)] = (col[i] / s) as f32;
+            }
+        }
+        let vcol = &v[j * n..(j + 1) * n];
+        for i in 0..n {
+            vt[(jj, i)] = vcol[i] as f32;
+        }
+    }
+    // complete zero-σ left vectors to an orthonormal set (rarely exercised:
+    // only when the core is exactly rank-deficient, e.g. freshly padded)
+    for j in 0..k {
+        if sigma[j] <= 1e-30 {
+            super::qr::complete_column(&mut u, j);
+        }
+    }
+    Svd { u, sigma, vt }
+}
+
+/// Randomized truncated SVD (Halko-Martinsson-Tropp): top-`rank` triple via
+/// a gaussian range finder with `oversample` extra columns and `n_power`
+/// power iterations, finished by an exact Jacobi SVD of the small
+/// `(rank+p) x n` projection.
+///
+/// Used where only a leading block is needed on a big matrix — SVD-pruning
+/// trained dense layers (Table 8) and `LowRankFactors::from_dense` — where
+/// full Jacobi at 784x784 costs ~30 s but this costs milliseconds. Trained
+/// weight matrices have decaying spectra, the regime where the randomized
+/// range finder's error bound is tight.
+pub fn randomized_svd(a: &Matrix, rank: usize, oversample: usize, n_power: usize,
+                      rng: &mut super::Rng) -> Svd {
+    let (m, n) = a.shape();
+    let k = (rank + oversample).min(m).min(n);
+    // range finder: Q = orth((A Aᵀ)^q A Ω)
+    let omega = rng.normal_matrix(n, k);
+    let mut y = matmul(a, &omega); // m x k
+    for _ in 0..n_power {
+        // re-orthonormalize between power steps for numerical stability
+        let q = super::householder_qr(&y);
+        let z = super::matmul_tn(a, &q); // n x k
+        let qz = super::householder_qr(&z);
+        y = matmul(a, &qz);
+    }
+    let q = super::householder_qr(&y); // m x k
+    // small problem: B = Qᵀ A  (k x n)
+    let b = super::matmul_tn(&q, a);
+    let svd_b = jacobi_svd(&b);
+    let rank = rank.min(svd_b.sigma.len());
+    Svd {
+        u: matmul(&q, &svd_b.u.take_cols(rank)),
+        sigma: svd_b.sigma[..rank].to_vec(),
+        vt: svd_b.vt.take_block(rank, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, orthonormality_error, Rng};
+
+    fn check_svd(a: &Matrix, tol: f32) {
+        let svd = jacobi_svd(a);
+        let k = a.rows().min(a.cols());
+        assert_eq!(svd.sigma.len(), k);
+        // descending
+        for i in 1..k {
+            assert!(svd.sigma[i - 1] >= svd.sigma[i] - 1e-5);
+        }
+        // orthonormal factors
+        assert!(orthonormality_error(&svd.u) < tol);
+        assert!(orthonormality_error(&svd.vt.transpose()) < tol);
+        // reconstruction
+        let rec = svd.reconstruct(k);
+        assert!(rec.fro_dist(a) <= tol * (1.0 + a.fro_norm()), "dist {}", rec.fro_dist(a));
+    }
+
+    #[test]
+    fn random_matrices_roundtrip() {
+        let mut rng = Rng::new(5);
+        for (m, n) in [(6, 6), (20, 8), (8, 20), (33, 17), (64, 64)] {
+            check_svd(&rng.normal_matrix(m, n), 1e-3);
+        }
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in a rotation: sigma must be [3, 2, 1]
+        let mut rng = Rng::new(6);
+        let q1 = crate::linalg::householder_qr(&rng.normal_matrix(5, 3));
+        let q2 = crate::linalg::householder_qr(&rng.normal_matrix(4, 3));
+        let mut d = Matrix::zeros(3, 3);
+        d[(0, 0)] = 3.0;
+        d[(1, 1)] = 2.0;
+        d[(2, 2)] = 1.0;
+        let a = matmul(&matmul(&q1, &d), &q2.transpose());
+        let svd = jacobi_svd(&a);
+        for (got, want) in svd.sigma.iter().zip([3.0, 2.0, 1.0]) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn truncation_rank_matches_tail_energy() {
+        let mut rng = Rng::new(8);
+        let q1 = crate::linalg::householder_qr(&rng.normal_matrix(12, 6));
+        let q2 = crate::linalg::householder_qr(&rng.normal_matrix(6, 6));
+        let sig = [10.0f32, 5.0, 1.0, 0.5, 0.1, 0.01];
+        let mut d = Matrix::zeros(6, 6);
+        for (i, &s) in sig.iter().enumerate() {
+            d[(i, i)] = s;
+        }
+        let a = matmul(&matmul(&q1, &d), &q2.transpose());
+        let svd = jacobi_svd(&a);
+        // tail beyond rank 2: sqrt(1 + .25 + .01 + .0001) ~ 1.1225
+        assert_eq!(svd.truncation_rank(1.2, 1), 2);
+        assert_eq!(svd.truncation_rank(0.05, 1), 5);
+        assert_eq!(svd.truncation_rank(1000.0, 3), 3); // min_rank clamp
+        assert_eq!(svd.truncation_rank(0.0, 1), 6);
+    }
+
+    #[test]
+    fn randomized_svd_matches_jacobi_leading_block() {
+        let mut rng = Rng::new(21);
+        // decaying spectrum, the intended regime
+        let q1 = crate::linalg::householder_qr(&rng.normal_matrix(60, 20));
+        let q2 = crate::linalg::householder_qr(&rng.normal_matrix(40, 20));
+        let mut d = Matrix::zeros(20, 20);
+        for i in 0..20 {
+            d[(i, i)] = 10.0 * (0.6f32).powi(i as i32);
+        }
+        let a = matmul(&matmul(&q1, &d), &q2.transpose());
+        let exact = jacobi_svd(&a);
+        let approx = randomized_svd(&a, 6, 6, 2, &mut rng);
+        assert_eq!(approx.sigma.len(), 6);
+        for i in 0..6 {
+            assert!(
+                (approx.sigma[i] - exact.sigma[i]).abs() < 1e-2 * exact.sigma[0],
+                "sigma[{i}]: {} vs {}",
+                approx.sigma[i],
+                exact.sigma[i]
+            );
+        }
+        assert!(orthonormality_error(&approx.u) < 1e-3);
+        // rank-6 reconstruction error close to optimal
+        let opt = exact.reconstruct(6).fro_dist(&a);
+        let got = approx.reconstruct(6).fro_dist(&a);
+        assert!(got <= opt * 1.5 + 1e-3, "randomized {got} vs optimal {opt}");
+    }
+
+    #[test]
+    fn rank_deficient_core() {
+        // exactly rank-2 matrix: sigma[2..] ~ 0, factors stay orthonormal
+        let mut rng = Rng::new(9);
+        let u = rng.normal_matrix(10, 2);
+        let v = rng.normal_matrix(2, 7);
+        let a = matmul(&u, &v);
+        let svd = jacobi_svd(&a);
+        assert!(svd.sigma[2] < 1e-4);
+        assert!(svd.reconstruct(2).fro_dist(&a) < 1e-3);
+    }
+}

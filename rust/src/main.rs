@@ -1,0 +1,135 @@
+//! `dlrt` — the launcher CLI.
+//!
+//! ```text
+//! dlrt train --preset tab1_tau0.15 --out runs/        # run a paper preset
+//! dlrt train --config my.toml                         # run a custom config
+//! dlrt eval  --checkpoint runs/model.json             # evaluate a checkpoint
+//! dlrt presets                                        # list presets
+//! dlrt inspect                                        # dump the manifest
+//! ```
+
+use dlrt::config::{presets, Config};
+use dlrt::coordinator::{self, Trainer, ValOrTest};
+use dlrt::runtime::Runtime;
+use dlrt::util::cli::Args;
+use dlrt::Result;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+dlrt — Dynamical Low-Rank Training (NeurIPS 2022 reproduction)
+
+USAGE:
+  dlrt train [--preset NAME | --config FILE] [--out DIR] [--epochs N]
+             [--artifacts DIR] [--seed N]
+  dlrt eval --checkpoint FILE [--preset NAME]
+  dlrt presets
+  dlrt inspect [--artifacts DIR]
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help"])?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "presets" => {
+            for (name, cfg) in presets::all() {
+                println!(
+                    "{name:<24} arch={:<8} mode={:<13} tau={:<5} epochs={}",
+                    cfg.arch,
+                    cfg.mode.as_str(),
+                    cfg.tau,
+                    cfg.epochs
+                );
+            }
+            Ok(())
+        }
+        "inspect" => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg: Config = if let Some(path) = args.get("config") {
+        Config::from_path(&PathBuf::from(path))?
+    } else {
+        let name = args.get_or("preset", "quickstart");
+        presets::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{name}'; try `dlrt presets`"))?
+    };
+    if let Some(e) = args.get_usize("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if let Some(s) = args.get_usize("seed")? {
+        cfg.seed = s as u64;
+    }
+    let name = args.get_or("preset", "custom").to_string();
+    let out = PathBuf::from(args.get_or("out", "runs"));
+
+    let mut trainer = Trainer::new(cfg)?;
+    let record = trainer.run(&name, |e| {
+        println!(
+            "epoch {:>3}: train loss {:.4} acc {:.3} | val loss {:.4} acc {:.3} | ranks {:?} | {:.2}s",
+            e.epoch, e.train_loss, e.train_acc, e.val_loss, e.val_acc, e.ranks, e.train_seconds
+        );
+    })?;
+    println!("{}", record.summary());
+    std::fs::create_dir_all(&out)?;
+    record.save_json(&out.join(format!("{name}.json")))?;
+    record.save_epochs_csv(&out.join(format!("{name}_epochs.csv")))?;
+    if let coordinator::ModelState::Kls(k) = &trainer.model {
+        coordinator::save_factors(
+            &out.join(format!("{name}_model.json")),
+            &trainer.cfg.arch,
+            &k.layers,
+        )?;
+    }
+    println!("run record written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let checkpoint = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("eval requires --checkpoint"))?;
+    let preset = args.get_or("preset", "quickstart");
+    let cfg =
+        presets::by_name(preset).ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?;
+    let (arch, layers) = coordinator::load_factors(&PathBuf::from(checkpoint))?;
+    anyhow::ensure!(arch == cfg.arch, "checkpoint arch {arch} != preset arch {}", cfg.arch);
+    let trainer = Trainer::new(cfg)?.with_factors(layers, false)?;
+    let (loss, acc) = trainer.evaluate(&ValOrTest::Test)?;
+    println!("test loss {loss:.4}, accuracy {:.2}%", 100.0 * acc);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
+    let m = rt.manifest();
+    println!("manifest v{} — {} archs, {} artifacts", m.version, m.archs.len(), m.artifacts.len());
+    let mut arch_names: Vec<_> = m.archs.keys().collect();
+    arch_names.sort();
+    for name in arch_names {
+        let arch = &m.archs[name];
+        let dims: Vec<String> = arch.layers.iter().map(|l| format!("{}x{}", l.m, l.n)).collect();
+        println!(
+            "  {name}: input {} classes {} layers [{}]",
+            arch.input_dim,
+            arch.num_classes,
+            dims.join(", ")
+        );
+    }
+    for a in &m.artifacts {
+        println!("  {} ({} in / {} out)", a.name, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Metrics: timers, per-epoch records, parameter/compression accounting,
+//! and CSV/JSON reporters — the numbers every paper table is made of.
+
+pub mod params;
+mod recorder;
+mod timer;
+
+pub use params::{compression_ratio, dense_params, lowrank_eval_params};
+pub use recorder::{EpochRecord, RunRecord};
+pub use timer::{StepTimer, TimingStats};

@@ -1,0 +1,235 @@
+//! Run/epoch records + CSV & JSON reporters.
+//!
+//! Every example and bench serializes a [`RunRecord`]; EXPERIMENTS.md quotes
+//! these files directly, so the schema is part of the repo's contract.
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::Context;
+use std::io::Write;
+use std::path::Path;
+
+/// Everything measured in one epoch.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub val_loss: f32,
+    pub val_acc: f32,
+    /// Converged per-layer ranks after this epoch (empty for dense runs).
+    pub ranks: Vec<usize>,
+    /// Wall-clock seconds spent in training steps this epoch.
+    pub train_seconds: f64,
+    /// Wall-clock seconds spent in evaluation this epoch.
+    pub eval_seconds: f64,
+}
+
+impl EpochRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("train_loss", Json::num(self.train_loss as f64)),
+            ("train_acc", Json::num(self.train_acc as f64)),
+            ("val_loss", Json::num(self.val_loss as f64)),
+            ("val_acc", Json::num(self.val_acc as f64)),
+            ("ranks", Json::usize_array(&self.ranks)),
+            ("train_seconds", Json::num(self.train_seconds)),
+            ("eval_seconds", Json::num(self.eval_seconds)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<EpochRecord> {
+        Ok(EpochRecord {
+            epoch: v.req("epoch")?.as_usize()?,
+            train_loss: v.req("train_loss")?.as_f32()?,
+            train_acc: v.req("train_acc")?.as_f32()?,
+            val_loss: v.req("val_loss")?.as_f32()?,
+            val_acc: v.req("val_acc")?.as_f32()?,
+            ranks: v.req("ranks")?.to_usize_vec()?,
+            train_seconds: v.req("train_seconds")?.as_f64()?,
+            eval_seconds: v.req("eval_seconds")?.as_f64()?,
+        })
+    }
+}
+
+/// A full run: config echo + per-epoch history + final test metrics.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Human label, e.g. "tab1_tau0.15".
+    pub name: String,
+    /// TOML echo of the config that produced this run.
+    pub config_toml: String,
+    pub epochs: Vec<EpochRecord>,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    /// Final per-layer ranks.
+    pub final_ranks: Vec<usize>,
+    /// Parameter accounting (paper conventions, see `metrics::params`).
+    pub eval_params: usize,
+    pub train_params: usize,
+    pub dense_params: usize,
+}
+
+impl RunRecord {
+    pub fn eval_compression(&self) -> f64 {
+        super::compression_ratio(self.dense_params, self.eval_params)
+    }
+
+    pub fn train_compression(&self) -> f64 {
+        super::compression_ratio(self.dense_params, self.train_params)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("name", Json::str(&*self.name)),
+            ("config_toml", Json::str(&*self.config_toml)),
+            ("epochs", Json::arr(self.epochs.iter().map(|e| e.to_json()))),
+            ("test_loss", Json::num(self.test_loss as f64)),
+            ("test_acc", Json::num(self.test_acc as f64)),
+            ("final_ranks", Json::usize_array(&self.final_ranks)),
+            ("eval_params", Json::num(self.eval_params as f64)),
+            ("train_params", Json::num(self.train_params as f64)),
+            ("dense_params", Json::num(self.dense_params as f64)),
+        ])
+        .to_string_pretty()
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        let v = Json::parse(s).context("parsing run record")?;
+        Ok(RunRecord {
+            name: v.req("name")?.as_str()?.to_string(),
+            config_toml: v.req("config_toml")?.as_str()?.to_string(),
+            epochs: v
+                .req("epochs")?
+                .as_arr()?
+                .iter()
+                .map(EpochRecord::from_json)
+                .collect::<Result<_>>()?,
+            test_loss: v.req("test_loss")?.as_f32()?,
+            test_acc: v.req("test_acc")?.as_f32()?,
+            final_ranks: v.req("final_ranks")?.to_usize_vec()?,
+            eval_params: v.req("eval_params")?.as_usize()?,
+            train_params: v.req("train_params")?.as_usize()?,
+            dense_params: v.req("dense_params")?.as_usize()?,
+        })
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    pub fn load_json(path: &Path) -> Result<Self> {
+        Self::from_json_str(&std::fs::read_to_string(path)?)
+    }
+
+    /// Write the epoch history as CSV (one row per epoch).
+    pub fn save_epochs_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "epoch,train_loss,train_acc,val_loss,val_acc,train_seconds,eval_seconds,ranks"
+        )?;
+        for e in &self.epochs {
+            let ranks = e.ranks.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(" ");
+            writeln!(
+                f,
+                "{},{:.6},{:.4},{:.6},{:.4},{:.3},{:.3},{}",
+                e.epoch,
+                e.train_loss,
+                e.train_acc,
+                e.val_loss,
+                e.val_acc,
+                e.train_seconds,
+                e.eval_seconds,
+                ranks
+            )?;
+        }
+        Ok(())
+    }
+
+    /// One-line human summary (examples print this).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: test acc {:.2}% | eval params {} (c.r. {:.2}%) | train params {} (c.r. {:.2}%) | ranks {:?}",
+            self.name,
+            100.0 * self.test_acc,
+            self.eval_params,
+            self.eval_compression(),
+            self.train_params,
+            self.train_compression(),
+            self.final_ranks
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::TestDir;
+
+    fn record() -> RunRecord {
+        RunRecord {
+            name: "test".into(),
+            config_toml: "arch = \"mlp_tiny\"\n".into(),
+            epochs: vec![EpochRecord {
+                epoch: 0,
+                train_loss: 1.0,
+                train_acc: 0.5,
+                val_loss: 1.1,
+                val_acc: 0.45,
+                ranks: vec![4, 8],
+                train_seconds: 1.5,
+                eval_seconds: 0.2,
+            }],
+            test_loss: 1.05,
+            test_acc: 0.47,
+            final_ranks: vec![4, 8],
+            eval_params: 250,
+            train_params: 400,
+            dense_params: 1000,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = record();
+        let dir = TestDir::new();
+        let p = dir.join("run.json");
+        r.save_json(&p).unwrap();
+        let back = RunRecord::load_json(&p).unwrap();
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.config_toml, r.config_toml);
+        assert_eq!(back.epochs.len(), 1);
+        assert_eq!(back.epochs[0].ranks, vec![4, 8]);
+        assert_eq!(back.final_ranks, vec![4, 8]);
+        assert_eq!(back.eval_params, 250);
+    }
+
+    #[test]
+    fn compression_math() {
+        let r = record();
+        assert!((r.eval_compression() - 75.0).abs() < 1e-9);
+        assert!((r.train_compression() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = record();
+        let dir = TestDir::new();
+        let p = dir.join("epochs.csv");
+        r.save_epochs_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("epoch,"));
+        assert!(lines[1].contains("4 8"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Wall-clock instrumentation for the timing experiments (Fig. 1, Tables
+//! 3-4) and the §Perf pass.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates per-phase durations over many steps.
+#[derive(Default, Clone)]
+pub struct StepTimer {
+    samples: Vec<f64>,
+    current: Option<Instant>,
+}
+
+impl StepTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.current = Some(Instant::now());
+    }
+
+    /// Stop the running sample and record it.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.current.take() {
+            self.samples.push(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Record an externally-measured duration.
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    /// Time a closure and record it, passing the value through.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.samples.push(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn stats(&self) -> TimingStats {
+        TimingStats::from_samples(&self.samples)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.current = None;
+    }
+}
+
+/// Mean / std / min / max over recorded samples (seconds), as the paper's
+/// Tables 3-4 report them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingStats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TimingStats {
+    pub fn from_samples(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return TimingStats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        TimingStats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_over_known_samples() {
+        let s = TimingStats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn timer_records_closure_duration() {
+        let mut t = StepTimer::new();
+        let v = t.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.stats().n, 1);
+        assert!(t.stats().mean >= 0.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = StepTimer::new().stats();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+}

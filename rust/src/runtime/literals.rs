@@ -1,0 +1,124 @@
+//! Literal packing: host buffers ⇄ `xla::Literal`, validated against
+//! [`super::TensorSpec`]s from the manifest.
+//!
+//! Row-major everywhere: `linalg::Matrix` and XLA's default layout agree,
+//! so packing is a memcpy (no transposition on the hot path).
+
+use crate::linalg::Matrix;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+fn bytes_of_f32(xs: &[f32]) -> &[u8] {
+    // safety: f32 has no invalid bit patterns; alignment of u8 is 1
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+fn bytes_of_i32(xs: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Pack an f32 buffer against a spec (shape product must match).
+pub fn pack_f32(spec: &super::TensorSpec, data: &[f32]) -> Result<xla::Literal> {
+    ensure!(spec.dtype == "f32", "{}: expected dtype {}, packing f32", spec.name, spec.dtype);
+    ensure!(
+        data.len() == spec.elements(),
+        "{}: shape {:?} wants {} elements, got {}",
+        spec.name,
+        spec.shape,
+        spec.elements(),
+        data.len()
+    );
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &spec.shape,
+        bytes_of_f32(data),
+    )
+    .map_err(|e| anyhow!("{}: literal create failed: {e:?}", spec.name))
+}
+
+/// Pack an i32 buffer against a spec.
+pub fn pack_i32(spec: &super::TensorSpec, data: &[i32]) -> Result<xla::Literal> {
+    ensure!(spec.dtype == "i32", "{}: expected dtype {}, packing i32", spec.name, spec.dtype);
+    ensure!(
+        data.len() == spec.elements(),
+        "{}: shape {:?} wants {} elements, got {}",
+        spec.name,
+        spec.shape,
+        spec.elements(),
+        data.len()
+    );
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        &spec.shape,
+        bytes_of_i32(data),
+    )
+    .map_err(|e| anyhow!("{}: literal create failed: {e:?}", spec.name))
+}
+
+/// Pack a host matrix (must match the spec's 2-D shape exactly; the caller
+/// zero-pads to the bucket slot first — `Matrix::pad_to`).
+pub fn pack_matrix(spec: &super::TensorSpec, m: &Matrix) -> Result<xla::Literal> {
+    ensure!(
+        spec.shape.len() == 2 && spec.shape == [m.rows(), m.cols()],
+        "{}: spec shape {:?} vs matrix {:?}",
+        spec.name,
+        spec.shape,
+        m.shape()
+    );
+    pack_f32(spec, m.data())
+}
+
+/// Unpack a rank-≤2 f32 literal into a `Matrix` (vectors become 1 x n).
+pub fn unpack_matrix(spec: &super::TensorSpec, lit: &xla::Literal) -> Result<Matrix> {
+    let data: Vec<f32> =
+        lit.to_vec().map_err(|e| anyhow!("{}: literal read failed: {e:?}", spec.name))?;
+    let (rows, cols) = match spec.shape.len() {
+        0 => (1, 1),
+        1 => (1, spec.shape[0]),
+        2 => (spec.shape[0], spec.shape[1]),
+        n => anyhow::bail!("{}: rank-{n} outputs unsupported", spec.name),
+    };
+    ensure!(data.len() == rows * cols, "{}: element count mismatch", spec.name);
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Unpack a scalar f32 output (loss, ncorrect).
+pub fn unpack_scalar(spec: &super::TensorSpec, lit: &xla::Literal) -> Result<f32> {
+    ensure!(spec.shape.is_empty(), "{}: not a scalar (shape {:?})", spec.name, spec.shape);
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("{}: scalar read failed: {e:?}", spec.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorSpec;
+
+    fn spec(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: dtype.into() }
+    }
+
+    #[test]
+    fn f32_roundtrip_via_literal() {
+        let s = spec("m", &[2, 3], "f32");
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let lit = pack_matrix(&s, &m).unwrap();
+        let back = unpack_matrix(&s, &lit).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn i32_pack_validates_shape() {
+        let s = spec("y", &[4], "i32");
+        assert!(pack_i32(&s, &[1, 2, 3, 4]).is_ok());
+        assert!(pack_i32(&s, &[1, 2, 3]).is_err());
+        let sf = spec("y", &[4], "f32");
+        assert!(pack_i32(&sf, &[1, 2, 3, 4]).is_err());
+    }
+
+    #[test]
+    fn scalar_unpack() {
+        let s = spec("loss", &[], "f32");
+        let lit = xla::Literal::scalar(2.5f32);
+        assert_eq!(unpack_scalar(&s, &lit).unwrap(), 2.5);
+    }
+}

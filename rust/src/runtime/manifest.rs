@@ -1,0 +1,303 @@
+//! Artifact manifest — the packing contract emitted by `python/compile/aot.py`.
+//!
+//! Parsed with the in-tree JSON parser (`util::json`); the offline build has
+//! no serde (DESIGN.md §3).
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One tensor in an artifact's ordered input/output list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.to_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One compiled graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub arch: String,
+    pub graph: String,
+    /// Rank bucket (0 for bucket-independent dense graphs).
+    pub bucket: usize,
+    pub batch: usize,
+    pub backend: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactInfo {
+    /// Index of the named output (graphs put loss/ncorrect at the tail).
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    fn from_json(v: &Json) -> Result<ArtifactInfo> {
+        Ok(ArtifactInfo {
+            name: v.req("name")?.as_str()?.to_string(),
+            file: v.req("file")?.as_str()?.to_string(),
+            arch: v.req("arch")?.as_str()?.to_string(),
+            graph: v.req("graph")?.as_str()?.to_string(),
+            bucket: v.req("bucket")?.as_usize()?,
+            batch: v.req("batch")?.as_usize()?,
+            backend: v.req("backend")?.as_str()?.to_string(),
+            inputs: v
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One layer of an architecture, as the manifest records it.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub kind: String, // "dense" | "conv"
+    /// Matrix rows (n_out resp. out_ch).
+    pub m: usize,
+    /// Matrix cols (n_in resp. in_ch*k*k).
+    pub n: usize,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub ksize: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub pool: bool,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl LayerInfo {
+    /// Factor-slot width at a bucket (mirrors `Arch.slot` in model.py).
+    pub fn slot(&self, bucket: usize) -> usize {
+        bucket.min(self.m).min(self.n)
+    }
+
+    /// Maximum attainable rank.
+    pub fn max_rank(&self) -> usize {
+        self.m.min(self.n)
+    }
+
+    fn from_json(v: &Json) -> Result<LayerInfo> {
+        let opt_usize = |key: &str| v.get(key).and_then(|x| x.as_usize().ok()).unwrap_or(0);
+        Ok(LayerInfo {
+            kind: v.req("kind")?.as_str()?.to_string(),
+            m: v.req("m")?.as_usize()?,
+            n: v.req("n")?.as_usize()?,
+            in_ch: opt_usize("in_ch"),
+            out_ch: opt_usize("out_ch"),
+            ksize: opt_usize("ksize"),
+            in_h: opt_usize("in_h"),
+            in_w: opt_usize("in_w"),
+            pool: v.get("pool").and_then(|x| x.as_bool().ok()).unwrap_or(false),
+            out_h: opt_usize("out_h"),
+            out_w: opt_usize("out_w"),
+        })
+    }
+}
+
+/// Architecture description.
+#[derive(Debug, Clone)]
+pub struct ArchInfo {
+    pub layers: Vec<LayerInfo>,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub image_hwc: Option<[usize; 3]>,
+}
+
+impl ArchInfo {
+    fn from_json(v: &Json) -> Result<ArchInfo> {
+        let image_hwc = match v.get("image_hwc") {
+            Some(Json::Arr(a)) if a.len() == 3 => {
+                Some([a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?])
+            }
+            _ => None,
+        };
+        Ok(ArchInfo {
+            layers: v
+                .req("layers")?
+                .as_arr()?
+                .iter()
+                .map(LayerInfo::from_json)
+                .collect::<Result<_>>()?,
+            input_dim: v.req("input_dim")?.as_usize()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            image_hwc,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub archs: HashMap<String, ArchInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Self> {
+        let v = Json::parse(src).context("parsing manifest.json")?;
+        let mut archs = HashMap::new();
+        for (name, a) in v.req("archs")?.as_obj()? {
+            archs.insert(
+                name.clone(),
+                ArchInfo::from_json(a).with_context(|| format!("arch {name}"))?,
+            );
+        }
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactInfo::from_json)
+            .collect::<Result<_>>()?;
+        Ok(Manifest { version: v.req("version")?.as_usize()?, archs, artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&s)
+    }
+
+    pub fn arch(&self, name: &str) -> Option<&ArchInfo> {
+        self.archs.get(name)
+    }
+
+    /// Exact-bucket lookup (dense graphs ignore `bucket`).
+    pub fn find(
+        &self,
+        arch: &str,
+        graph: &str,
+        backend: &str,
+        bucket: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.arch == arch
+                && a.graph == graph
+                && a.backend == backend
+                && (a.graph.starts_with("dense") || a.bucket == bucket)
+        })
+    }
+
+    /// All buckets compiled for a graph, ascending.
+    pub fn buckets(&self, arch: &str, graph: &str, backend: &str) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.arch == arch && a.graph == graph && a.backend == backend)
+            .map(|a| a.bucket)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Smallest compiled bucket with `bucket >= rank` (falls back to the
+    /// largest available when the rank exceeds every bucket — per-layer
+    /// slots are capped at the layer dims anyway).
+    pub fn bucket_for(&self, arch: &str, graph: &str, backend: &str, rank: usize) -> Option<usize> {
+        let buckets = self.buckets(arch, graph, backend);
+        buckets.iter().copied().find(|&b| b >= rank).or(buckets.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        let src = r#"{
+          "version": 1,
+          "archs": {
+            "a": {"layers": [{"kind": "dense", "m": 32, "n": 64}],
+                  "input_dim": 64, "num_classes": 10, "image_hwc": null}
+          },
+          "artifacts": [
+            {"name": "a_kl_b4", "file": "x.hlo.txt", "arch": "a", "graph": "kl_grads",
+             "bucket": 4, "batch": 32, "backend": "jnp",
+             "inputs": [{"name": "x", "shape": [32, 64], "dtype": "f32"}],
+             "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]},
+            {"name": "a_kl_b8", "file": "x.hlo.txt", "arch": "a", "graph": "kl_grads",
+             "bucket": 8, "batch": 32, "backend": "jnp", "inputs": [], "outputs": []},
+            {"name": "a_kl_b32", "file": "x.hlo.txt", "arch": "a", "graph": "kl_grads",
+             "bucket": 32, "batch": 32, "backend": "jnp", "inputs": [], "outputs": []},
+            {"name": "a_dense", "file": "x.hlo.txt", "arch": "a", "graph": "dense_grads",
+             "bucket": 0, "batch": 32, "backend": "jnp", "inputs": [], "outputs": []}
+          ]
+        }"#;
+        Manifest::parse(src).unwrap()
+    }
+
+    #[test]
+    fn parses_archs_and_specs() {
+        let m = toy_manifest();
+        assert_eq!(m.version, 1);
+        let arch = m.arch("a").unwrap();
+        assert_eq!(arch.layers[0].m, 32);
+        assert_eq!(arch.image_hwc, None);
+        let a = m.find("a", "kl_grads", "jnp", 4).unwrap();
+        assert_eq!(a.inputs[0].shape, vec![32, 64]);
+        assert_eq!(a.inputs[0].elements(), 32 * 64);
+        assert_eq!(a.output_index("loss"), Some(0));
+    }
+
+    #[test]
+    fn bucket_selection_rounds_up() {
+        let m = toy_manifest();
+        assert_eq!(m.bucket_for("a", "kl_grads", "jnp", 1), Some(4));
+        assert_eq!(m.bucket_for("a", "kl_grads", "jnp", 4), Some(4));
+        assert_eq!(m.bucket_for("a", "kl_grads", "jnp", 5), Some(8));
+        assert_eq!(m.bucket_for("a", "kl_grads", "jnp", 9), Some(32));
+        assert_eq!(m.bucket_for("a", "kl_grads", "jnp", 100), Some(32));
+        assert_eq!(m.bucket_for("a", "nope", "jnp", 1), None);
+    }
+
+    #[test]
+    fn dense_lookup_ignores_bucket() {
+        let m = toy_manifest();
+        assert!(m.find("a", "dense_grads", "jnp", 77).is_some());
+        assert!(m.find("a", "kl_grads", "jnp", 77).is_none());
+    }
+
+    #[test]
+    fn layer_slot_caps_at_min_dim() {
+        let m = toy_manifest();
+        let l = &m.arch("a").unwrap().layers[0];
+        assert_eq!(l.slot(4), 4);
+        assert_eq!(l.slot(64), 32);
+        assert_eq!(l.max_rank(), 32);
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny CLI argument parser (clap stand-in): `--key value`, `--flag`,
+//! positional subcommand.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options and flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). `flag_names` lists the
+    /// boolean options that take no value.
+    pub fn parse(raw: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("option --{name} requires a value"))?;
+                    args.opts.insert(name.to_string(), val);
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument '{tok}'");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse()?)),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<Option<f32>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse()?)),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), &["verbose", "dry-run"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_opts_flags() {
+        let a = parse(&["train", "--preset", "tab1", "--epochs", "5", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("preset"), Some("tab1"));
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(5));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--preset".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn double_positional_errors() {
+        let r = Args::parse(["a".to_string(), "b".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! Flat key-value config parser (TOML subset): `key = value` lines with
+//! `#` comments; values are quoted strings, numbers or booleans. This is
+//! the on-disk config format (`dlrt train --config run.toml`).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed flat config document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvDoc {
+    map: BTreeMap<String, KvValue>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum KvValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl KvDoc {
+    pub fn parse(src: &str) -> Result<KvDoc> {
+        let mut map = BTreeMap::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            {
+                bail!("line {}: bad key '{key}'", lineno + 1);
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            map.insert(key.to_string(), value);
+        }
+        Ok(KvDoc { map })
+    }
+
+    pub fn insert(&mut self, key: &str, v: KvValue) {
+        self.map.insert(key.into(), v);
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.map.get(key) {
+            Some(KvValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_f32(&self, key: &str) -> Option<f32> {
+        match self.map.get(key) {
+            Some(KvValue::Num(x)) => Some(*x as f32),
+            _ => None,
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        match self.map.get(key) {
+            Some(KvValue::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        match self.map.get(key) {
+            Some(KvValue::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.map.get(key) {
+            Some(KvValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Serialize back to the flat-TOML format.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            let vs = match v {
+                KvValue::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+                KvValue::Num(x) => {
+                    if x.fract() == 0.0 && x.abs() < 9e15 {
+                        format!("{}", *x as i64)
+                    } else {
+                        format!("{x}")
+                    }
+                }
+                KvValue::Bool(b) => b.to_string(),
+            };
+            out.push_str(&format!("{k} = {vs}\n"));
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<KvValue> {
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    other => bail!("bad escape \\{:?}", other),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(KvValue::Str(out));
+    }
+    match s {
+        "true" => return Ok(KvValue::Bool(true)),
+        "false" => return Ok(KvValue::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>().map(KvValue::Num).map_err(|_| anyhow!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = KvDoc::parse(
+            r#"
+            # experiment
+            arch = "mlp500"
+            tau = 0.15     # threshold
+            epochs = 10
+            paranoid = false
+            note = "has # inside"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("arch"), Some("mlp500"));
+        assert_eq!(doc.get_f32("tau"), Some(0.15));
+        assert_eq!(doc.get_usize("epochs"), Some(10));
+        assert_eq!(doc.get_bool("paranoid"), Some(false));
+        assert_eq!(doc.get_str("note"), Some("has # inside"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = KvDoc::default();
+        doc.insert("a", KvValue::Str("x \"y\"".into()));
+        doc.insert("b", KvValue::Num(2.5));
+        doc.insert("c", KvValue::Bool(true));
+        let back = KvDoc::parse(&doc.to_string()).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(KvDoc::parse("just words").is_err());
+        assert!(KvDoc::parse("key = ").is_err());
+        assert!(KvDoc::parse("bad key! = 1").is_err());
+        assert!(KvDoc::parse("s = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn type_mismatches_return_none() {
+        let doc = KvDoc::parse("x = 1.5\ny = \"s\"").unwrap();
+        assert_eq!(doc.get_usize("x"), None); // fractional
+        assert_eq!(doc.get_f32("y"), None);
+        assert_eq!(doc.get_str("x"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree replacements for crates unavailable in the offline build
+//! environment (DESIGN.md §3): JSON, flat-TOML config parsing, CLI args,
+//! a scoped thread pool, a micro-bench harness, and property-test helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod kv;
+pub mod pool;
+pub mod testutil; // also used by integration tests & benches
+
+pub use json::Json;

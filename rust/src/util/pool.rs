@@ -1,0 +1,109 @@
+//! Scoped data-parallel helper (rayon stand-in): split an index range over
+//! `std::thread::scope` workers. Used by the host matmul kernels on thin
+//! `n x 2r` operands where per-row work is uniform.
+
+/// Run `f(start, end)` over `n` items split across up to `threads` chunks.
+/// `f` must be safe to run concurrently on disjoint ranges.
+pub fn par_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the PJRT runtime's own thread pool), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(1).max(1)
+}
+
+/// Mutable-slice variant: splits `data` into per-chunk mutable sub-slices of
+/// `rows` logical rows of width `width` and applies `f(row_index, row)`.
+pub fn par_rows_mut<F>(data: &mut [f32], width: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = if width == 0 { 0 } else { data.len() / width };
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 || rows == 0 {
+        for (i, row) in data.chunks_mut(width).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        let f = &f;
+        while !rest.is_empty() {
+            let take = (chunk_rows * width).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let base = row0;
+            s.spawn(move || {
+                for (i, row) in head.chunks_mut(width).enumerate() {
+                    f(base + i, row);
+                }
+            });
+            row0 += take / width;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_ranges_covers_everything_once() {
+        let hits: Vec<AtomicUsize> = (0..103).map(|_| AtomicUsize::new(0)).collect();
+        par_ranges(103, 7, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_rows_mut_writes_disjoint_rows() {
+        let mut data = vec![0.0f32; 10 * 4];
+        par_rows_mut(&mut data, 4, 3, |i, row| {
+            for v in row.iter_mut() {
+                *v = i as f32;
+            }
+        });
+        for i in 0..10 {
+            assert!(data[i * 4..(i + 1) * 4].iter().all(|&v| v == i as f32));
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        par_ranges(0, 4, |_, _| panic!("must not run"));
+        let mut empty: Vec<f32> = vec![];
+        par_rows_mut(&mut empty, 4, 2, |_, _| panic!("must not run"));
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,51 @@
+//! Test helpers (tempfile / proptest stand-ins for the offline build).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique temporary directory, removed on drop.
+pub struct TestDir {
+    pub path: PathBuf,
+}
+
+impl TestDir {
+    pub fn new() -> TestDir {
+        let id = COUNTER.fetch_add(1, Ordering::SeqCst);
+        let path = std::env::temp_dir().join(format!(
+            "dlrt-test-{}-{}-{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos(),
+            id
+        ));
+        std::fs::create_dir_all(&path).expect("create test dir");
+        TestDir { path }
+    }
+
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Property-test driver (proptest stand-in): runs `body` over `cases`
+/// seeded RNGs; panics report the failing seed for reproduction.
+pub fn property(cases: u64, body: impl Fn(&mut crate::linalg::Rng)) {
+    for seed in 0..cases {
+        let mut rng = crate::linalg::Rng::new(0xBEEF ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Runtime integration: compiled artifacts vs host math, backend agreement,
+//! bucket-padding invariance — all through the real PJRT path.
+//!
+//! Requires `make artifacts` (the repo ships a Makefile dependency); tests
+//! use the tiny architecture so the whole file runs in seconds.
+
+use dlrt::data::Batch;
+use dlrt::dlrt::LowRankFactors;
+use dlrt::linalg::{matmul, Matrix, Rng};
+use dlrt::runtime::{literals, Runtime};
+
+const ARCH: &str = "mlp_tiny";
+
+fn runtime() -> Runtime {
+    Runtime::new("artifacts").expect("artifacts present — run `make artifacts`")
+}
+
+fn tiny_factors(rank: usize, seed: u64) -> Vec<LowRankFactors> {
+    // mlp_tiny: [64, 32, 32, 10]
+    let mut rng = Rng::new(seed);
+    vec![
+        LowRankFactors::random(32, 64, rank, &mut rng),
+        LowRankFactors::random(32, 32, rank, &mut rng),
+        LowRankFactors::random(10, 32, 10, &mut rng),
+    ]
+}
+
+fn tiny_batch(batch: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+    Batch { x, y, w: vec![1.0; batch], count: batch }
+}
+
+/// Pack (factors, batch) for a forward-family artifact and run it.
+fn run_forward(
+    rt: &Runtime,
+    backend: &str,
+    bucket: usize,
+    factors: &[LowRankFactors],
+    batch: &Batch,
+) -> (Vec<f32>, f32, f32) {
+    let exe = rt.load(ARCH, "forward", backend, bucket).unwrap();
+    let mut lits = Vec::new();
+    for (k, f) in factors.iter().enumerate() {
+        let specs = &exe.info.inputs[4 * k..4 * k + 4];
+        let slot = specs[0].shape[1];
+        lits.push(literals::pack_matrix(&specs[0], &f.u.pad_to(f.m(), slot)).unwrap());
+        lits.push(literals::pack_matrix(&specs[1], &f.s.pad_to(slot, slot)).unwrap());
+        lits.push(literals::pack_matrix(&specs[2], &f.v.pad_to(f.n(), slot)).unwrap());
+        lits.push(literals::pack_f32(&specs[3], &f.bias).unwrap());
+    }
+    let base = 4 * factors.len();
+    lits.push(literals::pack_f32(&exe.info.inputs[base], &batch.x).unwrap());
+    lits.push(literals::pack_i32(&exe.info.inputs[base + 1], &batch.y).unwrap());
+    lits.push(literals::pack_f32(&exe.info.inputs[base + 2], &batch.w).unwrap());
+    let outs = exe.run(&lits).unwrap();
+    let logits = literals::unpack_matrix(&exe.info.outputs[0], &outs[0]).unwrap();
+    let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1]).unwrap();
+    let nc = literals::unpack_scalar(&exe.info.outputs[2], &outs[2]).unwrap();
+    (logits.into_vec(), loss, nc)
+}
+
+/// Host-side reference forward (relu MLP on U S Vᵀ weights).
+fn host_forward(factors: &[LowRankFactors], batch: &Batch, batch_n: usize) -> Vec<f32> {
+    let mut z = Matrix::from_vec(batch_n, 64, batch.x.clone());
+    for (i, f) in factors.iter().enumerate() {
+        let w = f.reconstruct();
+        let mut out = matmul(&z, &w.transpose());
+        for r in 0..out.rows() {
+            for c in 0..out.cols() {
+                out[(r, c)] += f.bias[c];
+                if i + 1 < factors.len() {
+                    out[(r, c)] = out[(r, c)].max(0.0);
+                }
+            }
+        }
+        z = out;
+    }
+    z.into_vec()
+}
+
+#[test]
+fn compiled_forward_matches_host_math() {
+    let rt = runtime();
+    let factors = tiny_factors(8, 11);
+    let batch = tiny_batch(32, 12);
+    let (logits, loss, _nc) = run_forward(&rt, "jnp", 16, &factors, &batch);
+    let host = host_forward(&factors, &batch, 32);
+    let max_err = logits
+        .iter()
+        .zip(&host)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "compiled vs host forward mismatch: {max_err}");
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    // the L1→L3 composition check (DESIGN.md §2 backend policy)
+    let rt = runtime();
+    let factors = tiny_factors(8, 21);
+    let batch = tiny_batch(32, 22);
+    let (lj, lossj, ncj) = run_forward(&rt, "jnp", 16, &factors, &batch);
+    let (lp, lossp, ncp) = run_forward(&rt, "pallas", 16, &factors, &batch);
+    let max_err =
+        lj.iter().zip(&lp).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "backend disagreement: {max_err}");
+    assert!((lossj - lossp).abs() < 1e-4);
+    assert_eq!(ncj, ncp);
+}
+
+#[test]
+fn bucket_padding_is_inert_through_pjrt() {
+    let rt = runtime();
+    let factors = tiny_factors(8, 31);
+    let batch = tiny_batch(32, 32);
+    let (l8, loss8, _) = run_forward(&rt, "jnp", 16, &factors, &batch);
+    let (l16, loss16, _) = run_forward(&rt, "jnp", 32, &factors, &batch);
+    let max_err =
+        l8.iter().zip(&l16).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "bucket padding changed the forward: {max_err}");
+    assert!((loss8 - loss16).abs() < 1e-4);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let rt = runtime();
+    assert_eq!(rt.cached_count(), 0);
+    let a = rt.load(ARCH, "forward", "jnp", 8).unwrap();
+    assert_eq!(rt.cached_count(), 1);
+    let b = rt.load(ARCH, "forward", "jnp", 8).unwrap();
+    assert_eq!(rt.cached_count(), 1);
+    assert_eq!(a.info.name, b.info.name);
+    rt.load(ARCH, "forward", "jnp", 16).unwrap();
+    assert_eq!(rt.cached_count(), 2);
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = runtime();
+    assert!(rt.load("nope", "forward", "jnp", 8).is_err());
+    assert!(rt.load(ARCH, "forward", "nope", 8).is_err());
+}
+
+#[test]
+fn weighted_loss_masks_padding_rows() {
+    let rt = runtime();
+    let factors = tiny_factors(8, 41);
+    // batch with half the rows masked out
+    let mut batch = tiny_batch(32, 42);
+    for i in 16..32 {
+        batch.w[i] = 0.0;
+        for j in 0..64 {
+            batch.x[i * 64 + j] = 999.0; // garbage that must not leak in
+        }
+    }
+    batch.count = 16;
+    let (_l, loss_masked, nc_masked) = run_forward(&rt, "jnp", 16, &factors, &batch);
+    let clean = tiny_batch(16, 42);
+    // same first 16 rows (same seed ordering)
+    let mut padded = tiny_batch(32, 42);
+    padded.w = batch.w.clone();
+    for i in 16..32 {
+        for j in 0..64 {
+            padded.x[i * 64 + j] = 0.0;
+        }
+    }
+    let (_l2, loss_zero_pad, nc_zero_pad) = run_forward(&rt, "jnp", 16, &factors, &padded);
+    assert!((loss_masked - loss_zero_pad).abs() < 1e-4, "mask leaked padded rows into loss");
+    assert_eq!(nc_masked, nc_zero_pad);
+    let _ = clean;
+}

@@ -1,0 +1,179 @@
+//! Full-stack training integration: the Trainer on every mode, rank
+//! adaptation through real compiled graphs, pruning + retraining, and
+//! checkpoint round-trips. Uses the tiny arch + toy data so each test
+//! completes in seconds.
+
+use dlrt::baselines::svd_prune_factors;
+use dlrt::baselines::DenseTrainer;
+use dlrt::config::{presets, Config, DataSource, Integrator, Mode};
+use dlrt::coordinator::{load_factors, save_factors, ModelState, Trainer, ValOrTest};
+use dlrt::dlrt::OptKind;
+use dlrt::linalg::{orthonormality_error, Rng};
+use dlrt::util::testutil::TestDir;
+
+fn toy_cfg(mode: Mode) -> Config {
+    let mut cfg = presets::quickstart();
+    cfg.mode = mode;
+    cfg.epochs = 3;
+    cfg.data = DataSource::Toy { n: 1_200 };
+    cfg
+}
+
+#[test]
+fn adaptive_dlrt_learns_toy_task_and_compresses() {
+    let mut t = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap();
+    let rec = t.run("it_adaptive", |_| {}).unwrap();
+    assert!(
+        rec.test_acc > 0.80,
+        "adaptive DLRT should learn the toy task (acc {})",
+        rec.test_acc
+    );
+    // ranks must have dropped below the init rank 16 on the wide layers
+    assert!(rec.final_ranks[0] < 16, "no compression happened: {:?}", rec.final_ranks);
+    // pinned classifier head stays at full rank 10
+    assert_eq!(*rec.final_ranks.last().unwrap(), 10);
+    // loss history is broadly decreasing
+    let first = rec.epochs.first().unwrap().train_loss;
+    let last = rec.epochs.last().unwrap().train_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn fixed_dlrt_and_dense_and_vanilla_all_train() {
+    for (mode, min_acc) in
+        [(Mode::FixedDlrt, 0.7), (Mode::Dense, 0.8), (Mode::Vanilla, 0.6)]
+    {
+        let mut cfg = toy_cfg(mode);
+        cfg.fixed_rank = 8;
+        if mode == Mode::Vanilla {
+            // vanilla needs a gentler lr (ill-conditioning is the point of Fig.4)
+            cfg.integrator = Integrator::Adam;
+            cfg.lr = 0.005;
+        }
+        let mut t = Trainer::new(cfg).unwrap();
+        let rec = t.run("it_mode", |_| {}).unwrap();
+        assert!(
+            rec.test_acc > min_acc,
+            "{mode:?} failed to learn (acc {})",
+            rec.test_acc
+        );
+    }
+}
+
+#[test]
+fn integrator_preserves_orthonormality_through_real_graphs() {
+    let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
+    cfg.paranoid = true; // integrator self-checks every step
+    cfg.epochs = 2;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run("it_paranoid", |_| {}).unwrap();
+    if let ModelState::Kls(k) = &t.model {
+        for (i, f) in k.layers.iter().enumerate() {
+            assert!(
+                orthonormality_error(&f.u) < 1e-3,
+                "layer {i}: U drifted off the Stiefel manifold"
+            );
+            assert!(orthonormality_error(&f.v) < 1e-3, "layer {i}: V drifted");
+        }
+    } else {
+        panic!("expected KLS model");
+    }
+}
+
+#[test]
+fn rank_freeze_stops_adaptation() {
+    let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
+    cfg.epochs = 3;
+    cfg.freeze_rank_after_epochs = 1;
+    let mut t = Trainer::new(cfg).unwrap();
+    let mut rank_history: Vec<Vec<usize>> = Vec::new();
+    t.run("it_freeze", |e| rank_history.push(e.ranks.clone())).unwrap();
+    // after the freeze epoch, ranks must be constant
+    assert_eq!(rank_history[1], rank_history[2], "ranks changed after freeze");
+}
+
+#[test]
+fn svd_prune_collapses_then_retraining_recovers() {
+    // Table 8's mechanism at toy scale: truncation destroys accuracy,
+    // fixed-rank DLRT retraining restores it.
+    let mut cfg = toy_cfg(Mode::Dense);
+    cfg.epochs = 3;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let dense_rec = t.run("it_dense_base", |_| {}).unwrap();
+    assert!(dense_rec.test_acc > 0.85);
+
+    let dense = match &t.model {
+        ModelState::Dense(d) => d,
+        _ => panic!("expected dense model"),
+    };
+    let pruned = svd_prune_factors(dense, 2); // aggressive rank-2 truncation
+
+    // evaluate the raw truncation (no retraining)
+    let mut cfg_eval = cfg.clone();
+    cfg_eval.mode = Mode::FixedDlrt;
+    let t_pruned = Trainer::new(cfg_eval.clone()).unwrap().with_factors(pruned.clone(), false).unwrap();
+    let (_, acc_raw) = t_pruned.evaluate(&ValOrTest::Test).unwrap();
+
+    // retrain the same factors with fixed-rank DLRT
+    let mut cfg_retrain = cfg_eval;
+    cfg_retrain.epochs = 3;
+    let mut t_retrain =
+        Trainer::new(cfg_retrain).unwrap().with_factors(pruned, false).unwrap();
+    let rec = t_retrain.run("it_retrain", |_| {}).unwrap();
+    assert!(
+        rec.test_acc > acc_raw + 0.05,
+        "retraining did not recover accuracy: raw {acc_raw} -> retrained {}",
+        rec.test_acc
+    );
+    // rank stayed fixed at 2 on the wide layers
+    assert!(rec.final_ranks[0] == 2 && rec.final_ranks[1] == 2);
+}
+
+#[test]
+fn checkpoints_roundtrip_through_trainer() {
+    let mut t = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap();
+    let rec = t.run("it_ckpt", |_| {}).unwrap();
+    let dir = TestDir::new();
+    let path = dir.join("model.json");
+    let layers = match &t.model {
+        ModelState::Kls(k) => k.layers.clone(),
+        _ => unreachable!(),
+    };
+    save_factors(&path, "mlp_tiny", &layers).unwrap();
+    let (arch, loaded) = load_factors(&path).unwrap();
+    assert_eq!(arch, "mlp_tiny");
+    let t2 = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap().with_factors(loaded, false).unwrap();
+    let (_, acc) = t2.evaluate(&ValOrTest::Test).unwrap();
+    assert!(
+        (acc - rec.test_acc).abs() < 1e-5,
+        "checkpoint eval mismatch: {acc} vs {}",
+        rec.test_acc
+    );
+}
+
+#[test]
+fn dense_trainer_param_count_matches_arch() {
+    let cfg = toy_cfg(Mode::Dense);
+    let rt = dlrt::runtime::Runtime::new(&cfg.artifacts_dir).unwrap();
+    let mut rng = Rng::new(0);
+    let d = DenseTrainer::new(&rt, "mlp_tiny", "jnp", OptKind::Sgd, &mut rng).unwrap();
+    // mlp_tiny: 32x64 + 32x32 + 10x32 (paper convention: no biases)
+    assert_eq!(d.param_count(), 32 * 64 + 32 * 32 + 10 * 32);
+}
+
+#[test]
+fn seeds_reproduce_runs_exactly() {
+    let run = |seed: u64| {
+        let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
+        cfg.seed = seed;
+        cfg.epochs = 2;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run("it_seed", |_| {}).unwrap()
+    };
+    let a = run(77);
+    let b = run(77);
+    assert_eq!(a.test_loss, b.test_loss);
+    assert_eq!(a.final_ranks, b.final_ranks);
+    let c = run(78);
+    assert!(a.test_loss != c.test_loss || a.final_ranks != c.final_ranks);
+}
