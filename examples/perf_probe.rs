@@ -38,7 +38,14 @@ fn main() -> dlrt::Result<()> {
                 _ => DataSource::Mnist { root: "data/mnist".into(), n_synth: 1_500 },
             };
             cfg.epochs = 1;
-            let mut t = Trainer::new(cfg)?;
+            // conv archs need the xla feature + artifacts; skip when absent
+            let mut t = match Trainer::new(cfg) {
+                Ok(t) => t,
+                Err(e) => {
+                    println!("{arch} ({label}): skipped — {e}");
+                    continue;
+                }
+            };
             let mut batcher = Batcher::new(t.split.train.len(), 256, false, 3);
             let batches: Vec<_> = batcher.epoch(&t.split.train).collect();
             let lr = 0.001;

@@ -1,0 +1,222 @@
+//! In-tree, dependency-free subset of the `anyhow` crate API.
+//!
+//! The offline build environment has no crates.io access (DESIGN.md §3), so
+//! the workspace vendors the exact surface the coordinator uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. The implementation is a plain context-message stack —
+//! no backtraces, no downcasting — which is all the crate's error handling
+//! relies on. Swapping in the real `anyhow` is a one-line `Cargo.toml`
+//! change; no source edits are required.
+
+use std::fmt;
+
+/// Drop-in replacement for `anyhow::Error`: an outermost message plus the
+/// chain of underlying causes, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (becomes the new outermost
+    /// message, like `anyhow::Error::context`).
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` joins the whole chain, mirroring anyhow
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `?`-conversion from any standard error type, capturing its source chain.
+/// `Error` itself deliberately does not implement `std::error::Error`, so
+/// this blanket impl cannot overlap the identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Drop-in replacement for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Private conversion trait so [`Context`] works both on results carrying
+/// standard errors and on results already carrying [`Error`] — the same
+/// local-negative-reasoning trick the real `anyhow` uses.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Drop-in replacement for `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message to the error branch.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message to the error branch.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root cause {}", 7))
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 7");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail_forms() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            ensure!(x != 1);
+            if x == 2 {
+                bail!("two is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(-1).unwrap_err().to_string(), "negative: -1");
+        assert!(check(1).unwrap_err().to_string().contains("condition failed"));
+        assert!(check(2).is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(5).with_context(|| "unused").unwrap(), 5);
+    }
+}

@@ -1,0 +1,243 @@
+//! API stub of the PJRT-backed `xla` crate (the `xla-rs` surface the
+//! coordinator's `--features xla` path compiles against).
+//!
+//! The offline image has no PJRT plugin, so this crate keeps the *type*
+//! surface compilable and the host-side pieces (literal packing/unpacking)
+//! fully functional, while every operation that would need a real XLA
+//! runtime — client creation, HLO parsing, compilation, execution — returns
+//! a descriptive [`XlaError`]. Deployments with a PJRT toolchain swap in the
+//! real crate via a `[patch]` entry; no source changes are needed
+//! (DESIGN.md §2, backend policy).
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}` formatting.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what} requires a real PJRT-backed `xla` crate; this build uses the in-tree API stub \
+         (patch in `xla-rs` + a PJRT plugin to execute compiled artifacts)"
+    ))
+}
+
+/// Element types the coordinator packs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Marker for scalar/vector element access, mirroring `xla::NativeType`.
+pub trait NativeType: Copy {
+    const DTYPE: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+impl NativeType for f32 {
+    const DTYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+/// Host tensor value. Fully functional: this is plain host memory.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dtype: ElementType,
+    shape: Vec<usize>,
+    /// Little-endian raw element bytes (empty for tuples).
+    data: Vec<u8>,
+    /// Non-empty when this literal is a tuple.
+    elements: Vec<Literal>,
+}
+
+impl Literal {
+    /// Build from a shape and raw little-endian bytes (4-byte elements).
+    pub fn create_from_shape_and_untyped_data(
+        dtype: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        if data.len() != elems * 4 {
+            return Err(XlaError(format!(
+                "literal data size {} does not match shape {shape:?} ({} bytes expected)",
+                data.len(),
+                elems * 4
+            )));
+        }
+        Ok(Literal { dtype, shape: shape.to_vec(), data: data.to_vec(), elements: vec![] })
+    }
+
+    /// Scalar constructor.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut data = Vec::with_capacity(4);
+        v.write_le(&mut data);
+        Literal { dtype: T::DTYPE, shape: vec![], data, elements: vec![] }
+    }
+
+    /// Wrap literals into a tuple (the shape compiled graphs return).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dtype: ElementType::F32, shape: vec![], data: vec![], elements }
+    }
+
+    /// Decompose a tuple literal into its elements (by-value, mirroring
+    /// the upstream crate's signature).
+    #[allow(clippy::wrong_self_convention)]
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        if self.elements.is_empty() {
+            return Err(XlaError("not a tuple literal".into()));
+        }
+        Ok(self.elements)
+    }
+
+    /// Copy out the elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::DTYPE != self.dtype {
+            return Err(XlaError(format!(
+                "dtype mismatch: literal holds {:?}, asked for {:?}",
+                self.dtype,
+                T::DTYPE
+            )));
+        }
+        Ok(self.data.chunks_exact(4).map(T::from_le).collect())
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if self.data.len() < 4 {
+            return Err(XlaError("empty literal".into()));
+        }
+        if T::DTYPE != self.dtype {
+            return Err(XlaError("dtype mismatch in get_first_element".into()));
+        }
+        Ok(T::from_le(&self.data[..4]))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.dtype
+    }
+}
+
+/// Parsed HLO module (stub: carries nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {}", path.as_ref().display())))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("reading a device buffer"))
+    }
+}
+
+/// Compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a compiled graph"))
+    }
+}
+
+/// PJRT client (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating a PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an XLA computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for x in xs {
+            x.write_le(&mut bytes);
+        }
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(7i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].get_first_element::<i32>().unwrap(), 7);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/none.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 8])
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! Built-in architecture registry for the native backend.
+//!
+//! The XLA path reads its architectures from the artifact manifest (they
+//! must match what the graphs were compiled for); the native backend has no
+//! artifacts, so the paper's fully-connected architectures are defined here
+//! directly, matching the presets in [`crate::config::presets`]:
+//!
+//! * `mlp_tiny` — 64 → 32 → 32 → 10 smoke net (toy data, integration tests);
+//! * `mlp500` — the paper's 5-layer 500-neuron net (Fig. 2/3, Tables 5-6);
+//! * `mlp784` — the 5-layer 784-neuron net (Fig. 3, Table 6, Table 8);
+//! * `mlp5120` — the 5-layer 5120-neuron timing net (Fig. 1, Tables 3-4).
+//!
+//! Conv architectures (`lenet`, `vggs`, `alexs`) are deliberately absent:
+//! their graphs exist only as compiled artifacts (`--features xla`).
+
+use crate::runtime::{ArchInfo, LayerInfo};
+
+fn dense_layer(m: usize, n: usize) -> LayerInfo {
+    LayerInfo {
+        kind: "dense".into(),
+        m,
+        n,
+        in_ch: 0,
+        out_ch: 0,
+        ksize: 0,
+        in_h: 0,
+        in_w: 0,
+        pool: false,
+        out_h: 0,
+        out_w: 0,
+    }
+}
+
+/// Fully-connected architecture: `input → hidden… → classes`.
+fn mlp(input_dim: usize, hidden: &[usize], num_classes: usize) -> ArchInfo {
+    let mut layers = Vec::with_capacity(hidden.len() + 1);
+    let mut fan_in = input_dim;
+    for &h in hidden {
+        layers.push(dense_layer(h, fan_in));
+        fan_in = h;
+    }
+    layers.push(dense_layer(num_classes, fan_in));
+    ArchInfo { layers, input_dim, num_classes, image_hwc: None }
+}
+
+/// All built-in native architectures as `(name, arch, batch_cap)`.
+pub fn builtin() -> Vec<(String, ArchInfo, usize)> {
+    vec![
+        ("mlp_tiny".into(), mlp(64, &[32, 32], 10), 32),
+        ("mlp500".into(), mlp(784, &[500, 500, 500, 500], 10), 256),
+        ("mlp784".into(), mlp(784, &[784, 784, 784, 784], 10), 256),
+        ("mlp5120".into(), mlp(784, &[5120, 5120, 5120, 5120], 10), 256),
+    ]
+}
+
+/// Names of the built-in native architectures.
+pub fn names() -> Vec<String> {
+    builtin().into_iter().map(|(n, _, _)| n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_chain_correctly() {
+        for (name, arch, batch) in builtin() {
+            assert!(batch > 0, "{name}");
+            assert_eq!(arch.layers.first().unwrap().n, arch.input_dim, "{name}");
+            assert_eq!(arch.layers.last().unwrap().m, arch.num_classes, "{name}");
+            for pair in arch.layers.windows(2) {
+                assert_eq!(pair[1].n, pair[0].m, "{name}: fan-in mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_matches_integration_expectations() {
+        let (_, arch, _) = builtin().remove(0);
+        let dims: Vec<(usize, usize)> = arch.layers.iter().map(|l| (l.m, l.n)).collect();
+        assert_eq!(dims, vec![(32, 64), (32, 32), (10, 32)]);
+    }
+}

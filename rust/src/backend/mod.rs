@@ -1,0 +1,148 @@
+//! Pluggable compute backends — who evaluates the training graphs.
+//!
+//! The KLS integrator (Algorithm 1) needs exactly four compute services per
+//! architecture: the `kl_grads`, `s_grads` and `forward` graphs over the
+//! factored network, plus the dense/vanilla baseline graphs. Everything
+//! else — optimizers, QR augmentation, SVD truncation, rank bookkeeping —
+//! is host math that stays backend-independent. [`ComputeBackend`] is that
+//! contract (DESIGN.md §2):
+//!
+//! * [`native::NativeBackend`] — a pure-Rust forward + hand-derived backward
+//!   pass for the fully-connected architectures, batched through the
+//!   threaded [`crate::linalg`] kernels. No artifacts, no Python, no FFI:
+//!   `cargo build && cargo test` is hermetic.
+//! * `pjrt::XlaBackend` (behind `--features xla`) — the original PJRT path:
+//!   AOT-compiled HLO artifacts executed through the `xla` crate, with
+//!   rank-bucketed executables and zero-padding at the boundary.
+//!
+//! **Shape contract:** backends consume and produce tensors at the *true*
+//! current rank of each layer. Padding factors into a compiled bucket slot
+//! (and un-padding the returned gradients) is entirely the XLA backend's
+//! private business; the integrator never sees a slot shape.
+
+pub mod archs;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use pjrt::XlaBackend;
+
+use crate::data::Batch;
+use crate::linalg::Matrix;
+use crate::runtime::ArchInfo;
+use crate::Result;
+
+/// Borrowed view of one layer's low-rank state `W = U S Vᵀ` plus bias, at
+/// its true rank (`u: m x r`, `s: r x r`, `v: n x r`, `bias: m`).
+pub struct LayerFactors<'a> {
+    pub u: &'a Matrix,
+    pub s: &'a Matrix,
+    pub v: &'a Matrix,
+    pub bias: &'a [f32],
+}
+
+/// Result of one `kl_grads` evaluation: per-layer `∂K` (`m x r`) and `∂L`
+/// (`n x r`), plus the batch loss/correct-count of the pre-update forward.
+pub struct KlGrads {
+    pub dk: Vec<Matrix>,
+    pub dl: Vec<Matrix>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// Result of one `s_grads` evaluation on the staged (augmented) bases:
+/// per-layer `∂S` (`r̂ x r̂`) and `∂bias` (`m`), plus the post-K/L loss.
+pub struct SGrads {
+    pub ds: Vec<Matrix>,
+    pub db: Vec<Vec<f32>>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// Result of one `dense_grads` evaluation: per-layer `∂W` and `∂bias`.
+pub struct DenseGrads {
+    pub dw: Vec<Matrix>,
+    pub db: Vec<Vec<f32>>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// Result of one `vanilla_grads` evaluation on `W = U Vᵀ`.
+pub struct VanillaGrads {
+    pub du: Vec<Matrix>,
+    pub dv: Vec<Matrix>,
+    pub db: Vec<Vec<f32>>,
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// Weighted loss / correct-count of a forward evaluation over one batch
+/// (`loss` is the weighted mean, `ncorrect` the weighted correct count —
+/// the padding rows of a [`Batch`] carry weight 0 and contribute nothing).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalStats {
+    pub loss: f32,
+    pub ncorrect: f32,
+}
+
+/// The backend contract: build/execute the training and evaluation graphs
+/// for a named architecture. See the module docs for the shape contract.
+pub trait ComputeBackend {
+    /// Short identifier ("native", "jnp", "pallas") for logs and errors.
+    fn name(&self) -> &str;
+
+    /// Architecture description for a name this backend can serve.
+    fn arch(&self, arch: &str) -> Result<ArchInfo>;
+
+    /// The batch size the backend's graphs are built for. Callers must pad
+    /// batches to exactly this many rows (`data::Batcher` does).
+    fn batch_cap(&self, arch: &str) -> Result<usize>;
+
+    /// Largest per-layer rank this backend can evaluate for a graph family
+    /// (`"kl_grads"`, `"s_grads"`, `"vanilla_grads"`). `None` means
+    /// unbounded (the native backend works at any rank); the XLA backend
+    /// returns its largest compiled bucket.
+    fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>>;
+
+    /// K- and L-step gradients (Alg. 1 lines 5/7) plus the pre-update
+    /// forward's loss and weighted correct count.
+    fn kl_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch)
+        -> Result<KlGrads>;
+
+    /// S-step gradients (Alg. 1 line 15) on the staged bases.
+    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads>;
+
+    /// Evaluation forward over one batch of the factored network.
+    fn forward(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch)
+        -> Result<EvalStats>;
+
+    /// Full-rank reference gradients (baseline trainer).
+    fn dense_grads(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<DenseGrads>;
+
+    /// Evaluation forward of the dense reference network.
+    fn dense_forward(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<EvalStats>;
+
+    /// Two-factor `W = U Vᵀ` baseline gradients (Fig. 4).
+    fn vanilla_grads(
+        &self,
+        arch: &str,
+        us: &[Matrix],
+        vs: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<VanillaGrads>;
+}

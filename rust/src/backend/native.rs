@@ -1,0 +1,590 @@
+//! Pure-Rust compute backend: forward + hand-derived backward passes for
+//! the factored MLP architectures.
+//!
+//! All three parameterizations share one ReLU-MLP skeleton with weighted
+//! softmax cross-entropy on top; they differ only in how a layer's weight
+//! matrix `W (m x n)` is represented:
+//!
+//! * factored `W = U S Vᵀ` (DLRT layers),
+//! * dense `W` (the reference baseline),
+//! * two-factor `W = U Vᵀ` (the Fig. 4 vanilla baseline).
+//!
+//! The backward pass never materializes a dense `∂W = δᵀ a`. Because the
+//! K-, L- and S-step graphs all evaluate the *same* function (the paper's
+//! §4.2 observation that `K Vᵀ = U Lᵀ = U S Vᵀ`), a single taped backward
+//! yields every factor gradient by contracting `δ` and the stored input
+//! activation `a` against the bases first:
+//!
+//! ```text
+//!   ∂K = ∂W · V  = δᵀ (a V)          (m x r)
+//!   ∂L = ∂Wᵀ · U = aᵀ (δ U)          (n x r)
+//!   ∂S = Uᵀ ∂W V = (δ U)ᵀ (a V)      (r x r)
+//!   ∂b = Σ_batch δ                    (m)
+//! ```
+//!
+//! at `O(B (m + n) r)` per layer — the low-rank cost the paper's timing
+//! claims (Fig. 1) rest on. Products run on the threaded [`crate::linalg`]
+//! kernels, so large batches parallelize across cores.
+
+use super::{
+    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, SGrads, VanillaGrads,
+};
+use crate::data::Batch;
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::runtime::ArchInfo;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+
+/// The native backend: an architecture registry plus the math below. The
+/// registry ships the paper's MLPs ([`super::archs`]); tests and custom
+/// experiments can add more via [`NativeBackend::with_arch`].
+pub struct NativeBackend {
+    archs: Vec<(String, ArchInfo, usize)>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { archs: super::archs::builtin() }
+    }
+
+    /// Register an additional architecture under `name` with the given
+    /// evaluation batch size (dense layers only).
+    pub fn with_arch(mut self, name: &str, arch: ArchInfo, batch_cap: usize) -> NativeBackend {
+        self.archs.retain(|(n, _, _)| n != name);
+        self.archs.push((name.to_string(), arch, batch_cap));
+        self
+    }
+
+    fn entry(&self, name: &str) -> Result<&(String, ArchInfo, usize)> {
+        self.archs.iter().find(|(n, _, _)| n == name).ok_or_else(|| {
+            let known: Vec<&str> = self.archs.iter().map(|(n, _, _)| n.as_str()).collect();
+            anyhow!(
+                "arch '{name}' is not available on the native backend (have: {}); conv \
+                 architectures need `--features xla` and compiled artifacts",
+                known.join(", ")
+            )
+        })
+    }
+}
+
+/// How one layer represents its weight matrix `W (m x n)`.
+enum Weights<'a> {
+    Low { u: &'a Matrix, s: &'a Matrix, v: &'a Matrix },
+    Dense { w: &'a Matrix },
+    Two { u: &'a Matrix, v: &'a Matrix },
+}
+
+impl Weights<'_> {
+    /// `a · Wᵀ` — the batched forward product (`a: B x n` → `B x m`).
+    fn apply_t(&self, a: &Matrix) -> Matrix {
+        match self {
+            Weights::Low { u, s, v } => matmul_nt(&matmul_nt(&matmul(a, v), s), u),
+            Weights::Dense { w } => matmul_nt(a, w),
+            Weights::Two { u, v } => matmul_nt(&matmul(a, v), u),
+        }
+    }
+
+    /// `d · W` — the batched backward product (`d: B x m` → `B x n`).
+    fn apply(&self, d: &Matrix) -> Matrix {
+        match self {
+            Weights::Low { u, s, v } => matmul_nt(&matmul(&matmul(d, u), s), v),
+            Weights::Dense { w } => matmul(d, w),
+            Weights::Two { u, v } => matmul_nt(&matmul(d, u), v),
+        }
+    }
+}
+
+/// Batch features as a `B x dim` matrix (B = the padded batch size; padded
+/// rows carry weight 0 and fall out of every reduction).
+fn batch_matrix(batch: &Batch, dim: usize) -> Result<Matrix> {
+    let bsz = batch.w.len();
+    ensure!(
+        batch.y.len() == bsz,
+        "batch label/weight arity mismatch: {} labels vs {} weights",
+        batch.y.len(),
+        bsz
+    );
+    ensure!(
+        batch.x.len() == bsz * dim,
+        "batch features: {} values != {} rows x dim {}",
+        batch.x.len(),
+        bsz,
+        dim
+    );
+    Ok(Matrix::from_vec(bsz, dim, batch.x.clone()))
+}
+
+/// ReLU-MLP forward. Returns `(input activations a_0..a_{L-1}, logits)`;
+/// the activation list is empty when `keep_acts` is false (evaluation).
+fn forward_pass(
+    weights: &[Weights<'_>],
+    biases: &[&[f32]],
+    x: Matrix,
+    keep_acts: bool,
+) -> (Vec<Matrix>, Matrix) {
+    let last = weights.len() - 1;
+    let mut acts: Vec<Matrix> = Vec::with_capacity(if keep_acts { weights.len() } else { 0 });
+    let mut a = x;
+    for (l, (wt, b)) in weights.iter().zip(biases).enumerate() {
+        let mut z = wt.apply_t(&a);
+        for i in 0..z.rows() {
+            for (zj, &bj) in z.row_mut(i).iter_mut().zip(*b) {
+                *zj += bj;
+                if l < last {
+                    *zj = zj.max(0.0);
+                }
+            }
+        }
+        if keep_acts {
+            acts.push(a);
+        }
+        a = z;
+    }
+    (acts, a)
+}
+
+/// Weighted softmax cross-entropy over a batch of logits. Returns the
+/// weighted-mean loss, the weighted correct count, and (when requested)
+/// `δ = ∂loss/∂logits` with the `1/Σw` normalization already applied.
+fn softmax_stats(
+    logits: &Matrix,
+    y: &[i32],
+    w: &[f32],
+    want_delta: bool,
+) -> Result<(f32, f32, Option<Matrix>)> {
+    let (bsz, classes) = logits.shape();
+    let wsum: f64 = w.iter().map(|&x| x as f64).sum();
+    let denom = wsum.max(1.0);
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0.0f64;
+    let mut delta = if want_delta { Some(Matrix::zeros(bsz, classes)) } else { None };
+    for i in 0..bsz {
+        let wi = w[i];
+        if wi == 0.0 {
+            continue;
+        }
+        let yi = y[i];
+        ensure!(
+            yi >= 0 && (yi as usize) < classes,
+            "label {yi} out of range [0, {classes}) at batch row {i}"
+        );
+        let row = logits.row(i);
+        let mut zmax = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &z) in row.iter().enumerate() {
+            if z > zmax {
+                zmax = z;
+                argmax = j;
+            }
+        }
+        let mut expsum = 0.0f64;
+        for &z in row {
+            expsum += ((z - zmax) as f64).exp();
+        }
+        let lse = zmax as f64 + expsum.ln();
+        loss += wi as f64 * (lse - row[yi as usize] as f64);
+        if argmax == yi as usize {
+            ncorrect += wi as f64;
+        }
+        if let Some(d) = delta.as_mut() {
+            let scale = wi as f64 / denom;
+            let drow = d.row_mut(i);
+            for (dj, &z) in drow.iter_mut().zip(row) {
+                *dj = (scale * (z as f64 - lse).exp()) as f32;
+            }
+            drow[yi as usize] -= scale as f32;
+        }
+    }
+    Ok(((loss / denom) as f32, ncorrect as f32, delta))
+}
+
+/// Column sums of `δ` — the bias gradient.
+fn colsum(d: &Matrix) -> Vec<f32> {
+    let mut out = vec![0.0f64; d.cols()];
+    for i in 0..d.rows() {
+        for (o, &v) in out.iter_mut().zip(d.row(i)) {
+            *o += v as f64;
+        }
+    }
+    out.into_iter().map(|v| v as f32).collect()
+}
+
+/// One taped forward + backward sweep. `sink(l, δ_l, a_l)` receives each
+/// layer's output-side delta and input activation, from the last layer down
+/// to the first; the caller contracts them into whichever factor gradients
+/// its parameterization needs.
+fn backprop(
+    weights: &[Weights<'_>],
+    biases: &[&[f32]],
+    input_dim: usize,
+    batch: &Batch,
+    mut sink: impl FnMut(usize, &Matrix, &Matrix),
+) -> Result<EvalStats> {
+    let x = batch_matrix(batch, input_dim)?;
+    let (acts, logits) = forward_pass(weights, biases, x, true);
+    let (loss, ncorrect, delta) = softmax_stats(&logits, &batch.y, &batch.w, true)?;
+    let mut delta = delta.expect("delta requested");
+    for l in (0..weights.len()).rev() {
+        sink(l, &delta, &acts[l]);
+        if l > 0 {
+            let mut da = weights[l].apply(&delta);
+            // ReLU mask: a_l = relu(z_{l-1}), and a > 0 ⇔ z > 0
+            for (dv, &av) in da.data_mut().iter_mut().zip(acts[l].data()) {
+                if av <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            delta = da;
+        }
+    }
+    Ok(EvalStats { loss, ncorrect })
+}
+
+/// Validate factored layers against the architecture.
+fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
+    ensure!(
+        layers.len() == arch.layers.len(),
+        "expected {} layers, got {}",
+        arch.layers.len(),
+        layers.len()
+    );
+    for (k, (f, l)) in layers.iter().zip(&arch.layers).enumerate() {
+        ensure!(
+            l.kind == "dense",
+            "layer {k}: native backend supports dense layers only (kind '{}')",
+            l.kind
+        );
+        let r = f.s.rows();
+        ensure!(
+            f.u.rows() == l.m && f.v.rows() == l.n,
+            "layer {k}: factor dims U {:?} / V {:?} don't match layer {}x{}",
+            f.u.shape(),
+            f.v.shape(),
+            l.m,
+            l.n
+        );
+        ensure!(
+            f.s.cols() == r && f.u.cols() == r && f.v.cols() == r,
+            "layer {k}: inconsistent factor rank (U {:?}, S {:?}, V {:?})",
+            f.u.shape(),
+            f.s.shape(),
+            f.v.shape()
+        );
+        ensure!(f.bias.len() == l.m, "layer {k}: bias len {} != m {}", f.bias.len(), l.m);
+    }
+    Ok(())
+}
+
+/// Validate dense weights against the architecture.
+fn check_dense(arch: &ArchInfo, ws: &[Matrix], bs: &[Vec<f32>]) -> Result<()> {
+    ensure!(
+        ws.len() == arch.layers.len() && bs.len() == arch.layers.len(),
+        "expected {} layers, got {} weights / {} biases",
+        arch.layers.len(),
+        ws.len(),
+        bs.len()
+    );
+    for (k, (w, l)) in ws.iter().zip(&arch.layers).enumerate() {
+        ensure!(l.kind == "dense", "layer {k}: native backend supports dense layers only");
+        ensure!(
+            w.shape() == (l.m, l.n),
+            "layer {k}: weight {:?} != layer {}x{}",
+            w.shape(),
+            l.m,
+            l.n
+        );
+        ensure!(bs[k].len() == l.m, "layer {k}: bias len {} != m {}", bs[k].len(), l.m);
+    }
+    Ok(())
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn arch(&self, arch: &str) -> Result<ArchInfo> {
+        Ok(self.entry(arch)?.1.clone())
+    }
+
+    fn batch_cap(&self, arch: &str) -> Result<usize> {
+        Ok(self.entry(arch)?.2)
+    }
+
+    fn rank_cap(&self, arch: &str, _graph: &str) -> Result<Option<usize>> {
+        self.entry(arch)?;
+        Ok(None) // dynamic host shapes: any rank evaluates
+    }
+
+    fn kl_grads(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<KlGrads> {
+        let arch = &self.entry(arch)?.1;
+        check_factors(arch, layers)?;
+        let weights: Vec<Weights<'_>> =
+            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
+        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
+        let n = layers.len();
+        let mut dk: Vec<Option<Matrix>> = vec![None; n];
+        let mut dl: Vec<Option<Matrix>> = vec![None; n];
+        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+            let f = &layers[l];
+            let av = matmul(a, f.v); // B x r
+            let du = matmul(delta, f.u); // B x r
+            dk[l] = Some(matmul_tn(delta, &av)); // ∂K = δᵀ (a V)
+            dl[l] = Some(matmul_tn(a, &du)); // ∂L = aᵀ (δ U)
+        })?;
+        Ok(KlGrads {
+            dk: dk.into_iter().map(|m| m.expect("layer visited")).collect(),
+            dl: dl.into_iter().map(|m| m.expect("layer visited")).collect(),
+            loss: stats.loss,
+            ncorrect: stats.ncorrect,
+        })
+    }
+
+    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads> {
+        let arch = &self.entry(arch)?.1;
+        check_factors(arch, layers)?;
+        let weights: Vec<Weights<'_>> =
+            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
+        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
+        let n = layers.len();
+        let mut ds: Vec<Option<Matrix>> = vec![None; n];
+        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
+        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+            let f = &layers[l];
+            let av = matmul(a, f.v); // B x r
+            let du = matmul(delta, f.u); // B x r
+            ds[l] = Some(matmul_tn(&du, &av)); // ∂S = (δ U)ᵀ (a V)
+            db[l] = Some(colsum(delta));
+        })?;
+        Ok(SGrads {
+            ds: ds.into_iter().map(|m| m.expect("layer visited")).collect(),
+            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
+            loss: stats.loss,
+            ncorrect: stats.ncorrect,
+        })
+    }
+
+    fn forward(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        let arch = &self.entry(arch)?.1;
+        check_factors(arch, layers)?;
+        let weights: Vec<Weights<'_>> =
+            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
+        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
+        let x = batch_matrix(batch, arch.input_dim)?;
+        let (_, logits) = forward_pass(&weights, &biases, x, false);
+        let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
+        Ok(EvalStats { loss, ncorrect })
+    }
+
+    fn dense_grads(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<DenseGrads> {
+        let arch = &self.entry(arch)?.1;
+        check_dense(arch, ws, bs)?;
+        let weights: Vec<Weights<'_>> = ws.iter().map(|w| Weights::Dense { w }).collect();
+        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
+        let n = ws.len();
+        let mut dw: Vec<Option<Matrix>> = vec![None; n];
+        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
+        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+            dw[l] = Some(matmul_tn(delta, a)); // ∂W = δᵀ a
+            db[l] = Some(colsum(delta));
+        })?;
+        Ok(DenseGrads {
+            dw: dw.into_iter().map(|m| m.expect("layer visited")).collect(),
+            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
+            loss: stats.loss,
+            ncorrect: stats.ncorrect,
+        })
+    }
+
+    fn dense_forward(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        let arch = &self.entry(arch)?.1;
+        check_dense(arch, ws, bs)?;
+        let weights: Vec<Weights<'_>> = ws.iter().map(|w| Weights::Dense { w }).collect();
+        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
+        let x = batch_matrix(batch, arch.input_dim)?;
+        let (_, logits) = forward_pass(&weights, &biases, x, false);
+        let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
+        Ok(EvalStats { loss, ncorrect })
+    }
+
+    fn vanilla_grads(
+        &self,
+        arch: &str,
+        us: &[Matrix],
+        vs: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<VanillaGrads> {
+        let arch = &self.entry(arch)?.1;
+        ensure!(
+            us.len() == arch.layers.len() && vs.len() == us.len() && bs.len() == us.len(),
+            "expected {} layers, got {}/{}/{} factors",
+            arch.layers.len(),
+            us.len(),
+            vs.len(),
+            bs.len()
+        );
+        for (k, l) in arch.layers.iter().enumerate() {
+            ensure!(
+                us[k].rows() == l.m && vs[k].rows() == l.n && us[k].cols() == vs[k].cols(),
+                "layer {k}: two-factor dims U {:?} / V {:?} don't match layer {}x{}",
+                us[k].shape(),
+                vs[k].shape(),
+                l.m,
+                l.n
+            );
+            ensure!(bs[k].len() == l.m, "layer {k}: bias len {} != m {}", bs[k].len(), l.m);
+        }
+        let weights: Vec<Weights<'_>> =
+            us.iter().zip(vs).map(|(u, v)| Weights::Two { u, v }).collect();
+        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
+        let n = us.len();
+        let mut du: Vec<Option<Matrix>> = vec![None; n];
+        let mut dv: Vec<Option<Matrix>> = vec![None; n];
+        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
+        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+            let av = matmul(a, &vs[l]); // B x r
+            let dut = matmul(delta, &us[l]); // B x r
+            du[l] = Some(matmul_tn(delta, &av)); // ∂U = δᵀ (a V)
+            dv[l] = Some(matmul_tn(a, &dut)); // ∂V = aᵀ (δ U)
+            db[l] = Some(colsum(delta));
+        })?;
+        Ok(VanillaGrads {
+            du: du.into_iter().map(|m| m.expect("layer visited")).collect(),
+            dv: dv.into_iter().map(|m| m.expect("layer visited")).collect(),
+            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
+            loss: stats.loss,
+            ncorrect: stats.ncorrect,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrt::LowRankFactors;
+    use crate::linalg::Rng;
+
+    fn tiny_batch(bsz: usize, dim: usize, classes: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        Batch {
+            x: (0..bsz * dim).map(|_| rng.normal()).collect(),
+            y: (0..bsz).map(|_| rng.below(classes) as i32).collect(),
+            w: vec![1.0; bsz],
+            count: bsz,
+        }
+    }
+
+    fn refs(layers: &[LowRankFactors]) -> Vec<LayerFactors<'_>> {
+        layers
+            .iter()
+            .map(|f| LayerFactors { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
+            .collect()
+    }
+
+    fn tiny_layers(seed: u64) -> Vec<LowRankFactors> {
+        let mut rng = Rng::new(seed);
+        vec![
+            LowRankFactors::random(32, 64, 8, &mut rng),
+            LowRankFactors::random(32, 32, 8, &mut rng),
+            LowRankFactors::random(10, 32, 10, &mut rng),
+        ]
+    }
+
+    #[test]
+    fn factored_forward_matches_dense_reconstruction() {
+        let be = NativeBackend::new();
+        let layers = tiny_layers(1);
+        let batch = tiny_batch(32, 64, 10, 2);
+        let low = be.forward("mlp_tiny", &refs(&layers), &batch).unwrap();
+        let ws: Vec<Matrix> = layers.iter().map(|f| f.reconstruct()).collect();
+        let bs: Vec<Vec<f32>> = layers.iter().map(|f| f.bias.clone()).collect();
+        let dense = be.dense_forward("mlp_tiny", &ws, &bs, &batch).unwrap();
+        assert!(
+            (low.loss - dense.loss).abs() < 1e-4,
+            "factored vs dense forward: {} vs {}",
+            low.loss,
+            dense.loss
+        );
+        assert_eq!(low.ncorrect, dense.ncorrect);
+    }
+
+    #[test]
+    fn kl_and_s_losses_agree_on_same_factors() {
+        // kl_grads and s_grads evaluate the same function value
+        let be = NativeBackend::new();
+        let layers = tiny_layers(3);
+        let batch = tiny_batch(32, 64, 10, 4);
+        let kl = be.kl_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
+        let sg = be.s_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
+        assert!((kl.loss - sg.loss).abs() < 1e-5);
+        assert_eq!(kl.dk[0].shape(), (32, 8));
+        assert_eq!(kl.dl[0].shape(), (64, 8));
+        assert_eq!(sg.ds[0].shape(), (8, 8));
+        assert_eq!(sg.db[0].len(), 32);
+    }
+
+    #[test]
+    fn zero_weight_rows_are_inert() {
+        let be = NativeBackend::new();
+        let layers = tiny_layers(5);
+        let mut batch = tiny_batch(32, 64, 10, 6);
+        for i in 16..32 {
+            batch.w[i] = 0.0;
+            for j in 0..64 {
+                batch.x[i * 64 + j] = 999.0; // garbage that must not leak
+            }
+        }
+        batch.count = 16;
+        let masked = be.kl_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
+        let mut zeroed = batch;
+        for i in 16..32 {
+            for j in 0..64 {
+                zeroed.x[i * 64 + j] = 0.0;
+            }
+        }
+        let clean = be.kl_grads("mlp_tiny", &refs(&layers), &zeroed).unwrap();
+        assert!((masked.loss - clean.loss).abs() < 1e-5);
+        assert_eq!(masked.ncorrect, clean.ncorrect);
+        for (a, b) in masked.dk.iter().zip(&clean.dk) {
+            assert!(a.fro_dist(b) < 1e-5, "masked rows leaked into ∂K");
+        }
+    }
+
+    #[test]
+    fn unknown_arch_is_a_clean_error() {
+        let be = NativeBackend::new();
+        let err = be.arch("lenet").unwrap_err().to_string();
+        assert!(err.contains("native backend"), "{err}");
+        assert!(be.rank_cap("mlp500", "kl_grads").unwrap().is_none());
+        assert_eq!(be.batch_cap("mlp_tiny").unwrap(), 32);
+    }
+}

@@ -1,0 +1,310 @@
+//! `XlaBackend` — the PJRT artifact path behind [`ComputeBackend`]
+//! (`--features xla`).
+//!
+//! This adapter owns everything bucket-shaped: choosing the smallest
+//! compiled bucket that fits the current ranks, zero-padding factors into
+//! the slot shapes, and un-padding the returned gradients back to true
+//! rank. The integrator upstream never sees a slot (DESIGN.md §2). Padding
+//! is exactly inert: padded basis columns are zero, so the corresponding
+//! gradient columns come back zero and are dropped by the truncation here.
+
+use super::{
+    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, SGrads, VanillaGrads,
+};
+use crate::data::Batch;
+use crate::linalg::Matrix;
+use crate::runtime::pjrt::{Executable, PjrtRuntime};
+use crate::runtime::{literals, ArchInfo};
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::path::Path;
+
+/// PJRT-backed implementation of [`ComputeBackend`] for one kernel flavor
+/// ("jnp" or "pallas" — the two artifact families `python/compile/aot.py`
+/// emits).
+pub struct XlaBackend {
+    rt: PjrtRuntime,
+    flavor: String,
+}
+
+impl XlaBackend {
+    pub fn new(artifacts_dir: impl AsRef<Path>, flavor: &str) -> Result<XlaBackend> {
+        ensure!(
+            flavor == "jnp" || flavor == "pallas",
+            "unknown artifact flavor '{flavor}' (expected jnp|pallas)"
+        );
+        Ok(XlaBackend { rt: PjrtRuntime::new(artifacts_dir)?, flavor: flavor.to_string() })
+    }
+
+    /// The underlying artifact runtime (manifest inspection, cache stats).
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+
+    fn load_for_rank(&self, arch: &str, graph: &str, rank: usize) -> Result<std::rc::Rc<Executable>> {
+        let bucket = self
+            .rt
+            .bucket_for(arch, graph, &self.flavor, rank)
+            .ok_or_else(|| anyhow!("no {graph} artifacts for {arch}/{}", self.flavor))?;
+        self.rt.load(arch, graph, &self.flavor, bucket)
+    }
+}
+
+fn max_rank(layers: &[LayerFactors<'_>]) -> usize {
+    layers.iter().map(|f| f.s.rows()).max().unwrap_or(1)
+}
+
+/// Pack factored layers (padded into the executable's slot shapes) plus the
+/// batch, following the artifact's input spec order.
+fn pack_factors(
+    exe: &Executable,
+    layers: &[LayerFactors<'_>],
+    batch: &Batch,
+) -> Result<Vec<xla::Literal>> {
+    let info = &exe.info;
+    let n_layers = layers.len();
+    ensure!(
+        info.inputs.len() == 4 * n_layers + 3,
+        "{}: unexpected input arity {} for {} layers",
+        info.name,
+        info.inputs.len(),
+        n_layers
+    );
+    let mut lits = Vec::with_capacity(info.inputs.len());
+    for (k, f) in layers.iter().enumerate() {
+        let specs = &info.inputs[4 * k..4 * k + 4];
+        debug_assert!(specs[0].name.ends_with("/U"));
+        let (m, slot) = (specs[0].shape[0], specs[0].shape[1]);
+        let n = specs[2].shape[0];
+        ensure!(
+            f.s.rows() <= slot,
+            "{}: layer {k} rank {} exceeds compiled slot {slot}",
+            info.name,
+            f.s.rows()
+        );
+        lits.push(literals::pack_matrix(&specs[0], &f.u.pad_to(m, slot))?);
+        lits.push(literals::pack_matrix(&specs[1], &f.s.pad_to(slot, slot))?);
+        lits.push(literals::pack_matrix(&specs[2], &f.v.pad_to(n, slot))?);
+        lits.push(literals::pack_f32(&specs[3], f.bias)?);
+    }
+    let base = 4 * n_layers;
+    lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+    lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+    lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+    Ok(lits)
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &str {
+        &self.flavor
+    }
+
+    fn arch(&self, arch: &str) -> Result<ArchInfo> {
+        self.rt
+            .manifest()
+            .arch(arch)
+            .cloned()
+            .ok_or_else(|| anyhow!("arch '{arch}' not in the artifact manifest"))
+    }
+
+    fn batch_cap(&self, arch: &str) -> Result<usize> {
+        self.rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.arch == arch && a.backend == self.flavor)
+            .map(|a| a.batch)
+            .ok_or_else(|| anyhow!("no artifacts for {arch}/{}", self.flavor))
+    }
+
+    fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>> {
+        let buckets = self.rt.manifest().buckets(arch, graph, &self.flavor);
+        ensure!(!buckets.is_empty(), "no {graph} artifacts for {arch}/{}", self.flavor);
+        Ok(buckets.last().copied())
+    }
+
+    fn kl_grads(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<KlGrads> {
+        let exe = self.load_for_rank(arch, "kl_grads", max_rank(layers))?;
+        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
+        let n = layers.len();
+        let mut dk = Vec::with_capacity(n);
+        let mut dl = Vec::with_capacity(n);
+        for (k, f) in layers.iter().enumerate() {
+            let r = f.s.rows();
+            dk.push(literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_cols(r));
+            dl.push(
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.take_cols(r),
+            );
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
+        Ok(KlGrads { dk, dl, loss, ncorrect })
+    }
+
+    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads> {
+        let exe = self.load_for_rank(arch, "s_grads", max_rank(layers))?;
+        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
+        let n = layers.len();
+        let mut ds = Vec::with_capacity(n);
+        let mut db = Vec::with_capacity(n);
+        for (k, f) in layers.iter().enumerate() {
+            let r = f.s.rows();
+            ds.push(
+                literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_block(r, r),
+            );
+            db.push(
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec(),
+            );
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = if exe.info.outputs.len() > 2 * n + 1 {
+            literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?
+        } else {
+            0.0
+        };
+        Ok(SGrads { ds, db, loss, ncorrect })
+    }
+
+    fn forward(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        let exe = self.load_for_rank(arch, "forward", max_rank(layers))?;
+        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
+        // outputs: [logits, loss, ncorrect]
+        let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+        Ok(EvalStats { loss, ncorrect })
+    }
+
+    fn dense_grads(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<DenseGrads> {
+        let exe = self.rt.load(arch, "dense_grads", &self.flavor, 0)?;
+        let outs = exe.run(&pack_dense(&exe, ws, bs, batch)?)?;
+        let n = ws.len();
+        let mut dw = Vec::with_capacity(n);
+        let mut db = Vec::with_capacity(n);
+        for k in 0..n {
+            dw.push(literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?);
+            db.push(
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec(),
+            );
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
+        Ok(DenseGrads { dw, db, loss, ncorrect })
+    }
+
+    fn dense_forward(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        let exe = self.rt.load(arch, "dense_forward", &self.flavor, 0)?;
+        let outs = exe.run(&pack_dense(&exe, ws, bs, batch)?)?;
+        let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+        Ok(EvalStats { loss, ncorrect })
+    }
+
+    fn vanilla_grads(
+        &self,
+        arch: &str,
+        us: &[Matrix],
+        vs: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<VanillaGrads> {
+        let rank = us.iter().map(|u| u.cols()).max().unwrap_or(1);
+        let exe = self.load_for_rank(arch, "vanilla_grads", rank)?;
+        let info = &exe.info;
+        let n = us.len();
+        ensure!(
+            info.inputs.len() == 3 * n + 3,
+            "{}: unexpected input arity {}",
+            info.name,
+            info.inputs.len()
+        );
+        let mut lits = Vec::with_capacity(info.inputs.len());
+        for k in 0..n {
+            let specs = &info.inputs[3 * k..3 * k + 3];
+            let slot = specs[0].shape[1];
+            ensure!(
+                us[k].cols() <= slot,
+                "{}: layer {k} rank {} exceeds compiled slot {slot}",
+                info.name,
+                us[k].cols()
+            );
+            lits.push(literals::pack_matrix(&specs[0], &us[k].pad_to(us[k].rows(), slot))?);
+            lits.push(literals::pack_matrix(&specs[1], &vs[k].pad_to(vs[k].rows(), slot))?);
+            lits.push(literals::pack_f32(&specs[2], &bs[k])?);
+        }
+        let base = 3 * n;
+        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+        let outs = exe.run(&lits)?;
+        let mut du = Vec::with_capacity(n);
+        let mut dv = Vec::with_capacity(n);
+        let mut db = Vec::with_capacity(n);
+        for k in 0..n {
+            let r = us[k].cols();
+            du.push(
+                literals::unpack_matrix(&exe.info.outputs[3 * k], &outs[3 * k])?.take_cols(r),
+            );
+            dv.push(
+                literals::unpack_matrix(&exe.info.outputs[3 * k + 1], &outs[3 * k + 1])?
+                    .take_cols(r),
+            );
+            db.push(
+                literals::unpack_matrix(&exe.info.outputs[3 * k + 2], &outs[3 * k + 2])?
+                    .into_vec(),
+            );
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[3 * n], &outs[3 * n])?;
+        let ncorrect =
+            literals::unpack_scalar(&exe.info.outputs[3 * n + 1], &outs[3 * n + 1])?;
+        Ok(VanillaGrads { du, dv, db, loss, ncorrect })
+    }
+}
+
+/// Pack dense weights + batch for the `dense_grads`/`dense_forward` graphs.
+fn pack_dense(
+    exe: &Executable,
+    ws: &[Matrix],
+    bs: &[Vec<f32>],
+    batch: &Batch,
+) -> Result<Vec<xla::Literal>> {
+    let info = &exe.info;
+    let n_layers = ws.len();
+    ensure!(
+        info.inputs.len() == 2 * n_layers + 3,
+        "{}: unexpected input arity {}",
+        info.name,
+        info.inputs.len()
+    );
+    let mut lits = Vec::with_capacity(info.inputs.len());
+    for k in 0..n_layers {
+        lits.push(literals::pack_matrix(&info.inputs[2 * k], &ws[k])?);
+        lits.push(literals::pack_f32(&info.inputs[2 * k + 1], &bs[k])?);
+    }
+    let base = 2 * n_layers;
+    lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+    lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+    lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+    Ok(lits)
+}

@@ -1,21 +1,19 @@
 //! Full-rank reference trainer — the baseline row of every paper table.
 //!
-//! Uses the `dense_grads` / `dense_forward` artifacts; weights live on the
-//! host and the optimizer is the same [`FactorOptimizer`] machinery the
-//! integrator uses, so timing comparisons (Fig. 1) measure the algorithms,
-//! not different plumbing.
+//! Gradients come from the backend's `dense_grads` / `dense_forward`
+//! services; weights live on the host and the optimizer is the same
+//! [`FactorOptimizer`] machinery the integrator uses, so timing comparisons
+//! (Fig. 1) measure the algorithms, not different plumbing.
 
 use crate::data::{Batch, Batcher, Dataset};
 use crate::dlrt::{FactorOptimizer, OptKind};
 use crate::linalg::{Matrix, Rng};
-use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::runtime::{ArchInfo, Runtime};
 use crate::Result;
-use anyhow::{anyhow, ensure};
 
 /// Dense trainer state.
 pub struct DenseTrainer {
     pub arch_name: String,
-    pub backend: String,
     pub arch: ArchInfo,
     pub ws: Vec<Matrix>,
     pub bs: Vec<Vec<f32>>,
@@ -25,18 +23,8 @@ pub struct DenseTrainer {
 
 impl DenseTrainer {
     /// He-normal initialization.
-    pub fn new(
-        rt: &Runtime,
-        arch_name: &str,
-        backend: &str,
-        opt: OptKind,
-        rng: &mut Rng,
-    ) -> Result<Self> {
-        let arch = rt
-            .manifest()
-            .arch(arch_name)
-            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
-            .clone();
+    pub fn new(rt: &Runtime, arch_name: &str, opt: OptKind, rng: &mut Rng) -> Result<Self> {
+        let arch = rt.arch(arch_name)?;
         let mut ws = Vec::new();
         let mut bs = Vec::new();
         for l in &arch.layers {
@@ -49,7 +37,6 @@ impl DenseTrainer {
         let n = arch.layers.len();
         Ok(DenseTrainer {
             arch_name: arch_name.into(),
-            backend: backend.into(),
             arch,
             ws,
             bs,
@@ -58,58 +45,26 @@ impl DenseTrainer {
         })
     }
 
-    fn pack(&self, exe: &Executable, batch: &Batch) -> Result<Vec<xla::Literal>> {
-        let info = &exe.info;
-        let n_layers = self.ws.len();
-        ensure!(
-            info.inputs.len() == 2 * n_layers + 3,
-            "{}: unexpected input arity",
-            info.name
-        );
-        let mut lits = Vec::with_capacity(info.inputs.len());
-        for k in 0..n_layers {
-            lits.push(literals::pack_matrix(&info.inputs[2 * k], &self.ws[k])?);
-            lits.push(literals::pack_f32(&info.inputs[2 * k + 1], &self.bs[k])?);
-        }
-        let base = 2 * n_layers;
-        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
-        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
-        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
-        Ok(lits)
-    }
-
     /// One SGD/momentum/Adam step on the full weights. Returns (loss, ncorrect).
     pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
-        let exe = rt.load(&self.arch_name, "dense_grads", &self.backend, 0)?;
-        let n_layers = self.ws.len();
-        let inputs = self.pack(&exe, batch)?;
-        let outs = exe.run(&inputs)?;
-        for k in 0..n_layers {
-            let dw = literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?;
-            let db = literals::unpack_matrix(&exe.info.outputs[n_layers + k], &outs[n_layers + k])?;
-            self.opt_w[k].update(&mut self.ws[k], &dw, lr);
-            self.opt_b[k].update_vec(&mut self.bs[k], db.data(), lr);
+        let grads = rt.dense_grads(&self.arch_name, &self.ws, &self.bs, batch)?;
+        for k in 0..self.ws.len() {
+            self.opt_w[k].update(&mut self.ws[k], &grads.dw[k], lr);
+            self.opt_b[k].update_vec(&mut self.bs[k], &grads.db[k], lr);
         }
-        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n_layers], &outs[2 * n_layers])?;
-        let nc =
-            literals::unpack_scalar(&exe.info.outputs[2 * n_layers + 1], &outs[2 * n_layers + 1])?;
-        Ok((loss, nc))
+        Ok((grads.loss, grads.ncorrect))
     }
 
     /// Mean loss / accuracy over a dataset via `dense_forward`.
     pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
-        let exe = rt.load(&self.arch_name, "dense_forward", &self.backend, 0)?;
-        let cap = exe.info.batch;
+        let cap = rt.batch_cap(&self.arch_name)?;
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
         let mut total = 0.0f64;
         for batch in Batcher::sequential(data, cap) {
-            let inputs = self.pack(&exe, &batch)?;
-            let outs = exe.run(&inputs)?;
-            let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
-            let nc = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
-            total_loss += loss * batch.count as f64;
-            total_correct += nc;
+            let stats = rt.dense_forward(&self.arch_name, &self.ws, &self.bs, &batch)?;
+            total_loss += stats.loss as f64 * batch.count as f64;
+            total_correct += stats.ncorrect as f64;
             total += batch.count as f64;
         }
         Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))

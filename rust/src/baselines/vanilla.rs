@@ -7,12 +7,12 @@
 //! training badly while DLRT is unaffected. [`VanillaInit`] reproduces both
 //! of the figure's initializations.
 
+use crate::backend::LayerFactors;
 use crate::data::{Batch, Batcher, Dataset};
 use crate::dlrt::{FactorOptimizer, OptKind};
 use crate::linalg::{householder_qr, matmul, Matrix, Rng};
-use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::runtime::{ArchInfo, Runtime};
 use crate::Result;
-use anyhow::{anyhow, ensure};
 
 /// Fig. 4's two weight initializations.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,7 +27,6 @@ pub enum VanillaInit {
 /// Two-factor trainer state.
 pub struct VanillaTrainer {
     pub arch_name: String,
-    pub backend: String,
     pub arch: ArchInfo,
     pub us: Vec<Matrix>,
     pub vs: Vec<Matrix>,
@@ -35,32 +34,24 @@ pub struct VanillaTrainer {
     opt_u: Vec<FactorOptimizer>,
     opt_v: Vec<FactorOptimizer>,
     opt_b: Vec<FactorOptimizer>,
-    bucket: usize,
 }
 
 impl VanillaTrainer {
     pub fn new(
         rt: &Runtime,
         arch_name: &str,
-        backend: &str,
         opt: OptKind,
         rank: usize,
         init: VanillaInit,
         rng: &mut Rng,
     ) -> Result<Self> {
-        let arch = rt
-            .manifest()
-            .arch(arch_name)
-            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
-            .clone();
-        let bucket = rt
-            .bucket_for(arch_name, "vanilla_grads", backend, rank)
-            .ok_or_else(|| anyhow!("no vanilla_grads artifacts for {arch_name}"))?;
+        let arch = rt.arch(arch_name)?;
+        let cap = rt.rank_cap(arch_name, "vanilla_grads")?.unwrap_or(usize::MAX);
         let mut us = Vec::new();
         let mut vs = Vec::new();
         let mut bs = Vec::new();
         for l in &arch.layers {
-            let r = l.slot(bucket.min(rank.max(1)));
+            let r = rank.max(1).min(cap).min(l.max_rank());
             let he = (2.0 / l.n as f32).sqrt();
             let (u, v) = match init {
                 VanillaInit::Plain => {
@@ -98,7 +89,6 @@ impl VanillaTrainer {
         let n = arch.layers.len();
         Ok(VanillaTrainer {
             arch_name: arch_name.into(),
-            backend: backend.into(),
             arch,
             us,
             vs,
@@ -106,7 +96,6 @@ impl VanillaTrainer {
             opt_u: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
             opt_v: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
             opt_b: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-            bucket,
         })
     }
 
@@ -114,93 +103,37 @@ impl VanillaTrainer {
         self.us.iter().map(|u| u.cols()).collect()
     }
 
-    fn pack(&self, exe: &Executable, batch: &Batch) -> Result<Vec<xla::Literal>> {
-        let info = &exe.info;
-        let n_layers = self.us.len();
-        ensure!(info.inputs.len() == 3 * n_layers + 3, "{}: input arity", info.name);
-        let mut lits = Vec::with_capacity(info.inputs.len());
-        for k in 0..n_layers {
-            let specs = &info.inputs[3 * k..3 * k + 3];
-            let slot = specs[0].shape[1];
-            lits.push(literals::pack_matrix(&specs[0], &self.us[k].pad_to(self.us[k].rows(), slot))?);
-            lits.push(literals::pack_matrix(&specs[1], &self.vs[k].pad_to(self.vs[k].rows(), slot))?);
-            lits.push(literals::pack_f32(&specs[2], &self.bs[k])?);
-        }
-        let base = 3 * n_layers;
-        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
-        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
-        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
-        Ok(lits)
-    }
-
     /// One simultaneous descent step on `U, V, b`. Returns (loss, ncorrect).
     pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
-        let exe = rt.load(&self.arch_name, "vanilla_grads", &self.backend, self.bucket)?;
-        let n_layers = self.us.len();
-        let inputs = self.pack(&exe, batch)?;
-        let outs = exe.run(&inputs)?;
-        for k in 0..n_layers {
-            let slot = exe.info.inputs[3 * k].shape[1];
-            let r = self.us[k].cols();
-            let du = literals::unpack_matrix(&exe.info.outputs[3 * k], &outs[3 * k])?;
-            let dv = literals::unpack_matrix(&exe.info.outputs[3 * k + 1], &outs[3 * k + 1])?;
-            let db = literals::unpack_matrix(&exe.info.outputs[3 * k + 2], &outs[3 * k + 2])?;
-            let mut u = self.us[k].pad_to(self.us[k].rows(), slot);
-            self.opt_u[k].update(&mut u, &du, lr);
-            self.us[k] = u.take_cols(r);
-            let mut v = self.vs[k].pad_to(self.vs[k].rows(), slot);
-            self.opt_v[k].update(&mut v, &dv, lr);
-            self.vs[k] = v.take_cols(r);
-            self.opt_b[k].update_vec(&mut self.bs[k], db.data(), lr);
+        let grads = rt.vanilla_grads(&self.arch_name, &self.us, &self.vs, &self.bs, batch)?;
+        for k in 0..self.us.len() {
+            self.opt_u[k].update(&mut self.us[k], &grads.du[k], lr);
+            self.opt_v[k].update(&mut self.vs[k], &grads.dv[k], lr);
+            self.opt_b[k].update_vec(&mut self.bs[k], &grads.db[k], lr);
         }
-        let loss = literals::unpack_scalar(&exe.info.outputs[3 * n_layers], &outs[3 * n_layers])?;
-        let nc = literals::unpack_scalar(
-            &exe.info.outputs[3 * n_layers + 1],
-            &outs[3 * n_layers + 1],
-        )?;
-        Ok((loss, nc))
+        Ok((grads.loss, grads.ncorrect))
     }
 
-    /// Evaluate via the S-form `forward` artifact by lifting `U Vᵀ` to
-    /// `U · I · Vᵀ` (identity core) — padding handles the slot shapes.
+    /// Evaluate via the S-form `forward` service by lifting `U Vᵀ` to
+    /// `U · I · Vᵀ` (identity core).
     pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
-        let max_r = self.us.iter().map(|u| u.cols()).max().unwrap_or(1);
-        let bucket = rt
-            .bucket_for(&self.arch_name, "forward", &self.backend, max_r)
-            .ok_or_else(|| anyhow!("no forward buckets"))?;
-        let exe = rt.load(&self.arch_name, "forward", &self.backend, bucket)?;
-        let cap = exe.info.batch;
-        let n_layers = self.us.len();
+        let cap = rt.batch_cap(&self.arch_name)?;
+        let eyes: Vec<Matrix> = self.us.iter().map(|u| Matrix::eye(u.cols(), u.cols())).collect();
+        let layers: Vec<LayerFactors<'_>> = self
+            .us
+            .iter()
+            .zip(&eyes)
+            .zip(&self.vs)
+            .zip(&self.bs)
+            .map(|(((u, s), v), b)| LayerFactors { u, s, v, bias: b })
+            .collect();
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
         let mut total = 0.0f64;
         for batch in Batcher::sequential(data, cap) {
-            let mut lits = Vec::with_capacity(exe.info.inputs.len());
-            for k in 0..n_layers {
-                let specs = &exe.info.inputs[4 * k..4 * k + 4];
-                let slot = specs[0].shape[1];
-                let r = self.us[k].cols();
-                let eye = Matrix::eye(r, r);
-                lits.push(literals::pack_matrix(
-                    &specs[0],
-                    &self.us[k].pad_to(self.us[k].rows(), slot),
-                )?);
-                lits.push(literals::pack_matrix(&specs[1], &eye.pad_to(slot, slot))?);
-                lits.push(literals::pack_matrix(
-                    &specs[2],
-                    &self.vs[k].pad_to(self.vs[k].rows(), slot),
-                )?);
-                lits.push(literals::pack_f32(&specs[3], &self.bs[k])?);
-            }
-            let base = 4 * n_layers;
-            lits.push(literals::pack_f32(&exe.info.inputs[base], &batch.x)?);
-            lits.push(literals::pack_i32(&exe.info.inputs[base + 1], &batch.y)?);
-            lits.push(literals::pack_f32(&exe.info.inputs[base + 2], &batch.w)?);
-            let outs = exe.run(&lits)?;
-            let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
-            let nc = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
-            total_loss += loss * batch.count as f64;
-            total_correct += nc;
+            let stats = rt.forward(&self.arch_name, &layers, &batch)?;
+            total_loss += stats.loss as f64 * batch.count as f64;
+            total_correct += stats.ncorrect as f64;
             total += batch.count as f64;
         }
         Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))

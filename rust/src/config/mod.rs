@@ -100,9 +100,11 @@ pub enum DataSource {
 /// A complete experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
-    /// Architecture name — must exist in the artifact manifest.
+    /// Architecture name — must be served by the selected backend (native
+    /// registry or artifact manifest).
     pub arch: String,
-    /// Kernel backend of the artifacts to load: "jnp" or "pallas".
+    /// Compute backend: "native" (pure Rust, default) or an artifact kernel
+    /// flavor "jnp" / "pallas" (requires `--features xla`).
     pub backend: String,
     pub mode: Mode,
     pub integrator: Integrator,
@@ -160,7 +162,7 @@ impl Config {
                 .get_str("arch")
                 .ok_or_else(|| anyhow::anyhow!("config needs `arch`"))?
                 .to_string(),
-            backend: str_or("backend", "jnp"),
+            backend: str_or("backend", "native"),
             mode: Mode::parse(doc.get_str("mode").unwrap_or("adaptive_dlrt"))?,
             integrator: Integrator::parse(doc.get_str("integrator").unwrap_or("adam"))?,
             lr: doc.get_f32("lr").unwrap_or(0.001),
@@ -238,8 +240,8 @@ impl Config {
         ensure!(self.fixed_rank >= 1, "fixed_rank must be >= 1");
         ensure!(self.min_rank >= 1, "min_rank must be >= 1");
         ensure!(
-            self.backend == "jnp" || self.backend == "pallas",
-            "backend must be jnp|pallas (got {})",
+            self.backend == "native" || self.backend == "jnp" || self.backend == "pallas",
+            "backend must be native|jnp|pallas (got {})",
             self.backend
         );
         if let LrSchedule::Exponential { decay } = self.lr_schedule {

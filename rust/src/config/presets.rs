@@ -8,7 +8,7 @@ use super::{Config, DataSource, Integrator, LrSchedule, Mode};
 fn base(arch: &str) -> Config {
     Config {
         arch: arch.into(),
-        backend: "jnp".into(),
+        backend: "native".into(),
         mode: Mode::AdaptiveDlrt,
         integrator: Integrator::Adam,
         lr: 0.001,
@@ -95,6 +95,7 @@ pub fn fig1_dense() -> Config {
 /// records the actually-used budget.
 pub fn tab1_lenet(tau: f32) -> Config {
     let mut c = base("lenet");
+    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.tau = tau;
     c.mode = Mode::AdaptiveDlrt;
     c.integrator = Integrator::Sgd;
@@ -108,6 +109,7 @@ pub fn tab1_lenet(tau: f32) -> Config {
 /// Dense LeNet5 reference row of Table 1.
 pub fn tab1_lenet_dense() -> Config {
     let mut c = base("lenet");
+    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.mode = Mode::Dense;
     c.integrator = Integrator::Sgd;
     c.lr = 0.05;
@@ -119,6 +121,7 @@ pub fn tab1_lenet_dense() -> Config {
 /// Fig. 4: DLRT vs vanilla UVᵀ on LeNet5, fixed lr 0.01, fixed rank.
 pub fn fig4_dlrt(rank: usize) -> Config {
     let mut c = base("lenet");
+    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.mode = Mode::FixedDlrt;
     c.fixed_rank = rank;
     c.integrator = Integrator::Sgd;
@@ -138,6 +141,7 @@ pub fn fig4_vanilla(rank: usize) -> Config {
 /// AlexNet nets on synthetic Cifar, τ = 0.1, SGD + momentum 0.1.
 pub fn tab2(arch: &str) -> Config {
     let mut c = base(arch);
+    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.data = DataSource::SynthCifar { n: 8_000 };
     c.tau = 0.1;
     c.integrator = Integrator::Momentum;

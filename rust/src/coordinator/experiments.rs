@@ -92,14 +92,7 @@ fn time_model(
     train_iters: usize,
     predict_iters: usize,
 ) -> Result<TimingRow> {
-    let cap = t
-        .rt
-        .manifest()
-        .artifacts
-        .iter()
-        .find(|a| a.arch == t.cfg.arch && a.backend == t.cfg.backend)
-        .map(|a| a.batch)
-        .unwrap_or(256);
+    let cap = t.rt.batch_cap(&t.cfg.arch).unwrap_or(256);
     let mut batcher = Batcher::new(t.split.train.len(), cap, true, 7);
     let batches: Vec<_> = batcher.epoch(&t.split.train).take(train_iters + 1).collect();
     let lr = t.cfg.lr;
@@ -242,7 +235,6 @@ pub fn fig4_curves(rank: usize, n_steps: usize, n_data: usize) -> Result<Vec<Cur
         let mut v = VanillaTrainer::new(
             &t.rt,
             &cfg.arch,
-            &cfg.backend,
             crate::dlrt::OptKind::Sgd,
             rank,
             init,
@@ -327,7 +319,7 @@ pub fn tab8_pruning(
         _ => unreachable!(),
     };
 
-    let arch = t.rt.manifest().arch(&cfg.arch).unwrap().clone();
+    let arch = t.rt.arch(&cfg.arch)?;
     let mut rows = Vec::new();
     for &rank in ranks {
         let pruned = svd_prune_factors(dense, rank);

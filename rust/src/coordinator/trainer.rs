@@ -9,7 +9,6 @@ use crate::metrics::params::LayerCount;
 use crate::metrics::{self, EpochRecord, RunRecord, StepTimer};
 use crate::runtime::Runtime;
 use crate::Result;
-use anyhow::anyhow;
 use std::path::Path;
 
 /// The model being trained, by mode.
@@ -65,15 +64,20 @@ pub fn load_split(cfg: &Config) -> Result<Split> {
 }
 
 impl Trainer {
+    /// Build data, backend and model for a config. The backend comes from
+    /// [`Runtime::for_config`]; pass a prepared runtime (e.g. one carrying a
+    /// custom native arch) through [`Trainer::with_runtime`] instead.
     pub fn new(cfg: Config) -> Result<Self> {
+        let rt = Runtime::for_config(&cfg)?;
+        Self::with_runtime(cfg, rt)
+    }
+
+    /// Build a trainer on an explicit backend runtime.
+    pub fn with_runtime(cfg: Config, rt: Runtime) -> Result<Self> {
         cfg.validate()?;
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
         let mut rng = Rng::new(cfg.seed);
         let split = load_split(&cfg)?;
-        let arch = rt
-            .manifest()
-            .arch(&cfg.arch)
-            .ok_or_else(|| anyhow!("arch {} not in manifest", cfg.arch))?;
+        let arch = rt.arch(&cfg.arch)?;
         anyhow::ensure!(
             split.train.dim == arch.input_dim,
             "data dim {} != arch input dim {}",
@@ -84,7 +88,6 @@ impl Trainer {
             Mode::AdaptiveDlrt => ModelState::Kls(KlsIntegrator::new(
                 &rt,
                 &cfg.arch,
-                &cfg.backend,
                 opt_kind(&cfg),
                 cfg.init_rank,
                 true,
@@ -95,7 +98,6 @@ impl Trainer {
             Mode::FixedDlrt => ModelState::Kls(KlsIntegrator::new(
                 &rt,
                 &cfg.arch,
-                &cfg.backend,
                 opt_kind(&cfg),
                 cfg.fixed_rank,
                 false,
@@ -103,17 +105,12 @@ impl Trainer {
                 cfg.min_rank,
                 &mut rng,
             )?),
-            Mode::Dense => ModelState::Dense(DenseTrainer::new(
-                &rt,
-                &cfg.arch,
-                &cfg.backend,
-                opt_kind(&cfg),
-                &mut rng,
-            )?),
+            Mode::Dense => {
+                ModelState::Dense(DenseTrainer::new(&rt, &cfg.arch, opt_kind(&cfg), &mut rng)?)
+            }
             Mode::Vanilla => ModelState::Vanilla(VanillaTrainer::new(
                 &rt,
                 &cfg.arch,
-                &cfg.backend,
                 opt_kind(&cfg),
                 cfg.fixed_rank,
                 VanillaInit::Plain,
@@ -125,15 +122,9 @@ impl Trainer {
 
     /// Replace the model with a pre-built integrator (pruning/retraining).
     pub fn with_factors(mut self, layers: Vec<LowRankFactors>, adaptive: bool) -> Result<Self> {
-        let arch = self
-            .rt
-            .manifest()
-            .arch(&self.cfg.arch)
-            .ok_or_else(|| anyhow!("arch {} not in manifest", self.cfg.arch))?
-            .clone();
+        let arch = self.rt.arch(&self.cfg.arch)?;
         self.model = ModelState::Kls(KlsIntegrator::from_layers(
             &self.cfg.arch,
-            &self.cfg.backend,
             arch,
             layers,
             opt_kind(&self.cfg),
@@ -147,7 +138,7 @@ impl Trainer {
     /// Run the configured number of epochs; returns the full record.
     /// `on_epoch` observes each epoch record (rank-evolution figures tap it).
     pub fn run(&mut self, name: &str, mut on_epoch: impl FnMut(&EpochRecord)) -> Result<RunRecord> {
-        let batch_cap = self.train_batch_cap()?;
+        let batch_cap = self.rt.batch_cap(&self.cfg.arch)?;
         let mut batcher =
             Batcher::new(self.split.train.len(), batch_cap, true, self.rng.next_u64());
         let mut epochs = Vec::new();
@@ -218,18 +209,6 @@ impl Trainer {
         })
     }
 
-    fn train_batch_cap(&self) -> Result<usize> {
-        // every graph family of an arch shares one batch size; read it off
-        // any artifact of this arch+backend
-        self.rt
-            .manifest()
-            .artifacts
-            .iter()
-            .find(|a| a.arch == self.cfg.arch && a.backend == self.cfg.backend)
-            .map(|a| a.batch)
-            .ok_or_else(|| anyhow!("no artifacts for {}/{}", self.cfg.arch, self.cfg.backend))
-    }
-
     pub fn evaluate(&self, which: &ValOrTest) -> Result<(f32, f32)> {
         let data = match which {
             ValOrTest::Val => &self.split.val,
@@ -252,7 +231,7 @@ impl Trainer {
     /// heads are counted dense, conv heads low-rank — exactly how the
     /// paper's tables break down (verified digit-for-digit in params.rs).
     pub fn param_accounting(&self) -> (usize, usize, usize) {
-        let arch = self.rt.manifest().arch(&self.cfg.arch).expect("arch exists");
+        let arch = self.rt.arch(&self.cfg.arch).expect("arch exists");
         let is_conv = arch.layers.iter().any(|l| l.kind == "conv");
         let ranks = self.model.ranks();
         let layers: Vec<LayerCount> = arch

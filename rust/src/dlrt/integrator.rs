@@ -2,21 +2,23 @@
 //!
 //! One training step on a batch:
 //!
-//! 1. **K & L steps** — one `kl_grads` graph execution returns every
+//! 1. **K & L steps** — one [`Runtime::kl_grads`] evaluation returns every
 //!    layer's `∂K` and `∂L` (two taped backward passes, §4.2); the host
 //!    applies the per-factor optimizer to `K⁰ = U S` and `L⁰ = V Sᵀ`.
 //! 2. **Basis update** — Householder QR of `K¹` (fixed-rank) or of the
 //!    augmented `[K¹ | U⁰]` (adaptive, Alg. 1 lines 9-10); projections
 //!    `M = U¹ᵀU⁰`, `N = V¹ᵀV⁰`, `S̃ = M S⁰ Nᵀ`.
-//! 3. **S step** — one `s_grads` graph execution on the new bases returns
-//!    `∂S` and `∂bias`; optimizer applied on the host.
+//! 3. **S step** — one [`Runtime::s_grads`] evaluation on the new bases
+//!    returns `∂S` and `∂bias`; optimizer applied on the host.
 //! 4. **Truncation** (adaptive) — Jacobi SVD of `S¹`, truncate at
 //!    `ϑ = τ‖Σ‖_F` (Alg. 1 lines 17-21), rotate `U, V` by the singular
 //!    vectors. The new core is diagonal.
 //!
-//! Buckets: factors are zero-padded into the compiled slot shapes; padding
-//! is exactly inert (see `optimizer.rs` and the L2 tests), so the math is
-//! the true-rank computation regardless of the bucket executed.
+//! All tensors cross the backend boundary at the layer's *true* rank
+//! (DESIGN.md §2): bucket selection and zero-padding, when a backend needs
+//! them, happen behind the [`crate::backend::ComputeBackend`] trait. The
+//! optimizer moments consequently live at true-rank shapes and reset when a
+//! layer's rank changes — the basis has rotated at that point anyway.
 //!
 //! Layers whose matrix is tiny (`min(m,n) ≤ PIN_THRESHOLD`, e.g. the
 //! 10-class classifier head) are *pinned*: trained at full rank, never
@@ -24,11 +26,12 @@
 //! stays at 10 in every table.
 
 use super::{FactorOptimizer, LowRankFactors, OptKind};
+use crate::backend::LayerFactors;
 use crate::data::Batch;
 use crate::linalg::{householder_qr, jacobi_svd, matmul, matmul_tn, orthonormality_error, Matrix, Rng};
-use crate::runtime::{literals, ArchInfo, Executable, Runtime};
+use crate::runtime::{ArchInfo, Runtime};
 use crate::Result;
-use anyhow::{anyhow, ensure};
+use anyhow::ensure;
 
 /// Layers at or below this max-rank are trained at full rank and excluded
 /// from adaptation (classifier heads).
@@ -50,11 +53,11 @@ pub struct StepStats {
 /// Where one integrator step's wall clock went.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepTimings {
-    /// kl_grads graph execution (incl. literal packing).
+    /// kl_grads backend evaluation (incl. any packing).
     pub kl_graph_s: f64,
     /// Host K/L optimizer + QR + projections.
     pub host_kl_s: f64,
-    /// s_grads graph execution (incl. literal packing).
+    /// s_grads backend evaluation (incl. any packing).
     pub s_graph_s: f64,
     /// Host S optimizer + SVD truncation + basis rotation.
     pub host_s_s: f64,
@@ -70,7 +73,6 @@ struct Staged {
 /// The integrator: factor state + optimizer states + rank policy.
 pub struct KlsIntegrator {
     pub arch_name: String,
-    pub backend: String,
     pub arch: ArchInfo,
     pub layers: Vec<LowRankFactors>,
     opt_k: Vec<FactorOptimizer>,
@@ -87,11 +89,11 @@ pub struct KlsIntegrator {
 }
 
 impl KlsIntegrator {
-    /// Random initialization at `init_rank` (clamped per layer).
+    /// Random initialization at `init_rank` (clamped per layer and by the
+    /// backend's largest supported `kl_grads` rank, if it has one).
     pub fn new(
         rt: &Runtime,
         arch_name: &str,
-        backend: &str,
         opt: OptKind,
         init_rank: usize,
         adaptive: bool,
@@ -99,18 +101,8 @@ impl KlsIntegrator {
         min_rank: usize,
         rng: &mut Rng,
     ) -> Result<Self> {
-        let arch = rt
-            .manifest()
-            .arch(arch_name)
-            .ok_or_else(|| anyhow!("unknown arch {arch_name}"))?
-            .clone();
-        // the initial rank cannot exceed the largest compiled kl_grads slot
-        let max_bucket = rt
-            .manifest()
-            .buckets(arch_name, "kl_grads", backend)
-            .last()
-            .copied()
-            .ok_or_else(|| anyhow!("no kl_grads artifacts for {arch_name}/{backend}"))?;
+        let arch = rt.arch(arch_name)?;
+        let cap = rt.rank_cap(arch_name, "kl_grads")?.unwrap_or(usize::MAX);
         let layers: Vec<LowRankFactors> = arch
             .layers
             .iter()
@@ -118,18 +110,17 @@ impl KlsIntegrator {
                 let r = if l.max_rank() <= PIN_THRESHOLD {
                     l.max_rank()
                 } else {
-                    init_rank.min(max_bucket)
+                    init_rank.min(cap)
                 };
                 LowRankFactors::random(l.m, l.n, r, rng)
             })
             .collect();
-        Ok(Self::from_layers(arch_name, backend, arch, layers, opt, adaptive, tau, min_rank))
+        Ok(Self::from_layers(arch_name, arch, layers, opt, adaptive, tau, min_rank))
     }
 
     /// Build from existing factors (pruning/retraining paths).
     pub fn from_layers(
         arch_name: &str,
-        backend: &str,
         arch: ArchInfo,
         layers: Vec<LowRankFactors>,
         opt: OptKind,
@@ -141,7 +132,6 @@ impl KlsIntegrator {
         let mk = |_| FactorOptimizer::new(opt);
         KlsIntegrator {
             arch_name: arch_name.into(),
-            backend: backend.into(),
             arch,
             layers,
             opt_k: (0..n).map(mk).collect(),
@@ -165,72 +155,30 @@ impl KlsIntegrator {
         self.arch.layers[k].max_rank() <= PIN_THRESHOLD
     }
 
-    fn max_rank(&self) -> usize {
-        self.layers.iter().map(|f| f.rank()).max().unwrap_or(1)
-    }
-
-    /// Pack factor inputs (padded to slots) + batch into literal list
-    /// following the artifact's input spec order.
-    fn pack_factors(
-        &self,
-        exe: &Executable,
-        factors: &[(&Matrix, &Matrix, &Matrix, &[f32])],
-        batch: &Batch,
-    ) -> Result<Vec<xla::Literal>> {
-        let info = &exe.info;
-        let n_layers = factors.len();
-        ensure!(
-            info.inputs.len() == 4 * n_layers + 3,
-            "{}: unexpected input arity {}",
-            info.name,
-            info.inputs.len()
-        );
-        let mut lits = Vec::with_capacity(info.inputs.len());
-        for (k, (u, s, v, b)) in factors.iter().enumerate() {
-            let specs = &info.inputs[4 * k..4 * k + 4];
-            debug_assert!(specs[0].name.ends_with("/U"));
-            let (m, slot) = (specs[0].shape[0], specs[0].shape[1]);
-            let n = specs[2].shape[0];
-            lits.push(literals::pack_matrix(&specs[0], &u.pad_to(m, slot))?);
-            lits.push(literals::pack_matrix(&specs[1], &s.pad_to(slot, slot))?);
-            lits.push(literals::pack_matrix(&specs[2], &v.pad_to(n, slot))?);
-            lits.push(literals::pack_f32(&specs[3], b)?);
-        }
-        let base = 4 * n_layers;
-        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
-        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
-        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
-        Ok(lits)
+    /// Borrowed factor views for a backend call.
+    fn factor_refs(&self) -> Vec<LayerFactors<'_>> {
+        self.layers
+            .iter()
+            .map(|f| LayerFactors { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
+            .collect()
     }
 
     /// One full KLS training step on a batch.
     pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
         let n_layers = self.layers.len();
-        let bucket = rt
-            .bucket_for(&self.arch_name, "kl_grads", &self.backend, self.max_rank())
-            .ok_or_else(|| anyhow!("no kl_grads buckets for {}", self.arch_name))?;
-        let exe_kl = rt.load(&self.arch_name, "kl_grads", &self.backend, bucket)?;
         let mut timings = StepTimings::default();
         let t0 = std::time::Instant::now();
 
-        // ---- K & L gradient evaluation (one graph run) -------------------
-        let factor_refs: Vec<_> = self
-            .layers
-            .iter()
-            .map(|f| (&f.u, &f.s, &f.v, f.bias.as_slice()))
-            .collect();
-        let inputs = self.pack_factors(&exe_kl, &factor_refs, batch)?;
-        let outs = exe_kl.run(&inputs)?;
-        let loss = literals::unpack_scalar(
-            &exe_kl.info.outputs[2 * n_layers],
-            &outs[2 * n_layers],
-        )?;
-        let ncorrect = literals::unpack_scalar(
-            &exe_kl.info.outputs[2 * n_layers + 1],
-            &outs[2 * n_layers + 1],
-        )?;
+        // ---- K & L gradient evaluation (one backend call) ----------------
+        let kl = rt.kl_grads(&self.arch_name, &self.factor_refs(), batch)?;
         timings.kl_graph_s = t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
+
+        // The augmented rank is capped by the largest rank the backend can
+        // evaluate an S-step at (compiled-bucket ceiling on XLA, unbounded
+        // natively) — the basis can only grow as far as its gradients can
+        // be computed (DESIGN.md §2, bucket policy).
+        let s_cap = rt.rank_cap(&self.arch_name, "s_grads")?.unwrap_or(usize::MAX);
 
         // ---- host K/L optimizer steps + basis update ---------------------
         let mut staged = Vec::with_capacity(n_layers);
@@ -238,28 +186,12 @@ impl KlsIntegrator {
             let f = &self.layers[k];
             let r = f.rank();
             let (m, n) = (f.m(), f.n());
-            let slot = exe_kl.info.inputs[4 * k].shape[1];
-            let dk = literals::unpack_matrix(&exe_kl.info.outputs[k], &outs[k])?;
-            let dl =
-                literals::unpack_matrix(&exe_kl.info.outputs[n_layers + k], &outs[n_layers + k])?;
+            let mut k1 = f.k();
+            self.opt_k[k].update(&mut k1, &kl.dk[k], lr);
+            let mut l1 = f.l();
+            self.opt_l[k].update(&mut l1, &kl.dl[k], lr);
 
-            let mut k1 = f.k().pad_to(m, slot);
-            self.opt_k[k].update(&mut k1, &dk, lr);
-            let mut l1 = f.l().pad_to(n, slot);
-            self.opt_l[k].update(&mut l1, &dl, lr);
-            let k1 = k1.take_cols(r);
-            let l1 = l1.take_cols(r);
-
-            // The augmented rank is capped by the largest compiled s_grads
-            // bucket: the basis can only grow as far as an artifact exists
-            // to evaluate its S-step (DESIGN.md §2, bucket policy).
-            let max_sbucket = rt
-                .manifest()
-                .buckets(&self.arch_name, "s_grads", &self.backend)
-                .last()
-                .copied()
-                .unwrap_or(r);
-            let raug = (2 * r).min(m).min(n).min(max_sbucket);
+            let raug = (2 * r).min(m).min(n).min(s_cap);
             let augment = self.adaptive && !self.pinned(k) && raug > r;
             let (u1, v1) = if augment {
                 let u1 = householder_qr(&k1.hcat(&f.u)).take_cols(raug);
@@ -282,43 +214,24 @@ impl KlsIntegrator {
         timings.host_kl_s = t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
 
-        // ---- S step (one graph run on the staged bases) ------------------
-        let max_staged = staged.iter().map(|s| s.s_tilde.rows()).max().unwrap_or(1);
-        let sbucket = rt
-            .bucket_for(&self.arch_name, "s_grads", &self.backend, max_staged)
-            .ok_or_else(|| anyhow!("no s_grads buckets for {}", self.arch_name))?;
-        let exe_s = rt.load(&self.arch_name, "s_grads", &self.backend, sbucket)?;
-        let staged_refs: Vec<_> = staged
+        // ---- S step (one backend call on the staged bases) ---------------
+        let staged_refs: Vec<LayerFactors<'_>> = staged
             .iter()
             .zip(&self.layers)
-            .map(|(st, f)| (&st.u1, &st.s_tilde, &st.v1, f.bias.as_slice()))
+            .map(|(st, f)| LayerFactors { u: &st.u1, s: &st.s_tilde, v: &st.v1, bias: &f.bias })
             .collect();
-        let inputs = self.pack_factors(&exe_s, &staged_refs, batch)?;
-        let souts = exe_s.run(&inputs)?;
-        let loss_after_kl = literals::unpack_scalar(
-            &exe_s.info.outputs[2 * n_layers],
-            &souts[2 * n_layers],
-        )?;
-
+        let sg = rt.s_grads(&self.arch_name, &staged_refs, batch)?;
+        drop(staged_refs);
         timings.s_graph_s = t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
 
         // ---- host S/bias optimizer steps + truncation --------------------
         for (k, st) in staged.into_iter().enumerate() {
-            let raug = st.s_tilde.rows();
-            let slot = exe_s.info.inputs[4 * k].shape[1];
-            let ds = literals::unpack_matrix(&exe_s.info.outputs[k], &souts[k])?;
-            let db = literals::unpack_matrix(
-                &exe_s.info.outputs[self.layers.len() + k],
-                &souts[self.layers.len() + k],
-            )?;
-
-            let mut s1 = st.s_tilde.pad_to(slot, slot);
-            self.opt_s[k].update(&mut s1, &ds, lr);
-            let s1 = s1.take_block(raug, raug);
+            let mut s1 = st.s_tilde;
+            self.opt_s[k].update(&mut s1, &sg.ds[k], lr);
             let truncate = self.adaptive && !self.pinned(k);
             let f = &mut self.layers[k];
-            self.opt_b[k].update_vec(&mut f.bias, db.data(), lr);
+            self.opt_b[k].update_vec(&mut f.bias, &sg.db[k], lr);
 
             if truncate {
                 // Alg. 1 lines 17-21: SVD-truncate the core, rotate bases.
@@ -340,36 +253,20 @@ impl KlsIntegrator {
         }
 
         timings.host_s_s = t0.elapsed().as_secs_f64();
-        Ok(StepStats { loss, ncorrect, loss_after_kl, timings })
+        Ok(StepStats { loss: kl.loss, ncorrect: kl.ncorrect, loss_after_kl: sg.loss, timings })
     }
 
-    /// Evaluate loss/accuracy over a dataset via the `forward` artifact.
+    /// Evaluate loss/accuracy over a dataset via the backend's `forward`.
     /// Returns `(mean_loss, accuracy)`.
     pub fn evaluate(&self, rt: &Runtime, data: &crate::data::Dataset) -> Result<(f32, f32)> {
-        let bucket = rt
-            .bucket_for(&self.arch_name, "forward", &self.backend, self.max_rank())
-            .ok_or_else(|| anyhow!("no forward buckets for {}", self.arch_name))?;
-        let exe = rt.load(&self.arch_name, "forward", &self.backend, bucket)?;
-        let batch_cap = exe.info.batch;
-        let n_layers = self.layers.len();
+        let batch_cap = rt.batch_cap(&self.arch_name)?;
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
         let mut total = 0.0f64;
         for batch in crate::data::Batcher::sequential(data, batch_cap) {
-            let factor_refs: Vec<_> = self
-                .layers
-                .iter()
-                .map(|f| (&f.u, &f.s, &f.v, f.bias.as_slice()))
-                .collect();
-            let inputs = self.pack_factors(&exe, &factor_refs, &batch)?;
-            let outs = exe.run(&inputs)?;
-            let loss =
-                literals::unpack_scalar(&exe.info.outputs[1], &outs[1])? as f64;
-            let ncorr =
-                literals::unpack_scalar(&exe.info.outputs[2], &outs[2])? as f64;
-            let _ = n_layers;
-            total_loss += loss * batch.count as f64;
-            total_correct += ncorr;
+            let stats = rt.forward(&self.arch_name, &self.factor_refs(), &batch)?;
+            total_loss += stats.loss as f64 * batch.count as f64;
+            total_correct += stats.ncorrect as f64;
             total += batch.count as f64;
         }
         Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))

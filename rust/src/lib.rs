@@ -5,17 +5,21 @@
 //! (Schotthöfer, Zangrando, Kusch, Ceruti, Tudisco — NeurIPS 2022).
 //!
 //! Three-layer architecture (see `DESIGN.md`):
-//! * **L3 (this crate)** — the training coordinator: KLS integrator
-//!   sequencing, rank adaptation, bucketed executable management, optimizers,
-//!   data pipeline, metrics, CLI.
-//! * **L2** — JAX compute graphs, AOT-lowered to HLO text under
-//!   `artifacts/` by `python/compile/aot.py`.
-//! * **L1** — Pallas kernels inside those graphs.
+//! * **L3** — the training coordinator: KLS integrator sequencing, rank
+//!   adaptation, optimizers, data pipeline, metrics, CLI.
+//! * **L2** — the pluggable compute-backend layer ([`backend`]): who
+//!   evaluates the `kl_grads` / `s_grads` / `forward` graphs. The default
+//!   [`backend::NativeBackend`] is pure Rust — hand-derived backward passes
+//!   batched over the threaded [`linalg`] kernels — so the crate builds,
+//!   trains and tests hermetically. `--features xla` adds the PJRT path
+//!   executing JAX graphs AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L1** — Pallas kernels inside those compiled graphs (XLA path only).
 //!
-//! Python never runs on the training path: the coordinator executes the
-//! compiled graphs through the PJRT C API (`xla` crate) and performs the
-//! host-side linear algebra (thin QR, small SVD) in [`linalg`].
+//! Python never runs on the training path: even on the XLA backend the
+//! coordinator executes pre-compiled graphs through the PJRT C API and
+//! performs the host-side linear algebra (thin QR, small SVD) in [`linalg`].
 
+pub mod backend;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

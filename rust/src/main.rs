@@ -10,7 +10,6 @@
 
 use dlrt::config::{presets, Config};
 use dlrt::coordinator::{self, Trainer, ValOrTest};
-use dlrt::runtime::Runtime;
 use dlrt::util::cli::Args;
 use dlrt::Result;
 use std::path::PathBuf;
@@ -113,8 +112,28 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get_or("artifacts", "artifacts"))?;
-    let m = rt.manifest();
+    println!("native backend archs (default, no artifacts needed):");
+    for (name, arch, batch) in dlrt::backend::archs::builtin() {
+        let dims: Vec<String> = arch.layers.iter().map(|l| format!("{}x{}", l.m, l.n)).collect();
+        println!(
+            "  {name}: input {} classes {} batch {batch} layers [{}]",
+            arch.input_dim,
+            arch.num_classes,
+            dims.join(", ")
+        );
+    }
+    inspect_manifest(args)
+}
+
+#[cfg(feature = "xla")]
+fn inspect_manifest(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest_path = std::path::Path::new(dir).join("manifest.json");
+    if !manifest_path.exists() {
+        println!("no artifact manifest under '{dir}' (XLA backends unavailable)");
+        return Ok(());
+    }
+    let m = dlrt::runtime::Manifest::load(&manifest_path)?;
     println!("manifest v{} — {} archs, {} artifacts", m.version, m.archs.len(), m.artifacts.len());
     let mut arch_names: Vec<_> = m.archs.keys().collect();
     arch_names.sort();
@@ -131,5 +150,11 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     for a in &m.artifacts {
         println!("  {} ({} in / {} out)", a.name, a.inputs.len(), a.outputs.len());
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn inspect_manifest(_args: &Args) -> Result<()> {
+    println!("built without `--features xla`: jnp/pallas artifact backends unavailable");
     Ok(())
 }

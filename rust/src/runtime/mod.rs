@@ -1,123 +1,194 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute from the hot loop.
+//! Runtime layer: one [`Runtime`] facade dispatching through the pluggable
+//! [`crate::backend::ComputeBackend`] trait.
 //!
-//! The bridge follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
-//! *text* is the interchange format (see `python/compile/aot.py`).
+//! Two implementations exist today (DESIGN.md §2):
 //!
-//! [`Runtime`] owns the client, the parsed [`manifest::Manifest`] and a
-//! lazily-populated executable cache keyed by `(arch, graph, backend,
-//! bucket)` — the bucket hot-swap of DESIGN.md §2 is a cache lookup here.
+//! * **native** (default) — [`crate::backend::NativeBackend`], pure-Rust
+//!   forward/backward passes over a preset-derived [`ArchInfo`]; no
+//!   artifacts, no FFI, builds and tests hermetically.
+//! * **jnp / pallas** (`--features xla`) — `backend::XlaBackend` over the
+//!   PJRT runtime ([`pjrt::PjrtRuntime`]): AOT-compiled HLO artifacts
+//!   described by a [`manifest::Manifest`], executed through the `xla`
+//!   crate with rank-bucketed executables.
+//!
+//! The integrator and the baseline trainers only ever see `&Runtime`; which
+//! machinery evaluates their gradients is decided once, from the config's
+//! `backend` field, at [`Runtime::for_config`].
 
-pub mod literals;
 pub mod manifest;
+#[cfg(feature = "xla")]
+pub mod literals;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
 pub use manifest::{ArchInfo, ArtifactInfo, LayerInfo, Manifest, TensorSpec};
+#[cfg(feature = "xla")]
+pub use pjrt::{Executable, PjrtRuntime};
 
+use crate::backend::{
+    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, NativeBackend, SGrads,
+    VanillaGrads,
+};
+use crate::config::Config;
+use crate::data::Batch;
+use crate::linalg::Matrix;
 use crate::Result;
-use anyhow::{anyhow, ensure, Context};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
-/// A compiled artifact plus its I/O contract.
-pub struct Executable {
-    pub info: ArtifactInfo,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute with pre-packed literals; returns the decomposed output
-    /// tuple. Input count/shape validation happens at pack time
-    /// ([`literals::pack_f32`] etc.); output arity is validated here.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        ensure!(
-            inputs.len() == self.info.inputs.len(),
-            "{}: expected {} inputs, got {}",
-            self.info.name,
-            self.info.inputs.len(),
-            inputs.len()
-        );
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.info.name))?;
-        let out = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{}: output fetch failed: {e:?}", self.info.name))?;
-        let parts =
-            out.to_tuple().map_err(|e| anyhow!("{}: tuple decompose: {e:?}", self.info.name))?;
-        ensure!(
-            parts.len() == self.info.outputs.len(),
-            "{}: expected {} outputs, got {}",
-            self.info.name,
-            self.info.outputs.len(),
-            parts.len()
-        );
-        Ok(parts)
-    }
-}
-
-/// The PJRT runtime: client + manifest + executable cache.
+/// The compute-backend dispatcher every trainer holds.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    backend: Box<dyn ComputeBackend>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (expects `manifest.json` inside).
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .context("loading artifact manifest — did you run `make artifacts`?")?;
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    /// The hermetic pure-Rust backend (default).
+    pub fn native() -> Runtime {
+        Runtime { backend: Box::new(NativeBackend::new()) }
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// Wrap an arbitrary backend (tests, custom architectures).
+    pub fn with_backend(backend: Box<dyn ComputeBackend>) -> Runtime {
+        Runtime { backend }
     }
 
-    /// Load (compile-once, cached) the artifact for this exact bucket.
-    pub fn load(
+    /// The PJRT artifact backend for one kernel flavor ("jnp" | "pallas").
+    #[cfg(feature = "xla")]
+    pub fn pjrt(artifacts_dir: impl AsRef<std::path::Path>, flavor: &str) -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(crate::backend::XlaBackend::new(artifacts_dir, flavor)?) })
+    }
+
+    /// Build the backend a config asks for (`backend = "native" | "jnp" |
+    /// "pallas"`).
+    pub fn for_config(cfg: &Config) -> Result<Runtime> {
+        match cfg.backend.as_str() {
+            "native" => Ok(Runtime::native()),
+            "jnp" | "pallas" => pjrt_for_config(cfg),
+            other => anyhow::bail!("unknown backend '{other}' (expected native|jnp|pallas)"),
+        }
+    }
+
+    pub fn backend(&self) -> &dyn ComputeBackend {
+        self.backend.as_ref()
+    }
+
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
+    }
+
+    pub fn arch(&self, arch: &str) -> Result<ArchInfo> {
+        self.backend.arch(arch)
+    }
+
+    pub fn batch_cap(&self, arch: &str) -> Result<usize> {
+        self.backend.batch_cap(arch)
+    }
+
+    pub fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>> {
+        self.backend.rank_cap(arch, graph)
+    }
+
+    pub fn kl_grads(
         &self,
         arch: &str,
-        graph: &str,
-        backend: &str,
-        bucket: usize,
-    ) -> Result<Rc<Executable>> {
-        let info = self
-            .manifest
-            .find(arch, graph, backend, bucket)
-            .ok_or_else(|| anyhow!("no artifact for {arch}/{graph}/{backend}/b{bucket}"))?
-            .clone();
-        if let Some(exe) = self.cache.borrow().get(&info.name) {
-            return Ok(exe.clone());
-        }
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
-        let exe = Rc::new(Executable { info: info.clone(), exe });
-        self.cache.borrow_mut().insert(info.name.clone(), exe.clone());
-        Ok(exe)
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<KlGrads> {
+        self.backend.kl_grads(arch, layers, batch)
     }
 
-    /// Smallest compiled bucket that can hold `rank` for this graph, i.e.
-    /// the bucket the coordinator hot-swaps to when ranks drift.
-    pub fn bucket_for(&self, arch: &str, graph: &str, backend: &str, rank: usize) -> Option<usize> {
-        self.manifest.bucket_for(arch, graph, backend, rank)
+    pub fn s_grads(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<SGrads> {
+        self.backend.s_grads(arch, layers, batch)
     }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached_count(&self) -> usize {
-        self.cache.borrow().len()
+    pub fn forward(
+        &self,
+        arch: &str,
+        layers: &[LayerFactors<'_>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        self.backend.forward(arch, layers, batch)
+    }
+
+    pub fn dense_grads(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<DenseGrads> {
+        self.backend.dense_grads(arch, ws, bs, batch)
+    }
+
+    pub fn dense_forward(
+        &self,
+        arch: &str,
+        ws: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        self.backend.dense_forward(arch, ws, bs, batch)
+    }
+
+    pub fn vanilla_grads(
+        &self,
+        arch: &str,
+        us: &[Matrix],
+        vs: &[Matrix],
+        bs: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<VanillaGrads> {
+        self.backend.vanilla_grads(arch, us, vs, bs, batch)
+    }
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_for_config(cfg: &Config) -> Result<Runtime> {
+    Runtime::pjrt(&cfg.artifacts_dir, &cfg.backend)
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_for_config(cfg: &Config) -> Result<Runtime> {
+    anyhow::bail!(
+        "backend '{}' executes compiled PJRT artifacts — rebuild with `--features xla` (and \
+         provide artifacts under '{}'), or use `backend = \"native\"`",
+        cfg.backend,
+        cfg.artifacts_dir
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn native_runtime_serves_builtin_archs() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        let arch = rt.arch("mlp_tiny").unwrap();
+        assert_eq!(arch.input_dim, 64);
+        assert_eq!(rt.batch_cap("mlp500").unwrap(), 256);
+        assert!(rt.rank_cap("mlp784", "s_grads").unwrap().is_none());
+        assert!(rt.arch("nope").is_err());
+    }
+
+    #[test]
+    fn config_dispatch_selects_backend() {
+        let cfg = presets::quickstart();
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(Runtime::for_config(&cfg).unwrap().backend_name(), "native");
+        let mut bad = cfg;
+        bad.backend = "jnp".into();
+        bad.artifacts_dir = "/nonexistent/dlrt-artifacts".into();
+        // without the xla feature this is a clean error; with it, the
+        // artifacts directory above is guaranteed to be missing
+        #[cfg(not(feature = "xla"))]
+        assert!(Runtime::for_config(&bad).unwrap_err().to_string().contains("--features xla"));
+        #[cfg(feature = "xla")]
+        assert!(Runtime::for_config(&bad).is_err());
     }
 }

@@ -1,0 +1,131 @@
+//! PJRT artifact runtime: load AOT artifacts, compile once, execute from
+//! the hot loop (`--features xla` only).
+//!
+//! The bridge follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (see `python/compile/aot.py`).
+//!
+//! [`PjrtRuntime`] owns the client, the parsed [`super::Manifest`] and a
+//! lazily-populated executable cache keyed by artifact name — the bucket
+//! hot-swap of DESIGN.md §2 is a cache lookup here. The coordinator never
+//! talks to this type directly; `backend::XlaBackend` wraps it behind the
+//! [`crate::backend::ComputeBackend`] trait.
+
+use super::manifest::{ArtifactInfo, Manifest};
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled artifact plus its I/O contract.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with pre-packed literals; returns the decomposed output
+    /// tuple. Input count/shape validation happens at pack time
+    /// ([`super::literals::pack_f32`] etc.); buffer arity and output arity
+    /// are validated here.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            inputs.len() == self.info.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.info.name,
+            self.info.inputs.len(),
+            inputs.len()
+        );
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.info.name))?;
+        ensure!(
+            !bufs.is_empty() && !bufs[0].is_empty(),
+            "{}: execute returned an empty buffer set ({} devices, {} buffers on device 0) — \
+             expected one tuple output",
+            self.info.name,
+            bufs.len(),
+            bufs.first().map(|b| b.len()).unwrap_or(0)
+        );
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: output fetch failed: {e:?}", self.info.name))?;
+        let parts =
+            out.to_tuple().map_err(|e| anyhow!("{}: tuple decompose: {e:?}", self.info.name))?;
+        ensure!(
+            parts.len() == self.info.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.info.name,
+            self.info.outputs.len(),
+            parts.len()
+        );
+        Ok(parts)
+    }
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("loading artifact manifest — did you run `make artifacts`?")?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile-once, cached) the artifact for this exact bucket.
+    pub fn load(
+        &self,
+        arch: &str,
+        graph: &str,
+        backend: &str,
+        bucket: usize,
+    ) -> Result<Rc<Executable>> {
+        let info = self
+            .manifest
+            .find(arch, graph, backend, bucket)
+            .ok_or_else(|| anyhow!("no artifact for {arch}/{graph}/{backend}/b{bucket}"))?
+            .clone();
+        if let Some(exe) = self.cache.borrow().get(&info.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
+        let exe = Rc::new(Executable { info: info.clone(), exe });
+        self.cache.borrow_mut().insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Smallest compiled bucket that can hold `rank` for this graph, i.e.
+    /// the bucket the coordinator hot-swaps to when ranks drift.
+    pub fn bucket_for(&self, arch: &str, graph: &str, backend: &str, rank: usize) -> Option<usize> {
+        self.manifest.bucket_for(arch, graph, backend, rank)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,18 +1,21 @@
 //! Runtime integration: compiled artifacts vs host math, backend agreement,
 //! bucket-padding invariance — all through the real PJRT path.
 //!
-//! Requires `make artifacts` (the repo ships a Makefile dependency); tests
-//! use the tiny architecture so the whole file runs in seconds.
+//! Only built with `--features xla` (see `Cargo.toml` required-features);
+//! additionally requires `make artifacts` and a real PJRT-backed `xla`
+//! crate patched over the in-tree stub. Tests use the tiny architecture so
+//! the whole file runs in seconds.
+#![cfg(feature = "xla")]
 
 use dlrt::data::Batch;
 use dlrt::dlrt::LowRankFactors;
 use dlrt::linalg::{matmul, Matrix, Rng};
-use dlrt::runtime::{literals, Runtime};
+use dlrt::runtime::{literals, PjrtRuntime};
 
 const ARCH: &str = "mlp_tiny";
 
-fn runtime() -> Runtime {
-    Runtime::new("artifacts").expect("artifacts present — run `make artifacts`")
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::new("artifacts").expect("artifacts present — run `make artifacts`")
 }
 
 fn tiny_factors(rank: usize, seed: u64) -> Vec<LowRankFactors> {
@@ -34,7 +37,7 @@ fn tiny_batch(batch: usize, seed: u64) -> Batch {
 
 /// Pack (factors, batch) for a forward-family artifact and run it.
 fn run_forward(
-    rt: &Runtime,
+    rt: &PjrtRuntime,
     backend: &str,
     bucket: usize,
     factors: &[LowRankFactors],

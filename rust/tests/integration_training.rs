@@ -1,6 +1,6 @@
 //! Full-stack training integration: the Trainer on every mode, rank
-//! adaptation through real compiled graphs, pruning + retraining, and
-//! checkpoint round-trips. Uses the tiny arch + toy data so each test
+//! adaptation, pruning + retraining, and checkpoint round-trips — all on
+//! the hermetic native backend. Uses the tiny arch + toy data so each test
 //! completes in seconds.
 
 use dlrt::baselines::svd_prune_factors;
@@ -153,10 +153,9 @@ fn checkpoints_roundtrip_through_trainer() {
 
 #[test]
 fn dense_trainer_param_count_matches_arch() {
-    let cfg = toy_cfg(Mode::Dense);
-    let rt = dlrt::runtime::Runtime::new(&cfg.artifacts_dir).unwrap();
+    let rt = dlrt::runtime::Runtime::native();
     let mut rng = Rng::new(0);
-    let d = DenseTrainer::new(&rt, "mlp_tiny", "jnp", OptKind::Sgd, &mut rng).unwrap();
+    let d = DenseTrainer::new(&rt, "mlp_tiny", OptKind::Sgd, &mut rng).unwrap();
     // mlp_tiny: 32x64 + 32x32 + 10x32 (paper convention: no biases)
     assert_eq!(d.param_count(), 32 * 64 + 32 * 32 + 10 * 32);
 }
