@@ -1,5 +1,8 @@
 //! Table 1 / Table 7: rank-adaptive DLRT on LeNet5 (conv layers trained on
 //! the low-rank matrix manifold via im2col flattening, paper §6.6).
+//! Runs hermetically on the native backend — no artifacts, no `--features
+//! xla` — against real MNIST when present under `data/mnist/`, synthetic
+//! otherwise.
 //!
 //! Prints a Table-1-style report: test accuracy, converged per-layer ranks,
 //! eval/train parameter counts and compression ratios (LeNet accounting

@@ -3,6 +3,8 @@
 //! analytic compression accounting at the paper's true layer dimensions
 //! (DESIGN.md §3: the c.r. columns are arithmetic over shapes and ranks, so
 //! they are computed exactly; accuracy deltas are demonstrated at scale-down).
+//! Runs hermetically on the native backend (im2col conv path) — no
+//! artifacts or `--features xla` required.
 //!
 //! ```bash
 //! cargo run --release --example vgg_cifar -- --arch vggs

@@ -8,9 +8,10 @@
 //! contract (DESIGN.md §2):
 //!
 //! * [`native::NativeBackend`] — a pure-Rust forward + hand-derived backward
-//!   pass for the fully-connected architectures, batched through the
-//!   threaded [`crate::linalg`] kernels. No artifacts, no Python, no FFI:
-//!   `cargo build && cargo test` is hermetic.
+//!   pass for the fully-connected *and* convolutional architectures (conv
+//!   layers lower to patch-matrix products via [`crate::linalg::im2col`]),
+//!   batched through the threaded [`crate::linalg`] kernels. No artifacts,
+//!   no Python, no FFI: `cargo build && cargo test` is hermetic.
 //! * `pjrt::XlaBackend` (behind `--features xla`) — the original PJRT path:
 //!   AOT-compiled HLO artifacts executed through the `xla` crate, with
 //!   rank-bucketed executables and zero-padding at the boundary.

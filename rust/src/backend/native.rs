@@ -1,39 +1,52 @@
 //! Pure-Rust compute backend: forward + hand-derived backward passes for
-//! the factored MLP architectures.
+//! the factored architectures (ReLU MLPs and im2col-lowered conv nets).
 //!
-//! All three parameterizations share one ReLU-MLP skeleton with weighted
-//! softmax cross-entropy on top; they differ only in how a layer's weight
-//! matrix `W (m x n)` is represented:
+//! All three parameterizations share one skeleton with weighted softmax
+//! cross-entropy on top; they differ only in how a layer's weight matrix
+//! `W (m x n)` is represented:
 //!
 //! * factored `W = U S Vᵀ` (DLRT layers),
 //! * dense `W` (the reference baseline),
 //! * two-factor `W = U Vᵀ` (the Fig. 4 vanilla baseline).
 //!
+//! A **conv layer** (paper §6.6) is the same matrix in disguise: its
+//! `out_ch x (in_ch·k²)` kernel multiplies the [`crate::linalg::im2col`]
+//! patch matrix (one row per output pixel), followed by ReLU and an
+//! optional 2x2 max-pool. The taped backward therefore treats `a` as "the
+//! matrix the weight product consumed" — the input activation for dense
+//! layers, the patch matrix for conv layers — and every factor contraction
+//! below applies unchanged; only the *propagation* between layers differs
+//! (un-pool through the stored argmax routing, then [`crate::linalg::col2im`]
+//! back to image space).
+//!
 //! The backward pass never materializes a dense `∂W = δᵀ a`. Because the
 //! K-, L- and S-step graphs all evaluate the *same* function (the paper's
 //! §4.2 observation that `K Vᵀ = U Lᵀ = U S Vᵀ`), a single taped backward
-//! yields every factor gradient by contracting `δ` and the stored input
-//! activation `a` against the bases first:
+//! yields every factor gradient by contracting `δ` and the stored `a`
+//! against the bases first:
 //!
 //! ```text
 //!   ∂K = ∂W · V  = δᵀ (a V)          (m x r)
 //!   ∂L = ∂Wᵀ · U = aᵀ (δ U)          (n x r)
 //!   ∂S = Uᵀ ∂W V = (δ U)ᵀ (a V)      (r x r)
-//!   ∂b = Σ_batch δ                    (m)
+//!   ∂b = Σ_rows δ                     (m)
 //! ```
 //!
-//! at `O(B (m + n) r)` per layer — the low-rank cost the paper's timing
-//! claims (Fig. 1) rest on. Products run on the threaded [`crate::linalg`]
-//! kernels, so large batches parallelize across cores.
+//! at `O(R (m + n) r)` per layer, `R` = batch rows (times output pixels for
+//! conv) — the low-rank cost the paper's timing claims (Fig. 1) rest on.
+//! Products run on the threaded [`crate::linalg`] kernels, so large batches
+//! parallelize across cores.
 
 use super::{
     ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, SGrads, VanillaGrads,
 };
 use crate::data::Batch;
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::linalg::{
+    col2im, im2col, matmul, matmul_nt, matmul_tn, maxpool2x2, unpool2x2, Matrix,
+};
 use crate::runtime::ArchInfo;
 use crate::Result;
-use anyhow::{anyhow, ensure};
+use anyhow::{anyhow, bail, ensure};
 
 /// The native backend: an architecture registry plus the math below. The
 /// registry ships the paper's MLPs ([`super::archs`]); tests and custom
@@ -54,7 +67,8 @@ impl NativeBackend {
     }
 
     /// Register an additional architecture under `name` with the given
-    /// evaluation batch size (dense layers only).
+    /// evaluation batch size (dense and/or conv layers; conv layers must
+    /// precede dense ones — see `check_arch`).
     pub fn with_arch(mut self, name: &str, arch: ArchInfo, batch_cap: usize) -> NativeBackend {
         self.archs.retain(|(n, _, _)| n != name);
         self.archs.push((name.to_string(), arch, batch_cap));
@@ -65,8 +79,7 @@ impl NativeBackend {
         self.archs.iter().find(|(n, _, _)| n == name).ok_or_else(|| {
             let known: Vec<&str> = self.archs.iter().map(|(n, _, _)| n.as_str()).collect();
             anyhow!(
-                "arch '{name}' is not available on the native backend (have: {}); conv \
-                 architectures need `--features xla` and compiled artifacts",
+                "arch '{name}' is not registered on the native backend (have: {})",
                 known.join(", ")
             )
         })
@@ -120,33 +133,85 @@ fn batch_matrix(batch: &Batch, dim: usize) -> Result<Matrix> {
     Ok(Matrix::from_vec(bsz, dim, batch.x.clone()))
 }
 
-/// ReLU-MLP forward. Returns `(input activations a_0..a_{L-1}, logits)`;
-/// the activation list is empty when `keep_acts` is false (evaluation).
+/// Per-layer record of one taped forward pass.
+struct Tape {
+    /// The matrix the weight product consumed: the input activation for a
+    /// dense layer (`B x n`), the im2col patch matrix for a conv layer
+    /// (`B·hp·wp x n`). This is the `a` of every factor contraction.
+    input: Matrix,
+    /// Conv layers only: the post-ReLU, pre-pool output rows plus the
+    /// max-pool argmax routing (None when the layer has no pool).
+    conv: Option<ConvTape>,
+}
+
+struct ConvTape {
+    /// Post-ReLU, pre-pool activations (`B·hp·wp x out_ch`) — the ReLU
+    /// mask source for this layer's backward.
+    act: Matrix,
+    pool_src: Option<Vec<u32>>,
+}
+
+/// Network forward. Conv layers im2col their input, apply the kernel
+/// matrix + bias + ReLU, then 2x2 max-pool when configured; dense layers
+/// are affine + ReLU (the last layer emits raw logits). Returns the
+/// per-layer tapes (empty when `keep_tape` is false — evaluation) and the
+/// `B x classes` logit matrix.
 fn forward_pass(
+    arch: &ArchInfo,
     weights: &[Weights<'_>],
     biases: &[&[f32]],
     x: Matrix,
-    keep_acts: bool,
-) -> (Vec<Matrix>, Matrix) {
+    keep_tape: bool,
+) -> (Vec<Tape>, Matrix) {
     let last = weights.len() - 1;
-    let mut acts: Vec<Matrix> = Vec::with_capacity(if keep_acts { weights.len() } else { 0 });
+    let mut tapes: Vec<Tape> = Vec::with_capacity(if keep_tape { weights.len() } else { 0 });
+    let bsz = x.rows();
     let mut a = x;
     for (l, (wt, b)) in weights.iter().zip(biases).enumerate() {
-        let mut z = wt.apply_t(&a);
-        for i in 0..z.rows() {
-            for (zj, &bj) in z.row_mut(i).iter_mut().zip(*b) {
-                *zj += bj;
-                if l < last {
-                    *zj = zj.max(0.0);
+        let li = &arch.layers[l];
+        if li.kind == "conv" {
+            let patches = im2col(&a, li.in_h, li.in_w, li.in_ch, li.ksize);
+            let mut z = wt.apply_t(&patches);
+            for i in 0..z.rows() {
+                // conv layers are always hidden: bias then ReLU
+                for (zj, &bj) in z.row_mut(i).iter_mut().zip(*b) {
+                    *zj = (*zj + bj).max(0.0);
                 }
             }
+            let (hp, wp) = (li.in_h - li.ksize + 1, li.in_w - li.ksize + 1);
+            let (next, conv_tape) = if li.pool {
+                let (pooled, idx) = maxpool2x2(&z, hp, wp);
+                let per = pooled.rows() / bsz * pooled.cols();
+                // (B·ph·pw x C) and (B x ph·pw·C) share one row-major
+                // buffer: flattening is a reshape, not a copy
+                let next = Matrix::from_vec(bsz, per, pooled.into_vec());
+                (next, ConvTape { act: z, pool_src: Some(idx) })
+            } else {
+                let per = z.rows() / bsz * z.cols();
+                let next = Matrix::from_vec(bsz, per, z.data().to_vec());
+                (next, ConvTape { act: z, pool_src: None })
+            };
+            if keep_tape {
+                tapes.push(Tape { input: patches, conv: Some(conv_tape) });
+            }
+            a = next;
+        } else {
+            let mut z = wt.apply_t(&a);
+            for i in 0..z.rows() {
+                for (zj, &bj) in z.row_mut(i).iter_mut().zip(*b) {
+                    *zj += bj;
+                    if l < last {
+                        *zj = zj.max(0.0);
+                    }
+                }
+            }
+            if keep_tape {
+                tapes.push(Tape { input: a, conv: None });
+            }
+            a = z;
         }
-        if keep_acts {
-            acts.push(a);
-        }
-        a = z;
     }
-    (acts, a)
+    (tapes, a)
 }
 
 /// Weighted softmax cross-entropy over a batch of logits. Returns the
@@ -160,7 +225,10 @@ fn softmax_stats(
 ) -> Result<(f32, f32, Option<Matrix>)> {
     let (bsz, classes) = logits.shape();
     let wsum: f64 = w.iter().map(|&x| x as f64).sum();
-    let denom = wsum.max(1.0);
+    // normalize by the true weight mass whenever there is any — fractional
+    // weights with Σw < 1 must not shrink the loss; guard only the
+    // all-padding case (loss and gradients are identically zero there)
+    let denom = if wsum > 0.0 { wsum } else { 1.0 };
     let mut loss = 0.0f64;
     let mut ncorrect = 0.0f64;
     let mut delta = if want_delta { Some(Matrix::zeros(bsz, classes)) } else { None };
@@ -215,39 +283,156 @@ fn colsum(d: &Matrix) -> Vec<f32> {
     out.into_iter().map(|v| v as f32).collect()
 }
 
+/// Zero `d` wherever the matching post-ReLU activation is ≤ 0
+/// (`relu(z) > 0 ⇔ z > 0`, and the subgradient at 0 is taken as 0).
+fn relu_mask(d: &mut Matrix, act: &Matrix) {
+    debug_assert_eq!(d.shape(), act.shape());
+    for (dv, &av) in d.data_mut().iter_mut().zip(act.data()) {
+        if av <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
 /// One taped forward + backward sweep. `sink(l, δ_l, a_l)` receives each
-/// layer's output-side delta and input activation, from the last layer down
-/// to the first; the caller contracts them into whichever factor gradients
-/// its parameterization needs.
+/// layer's pre-activation delta and the matrix its weight product consumed
+/// (input activation for dense layers, patch matrix for conv layers), from
+/// the last layer down to the first; the caller contracts them into
+/// whichever factor gradients its parameterization needs.
+///
+/// Invariant of the loop: entering layer `l`, `delta` is the gradient of
+/// the loss w.r.t. layer `l`'s *final* output (post-ReLU, post-pool); each
+/// branch converts it to the pre-activation delta before sinking, then
+/// propagates to layer `l-1`'s final output.
 fn backprop(
+    arch: &ArchInfo,
     weights: &[Weights<'_>],
     biases: &[&[f32]],
-    input_dim: usize,
     batch: &Batch,
     mut sink: impl FnMut(usize, &Matrix, &Matrix),
 ) -> Result<EvalStats> {
-    let x = batch_matrix(batch, input_dim)?;
-    let (acts, logits) = forward_pass(weights, biases, x, true);
+    let x = batch_matrix(batch, arch.input_dim)?;
+    let (tapes, logits) = forward_pass(arch, weights, biases, x, true);
     let (loss, ncorrect, delta) = softmax_stats(&logits, &batch.y, &batch.w, true)?;
     let mut delta = delta.expect("delta requested");
+    let last = weights.len() - 1;
     for l in (0..weights.len()).rev() {
-        sink(l, &delta, &acts[l]);
-        if l > 0 {
-            let mut da = weights[l].apply(&delta);
-            // ReLU mask: a_l = relu(z_{l-1}), and a > 0 ⇔ z > 0
-            for (dv, &av) in da.data_mut().iter_mut().zip(acts[l].data()) {
-                if av <= 0.0 {
-                    *dv = 0.0;
-                }
+        let li = &arch.layers[l];
+        if li.kind == "conv" {
+            let tape = &tapes[l];
+            let ct = tape.conv.as_ref().expect("conv layer has a conv tape");
+            // reshape the flat (B x oh·ow·C) cotangent back to per-pixel
+            // rows (B·oh·ow x C) — same row-major buffer
+            let flat = std::mem::replace(&mut delta, Matrix::zeros(0, 0));
+            let rows = flat.rows() * flat.cols() / li.out_ch;
+            let pooled = Matrix::from_vec(rows, li.out_ch, flat.into_vec());
+            let mut d = match &ct.pool_src {
+                Some(idx) => unpool2x2(&pooled, idx, ct.act.rows()),
+                None => pooled,
+            };
+            relu_mask(&mut d, &ct.act);
+            sink(l, &d, &tape.input);
+            if l > 0 {
+                let dp = weights[l].apply(&d); // B·hp·wp x in_ch·k²
+                delta = col2im(&dp, li.in_h, li.in_w, li.in_ch, li.ksize);
             }
-            delta = da;
+        } else {
+            if l < last {
+                // hidden dense output = the next (dense) layer's input;
+                // conv layers never follow dense ones (check_arch)
+                relu_mask(&mut delta, &tapes[l + 1].input);
+            }
+            sink(l, &delta, &tapes[l].input);
+            if l > 0 {
+                delta = weights[l].apply(&delta);
+            }
         }
     }
     Ok(EvalStats { loss, ncorrect })
 }
 
+/// Structural validation shared by every service: supported layer kinds,
+/// conv layers forming a prefix (the backward pass and the flatten point
+/// rely on it), and geometry that chains from `input_dim` to
+/// `num_classes` — so a malformed custom arch ([`NativeBackend::with_arch`])
+/// surfaces as a descriptive error instead of a kernel assert mid-training.
+fn check_arch(arch: &ArchInfo) -> Result<()> {
+    let mut seen_dense = false;
+    // flattened width of the activation entering each layer
+    let mut flat = arch.input_dim;
+    for (k, l) in arch.layers.iter().enumerate() {
+        match l.kind.as_str() {
+            "dense" => {
+                seen_dense = true;
+                ensure!(
+                    l.n == flat,
+                    "layer {k}: dense fan-in {} != incoming activation width {flat}",
+                    l.n
+                );
+                flat = l.m;
+            }
+            "conv" => {
+                ensure!(
+                    !seen_dense,
+                    "layer {k}: conv layers must precede all dense layers"
+                );
+                ensure!(
+                    k + 1 < arch.layers.len(),
+                    "layer {k}: a conv layer cannot be the output layer"
+                );
+                ensure!(
+                    l.ksize >= 1 && l.ksize <= l.in_h && l.ksize <= l.in_w,
+                    "layer {k}: kernel {} does not fit a {}x{} input",
+                    l.ksize,
+                    l.in_h,
+                    l.in_w
+                );
+                ensure!(
+                    l.m == l.out_ch && l.n == l.in_ch * l.ksize * l.ksize,
+                    "layer {k}: matrix {}x{} != conv {}x({}·{}²)",
+                    l.m,
+                    l.n,
+                    l.out_ch,
+                    l.in_ch,
+                    l.ksize
+                );
+                ensure!(
+                    l.in_h * l.in_w * l.in_ch == flat,
+                    "layer {k}: conv input {}x{}x{} != incoming activation width {flat}",
+                    l.in_h,
+                    l.in_w,
+                    l.in_ch
+                );
+                let (hp, wp) = (l.in_h - l.ksize + 1, l.in_w - l.ksize + 1);
+                if l.pool {
+                    ensure!(
+                        hp >= 2 && wp >= 2,
+                        "layer {k}: 2x2 pool needs at least a 2x2 map (got {hp}x{wp})"
+                    );
+                }
+                let (oh, ow) = if l.pool { (hp / 2, wp / 2) } else { (hp, wp) };
+                ensure!(
+                    l.out_h == oh && l.out_w == ow,
+                    "layer {k}: declared output {}x{} != computed {oh}x{ow}",
+                    l.out_h,
+                    l.out_w
+                );
+                flat = oh * ow * l.out_ch;
+            }
+            other => bail!("layer {k}: unsupported layer kind '{other}'"),
+        }
+    }
+    ensure!(
+        flat == arch.num_classes,
+        "network output width {flat} != num_classes {}",
+        arch.num_classes
+    );
+    Ok(())
+}
+
 /// Validate factored layers against the architecture.
 fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
+    check_arch(arch)?;
     ensure!(
         layers.len() == arch.layers.len(),
         "expected {} layers, got {}",
@@ -255,11 +440,6 @@ fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
         layers.len()
     );
     for (k, (f, l)) in layers.iter().zip(&arch.layers).enumerate() {
-        ensure!(
-            l.kind == "dense",
-            "layer {k}: native backend supports dense layers only (kind '{}')",
-            l.kind
-        );
         let r = f.s.rows();
         ensure!(
             f.u.rows() == l.m && f.v.rows() == l.n,
@@ -281,8 +461,10 @@ fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
     Ok(())
 }
 
-/// Validate dense weights against the architecture.
+/// Validate full-rank weights against the architecture (a conv layer's
+/// "dense" weight is its full `out_ch x in_ch·k²` kernel matrix).
 fn check_dense(arch: &ArchInfo, ws: &[Matrix], bs: &[Vec<f32>]) -> Result<()> {
+    check_arch(arch)?;
     ensure!(
         ws.len() == arch.layers.len() && bs.len() == arch.layers.len(),
         "expected {} layers, got {} weights / {} biases",
@@ -291,7 +473,6 @@ fn check_dense(arch: &ArchInfo, ws: &[Matrix], bs: &[Vec<f32>]) -> Result<()> {
         bs.len()
     );
     for (k, (w, l)) in ws.iter().zip(&arch.layers).enumerate() {
-        ensure!(l.kind == "dense", "layer {k}: native backend supports dense layers only");
         ensure!(
             w.shape() == (l.m, l.n),
             "layer {k}: weight {:?} != layer {}x{}",
@@ -336,7 +517,7 @@ impl ComputeBackend for NativeBackend {
         let n = layers.len();
         let mut dk: Vec<Option<Matrix>> = vec![None; n];
         let mut dl: Vec<Option<Matrix>> = vec![None; n];
-        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
             let f = &layers[l];
             let av = matmul(a, f.v); // B x r
             let du = matmul(delta, f.u); // B x r
@@ -360,7 +541,7 @@ impl ComputeBackend for NativeBackend {
         let n = layers.len();
         let mut ds: Vec<Option<Matrix>> = vec![None; n];
         let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
             let f = &layers[l];
             let av = matmul(a, f.v); // B x r
             let du = matmul(delta, f.u); // B x r
@@ -387,7 +568,7 @@ impl ComputeBackend for NativeBackend {
             layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
         let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
         let x = batch_matrix(batch, arch.input_dim)?;
-        let (_, logits) = forward_pass(&weights, &biases, x, false);
+        let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
     }
@@ -406,7 +587,7 @@ impl ComputeBackend for NativeBackend {
         let n = ws.len();
         let mut dw: Vec<Option<Matrix>> = vec![None; n];
         let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
             dw[l] = Some(matmul_tn(delta, a)); // ∂W = δᵀ a
             db[l] = Some(colsum(delta));
         })?;
@@ -430,7 +611,7 @@ impl ComputeBackend for NativeBackend {
         let weights: Vec<Weights<'_>> = ws.iter().map(|w| Weights::Dense { w }).collect();
         let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
         let x = batch_matrix(batch, arch.input_dim)?;
-        let (_, logits) = forward_pass(&weights, &biases, x, false);
+        let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
     }
@@ -444,6 +625,7 @@ impl ComputeBackend for NativeBackend {
         batch: &Batch,
     ) -> Result<VanillaGrads> {
         let arch = &self.entry(arch)?.1;
+        check_arch(arch)?;
         ensure!(
             us.len() == arch.layers.len() && vs.len() == us.len() && bs.len() == us.len(),
             "expected {} layers, got {}/{}/{} factors",
@@ -470,7 +652,7 @@ impl ComputeBackend for NativeBackend {
         let mut du: Vec<Option<Matrix>> = vec![None; n];
         let mut dv: Vec<Option<Matrix>> = vec![None; n];
         let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(&weights, &biases, arch.input_dim, batch, |l, delta, a| {
+        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
             let av = matmul(a, &vs[l]); // B x r
             let dut = matmul(delta, &us[l]); // B x r
             du[l] = Some(matmul_tn(delta, &av)); // ∂U = δᵀ (a V)
@@ -582,9 +764,106 @@ mod tests {
     #[test]
     fn unknown_arch_is_a_clean_error() {
         let be = NativeBackend::new();
-        let err = be.arch("lenet").unwrap_err().to_string();
+        let err = be.arch("resnet50").unwrap_err().to_string();
         assert!(err.contains("native backend"), "{err}");
         assert!(be.rank_cap("mlp500", "kl_grads").unwrap().is_none());
         assert_eq!(be.batch_cap("mlp_tiny").unwrap(), 32);
+        // conv archs are first-class citizens of the registry now
+        assert!(be.arch("lenet").is_ok());
+        assert!(be.arch("vggs").is_ok());
+        assert!(be.arch("alexs").is_ok());
+    }
+
+    #[test]
+    fn fractional_weight_normalization_matches_unit_weights() {
+        // the weighted-mean loss and its gradients are invariant to a
+        // uniform scaling of the batch weights — regression for the old
+        // `wsum.max(1.0)` denominator that silently shrank both whenever
+        // Σw < 1 (e.g. fractional importance weights)
+        let be = NativeBackend::new();
+        let layers = tiny_layers(7);
+        let unit = tiny_batch(32, 64, 10, 8);
+        let mut frac = Batch {
+            x: unit.x.clone(),
+            y: unit.y.clone(),
+            w: vec![0.25 / 32.0; 32], // Σw = 0.25 « 1
+            count: unit.count,
+        };
+        let a = be.kl_grads("mlp_tiny", &refs(&layers), &unit).unwrap();
+        let b = be.kl_grads("mlp_tiny", &refs(&layers), &frac).unwrap();
+        assert!((a.loss - b.loss).abs() < 1e-5, "loss {} vs {}", a.loss, b.loss);
+        for (da, db) in a.dk.iter().zip(&b.dk) {
+            assert!(da.fro_dist(db) < 1e-5, "∂K changed under weight rescaling");
+        }
+        for (da, db) in a.dl.iter().zip(&b.dl) {
+            assert!(da.fro_dist(db) < 1e-5, "∂L changed under weight rescaling");
+        }
+        // non-uniform fractional weights still weight rows relatively
+        frac.w[0] = 0.5;
+        let c = be.forward("mlp_tiny", &refs(&layers), &frac).unwrap();
+        assert!(c.loss.is_finite() && c.loss > 0.0);
+    }
+
+    #[test]
+    fn malformed_custom_arch_is_a_clean_error() {
+        // conv geometry that doesn't chain from input_dim must surface as
+        // a descriptive error at call time, not a kernel assert panic
+        use crate::runtime::LayerInfo;
+        let conv = LayerInfo {
+            kind: "conv".into(),
+            m: 3,
+            n: 9,
+            in_ch: 1,
+            out_ch: 3,
+            ksize: 3,
+            in_h: 5,
+            in_w: 5,
+            pool: false,
+            out_h: 3,
+            out_w: 3,
+        };
+        let head = LayerInfo {
+            kind: "dense".into(),
+            m: 10,
+            n: 27,
+            in_ch: 0,
+            out_ch: 0,
+            ksize: 0,
+            in_h: 0,
+            in_w: 0,
+            pool: false,
+            out_h: 0,
+            out_w: 0,
+        };
+        let arch = ArchInfo {
+            layers: vec![conv, head],
+            input_dim: 30, // != 5x5x1 = 25: does not chain
+            num_classes: 10,
+            image_hwc: None,
+        };
+        let be = NativeBackend::new().with_arch("bad_conv", arch, 4);
+        let mut rng = Rng::new(13);
+        let layers = vec![
+            LowRankFactors::random(3, 9, 2, &mut rng),
+            LowRankFactors::random(10, 27, 4, &mut rng),
+        ];
+        let batch = tiny_batch(4, 30, 10, 14);
+        let err = be.forward("bad_conv", &refs(&layers), &batch).unwrap_err().to_string();
+        assert!(err.contains("incoming activation width"), "{err}");
+    }
+
+    #[test]
+    fn all_padding_batch_is_zero_not_nan() {
+        let be = NativeBackend::new();
+        let layers = tiny_layers(9);
+        let mut batch = tiny_batch(32, 64, 10, 10);
+        batch.w = vec![0.0; 32];
+        batch.count = 0;
+        let sg = be.s_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
+        assert_eq!(sg.loss, 0.0);
+        assert_eq!(sg.ncorrect, 0.0);
+        for ds in &sg.ds {
+            assert_eq!(ds.max_abs(), 0.0, "all-padding batch must yield zero ∂S");
+        }
     }
 }

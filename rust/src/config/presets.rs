@@ -1,7 +1,10 @@
 //! Experiment presets — one per paper table/figure (DESIGN.md §6).
 //!
 //! Every bench and example pulls its configuration from here so that the
-//! mapping "paper experiment -> code" stays in one place.
+//! mapping "paper experiment -> code" stays in one place. Every preset runs
+//! on the default native backend (conv architectures included, via the
+//! im2col lowering — DESIGN.md §4); only `quickstart_pallas` opts into the
+//! compiled-artifact path.
 
 use super::{Config, DataSource, Integrator, LrSchedule, Mode};
 
@@ -95,7 +98,6 @@ pub fn fig1_dense() -> Config {
 /// records the actually-used budget.
 pub fn tab1_lenet(tau: f32) -> Config {
     let mut c = base("lenet");
-    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.tau = tau;
     c.mode = Mode::AdaptiveDlrt;
     c.integrator = Integrator::Sgd;
@@ -109,7 +111,6 @@ pub fn tab1_lenet(tau: f32) -> Config {
 /// Dense LeNet5 reference row of Table 1.
 pub fn tab1_lenet_dense() -> Config {
     let mut c = base("lenet");
-    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.mode = Mode::Dense;
     c.integrator = Integrator::Sgd;
     c.lr = 0.05;
@@ -121,7 +122,6 @@ pub fn tab1_lenet_dense() -> Config {
 /// Fig. 4: DLRT vs vanilla UVᵀ on LeNet5, fixed lr 0.01, fixed rank.
 pub fn fig4_dlrt(rank: usize) -> Config {
     let mut c = base("lenet");
-    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.mode = Mode::FixedDlrt;
     c.fixed_rank = rank;
     c.integrator = Integrator::Sgd;
@@ -141,7 +141,6 @@ pub fn fig4_vanilla(rank: usize) -> Config {
 /// AlexNet nets on synthetic Cifar, τ = 0.1, SGD + momentum 0.1.
 pub fn tab2(arch: &str) -> Config {
     let mut c = base(arch);
-    c.backend = "jnp".into(); // conv arch: compiled artifacts only
     c.data = DataSource::SynthCifar { n: 8_000 };
     c.tau = 0.1;
     c.integrator = Integrator::Momentum;

@@ -156,20 +156,24 @@ impl Trainer {
             let mut correct = 0.0f64;
             let mut seen = 0.0f64;
             let mut steps = 0usize;
-            // collect batches first: Batcher borrows; fine for in-memory data
-            let batches: Vec<_> = batcher.epoch(&self.split.train).collect();
-            for batch in &batches {
+            // stream batches straight from the epoch iterator: one padded
+            // batch is alive at a time (collecting the whole epoch up
+            // front duplicated the entire padded training set in memory).
+            // The iterator borrows `self.split.train` while the step
+            // borrows `self.model`/`self.rt` — disjoint fields, so the
+            // borrows coexist.
+            for batch in batcher.epoch(&self.split.train) {
                 if self.cfg.max_steps_per_epoch > 0 && steps >= self.cfg.max_steps_per_epoch {
                     break;
                 }
                 train_timer.start();
                 let (loss, nc) = match &mut self.model {
                     ModelState::Kls(k) => {
-                        let st = k.step(&self.rt, batch, lr)?;
+                        let st = k.step(&self.rt, &batch, lr)?;
                         (st.loss, st.ncorrect)
                     }
-                    ModelState::Dense(d) => d.step(&self.rt, batch, lr)?,
-                    ModelState::Vanilla(v) => v.step(&self.rt, batch, lr)?,
+                    ModelState::Dense(d) => d.step(&self.rt, &batch, lr)?,
+                    ModelState::Vanilla(v) => v.step(&self.rt, &batch, lr)?,
                 };
                 train_timer.stop();
                 loss_sum += loss as f64 * batch.count as f64;

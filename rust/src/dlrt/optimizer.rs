@@ -62,47 +62,57 @@ impl FactorOptimizer {
     /// In-place update `param -= lr * step(grad)`.
     pub fn update(&mut self, param: &mut Matrix, grad: &Matrix, lr: f32) {
         assert_eq!(param.shape(), grad.shape(), "optimizer shape mismatch");
-        self.ensure_shape(param.shape());
+        let shape = param.shape();
+        self.step_slice(shape, param.data_mut(), grad.data(), lr);
+    }
+
+    /// Vector variant (biases): updates the slice in place, reusing the
+    /// persistent moment buffers directly — no per-step `Matrix` clones of
+    /// the parameter or gradient.
+    pub fn update_vec(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(param.len(), grad.len(), "optimizer length mismatch");
+        self.step_slice((1, param.len()), param, grad, lr);
+    }
+
+    /// Shared slice-level core of [`Self::update`]/[`Self::update_vec`].
+    /// `shape` identifies the tensor so moment state resets when it changes
+    /// (rank/bucket change), exactly as before.
+    fn step_slice(&mut self, shape: (usize, usize), param: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(param.len(), shape.0 * shape.1);
+        self.ensure_shape(shape);
         match self.kind {
             OptKind::Sgd => {
-                param.axpy(-lr, grad);
+                for (p, &g) in param.iter_mut().zip(grad) {
+                    *p -= lr * g;
+                }
             }
             OptKind::Momentum { beta } => {
-                let vel = self.m.get_or_insert_with(|| Matrix::zeros(param.rows(), param.cols()));
+                let vel = self.m.get_or_insert_with(|| Matrix::zeros(shape.0, shape.1));
                 // v <- beta v + g ; p <- p - lr v
-                for (v, &g) in vel.data_mut().iter_mut().zip(grad.data()) {
+                for ((v, &g), p) in vel.data_mut().iter_mut().zip(grad).zip(param) {
                     *v = beta * *v + g;
+                    *p -= lr * *v;
                 }
-                param.axpy(-lr, vel);
             }
             OptKind::Adam { beta1, beta2, eps } => {
-                let (rows, cols) = param.shape();
-                let m = self.m.get_or_insert_with(|| Matrix::zeros(rows, cols));
-                let v = self.v.get_or_insert_with(|| Matrix::zeros(rows, cols));
+                let m = self.m.get_or_insert_with(|| Matrix::zeros(shape.0, shape.1));
+                let v = self.v.get_or_insert_with(|| Matrix::zeros(shape.0, shape.1));
                 self.t += 1;
                 let bc1 = 1.0 - beta1.powi(self.t as i32);
                 let bc2 = 1.0 - beta2.powi(self.t as i32);
-                let pdata = param.data_mut();
-                for i in 0..pdata.len() {
-                    let g = grad.data()[i];
-                    let mi = &mut m.data_mut()[i];
+                let (mdata, vdata) = (m.data_mut(), v.data_mut());
+                for i in 0..param.len() {
+                    let g = grad[i];
+                    let mi = &mut mdata[i];
                     *mi = beta1 * *mi + (1.0 - beta1) * g;
-                    let vi = &mut v.data_mut()[i];
+                    let vi = &mut vdata[i];
                     *vi = beta2 * *vi + (1.0 - beta2) * g * g;
                     let mhat = *mi / bc1;
                     let vhat = *vi / bc2;
-                    pdata[i] -= lr * mhat / (vhat.sqrt() + eps);
+                    param[i] -= lr * mhat / (vhat.sqrt() + eps);
                 }
             }
         }
-    }
-
-    /// Vector convenience (biases).
-    pub fn update_vec(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
-        let mut p = Matrix::from_vec(1, param.len(), param.to_vec());
-        let g = Matrix::from_vec(1, grad.len(), grad.to_vec());
-        self.update(&mut p, &g, lr);
-        param.copy_from_slice(p.data());
     }
 }
 

@@ -1,0 +1,289 @@
+//! im2col / col2im lowering kernels for the native conv path.
+//!
+//! A valid-padding, stride-1 convolution with an `out_ch x (in_ch·k²)`
+//! kernel matrix is a plain matmul over the *patch matrix*: [`im2col`]
+//! unfolds a batch of HWC-flattened images into one row per output pixel,
+//! after which the low-rank contractions of `backend::native` apply to conv
+//! layers unchanged (the matricization of paper §6.6 and Trained Rank
+//! Pruning). [`col2im`] is its exact adjoint — the backward scatter-add —
+//! property-tested below via `<im2col(x), y> == <x, col2im(y)>`.
+//!
+//! Layout contracts (must match `python/compile/model.py` so factors are
+//! interchangeable with the artifact path):
+//!
+//! * images are flattened HWC: `idx = (y·W + x)·C + c`;
+//! * patch features are channel-major `(c, j, k)`: `idx = c·k² + j·k + kk`,
+//!   matching the `(F, C, J, K) -> (F, C·J·K)` kernel reshape;
+//! * patch rows are batch-major `(b, py, px)`: `row = b·hp·wp + py·wp + px`;
+//! * [`maxpool2x2`] is 2x2, stride 2, floor (drops a trailing odd row/col,
+//!   like torch / `lax.reduce_window` with VALID padding).
+//!
+//! Both kernels thread across disjoint output rows via [`crate::util::pool`]
+//! exactly like the matmul kernels (deterministic per row regardless of
+//! thread count).
+
+use super::Matrix;
+use crate::util::pool;
+
+/// Total-work threshold below which threading overhead dominates (same
+/// policy as `linalg::matmul`).
+const PAR_THRESHOLD: usize = 64 * 64 * 64;
+
+/// Unfold a batch of HWC-flattened images (`B x in_h·in_w·in_ch`) into the
+/// patch matrix (`B·hp·wp x in_ch·k²`) of a valid-padding, stride-1,
+/// `k x k` convolution, where `hp = in_h - k + 1`, `wp = in_w - k + 1`.
+pub fn im2col(img: &Matrix, in_h: usize, in_w: usize, in_ch: usize, ksize: usize) -> Matrix {
+    assert!(ksize >= 1 && ksize <= in_h && ksize <= in_w, "kernel {ksize} vs {in_h}x{in_w}");
+    assert_eq!(
+        img.cols(),
+        in_h * in_w * in_ch,
+        "im2col: {} cols != {in_h}x{in_w}x{in_ch} image",
+        img.cols()
+    );
+    let bsz = img.rows();
+    let (hp, wp) = (in_h - ksize + 1, in_w - ksize + 1);
+    let feat = in_ch * ksize * ksize;
+    let mut out = Matrix::zeros(bsz * hp * wp, feat);
+    let body = |rho: usize, row_out: &mut [f32]| {
+        let b = rho / (hp * wp);
+        let rem = rho % (hp * wp);
+        let (py, px) = (rem / wp, rem % wp);
+        let src = img.row(b);
+        for c in 0..in_ch {
+            for j in 0..ksize {
+                for kk in 0..ksize {
+                    row_out[c * ksize * ksize + j * ksize + kk] =
+                        src[((py + j) * in_w + (px + kk)) * in_ch + c];
+                }
+            }
+        }
+    };
+    let work = bsz * hp * wp * feat;
+    let threads = if work >= PAR_THRESHOLD { pool::default_threads() } else { 1 };
+    pool::par_rows_mut(out.data_mut(), feat, threads, body);
+    out
+}
+
+/// Adjoint of [`im2col`]: fold a patch-matrix cotangent
+/// (`B·hp·wp x in_ch·k²`) back into image space (`B x in_h·in_w·in_ch`) by
+/// scatter-adding every patch entry onto the pixel it was read from.
+pub fn col2im(cols: &Matrix, in_h: usize, in_w: usize, in_ch: usize, ksize: usize) -> Matrix {
+    assert!(ksize >= 1 && ksize <= in_h && ksize <= in_w, "kernel {ksize} vs {in_h}x{in_w}");
+    let (hp, wp) = (in_h - ksize + 1, in_w - ksize + 1);
+    let feat = in_ch * ksize * ksize;
+    assert_eq!(cols.cols(), feat, "col2im: {} cols != {feat} patch features", cols.cols());
+    assert_eq!(
+        cols.rows() % (hp * wp),
+        0,
+        "col2im: {} rows not a multiple of {hp}x{wp} patch positions",
+        cols.rows()
+    );
+    let bsz = cols.rows() / (hp * wp);
+    let width = in_h * in_w * in_ch;
+    let mut out = Matrix::zeros(bsz, width);
+    // one batch item per task: each image row accumulates from its own
+    // disjoint block of patch rows, so parallel writes never collide
+    let body = |b: usize, row_out: &mut [f32]| {
+        for py in 0..hp {
+            for px in 0..wp {
+                let patch = cols.row(b * hp * wp + py * wp + px);
+                for c in 0..in_ch {
+                    for j in 0..ksize {
+                        for kk in 0..ksize {
+                            row_out[((py + j) * in_w + (px + kk)) * in_ch + c] +=
+                                patch[c * ksize * ksize + j * ksize + kk];
+                        }
+                    }
+                }
+            }
+        }
+    };
+    let work = bsz * hp * wp * feat;
+    let threads = if work >= PAR_THRESHOLD { pool::default_threads() } else { 1 };
+    pool::par_rows_mut(out.data_mut(), width, threads, body);
+    out
+}
+
+/// 2x2 max-pool, stride 2, over channel-last rows: `z` is `B·hp·wp x C`
+/// (one row per pre-pool pixel). Returns the pooled `B·⌊hp/2⌋·⌊wp/2⌋ x C`
+/// matrix plus, per `(pooled row, channel)`, the source row index the max
+/// came from — the routing table [`unpool2x2`] scatters gradients through.
+pub fn maxpool2x2(z: &Matrix, hp: usize, wp: usize) -> (Matrix, Vec<u32>) {
+    let ch = z.cols();
+    assert!(hp >= 2 && wp >= 2, "maxpool2x2 needs at least a 2x2 map (got {hp}x{wp})");
+    assert_eq!(z.rows() % (hp * wp), 0, "maxpool2x2: {} rows vs {hp}x{wp} map", z.rows());
+    let bsz = z.rows() / (hp * wp);
+    let (ph, pw) = (hp / 2, wp / 2);
+    let mut out = Matrix::zeros(bsz * ph * pw, ch);
+    let mut idx = vec![0u32; bsz * ph * pw * ch];
+    for orow in 0..bsz * ph * pw {
+        let b = orow / (ph * pw);
+        let rem = orow % (ph * pw);
+        let (oy, ox) = (rem / pw, rem % pw);
+        let dst = out.row_mut(orow);
+        for c in 0..ch {
+            let mut best = f32::NEG_INFINITY;
+            let mut best_src = 0usize;
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    let src = b * hp * wp + (2 * oy + dy) * wp + (2 * ox + dx);
+                    let v = z.row(src)[c];
+                    if v > best {
+                        best = v;
+                        best_src = src;
+                    }
+                }
+            }
+            dst[c] = best;
+            idx[orow * ch + c] = best_src as u32;
+        }
+    }
+    (out, idx)
+}
+
+/// Adjoint of [`maxpool2x2`]: route a pooled-output cotangent back onto the
+/// `pre_rows x C` pre-pool rows through the recorded argmax indices. Pool
+/// windows are disjoint (stride == window), so this is a plain write.
+pub fn unpool2x2(grad: &Matrix, idx: &[u32], pre_rows: usize) -> Matrix {
+    let ch = grad.cols();
+    assert_eq!(idx.len(), grad.rows() * ch, "unpool2x2: index/gradient arity mismatch");
+    let mut out = Matrix::zeros(pre_rows, ch);
+    for orow in 0..grad.rows() {
+        let g = grad.row(orow);
+        for c in 0..ch {
+            out[(idx[orow * ch + c] as usize, c)] = g[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, Rng};
+
+    /// Reference conv via explicit sliding windows over NHWC images.
+    fn naive_conv(
+        img: &Matrix,
+        w: &Matrix,
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        k: usize,
+    ) -> Matrix {
+        let (hp, wp) = (in_h - k + 1, in_w - k + 1);
+        let out_ch = w.rows();
+        let mut out = Matrix::zeros(img.rows() * hp * wp, out_ch);
+        for b in 0..img.rows() {
+            let src = img.row(b);
+            for py in 0..hp {
+                for px in 0..wp {
+                    let dst = out.row_mut(b * hp * wp + py * wp + px);
+                    for (f, d) in dst.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for c in 0..in_ch {
+                            for j in 0..k {
+                                for kk in 0..k {
+                                    acc += w[(f, c * k * k + j * k + kk)] as f64
+                                        * src[((py + j) * in_w + (px + kk)) * in_ch + c] as f64;
+                                }
+                            }
+                        }
+                        *d = acc as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_times_kernel_is_convolution() {
+        let mut rng = Rng::new(1);
+        for (bsz, h, w, c, k) in [(2usize, 5usize, 6usize, 3usize, 3usize), (1, 7, 7, 1, 5)] {
+            let img = rng.normal_matrix(bsz, h * w * c);
+            let kernel = rng.normal_matrix(4, c * k * k);
+            let cols = im2col(&img, h, w, c, k);
+            assert_eq!(cols.shape(), (bsz * (h - k + 1) * (w - k + 1), c * k * k));
+            let got = matmul_nt(&cols, &kernel);
+            let want = naive_conv(&img, &kernel, h, w, c, k);
+            assert!(got.fro_dist(&want) < 1e-4, "{bsz}x{h}x{w}x{c} k{k}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y
+        let mut rng = Rng::new(2);
+        let (bsz, h, w, c, k) = (2usize, 6usize, 5usize, 2usize, 3usize);
+        let x = rng.normal_matrix(bsz, h * w * c);
+        let y = rng.normal_matrix(bsz * (h - k + 1) * (w - k + 1), c * k * k);
+        let lhs: f64 = im2col(&x, h, w, c, k)
+            .data()
+            .iter()
+            .zip(y.data())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(col2im(&y, h, w, c, k).data())
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn identity_kernel_roundtrips_pixels() {
+        // k = 1: im2col is a pure HWC->CHW-per-pixel relabeling
+        let mut rng = Rng::new(3);
+        let img = rng.normal_matrix(2, 4 * 3 * 2);
+        let cols = im2col(&img, 4, 3, 2, 1);
+        assert_eq!(cols.shape(), (2 * 12, 2));
+        for b in 0..2 {
+            for p in 0..12 {
+                for c in 0..2 {
+                    assert_eq!(cols[(b * 12 + p, c)], img.row(b)[p * 2 + c]);
+                }
+            }
+        }
+        // and col2im of those patches restores the image exactly
+        assert!(col2im(&cols, 4, 3, 2, 1).fro_dist(&img) < 1e-7);
+    }
+
+    #[test]
+    fn maxpool_floors_odd_dims_and_unpool_routes_to_argmax() {
+        let mut rng = Rng::new(4);
+        let z = rng.normal_matrix(9, 2); // one image, 3x3 map, 2 channels
+        let (pooled, idx) = maxpool2x2(&z, 3, 3);
+        assert_eq!(pooled.shape(), (1, 2));
+        for c in 0..2 {
+            // window is rows {0,1,3,4}; row/col 2 are dropped (floor)
+            let want = [0usize, 1, 3, 4].iter().map(|&r| z[(r, c)]).fold(f32::MIN, f32::max);
+            assert_eq!(pooled[(0, c)], want);
+            assert!([0, 1, 3, 4].contains(&(idx[c] as usize)));
+        }
+        let mut g = Matrix::zeros(1, 2);
+        g[(0, 0)] = 2.5;
+        g[(0, 1)] = -1.5;
+        let up = unpool2x2(&g, &idx, 9);
+        let total: f32 = up.data().iter().sum();
+        assert!((total - 1.0).abs() < 1e-6); // 2.5 - 1.5, each at one slot
+        assert_eq!(up[(idx[0] as usize, 0)], 2.5);
+        assert_eq!(up[(idx[1] as usize, 1)], -1.5);
+    }
+
+    #[test]
+    fn pool_batches_independently() {
+        let mut rng = Rng::new(5);
+        let z = rng.normal_matrix(2 * 16, 3); // two images, 4x4 maps
+        let (pooled, idx) = maxpool2x2(&z, 4, 4);
+        assert_eq!(pooled.shape(), (2 * 4, 3));
+        // every argmax of image 1 points into image 1's row block
+        for orow in 4..8 {
+            for c in 0..3 {
+                assert!(idx[orow * 3 + c] as usize >= 16);
+            }
+        }
+    }
+}

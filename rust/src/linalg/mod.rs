@@ -5,15 +5,19 @@
 //! cores (rank truncation), and small dense products. These are
 //! `O(n r^2)`/`O(r^3)` — negligible next to the `O(B n r)` gradient graphs —
 //! but they must run on dynamically-shaped views, which static-shape HLO
-//! cannot express (DESIGN.md §2). Everything here is built from scratch:
-//! no BLAS/LAPACK dependency.
+//! cannot express (DESIGN.md §2). The native backend additionally leans on
+//! the [`im2col`]/[`col2im`] lowering kernels here to evaluate conv layers
+//! as patch-matrix products (DESIGN.md §4). Everything here is built from
+//! scratch: no BLAS/LAPACK dependency.
 
+mod conv;
 mod matmul;
 mod matrix;
 mod qr;
 mod rng;
 mod svd;
 
+pub use conv::{col2im, im2col, maxpool2x2, unpool2x2};
 pub use matmul::{matmul, matmul_nt, matmul_tn};
 pub use matrix::Matrix;
 pub use qr::{householder_qr, orthonormality_error};
