@@ -7,7 +7,7 @@
 //! ```
 
 use dlrt::config::{presets, DataSource, Mode};
-use dlrt::coordinator::{ModelState, Trainer};
+use dlrt::coordinator::Trainer;
 use dlrt::data::Batcher;
 use dlrt::util::bench::{fmt_secs, Table};
 use dlrt::util::cli::Args;
@@ -49,29 +49,24 @@ fn main() -> dlrt::Result<()> {
             let mut batcher = Batcher::new(t.split.train.len(), 256, false, 3);
             let batches: Vec<_> = batcher.epoch(&t.split.train).collect();
             let lr = 0.001;
-            if let ModelState::Kls(k) = &mut t.model {
-                // warmup (compiles executables)
-                k.step(&t.rt, &batches[0], lr)?;
-                let mut acc = dlrt::dlrt::StepTimings::default();
-                for batch in batches.iter().cycle().take(steps) {
-                    let st = k.step(&t.rt, batch, lr)?;
-                    acc.kl_graph_s += st.timings.kl_graph_s;
-                    acc.host_kl_s += st.timings.host_kl_s;
-                    acc.s_graph_s += st.timings.s_graph_s;
-                    acc.host_s_s += st.timings.host_s_s;
-                }
-                let n = steps as f64;
-                let total = (acc.kl_graph_s + acc.host_kl_s + acc.s_graph_s + acc.host_s_s) / n;
-                table.row(&[
-                    arch.clone(),
-                    label.into(),
-                    fmt_secs(acc.kl_graph_s / n),
-                    fmt_secs(acc.host_kl_s / n),
-                    fmt_secs(acc.s_graph_s / n),
-                    fmt_secs(acc.host_s_s / n),
-                    fmt_secs(total),
-                ]);
+            // warmup (compiles executables)
+            t.model.step(&t.rt, &batches[0], lr)?;
+            let mut acc = dlrt::dlrt::StepTimings::default();
+            for batch in batches.iter().cycle().take(steps) {
+                let st = t.model.step(&t.rt, batch, lr)?;
+                acc.accumulate(&st.timings);
             }
+            let n = steps as f64;
+            let total = acc.total() / n;
+            table.row(&[
+                arch.clone(),
+                label.into(),
+                fmt_secs(acc.kl_graph_s / n),
+                fmt_secs(acc.host_kl_s / n),
+                fmt_secs(acc.s_graph_s / n),
+                fmt_secs(acc.host_s_s / n),
+                fmt_secs(total),
+            ]);
         }
     }
     table.print();

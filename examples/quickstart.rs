@@ -4,13 +4,12 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! What happens: the Rust coordinator loads the AOT-compiled JAX graphs
-//! from `artifacts/`, runs Algorithm 1 (K/L gradient steps through the
-//! compiled `kl_grads` graph, host-side QR + basis augmentation, `s_grads`
-//! S-step, SVD truncation at ϑ = τ‖Σ‖_F) on a 10-class toy task, and prints
-//! the rank trajectory and the final compression/accuracy. Expect ~100%
-//! test accuracy with the wide layers compressed to roughly half their
-//! full rank within seconds.
+//! What happens: the unified `Network` core runs Algorithm 1 on the
+//! native backend (phase-1 K/L gradient sweep, host-side QR + basis
+//! augmentation, S-phase sweep on the staged bases, SVD truncation at
+//! ϑ = τ‖Σ‖_F) on a 10-class toy task, and prints the rank trajectory and
+//! the final compression/accuracy. Expect ~100% test accuracy with the
+//! wide layers compressed to roughly half their full rank within seconds.
 
 use dlrt::config::presets;
 use dlrt::coordinator::Trainer;

@@ -18,9 +18,25 @@ fn main() -> dlrt::Result<()> {
     println!("fig1_timing: ranks {ranks:?} on mlp5120 (batch 256)");
     let rows = fig1_timing("mlp5120", &ranks, iters, pred_iters, n_pred)?;
 
-    let mut table = Table::new(&["config", "train s/batch", "predict s/dataset"]);
+    let mut table = Table::new(&[
+        "config",
+        "train s/batch",
+        "kl graph",
+        "host K/L",
+        "s graph",
+        "host S",
+        "predict s/dataset",
+    ]);
     for r in &rows {
-        table.row(&[r.label.clone(), fmt_secs(r.train_batch.mean), fmt_secs(r.predict.mean)]);
+        table.row(&[
+            r.label.clone(),
+            fmt_secs(r.train_batch.mean),
+            fmt_secs(r.phases.kl_graph_s),
+            fmt_secs(r.phases.host_kl_s),
+            fmt_secs(r.phases.s_graph_s),
+            fmt_secs(r.phases.host_s_s),
+            fmt_secs(r.predict.mean),
+        ]);
     }
     table.print();
 

@@ -1,25 +1,40 @@
 //! Pluggable compute backends — who evaluates the training graphs.
 //!
-//! The KLS integrator (Algorithm 1) needs exactly four compute services per
-//! architecture: the `kl_grads`, `s_grads` and `forward` graphs over the
-//! factored network, plus the dense/vanilla baseline graphs. Everything
-//! else — optimizers, QR augmentation, SVD truncation, rank bookkeeping —
-//! is host math that stays backend-independent. [`ComputeBackend`] is that
-//! contract (DESIGN.md §2):
+//! The unified model core ([`crate::dlrt::Network`]) is a *per-layer*
+//! engine: every layer of a net independently chooses its weight
+//! parameterization, and Algorithm 1's step scheduler phases the work as
+//! gradient eval → host K/L update → S-step eval → truncation, skipping
+//! phases for layers that don't need them. The backend boundary mirrors
+//! that shape with exactly **two compute calls** (DESIGN.md §2):
+//!
+//! * [`ComputeBackend::grads`] — one taped forward + backward sweep over a
+//!   mixed per-layer [`LayerParams`] list, returning per-layer
+//!   [`LayerGrads`] according to the [`GradPhase`];
+//! * [`ComputeBackend::forward`] — the evaluation forward over the same
+//!   per-layer list.
+//!
+//! Everything else — optimizers, QR augmentation, SVD truncation, rank
+//! bookkeeping — is host math that stays backend-independent.
 //!
 //! * [`native::NativeBackend`] — a pure-Rust forward + hand-derived backward
 //!   pass for the fully-connected *and* convolutional architectures (conv
 //!   layers lower to patch-matrix products via [`crate::linalg::im2col`]),
-//!   batched through the threaded [`crate::linalg`] kernels. No artifacts,
-//!   no Python, no FFI: `cargo build && cargo test` is hermetic.
+//!   batched through the threaded [`crate::linalg`] kernels. Layers of
+//!   *different* parameterizations mix freely in one backward sweep — the
+//!   TRP-style dense-conv-prefix + low-rank-tail nets run here. No
+//!   artifacts, no Python, no FFI: `cargo build && cargo test` is hermetic.
 //! * `pjrt::XlaBackend` (behind `--features xla`) — the original PJRT path:
 //!   AOT-compiled HLO artifacts executed through the `xla` crate, with
-//!   rank-bucketed executables and zero-padding at the boundary.
+//!   rank-bucketed executables and zero-padding at the boundary. A thin
+//!   adapter maps the old per-family artifact graphs (`kl_grads`,
+//!   `s_grads`, `dense_grads`, `vanilla_grads`, `forward`) onto the
+//!   two-call contract; it serves *homogeneous* nets only and rejects
+//!   mixed parameterizations with a descriptive error.
 //!
 //! **Shape contract:** backends consume and produce tensors at the *true*
 //! current rank of each layer. Padding factors into a compiled bucket slot
 //! (and un-padding the returned gradients) is entirely the XLA backend's
-//! private business; the integrator never sees a slot shape.
+//! private business; the model core never sees a slot shape.
 
 pub mod archs;
 pub mod native;
@@ -35,46 +50,69 @@ use crate::linalg::Matrix;
 use crate::runtime::ArchInfo;
 use crate::Result;
 
-/// Borrowed view of one layer's low-rank state `W = U S Vᵀ` plus bias, at
-/// its true rank (`u: m x r`, `s: r x r`, `v: n x r`, `bias: m`).
-pub struct LayerFactors<'a> {
-    pub u: &'a Matrix,
-    pub s: &'a Matrix,
-    pub v: &'a Matrix,
-    pub bias: &'a [f32],
+/// Which part of an Algorithm-1 training step a [`ComputeBackend::grads`]
+/// call evaluates. Both phases evaluate the *same* loss; they differ only
+/// in which factor gradients are contracted out of the taped backward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradPhase {
+    /// First gradient eval of a step (Alg. 1 lines 5/7): factored layers
+    /// receive `∂K`/`∂L`; dense layers `∂W`/`∂b`; two-factor layers
+    /// `∂U`/`∂V`/`∂b` — i.e. every non-factored layer takes its full
+    /// update from this phase.
+    Kl,
+    /// Second eval on the staged (augmented) bases (Alg. 1 line 15):
+    /// factored layers receive `∂S`/`∂b`; non-factored layers (already
+    /// updated after [`GradPhase::Kl`]) receive [`LayerGrads::None`].
+    S,
 }
 
-/// Result of one `kl_grads` evaluation: per-layer `∂K` (`m x r`) and `∂L`
-/// (`n x r`), plus the batch loss/correct-count of the pre-update forward.
-pub struct KlGrads {
-    pub dk: Vec<Matrix>,
-    pub dl: Vec<Matrix>,
-    pub loss: f32,
-    pub ncorrect: f32,
+/// Borrowed view of one layer's weight parameterization, at its true
+/// current rank. A net crosses the boundary as `&[LayerParams]`, one entry
+/// per layer, mixing variants freely (on backends that support it).
+#[derive(Clone, Copy)]
+pub enum LayerParams<'a> {
+    /// Low-rank factored `W = U S Vᵀ` (`u: m x r`, `s: r x r`, `v: n x r`).
+    Factored { u: &'a Matrix, s: &'a Matrix, v: &'a Matrix, bias: &'a [f32] },
+    /// Dense `W (m x n)`.
+    Dense { w: &'a Matrix, bias: &'a [f32] },
+    /// Two-factor `W = U Vᵀ` (`u: m x r`, `v: n x r`) — the Fig. 4
+    /// vanilla baseline parameterization.
+    TwoFactor { u: &'a Matrix, v: &'a Matrix, bias: &'a [f32] },
 }
 
-/// Result of one `s_grads` evaluation on the staged (augmented) bases:
-/// per-layer `∂S` (`r̂ x r̂`) and `∂bias` (`m`), plus the post-K/L loss.
-pub struct SGrads {
-    pub ds: Vec<Matrix>,
-    pub db: Vec<Vec<f32>>,
-    pub loss: f32,
-    pub ncorrect: f32,
+impl<'a> LayerParams<'a> {
+    /// The layer's bias slice (every parameterization carries one).
+    pub fn bias(&self) -> &'a [f32] {
+        match self {
+            LayerParams::Factored { bias, .. }
+            | LayerParams::Dense { bias, .. }
+            | LayerParams::TwoFactor { bias, .. } => bias,
+        }
+    }
 }
 
-/// Result of one `dense_grads` evaluation: per-layer `∂W` and `∂bias`.
-pub struct DenseGrads {
-    pub dw: Vec<Matrix>,
-    pub db: Vec<Vec<f32>>,
-    pub loss: f32,
-    pub ncorrect: f32,
+/// One layer's gradients out of a [`ComputeBackend::grads`] call. Which
+/// variant comes back is fully determined by (layer parameterization,
+/// phase) — see [`GradPhase`].
+pub enum LayerGrads {
+    /// Factored layer, [`GradPhase::Kl`]: `∂K (m x r)` and `∂L (n x r)`.
+    Kl { dk: Matrix, dl: Matrix },
+    /// Factored layer, [`GradPhase::S`]: `∂S (r x r)` and `∂bias (m)`.
+    S { ds: Matrix, db: Vec<f32> },
+    /// Dense layer, [`GradPhase::Kl`]: `∂W (m x n)` and `∂bias (m)`.
+    Dense { dw: Matrix, db: Vec<f32> },
+    /// Two-factor layer, [`GradPhase::Kl`]: `∂U (m x r)`, `∂V (n x r)`,
+    /// `∂bias (m)`.
+    TwoFactor { du: Matrix, dv: Matrix, db: Vec<f32> },
+    /// The layer takes no update in this phase (non-factored layers during
+    /// [`GradPhase::S`]).
+    None,
 }
 
-/// Result of one `vanilla_grads` evaluation on `W = U Vᵀ`.
-pub struct VanillaGrads {
-    pub du: Vec<Matrix>,
-    pub dv: Vec<Matrix>,
-    pub db: Vec<Vec<f32>>,
+/// Result of one [`ComputeBackend::grads`] evaluation: per-layer gradients
+/// plus the batch loss / weighted correct count of the forward it taped.
+pub struct GradsOut {
+    pub layers: Vec<LayerGrads>,
     pub loss: f32,
     pub ncorrect: f32,
 }
@@ -88,8 +126,9 @@ pub struct EvalStats {
     pub ncorrect: f32,
 }
 
-/// The backend contract: build/execute the training and evaluation graphs
-/// for a named architecture. See the module docs for the shape contract.
+/// The backend contract: evaluate the training and evaluation graphs for a
+/// named architecture over a per-layer parameter list. See the module docs
+/// for the shape contract.
 pub trait ComputeBackend {
     /// Short identifier ("native", "jnp", "pallas") for logs and errors.
     fn name(&self) -> &str;
@@ -101,49 +140,23 @@ pub trait ComputeBackend {
     /// batches to exactly this many rows (`data::Batcher` does).
     fn batch_cap(&self, arch: &str) -> Result<usize>;
 
-    /// Largest per-layer rank this backend can evaluate for a graph family
-    /// (`"kl_grads"`, `"s_grads"`, `"vanilla_grads"`). `None` means
-    /// unbounded (the native backend works at any rank); the XLA backend
-    /// returns its largest compiled bucket.
-    fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>>;
+    /// Largest per-layer rank this backend can evaluate in a phase. `None`
+    /// means unbounded (the native backend works at any rank); the XLA
+    /// backend returns its largest compiled bucket for the phase's
+    /// artifact family.
+    fn rank_cap(&self, arch: &str, phase: GradPhase) -> Result<Option<usize>>;
 
-    /// K- and L-step gradients (Alg. 1 lines 5/7) plus the pre-update
-    /// forward's loss and weighted correct count.
-    fn kl_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch)
-        -> Result<KlGrads>;
+    /// One taped forward + backward sweep over the per-layer parameters,
+    /// contracting each layer's gradients per the phase (module docs).
+    fn grads(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
+        batch: &Batch,
+    ) -> Result<GradsOut>;
 
-    /// S-step gradients (Alg. 1 line 15) on the staged bases.
-    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads>;
-
-    /// Evaluation forward over one batch of the factored network.
-    fn forward(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch)
+    /// Evaluation forward over one batch.
+    fn forward(&self, arch: &str, layers: &[LayerParams<'_>], batch: &Batch)
         -> Result<EvalStats>;
-
-    /// Full-rank reference gradients (baseline trainer).
-    fn dense_grads(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<DenseGrads>;
-
-    /// Evaluation forward of the dense reference network.
-    fn dense_forward(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<EvalStats>;
-
-    /// Two-factor `W = U Vᵀ` baseline gradients (Fig. 4).
-    fn vanilla_grads(
-        &self,
-        arch: &str,
-        us: &[Matrix],
-        vs: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<VanillaGrads>;
 }

@@ -1,13 +1,21 @@
 //! Pure-Rust compute backend: forward + hand-derived backward passes for
-//! the factored architectures (ReLU MLPs and im2col-lowered conv nets).
+//! mixed per-layer parameterizations (ReLU MLPs and im2col-lowered conv
+//! nets).
 //!
 //! All three parameterizations share one skeleton with weighted softmax
 //! cross-entropy on top; they differ only in how a layer's weight matrix
 //! `W (m x n)` is represented:
 //!
 //! * factored `W = U S Vᵀ` (DLRT layers),
-//! * dense `W` (the reference baseline),
+//! * dense `W` (reference / TRP-style dense prefix layers),
 //! * two-factor `W = U Vᵀ` (the Fig. 4 vanilla baseline).
+//!
+//! The per-layer [`LayerParams`] list mixes these freely: one taped
+//! backward sweep walks the net once and the per-layer sink contracts
+//! whichever gradients that layer's (parameterization, [`GradPhase`]) pair
+//! calls for — this is what makes dense-conv-prefix + low-rank-tail nets
+//! (Trained Rank Pruning style) run at native speed with zero duplicated
+//! plumbing.
 //!
 //! A **conv layer** (paper §6.6) is the same matrix in disguise: its
 //! `out_ch x (in_ch·k²)` kernel multiplies the [`crate::linalg::im2col`]
@@ -19,11 +27,11 @@
 //! (un-pool through the stored argmax routing, then [`crate::linalg::col2im`]
 //! back to image space).
 //!
-//! The backward pass never materializes a dense `∂W = δᵀ a`. Because the
-//! K-, L- and S-step graphs all evaluate the *same* function (the paper's
-//! §4.2 observation that `K Vᵀ = U Lᵀ = U S Vᵀ`), a single taped backward
-//! yields every factor gradient by contracting `δ` and the stored `a`
-//! against the bases first:
+//! The backward pass never materializes a dense `∂W = δᵀ a` for factored
+//! layers. Because the K-, L- and S-step gradients all derive from the
+//! *same* function (the paper's §4.2 observation that
+//! `K Vᵀ = U Lᵀ = U S Vᵀ`), a single taped backward yields every factor
+//! gradient by contracting `δ` and the stored `a` against the bases first:
 //!
 //! ```text
 //!   ∂K = ∂W · V  = δᵀ (a V)          (m x r)
@@ -34,12 +42,11 @@
 //!
 //! at `O(R (m + n) r)` per layer, `R` = batch rows (times output pixels for
 //! conv) — the low-rank cost the paper's timing claims (Fig. 1) rest on.
-//! Products run on the threaded [`crate::linalg`] kernels, so large batches
-//! parallelize across cores.
+//! Dense layers pay the full `∂W = δᵀ a` they need anyway. Products run on
+//! the threaded [`crate::linalg`] kernels, so large batches parallelize
+//! across cores.
 
-use super::{
-    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, SGrads, VanillaGrads,
-};
+use super::{ComputeBackend, EvalStats, GradPhase, GradsOut, LayerGrads, LayerParams};
 use crate::data::Batch;
 use crate::linalg::{
     col2im, im2col, matmul, matmul_nt, matmul_tn, maxpool2x2, unpool2x2, Matrix,
@@ -86,14 +93,24 @@ impl NativeBackend {
     }
 }
 
-/// How one layer represents its weight matrix `W (m x n)`.
+/// How one layer represents its weight matrix `W (m x n)` inside the
+/// forward/backward kernels (the compute-only projection of
+/// [`LayerParams`], without the bias).
 enum Weights<'a> {
     Low { u: &'a Matrix, s: &'a Matrix, v: &'a Matrix },
     Dense { w: &'a Matrix },
     Two { u: &'a Matrix, v: &'a Matrix },
 }
 
-impl Weights<'_> {
+impl<'a> Weights<'a> {
+    fn of(p: &LayerParams<'a>) -> Weights<'a> {
+        match *p {
+            LayerParams::Factored { u, s, v, .. } => Weights::Low { u, s, v },
+            LayerParams::Dense { w, .. } => Weights::Dense { w },
+            LayerParams::TwoFactor { u, v, .. } => Weights::Two { u, v },
+        }
+    }
+
     /// `a · Wᵀ` — the batched forward product (`a: B x n` → `B x m`).
     fn apply_t(&self, a: &Matrix) -> Matrix {
         match self {
@@ -297,8 +314,13 @@ fn relu_mask(d: &mut Matrix, act: &Matrix) {
 /// One taped forward + backward sweep. `sink(l, δ_l, a_l)` receives each
 /// layer's pre-activation delta and the matrix its weight product consumed
 /// (input activation for dense layers, patch matrix for conv layers), from
-/// the last layer down to the first; the caller contracts them into
-/// whichever factor gradients its parameterization needs.
+/// the last layer down to layer `stop_below`; the caller contracts them
+/// into whichever factor gradients each layer's parameterization needs.
+///
+/// `stop_below` prunes the sweep: layers `< stop_below` are neither sunk
+/// nor propagated into. The S phase of a mixed net passes the lowest
+/// factored layer's index here, so a dense conv prefix never pays its
+/// (dominant) backward cost for gradients nothing consumes.
 ///
 /// Invariant of the loop: entering layer `l`, `delta` is the gradient of
 /// the loss w.r.t. layer `l`'s *final* output (post-ReLU, post-pool); each
@@ -309,6 +331,7 @@ fn backprop(
     weights: &[Weights<'_>],
     biases: &[&[f32]],
     batch: &Batch,
+    stop_below: usize,
     mut sink: impl FnMut(usize, &Matrix, &Matrix),
 ) -> Result<EvalStats> {
     let x = batch_matrix(batch, arch.input_dim)?;
@@ -316,7 +339,7 @@ fn backprop(
     let (loss, ncorrect, delta) = softmax_stats(&logits, &batch.y, &batch.w, true)?;
     let mut delta = delta.expect("delta requested");
     let last = weights.len() - 1;
-    for l in (0..weights.len()).rev() {
+    for l in (stop_below..weights.len()).rev() {
         let li = &arch.layers[l];
         if li.kind == "conv" {
             let tape = &tapes[l];
@@ -332,7 +355,7 @@ fn backprop(
             };
             relu_mask(&mut d, &ct.act);
             sink(l, &d, &tape.input);
-            if l > 0 {
+            if l > stop_below {
                 let dp = weights[l].apply(&d); // B·hp·wp x in_ch·k²
                 delta = col2im(&dp, li.in_h, li.in_w, li.in_ch, li.ksize);
             }
@@ -343,7 +366,7 @@ fn backprop(
                 relu_mask(&mut delta, &tapes[l + 1].input);
             }
             sink(l, &delta, &tapes[l].input);
-            if l > 0 {
+            if l > stop_below {
                 delta = weights[l].apply(&delta);
             }
         }
@@ -430,8 +453,10 @@ fn check_arch(arch: &ArchInfo) -> Result<()> {
     Ok(())
 }
 
-/// Validate factored layers against the architecture.
-fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
+/// Validate a per-layer parameter list against the architecture: arity,
+/// per-variant factor shapes, bias lengths. A conv layer's "dense" weight
+/// is its full `out_ch x in_ch·k²` kernel matrix.
+fn check_params(arch: &ArchInfo, layers: &[LayerParams<'_>]) -> Result<()> {
     check_arch(arch)?;
     ensure!(
         layers.len() == arch.layers.len(),
@@ -439,48 +464,52 @@ fn check_factors(arch: &ArchInfo, layers: &[LayerFactors<'_>]) -> Result<()> {
         arch.layers.len(),
         layers.len()
     );
-    for (k, (f, l)) in layers.iter().zip(&arch.layers).enumerate() {
-        let r = f.s.rows();
+    for (k, (p, l)) in layers.iter().zip(&arch.layers).enumerate() {
+        match p {
+            LayerParams::Factored { u, s, v, .. } => {
+                let r = s.rows();
+                ensure!(
+                    u.rows() == l.m && v.rows() == l.n,
+                    "layer {k}: factor dims U {:?} / V {:?} don't match layer {}x{}",
+                    u.shape(),
+                    v.shape(),
+                    l.m,
+                    l.n
+                );
+                ensure!(
+                    s.cols() == r && u.cols() == r && v.cols() == r,
+                    "layer {k}: inconsistent factor rank (U {:?}, S {:?}, V {:?})",
+                    u.shape(),
+                    s.shape(),
+                    v.shape()
+                );
+            }
+            LayerParams::Dense { w, .. } => {
+                ensure!(
+                    w.shape() == (l.m, l.n),
+                    "layer {k}: weight {:?} != layer {}x{}",
+                    w.shape(),
+                    l.m,
+                    l.n
+                );
+            }
+            LayerParams::TwoFactor { u, v, .. } => {
+                ensure!(
+                    u.rows() == l.m && v.rows() == l.n && u.cols() == v.cols(),
+                    "layer {k}: two-factor dims U {:?} / V {:?} don't match layer {}x{}",
+                    u.shape(),
+                    v.shape(),
+                    l.m,
+                    l.n
+                );
+            }
+        }
         ensure!(
-            f.u.rows() == l.m && f.v.rows() == l.n,
-            "layer {k}: factor dims U {:?} / V {:?} don't match layer {}x{}",
-            f.u.shape(),
-            f.v.shape(),
-            l.m,
-            l.n
+            p.bias().len() == l.m,
+            "layer {k}: bias len {} != m {}",
+            p.bias().len(),
+            l.m
         );
-        ensure!(
-            f.s.cols() == r && f.u.cols() == r && f.v.cols() == r,
-            "layer {k}: inconsistent factor rank (U {:?}, S {:?}, V {:?})",
-            f.u.shape(),
-            f.s.shape(),
-            f.v.shape()
-        );
-        ensure!(f.bias.len() == l.m, "layer {k}: bias len {} != m {}", f.bias.len(), l.m);
-    }
-    Ok(())
-}
-
-/// Validate full-rank weights against the architecture (a conv layer's
-/// "dense" weight is its full `out_ch x in_ch·k²` kernel matrix).
-fn check_dense(arch: &ArchInfo, ws: &[Matrix], bs: &[Vec<f32>]) -> Result<()> {
-    check_arch(arch)?;
-    ensure!(
-        ws.len() == arch.layers.len() && bs.len() == arch.layers.len(),
-        "expected {} layers, got {} weights / {} biases",
-        arch.layers.len(),
-        ws.len(),
-        bs.len()
-    );
-    for (k, (w, l)) in ws.iter().zip(&arch.layers).enumerate() {
-        ensure!(
-            w.shape() == (l.m, l.n),
-            "layer {k}: weight {:?} != layer {}x{}",
-            w.shape(),
-            l.m,
-            l.n
-        );
-        ensure!(bs[k].len() == l.m, "layer {k}: bias len {} != m {}", bs[k].len(), l.m);
     }
     Ok(())
 }
@@ -498,174 +527,87 @@ impl ComputeBackend for NativeBackend {
         Ok(self.entry(arch)?.2)
     }
 
-    fn rank_cap(&self, arch: &str, _graph: &str) -> Result<Option<usize>> {
+    fn rank_cap(&self, arch: &str, _phase: GradPhase) -> Result<Option<usize>> {
         self.entry(arch)?;
         Ok(None) // dynamic host shapes: any rank evaluates
     }
 
-    fn kl_grads(
+    fn grads(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
         batch: &Batch,
-    ) -> Result<KlGrads> {
+    ) -> Result<GradsOut> {
         let arch = &self.entry(arch)?.1;
-        check_factors(arch, layers)?;
-        let weights: Vec<Weights<'_>> =
-            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
-        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
-        let n = layers.len();
-        let mut dk: Vec<Option<Matrix>> = vec![None; n];
-        let mut dl: Vec<Option<Matrix>> = vec![None; n];
-        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
-            let f = &layers[l];
-            let av = matmul(a, f.v); // B x r
-            let du = matmul(delta, f.u); // B x r
-            dk[l] = Some(matmul_tn(delta, &av)); // ∂K = δᵀ (a V)
-            dl[l] = Some(matmul_tn(a, &du)); // ∂L = aᵀ (δ U)
+        check_params(arch, layers)?;
+        let weights: Vec<Weights<'_>> = layers.iter().map(Weights::of).collect();
+        let biases: Vec<&[f32]> = layers.iter().map(|p| p.bias()).collect();
+        // the S phase only grads factored layers: stop the backward sweep
+        // at the lowest one (a dense conv prefix costs nothing there)
+        let stop_below = match phase {
+            GradPhase::Kl => 0,
+            GradPhase::S => layers
+                .iter()
+                .position(|p| matches!(p, LayerParams::Factored { .. }))
+                .unwrap_or(layers.len()),
+        };
+        let mut out: Vec<LayerGrads> = (0..layers.len()).map(|_| LayerGrads::None).collect();
+        let stats = backprop(arch, &weights, &biases, batch, stop_below, |l, delta, a| {
+            out[l] = match (&layers[l], phase) {
+                (LayerParams::Factored { u, v, .. }, GradPhase::Kl) => {
+                    let av = matmul(a, v); // B x r
+                    let du = matmul(delta, u); // B x r
+                    LayerGrads::Kl {
+                        dk: matmul_tn(delta, &av), // ∂K = δᵀ (a V)
+                        dl: matmul_tn(a, &du),     // ∂L = aᵀ (δ U)
+                    }
+                }
+                (LayerParams::Factored { u, v, .. }, GradPhase::S) => {
+                    let av = matmul(a, v); // B x r
+                    let du = matmul(delta, u); // B x r
+                    LayerGrads::S {
+                        ds: matmul_tn(&du, &av), // ∂S = (δ U)ᵀ (a V)
+                        db: colsum(delta),
+                    }
+                }
+                (LayerParams::Dense { .. }, GradPhase::Kl) => LayerGrads::Dense {
+                    dw: matmul_tn(delta, a), // ∂W = δᵀ a
+                    db: colsum(delta),
+                },
+                (LayerParams::TwoFactor { u, v, .. }, GradPhase::Kl) => {
+                    let av = matmul(a, v); // B x r
+                    let du = matmul(delta, u); // B x r
+                    LayerGrads::TwoFactor {
+                        du: matmul_tn(delta, &av), // ∂U = δᵀ (a V)
+                        dv: matmul_tn(a, &du),     // ∂V = aᵀ (δ U)
+                        db: colsum(delta),
+                    }
+                }
+                // non-factored layers already took their update in the Kl
+                // phase of this step
+                (LayerParams::Dense { .. } | LayerParams::TwoFactor { .. }, GradPhase::S) => {
+                    LayerGrads::None
+                }
+            };
         })?;
-        Ok(KlGrads {
-            dk: dk.into_iter().map(|m| m.expect("layer visited")).collect(),
-            dl: dl.into_iter().map(|m| m.expect("layer visited")).collect(),
-            loss: stats.loss,
-            ncorrect: stats.ncorrect,
-        })
-    }
-
-    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads> {
-        let arch = &self.entry(arch)?.1;
-        check_factors(arch, layers)?;
-        let weights: Vec<Weights<'_>> =
-            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
-        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
-        let n = layers.len();
-        let mut ds: Vec<Option<Matrix>> = vec![None; n];
-        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
-            let f = &layers[l];
-            let av = matmul(a, f.v); // B x r
-            let du = matmul(delta, f.u); // B x r
-            ds[l] = Some(matmul_tn(&du, &av)); // ∂S = (δ U)ᵀ (a V)
-            db[l] = Some(colsum(delta));
-        })?;
-        Ok(SGrads {
-            ds: ds.into_iter().map(|m| m.expect("layer visited")).collect(),
-            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
-            loss: stats.loss,
-            ncorrect: stats.ncorrect,
-        })
+        Ok(GradsOut { layers: out, loss: stats.loss, ncorrect: stats.ncorrect })
     }
 
     fn forward(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
         batch: &Batch,
     ) -> Result<EvalStats> {
         let arch = &self.entry(arch)?.1;
-        check_factors(arch, layers)?;
-        let weights: Vec<Weights<'_>> =
-            layers.iter().map(|f| Weights::Low { u: f.u, s: f.s, v: f.v }).collect();
-        let biases: Vec<&[f32]> = layers.iter().map(|f| f.bias).collect();
+        check_params(arch, layers)?;
+        let weights: Vec<Weights<'_>> = layers.iter().map(Weights::of).collect();
+        let biases: Vec<&[f32]> = layers.iter().map(|p| p.bias()).collect();
         let x = batch_matrix(batch, arch.input_dim)?;
         let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
-    }
-
-    fn dense_grads(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<DenseGrads> {
-        let arch = &self.entry(arch)?.1;
-        check_dense(arch, ws, bs)?;
-        let weights: Vec<Weights<'_>> = ws.iter().map(|w| Weights::Dense { w }).collect();
-        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
-        let n = ws.len();
-        let mut dw: Vec<Option<Matrix>> = vec![None; n];
-        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
-            dw[l] = Some(matmul_tn(delta, a)); // ∂W = δᵀ a
-            db[l] = Some(colsum(delta));
-        })?;
-        Ok(DenseGrads {
-            dw: dw.into_iter().map(|m| m.expect("layer visited")).collect(),
-            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
-            loss: stats.loss,
-            ncorrect: stats.ncorrect,
-        })
-    }
-
-    fn dense_forward(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<EvalStats> {
-        let arch = &self.entry(arch)?.1;
-        check_dense(arch, ws, bs)?;
-        let weights: Vec<Weights<'_>> = ws.iter().map(|w| Weights::Dense { w }).collect();
-        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
-        let x = batch_matrix(batch, arch.input_dim)?;
-        let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
-        let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
-        Ok(EvalStats { loss, ncorrect })
-    }
-
-    fn vanilla_grads(
-        &self,
-        arch: &str,
-        us: &[Matrix],
-        vs: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<VanillaGrads> {
-        let arch = &self.entry(arch)?.1;
-        check_arch(arch)?;
-        ensure!(
-            us.len() == arch.layers.len() && vs.len() == us.len() && bs.len() == us.len(),
-            "expected {} layers, got {}/{}/{} factors",
-            arch.layers.len(),
-            us.len(),
-            vs.len(),
-            bs.len()
-        );
-        for (k, l) in arch.layers.iter().enumerate() {
-            ensure!(
-                us[k].rows() == l.m && vs[k].rows() == l.n && us[k].cols() == vs[k].cols(),
-                "layer {k}: two-factor dims U {:?} / V {:?} don't match layer {}x{}",
-                us[k].shape(),
-                vs[k].shape(),
-                l.m,
-                l.n
-            );
-            ensure!(bs[k].len() == l.m, "layer {k}: bias len {} != m {}", bs[k].len(), l.m);
-        }
-        let weights: Vec<Weights<'_>> =
-            us.iter().zip(vs).map(|(u, v)| Weights::Two { u, v }).collect();
-        let biases: Vec<&[f32]> = bs.iter().map(|b| b.as_slice()).collect();
-        let n = us.len();
-        let mut du: Vec<Option<Matrix>> = vec![None; n];
-        let mut dv: Vec<Option<Matrix>> = vec![None; n];
-        let mut db: Vec<Option<Vec<f32>>> = vec![None; n];
-        let stats = backprop(arch, &weights, &biases, batch, |l, delta, a| {
-            let av = matmul(a, &vs[l]); // B x r
-            let dut = matmul(delta, &us[l]); // B x r
-            du[l] = Some(matmul_tn(delta, &av)); // ∂U = δᵀ (a V)
-            dv[l] = Some(matmul_tn(a, &dut)); // ∂V = aᵀ (δ U)
-            db[l] = Some(colsum(delta));
-        })?;
-        Ok(VanillaGrads {
-            du: du.into_iter().map(|m| m.expect("layer visited")).collect(),
-            dv: dv.into_iter().map(|m| m.expect("layer visited")).collect(),
-            db: db.into_iter().map(|m| m.expect("layer visited")).collect(),
-            loss: stats.loss,
-            ncorrect: stats.ncorrect,
-        })
     }
 }
 
@@ -685,10 +627,10 @@ mod tests {
         }
     }
 
-    fn refs(layers: &[LowRankFactors]) -> Vec<LayerFactors<'_>> {
+    fn refs(layers: &[LowRankFactors]) -> Vec<LayerParams<'_>> {
         layers
             .iter()
-            .map(|f| LayerFactors { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
+            .map(|f| LayerParams::Factored { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
             .collect()
     }
 
@@ -701,6 +643,38 @@ mod tests {
         ]
     }
 
+    /// Per-layer ∂K/∂L of a Kl-phase grads call (factored layers only).
+    fn kl_of(out: GradsOut) -> (Vec<Matrix>, Vec<Matrix>, f32, f32) {
+        let mut dk = Vec::new();
+        let mut dl = Vec::new();
+        for g in out.layers {
+            match g {
+                LayerGrads::Kl { dk: a, dl: b } => {
+                    dk.push(a);
+                    dl.push(b);
+                }
+                _ => panic!("expected Kl grads for every factored layer"),
+            }
+        }
+        (dk, dl, out.loss, out.ncorrect)
+    }
+
+    /// Per-layer ∂S/∂b of an S-phase grads call (factored layers only).
+    fn s_of(out: GradsOut) -> (Vec<Matrix>, Vec<Vec<f32>>, f32) {
+        let mut ds = Vec::new();
+        let mut db = Vec::new();
+        for g in out.layers {
+            match g {
+                LayerGrads::S { ds: a, db: b } => {
+                    ds.push(a);
+                    db.push(b);
+                }
+                _ => panic!("expected S grads for every factored layer"),
+            }
+        }
+        (ds, db, out.loss)
+    }
+
     #[test]
     fn factored_forward_matches_dense_reconstruction() {
         let be = NativeBackend::new();
@@ -708,8 +682,12 @@ mod tests {
         let batch = tiny_batch(32, 64, 10, 2);
         let low = be.forward("mlp_tiny", &refs(&layers), &batch).unwrap();
         let ws: Vec<Matrix> = layers.iter().map(|f| f.reconstruct()).collect();
-        let bs: Vec<Vec<f32>> = layers.iter().map(|f| f.bias.clone()).collect();
-        let dense = be.dense_forward("mlp_tiny", &ws, &bs, &batch).unwrap();
+        let dense_params: Vec<LayerParams<'_>> = ws
+            .iter()
+            .zip(&layers)
+            .map(|(w, f)| LayerParams::Dense { w, bias: &f.bias })
+            .collect();
+        let dense = be.forward("mlp_tiny", &dense_params, &batch).unwrap();
         assert!(
             (low.loss - dense.loss).abs() < 1e-4,
             "factored vs dense forward: {} vs {}",
@@ -721,17 +699,51 @@ mod tests {
 
     #[test]
     fn kl_and_s_losses_agree_on_same_factors() {
-        // kl_grads and s_grads evaluate the same function value
+        // both phases evaluate the same function value
         let be = NativeBackend::new();
         let layers = tiny_layers(3);
         let batch = tiny_batch(32, 64, 10, 4);
-        let kl = be.kl_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
-        let sg = be.s_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
-        assert!((kl.loss - sg.loss).abs() < 1e-5);
-        assert_eq!(kl.dk[0].shape(), (32, 8));
-        assert_eq!(kl.dl[0].shape(), (64, 8));
-        assert_eq!(sg.ds[0].shape(), (8, 8));
-        assert_eq!(sg.db[0].len(), 32);
+        let (dk, dl, kl_loss, _) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &batch).unwrap());
+        let (ds, db, s_loss) =
+            s_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::S, &batch).unwrap());
+        assert!((kl_loss - s_loss).abs() < 1e-5);
+        assert_eq!(dk[0].shape(), (32, 8));
+        assert_eq!(dl[0].shape(), (64, 8));
+        assert_eq!(ds[0].shape(), (8, 8));
+        assert_eq!(db[0].len(), 32);
+    }
+
+    #[test]
+    fn mixed_parameterizations_share_one_sweep() {
+        // dense layer 0 + factored layer 1 + two-factor layer 2 in ONE
+        // grads call: each gets its own gradient variant, and the loss
+        // matches the forward of the same mixed net
+        let be = NativeBackend::new();
+        let layers = tiny_layers(5);
+        let w0 = layers[0].reconstruct();
+        let mixed: Vec<LayerParams<'_>> = vec![
+            LayerParams::Dense { w: &w0, bias: &layers[0].bias },
+            LayerParams::Factored {
+                u: &layers[1].u,
+                s: &layers[1].s,
+                v: &layers[1].v,
+                bias: &layers[1].bias,
+            },
+            LayerParams::TwoFactor { u: &layers[2].u, v: &layers[2].v, bias: &layers[2].bias },
+        ];
+        let batch = tiny_batch(32, 64, 10, 6);
+        let out = be.grads("mlp_tiny", &mixed, GradPhase::Kl, &batch).unwrap();
+        assert!(matches!(out.layers[0], LayerGrads::Dense { .. }));
+        assert!(matches!(out.layers[1], LayerGrads::Kl { .. }));
+        assert!(matches!(out.layers[2], LayerGrads::TwoFactor { .. }));
+        let fwd = be.forward("mlp_tiny", &mixed, &batch).unwrap();
+        assert!((out.loss - fwd.loss).abs() < 1e-5);
+        // S phase: only the factored layer participates
+        let s = be.grads("mlp_tiny", &mixed, GradPhase::S, &batch).unwrap();
+        assert!(matches!(s.layers[0], LayerGrads::None));
+        assert!(matches!(s.layers[1], LayerGrads::S { .. }));
+        assert!(matches!(s.layers[2], LayerGrads::None));
     }
 
     #[test]
@@ -746,17 +758,19 @@ mod tests {
             }
         }
         batch.count = 16;
-        let masked = be.kl_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
+        let (mdk, _, mloss, mnc) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &batch).unwrap());
         let mut zeroed = batch;
         for i in 16..32 {
             for j in 0..64 {
                 zeroed.x[i * 64 + j] = 0.0;
             }
         }
-        let clean = be.kl_grads("mlp_tiny", &refs(&layers), &zeroed).unwrap();
-        assert!((masked.loss - clean.loss).abs() < 1e-5);
-        assert_eq!(masked.ncorrect, clean.ncorrect);
-        for (a, b) in masked.dk.iter().zip(&clean.dk) {
+        let (cdk, _, closs, cnc) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &zeroed).unwrap());
+        assert!((mloss - closs).abs() < 1e-5);
+        assert_eq!(mnc, cnc);
+        for (a, b) in mdk.iter().zip(&cdk) {
             assert!(a.fro_dist(b) < 1e-5, "masked rows leaked into ∂K");
         }
     }
@@ -766,7 +780,7 @@ mod tests {
         let be = NativeBackend::new();
         let err = be.arch("resnet50").unwrap_err().to_string();
         assert!(err.contains("native backend"), "{err}");
-        assert!(be.rank_cap("mlp500", "kl_grads").unwrap().is_none());
+        assert!(be.rank_cap("mlp500", GradPhase::Kl).unwrap().is_none());
         assert_eq!(be.batch_cap("mlp_tiny").unwrap(), 32);
         // conv archs are first-class citizens of the registry now
         assert!(be.arch("lenet").is_ok());
@@ -789,13 +803,15 @@ mod tests {
             w: vec![0.25 / 32.0; 32], // Σw = 0.25 « 1
             count: unit.count,
         };
-        let a = be.kl_grads("mlp_tiny", &refs(&layers), &unit).unwrap();
-        let b = be.kl_grads("mlp_tiny", &refs(&layers), &frac).unwrap();
-        assert!((a.loss - b.loss).abs() < 1e-5, "loss {} vs {}", a.loss, b.loss);
-        for (da, db) in a.dk.iter().zip(&b.dk) {
+        let (adk, adl, aloss, _) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &unit).unwrap());
+        let (bdk, bdl, bloss, _) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &frac).unwrap());
+        assert!((aloss - bloss).abs() < 1e-5, "loss {aloss} vs {bloss}");
+        for (da, db) in adk.iter().zip(&bdk) {
             assert!(da.fro_dist(db) < 1e-5, "∂K changed under weight rescaling");
         }
-        for (da, db) in a.dl.iter().zip(&b.dl) {
+        for (da, db) in adl.iter().zip(&bdl) {
             assert!(da.fro_dist(db) < 1e-5, "∂L changed under weight rescaling");
         }
         // non-uniform fractional weights still weight rows relatively
@@ -859,11 +875,11 @@ mod tests {
         let mut batch = tiny_batch(32, 64, 10, 10);
         batch.w = vec![0.0; 32];
         batch.count = 0;
-        let sg = be.s_grads("mlp_tiny", &refs(&layers), &batch).unwrap();
-        assert_eq!(sg.loss, 0.0);
-        assert_eq!(sg.ncorrect, 0.0);
-        for ds in &sg.ds {
-            assert_eq!(ds.max_abs(), 0.0, "all-padding batch must yield zero ∂S");
+        let (ds, _, loss) =
+            s_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::S, &batch).unwrap());
+        assert_eq!(loss, 0.0);
+        for d in &ds {
+            assert_eq!(d.max_abs(), 0.0, "all-padding batch must yield zero ∂S");
         }
     }
 }

@@ -1,22 +1,30 @@
 //! `XlaBackend` — the PJRT artifact path behind [`ComputeBackend`]
 //! (`--features xla`).
 //!
-//! This adapter owns everything bucket-shaped: choosing the smallest
+//! The compiled artifact families predate the unified two-call contract:
+//! each parameterization has its own whole-net graphs (`kl_grads`,
+//! `s_grads`, `forward`, `dense_grads`, `dense_forward`, `vanilla_grads`).
+//! This adapter therefore classifies the incoming [`LayerParams`] list and
+//! maps (parameterization, [`GradPhase`]) onto the matching artifact; a
+//! *mixed* per-layer list has no compiled graph and is rejected with a
+//! descriptive error pointing at the native backend (DESIGN.md §2).
+//!
+//! The adapter also owns everything bucket-shaped: choosing the smallest
 //! compiled bucket that fits the current ranks, zero-padding factors into
 //! the slot shapes, and un-padding the returned gradients back to true
-//! rank. The integrator upstream never sees a slot (DESIGN.md §2). Padding
-//! is exactly inert: padded basis columns are zero, so the corresponding
-//! gradient columns come back zero and are dropped by the truncation here.
+//! rank. The model core upstream never sees a slot. Padding is exactly
+//! inert: padded basis columns are zero, so the corresponding gradient
+//! columns come back zero and are dropped by the truncation here.
 
 use super::{
-    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, SGrads, VanillaGrads,
+    ComputeBackend, EvalStats, GradPhase, GradsOut, LayerGrads, LayerParams,
 };
 use crate::data::Batch;
 use crate::linalg::Matrix;
 use crate::runtime::pjrt::{Executable, PjrtRuntime};
 use crate::runtime::{literals, ArchInfo};
 use crate::Result;
-use anyhow::{anyhow, ensure};
+use anyhow::{anyhow, bail, ensure};
 use std::path::Path;
 
 /// PJRT-backed implementation of [`ComputeBackend`] for one kernel flavor
@@ -50,15 +58,78 @@ impl XlaBackend {
     }
 }
 
-fn max_rank(layers: &[LayerFactors<'_>]) -> usize {
-    layers.iter().map(|f| f.s.rows()).max().unwrap_or(1)
+/// The homogeneous parameterization of a whole net, or `None` when layers
+/// mix — the classification every artifact dispatch starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NetKind {
+    Factored,
+    Dense,
+    TwoFactor,
+}
+
+fn classify(layers: &[LayerParams<'_>]) -> Option<NetKind> {
+    let mut kind = None;
+    for p in layers {
+        let k = match p {
+            LayerParams::Factored { .. } => NetKind::Factored,
+            LayerParams::Dense { .. } => NetKind::Dense,
+            LayerParams::TwoFactor { .. } => NetKind::TwoFactor,
+        };
+        match kind {
+            None => kind = Some(k),
+            Some(prev) if prev != k => return None,
+            Some(_) => {}
+        }
+    }
+    kind
+}
+
+/// Destructure an all-factored list (classification guarantees it).
+fn factored<'a>(
+    layers: &[LayerParams<'a>],
+) -> Vec<(&'a Matrix, &'a Matrix, &'a Matrix, &'a [f32])> {
+    layers
+        .iter()
+        .map(|p| match *p {
+            LayerParams::Factored { u, s, v, bias } => (u, s, v, bias),
+            _ => unreachable!("caller classified the net as factored"),
+        })
+        .collect()
+}
+
+/// Destructure an all-dense list (classification guarantees it).
+fn dense_views<'a>(layers: &[LayerParams<'a>]) -> Vec<(&'a Matrix, &'a [f32])> {
+    layers
+        .iter()
+        .map(|p| match *p {
+            LayerParams::Dense { w, bias } => (w, bias),
+            _ => unreachable!("caller classified the net as dense"),
+        })
+        .collect()
+}
+
+/// Destructure an all-two-factor list (classification guarantees it).
+fn two_factor_views<'a>(
+    layers: &[LayerParams<'a>],
+) -> Vec<(&'a Matrix, &'a Matrix, &'a [f32])> {
+    layers
+        .iter()
+        .map(|p| match *p {
+            LayerParams::TwoFactor { u, v, bias } => (u, v, bias),
+            _ => unreachable!("caller classified the net as two-factor"),
+        })
+        .collect()
+}
+
+fn max_rank(layers: &[(&Matrix, &Matrix, &Matrix, &[f32])]) -> usize {
+    layers.iter().map(|(_, s, _, _)| s.rows()).max().unwrap_or(1)
 }
 
 /// Pack factored layers (padded into the executable's slot shapes) plus the
 /// batch, following the artifact's input spec order.
 fn pack_factors(
     exe: &Executable,
-    layers: &[LayerFactors<'_>],
+    layers: &[(&Matrix, &Matrix, &Matrix, &[f32])],
     batch: &Batch,
 ) -> Result<Vec<xla::Literal>> {
     let info = &exe.info;
@@ -71,27 +142,186 @@ fn pack_factors(
         n_layers
     );
     let mut lits = Vec::with_capacity(info.inputs.len());
-    for (k, f) in layers.iter().enumerate() {
+    for (k, (u, s, v, bias)) in layers.iter().enumerate() {
         let specs = &info.inputs[4 * k..4 * k + 4];
         debug_assert!(specs[0].name.ends_with("/U"));
         let (m, slot) = (specs[0].shape[0], specs[0].shape[1]);
         let n = specs[2].shape[0];
         ensure!(
-            f.s.rows() <= slot,
+            s.rows() <= slot,
             "{}: layer {k} rank {} exceeds compiled slot {slot}",
             info.name,
-            f.s.rows()
+            s.rows()
         );
-        lits.push(literals::pack_matrix(&specs[0], &f.u.pad_to(m, slot))?);
-        lits.push(literals::pack_matrix(&specs[1], &f.s.pad_to(slot, slot))?);
-        lits.push(literals::pack_matrix(&specs[2], &f.v.pad_to(n, slot))?);
-        lits.push(literals::pack_f32(&specs[3], f.bias)?);
+        lits.push(literals::pack_matrix(&specs[0], &u.pad_to(m, slot))?);
+        lits.push(literals::pack_matrix(&specs[1], &s.pad_to(slot, slot))?);
+        lits.push(literals::pack_matrix(&specs[2], &v.pad_to(n, slot))?);
+        lits.push(literals::pack_f32(&specs[3], bias)?);
     }
     let base = 4 * n_layers;
     lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
     lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
     lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
     Ok(lits)
+}
+
+/// Pack dense weights + batch for the `dense_grads`/`dense_forward` graphs.
+fn pack_dense(
+    exe: &Executable,
+    layers: &[(&Matrix, &[f32])],
+    batch: &Batch,
+) -> Result<Vec<xla::Literal>> {
+    let info = &exe.info;
+    let n_layers = layers.len();
+    ensure!(
+        info.inputs.len() == 2 * n_layers + 3,
+        "{}: unexpected input arity {}",
+        info.name,
+        info.inputs.len()
+    );
+    let mut lits = Vec::with_capacity(info.inputs.len());
+    for (k, (w, bias)) in layers.iter().enumerate() {
+        lits.push(literals::pack_matrix(&info.inputs[2 * k], w)?);
+        lits.push(literals::pack_f32(&info.inputs[2 * k + 1], bias)?);
+    }
+    let base = 2 * n_layers;
+    lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+    lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+    lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+    Ok(lits)
+}
+
+impl XlaBackend {
+    fn kl_grads(
+        &self,
+        arch: &str,
+        layers: &[(&Matrix, &Matrix, &Matrix, &[f32])],
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let exe = self.load_for_rank(arch, "kl_grads", max_rank(layers))?;
+        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
+        let n = layers.len();
+        let mut out = Vec::with_capacity(n);
+        for (k, (_, s, _, _)) in layers.iter().enumerate() {
+            let r = s.rows();
+            let dk = literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_cols(r);
+            let dl =
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.take_cols(r);
+            out.push(LayerGrads::Kl { dk, dl });
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
+        Ok(GradsOut { layers: out, loss, ncorrect })
+    }
+
+    fn s_grads(
+        &self,
+        arch: &str,
+        layers: &[(&Matrix, &Matrix, &Matrix, &[f32])],
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let exe = self.load_for_rank(arch, "s_grads", max_rank(layers))?;
+        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
+        let n = layers.len();
+        let mut out = Vec::with_capacity(n);
+        for (k, (_, s, _, _)) in layers.iter().enumerate() {
+            let r = s.rows();
+            let ds =
+                literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_block(r, r);
+            let db =
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec();
+            out.push(LayerGrads::S { ds, db });
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = if exe.info.outputs.len() > 2 * n + 1 {
+            literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?
+        } else {
+            0.0
+        };
+        Ok(GradsOut { layers: out, loss, ncorrect })
+    }
+
+    fn dense_grads(
+        &self,
+        arch: &str,
+        layers: &[(&Matrix, &[f32])],
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let exe = self.rt.load(arch, "dense_grads", &self.flavor, 0)?;
+        let outs = exe.run(&pack_dense(&exe, layers, batch)?)?;
+        let n = layers.len();
+        let mut out = Vec::with_capacity(n);
+        for k in 0..n {
+            let dw = literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?;
+            let db =
+                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec();
+            out.push(LayerGrads::Dense { dw, db });
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
+        Ok(GradsOut { layers: out, loss, ncorrect })
+    }
+
+    fn vanilla_grads(
+        &self,
+        arch: &str,
+        layers: &[(&Matrix, &Matrix, &[f32])],
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let rank = layers.iter().map(|(u, _, _)| u.cols()).max().unwrap_or(1);
+        let exe = self.load_for_rank(arch, "vanilla_grads", rank)?;
+        let info = &exe.info;
+        let n = layers.len();
+        ensure!(
+            info.inputs.len() == 3 * n + 3,
+            "{}: unexpected input arity {}",
+            info.name,
+            info.inputs.len()
+        );
+        let mut lits = Vec::with_capacity(info.inputs.len());
+        for (k, (u, v, bias)) in layers.iter().enumerate() {
+            let specs = &info.inputs[3 * k..3 * k + 3];
+            let slot = specs[0].shape[1];
+            ensure!(
+                u.cols() <= slot,
+                "{}: layer {k} rank {} exceeds compiled slot {slot}",
+                info.name,
+                u.cols()
+            );
+            lits.push(literals::pack_matrix(&specs[0], &u.pad_to(u.rows(), slot))?);
+            lits.push(literals::pack_matrix(&specs[1], &v.pad_to(v.rows(), slot))?);
+            lits.push(literals::pack_f32(&specs[2], bias)?);
+        }
+        let base = 3 * n;
+        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
+        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
+        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
+        let outs = exe.run(&lits)?;
+        let mut out = Vec::with_capacity(n);
+        for (k, (u, _, _)) in layers.iter().enumerate() {
+            let r = u.cols();
+            let du =
+                literals::unpack_matrix(&exe.info.outputs[3 * k], &outs[3 * k])?.take_cols(r);
+            let dv = literals::unpack_matrix(&exe.info.outputs[3 * k + 1], &outs[3 * k + 1])?
+                .take_cols(r);
+            let db = literals::unpack_matrix(&exe.info.outputs[3 * k + 2], &outs[3 * k + 2])?
+                .into_vec();
+            out.push(LayerGrads::TwoFactor { du, dv, db });
+        }
+        let loss = literals::unpack_scalar(&exe.info.outputs[3 * n], &outs[3 * n])?;
+        let ncorrect =
+            literals::unpack_scalar(&exe.info.outputs[3 * n + 1], &outs[3 * n + 1])?;
+        Ok(GradsOut { layers: out, loss, ncorrect })
+    }
+
+    fn reject_mixed<T>(&self, arch: &str) -> Result<T> {
+        bail!(
+            "arch '{arch}': the '{}' artifact backend serves homogeneous nets only (its \
+             compiled graphs are whole-net); mixed per-layer parameterizations need \
+             backend = \"native\"",
+            self.flavor
+        )
+    }
 }
 
 impl ComputeBackend for XlaBackend {
@@ -117,194 +347,86 @@ impl ComputeBackend for XlaBackend {
             .ok_or_else(|| anyhow!("no artifacts for {arch}/{}", self.flavor))
     }
 
-    fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>> {
+    fn rank_cap(&self, arch: &str, phase: GradPhase) -> Result<Option<usize>> {
+        let graph = match phase {
+            GradPhase::Kl => "kl_grads",
+            GradPhase::S => "s_grads",
+        };
         let buckets = self.rt.manifest().buckets(arch, graph, &self.flavor);
         ensure!(!buckets.is_empty(), "no {graph} artifacts for {arch}/{}", self.flavor);
         Ok(buckets.last().copied())
     }
 
-    fn kl_grads(
+    fn grads(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
         batch: &Batch,
-    ) -> Result<KlGrads> {
-        let exe = self.load_for_rank(arch, "kl_grads", max_rank(layers))?;
-        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
-        let n = layers.len();
-        let mut dk = Vec::with_capacity(n);
-        let mut dl = Vec::with_capacity(n);
-        for (k, f) in layers.iter().enumerate() {
-            let r = f.s.rows();
-            dk.push(literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_cols(r));
-            dl.push(
-                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.take_cols(r),
-            );
-        }
-        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
-        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
-        Ok(KlGrads { dk, dl, loss, ncorrect })
-    }
-
-    fn s_grads(&self, arch: &str, layers: &[LayerFactors<'_>], batch: &Batch) -> Result<SGrads> {
-        let exe = self.load_for_rank(arch, "s_grads", max_rank(layers))?;
-        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
-        let n = layers.len();
-        let mut ds = Vec::with_capacity(n);
-        let mut db = Vec::with_capacity(n);
-        for (k, f) in layers.iter().enumerate() {
-            let r = f.s.rows();
-            ds.push(
-                literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?.take_block(r, r),
-            );
-            db.push(
-                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec(),
-            );
-        }
-        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
-        let ncorrect = if exe.info.outputs.len() > 2 * n + 1 {
-            literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?
-        } else {
-            0.0
+    ) -> Result<GradsOut> {
+        let Some(kind) = classify(layers) else {
+            return self.reject_mixed(arch);
         };
-        Ok(SGrads { ds, db, loss, ncorrect })
+        match (kind, phase) {
+            (NetKind::Factored, GradPhase::Kl) => self.kl_grads(arch, &factored(layers), batch),
+            (NetKind::Factored, GradPhase::S) => self.s_grads(arch, &factored(layers), batch),
+            (NetKind::Dense, GradPhase::Kl) => {
+                self.dense_grads(arch, &dense_views(layers), batch)
+            }
+            (NetKind::TwoFactor, GradPhase::Kl) => {
+                self.vanilla_grads(arch, &two_factor_views(layers), batch)
+            }
+            (NetKind::Dense | NetKind::TwoFactor, GradPhase::S) => bail!(
+                "arch '{arch}': the S phase only applies to factored layers — the scheduler \
+                 never requests it for a net without them"
+            ),
+        }
     }
 
     fn forward(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
         batch: &Batch,
     ) -> Result<EvalStats> {
-        let exe = self.load_for_rank(arch, "forward", max_rank(layers))?;
-        let outs = exe.run(&pack_factors(&exe, layers, batch)?)?;
-        // outputs: [logits, loss, ncorrect]
-        let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
-        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
-        Ok(EvalStats { loss, ncorrect })
-    }
-
-    fn dense_grads(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<DenseGrads> {
-        let exe = self.rt.load(arch, "dense_grads", &self.flavor, 0)?;
-        let outs = exe.run(&pack_dense(&exe, ws, bs, batch)?)?;
-        let n = ws.len();
-        let mut dw = Vec::with_capacity(n);
-        let mut db = Vec::with_capacity(n);
-        for k in 0..n {
-            dw.push(literals::unpack_matrix(&exe.info.outputs[k], &outs[k])?);
-            db.push(
-                literals::unpack_matrix(&exe.info.outputs[n + k], &outs[n + k])?.into_vec(),
-            );
+        let Some(kind) = classify(layers) else {
+            return self.reject_mixed(arch);
+        };
+        match kind {
+            NetKind::Factored => {
+                let views = factored(layers);
+                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
+                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
+                // outputs: [logits, loss, ncorrect]
+                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+                Ok(EvalStats { loss, ncorrect })
+            }
+            NetKind::Dense => {
+                let views = dense_views(layers);
+                let exe = self.rt.load(arch, "dense_forward", &self.flavor, 0)?;
+                let outs = exe.run(&pack_dense(&exe, &views, batch)?)?;
+                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+                Ok(EvalStats { loss, ncorrect })
+            }
+            NetKind::TwoFactor => {
+                // no dedicated vanilla forward artifact: lift W = U Vᵀ to
+                // U · I · Vᵀ and evaluate through the factored graph
+                let two = two_factor_views(layers);
+                let eyes: Vec<Matrix> =
+                    two.iter().map(|(u, _, _)| Matrix::eye(u.cols(), u.cols())).collect();
+                let views: Vec<(&Matrix, &Matrix, &Matrix, &[f32])> = two
+                    .iter()
+                    .zip(&eyes)
+                    .map(|(&(u, v, bias), eye)| (u, eye, v, bias))
+                    .collect();
+                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
+                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
+                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+                Ok(EvalStats { loss, ncorrect })
+            }
         }
-        let loss = literals::unpack_scalar(&exe.info.outputs[2 * n], &outs[2 * n])?;
-        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2 * n + 1], &outs[2 * n + 1])?;
-        Ok(DenseGrads { dw, db, loss, ncorrect })
     }
-
-    fn dense_forward(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<EvalStats> {
-        let exe = self.rt.load(arch, "dense_forward", &self.flavor, 0)?;
-        let outs = exe.run(&pack_dense(&exe, ws, bs, batch)?)?;
-        let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
-        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
-        Ok(EvalStats { loss, ncorrect })
-    }
-
-    fn vanilla_grads(
-        &self,
-        arch: &str,
-        us: &[Matrix],
-        vs: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<VanillaGrads> {
-        let rank = us.iter().map(|u| u.cols()).max().unwrap_or(1);
-        let exe = self.load_for_rank(arch, "vanilla_grads", rank)?;
-        let info = &exe.info;
-        let n = us.len();
-        ensure!(
-            info.inputs.len() == 3 * n + 3,
-            "{}: unexpected input arity {}",
-            info.name,
-            info.inputs.len()
-        );
-        let mut lits = Vec::with_capacity(info.inputs.len());
-        for k in 0..n {
-            let specs = &info.inputs[3 * k..3 * k + 3];
-            let slot = specs[0].shape[1];
-            ensure!(
-                us[k].cols() <= slot,
-                "{}: layer {k} rank {} exceeds compiled slot {slot}",
-                info.name,
-                us[k].cols()
-            );
-            lits.push(literals::pack_matrix(&specs[0], &us[k].pad_to(us[k].rows(), slot))?);
-            lits.push(literals::pack_matrix(&specs[1], &vs[k].pad_to(vs[k].rows(), slot))?);
-            lits.push(literals::pack_f32(&specs[2], &bs[k])?);
-        }
-        let base = 3 * n;
-        lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
-        lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
-        lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
-        let outs = exe.run(&lits)?;
-        let mut du = Vec::with_capacity(n);
-        let mut dv = Vec::with_capacity(n);
-        let mut db = Vec::with_capacity(n);
-        for k in 0..n {
-            let r = us[k].cols();
-            du.push(
-                literals::unpack_matrix(&exe.info.outputs[3 * k], &outs[3 * k])?.take_cols(r),
-            );
-            dv.push(
-                literals::unpack_matrix(&exe.info.outputs[3 * k + 1], &outs[3 * k + 1])?
-                    .take_cols(r),
-            );
-            db.push(
-                literals::unpack_matrix(&exe.info.outputs[3 * k + 2], &outs[3 * k + 2])?
-                    .into_vec(),
-            );
-        }
-        let loss = literals::unpack_scalar(&exe.info.outputs[3 * n], &outs[3 * n])?;
-        let ncorrect =
-            literals::unpack_scalar(&exe.info.outputs[3 * n + 1], &outs[3 * n + 1])?;
-        Ok(VanillaGrads { du, dv, db, loss, ncorrect })
-    }
-}
-
-/// Pack dense weights + batch for the `dense_grads`/`dense_forward` graphs.
-fn pack_dense(
-    exe: &Executable,
-    ws: &[Matrix],
-    bs: &[Vec<f32>],
-    batch: &Batch,
-) -> Result<Vec<xla::Literal>> {
-    let info = &exe.info;
-    let n_layers = ws.len();
-    ensure!(
-        info.inputs.len() == 2 * n_layers + 3,
-        "{}: unexpected input arity {}",
-        info.name,
-        info.inputs.len()
-    );
-    let mut lits = Vec::with_capacity(info.inputs.len());
-    for k in 0..n_layers {
-        lits.push(literals::pack_matrix(&info.inputs[2 * k], &ws[k])?);
-        lits.push(literals::pack_f32(&info.inputs[2 * k + 1], &bs[k])?);
-    }
-    let base = 2 * n_layers;
-    lits.push(literals::pack_f32(&info.inputs[base], &batch.x)?);
-    lits.push(literals::pack_i32(&info.inputs[base + 1], &batch.y)?);
-    lits.push(literals::pack_f32(&info.inputs[base + 2], &batch.w)?);
-    Ok(lits)
 }

@@ -1,77 +1,35 @@
-//! Full-rank reference trainer — the baseline row of every paper table.
-//!
-//! Gradients come from the backend's `dense_grads` / `dense_forward`
-//! services; weights live on the host and the optimizer is the same
-//! [`FactorOptimizer`] machinery the integrator uses, so timing comparisons
-//! (Fig. 1) measure the algorithms, not different plumbing.
+//! Dense-layer initialization — the full-rank reference rows of every
+//! paper table now train through the unified [`crate::dlrt::Network`]
+//! (every layer [`crate::dlrt::LayerSpec::Dense`]); what remains here is
+//! the weight initialization the reference uses.
 
-use crate::data::{Batch, Batcher, Dataset};
-use crate::dlrt::{FactorOptimizer, OptKind};
 use crate::linalg::{Matrix, Rng};
-use crate::runtime::{ArchInfo, Runtime};
-use crate::Result;
 
-/// Dense trainer state.
-pub struct DenseTrainer {
-    pub arch_name: String,
-    pub arch: ArchInfo,
-    pub ws: Vec<Matrix>,
-    pub bs: Vec<Vec<f32>>,
-    opt_w: Vec<FactorOptimizer>,
-    opt_b: Vec<FactorOptimizer>,
+/// He-normal initialization for one `m x n` layer: `W ~ N(0, 2/n)` — the
+/// variance-preserving choice for ReLU stacks.
+pub fn he_normal(m: usize, n: usize, rng: &mut Rng) -> Matrix {
+    let std = (2.0 / n as f32).sqrt();
+    let mut w = rng.normal_matrix(m, n);
+    w.scale(std);
+    w
 }
 
-impl DenseTrainer {
-    /// He-normal initialization.
-    pub fn new(rt: &Runtime, arch_name: &str, opt: OptKind, rng: &mut Rng) -> Result<Self> {
-        let arch = rt.arch(arch_name)?;
-        let mut ws = Vec::new();
-        let mut bs = Vec::new();
-        for l in &arch.layers {
-            let std = (2.0 / l.n as f32).sqrt();
-            let mut w = rng.normal_matrix(l.m, l.n);
-            w.scale(std);
-            ws.push(w);
-            bs.push(vec![0.0; l.m]);
-        }
-        let n = arch.layers.len();
-        Ok(DenseTrainer {
-            arch_name: arch_name.into(),
-            arch,
-            ws,
-            bs,
-            opt_w: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-            opt_b: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-        })
-    }
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-    /// One SGD/momentum/Adam step on the full weights. Returns (loss, ncorrect).
-    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
-        let grads = rt.dense_grads(&self.arch_name, &self.ws, &self.bs, batch)?;
-        for k in 0..self.ws.len() {
-            self.opt_w[k].update(&mut self.ws[k], &grads.dw[k], lr);
-            self.opt_b[k].update_vec(&mut self.bs[k], &grads.db[k], lr);
-        }
-        Ok((grads.loss, grads.ncorrect))
-    }
-
-    /// Mean loss / accuracy over a dataset via `dense_forward`.
-    pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
-        let cap = rt.batch_cap(&self.arch_name)?;
-        let mut total_loss = 0.0f64;
-        let mut total_correct = 0.0f64;
-        let mut total = 0.0f64;
-        for batch in Batcher::sequential(data, cap) {
-            let stats = rt.dense_forward(&self.arch_name, &self.ws, &self.bs, &batch)?;
-            total_loss += stats.loss as f64 * batch.count as f64;
-            total_correct += stats.ncorrect as f64;
-            total += batch.count as f64;
-        }
-        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
-    }
-
-    /// Total dense parameter count (paper convention, no bias).
-    pub fn param_count(&self) -> usize {
-        self.ws.iter().map(|w| w.rows() * w.cols()).sum()
+    #[test]
+    fn he_normal_has_the_right_scale() {
+        let mut rng = Rng::new(7);
+        let w = he_normal(64, 128, &mut rng);
+        assert_eq!(w.shape(), (64, 128));
+        // empirical variance ≈ 2/n, loosely (64·128 samples)
+        let var: f64 =
+            w.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / (64.0 * 128.0);
+        let expect = 2.0 / 128.0;
+        assert!(
+            (var - expect as f64).abs() < 0.3 * expect as f64,
+            "variance {var} vs expected {expect}"
+        );
     }
 }

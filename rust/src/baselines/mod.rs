@@ -1,17 +1,20 @@
-//! Baselines the paper compares against (and that every table needs):
+//! Baseline initialization & pruning helpers. The baseline *training*
+//! paths (full-rank reference, two-factor vanilla) run through the unified
+//! [`crate::dlrt::Network`] core like everything else; what lives here is
+//! the math that makes a baseline a baseline:
 //!
-//! * [`dense`] — full-rank reference training (the "LeNet5" / "full-rank"
-//!   rows of Tables 1, 5, 6; the red dots of Fig. 3).
-//! * [`vanilla`] — the two-factor `W = U Vᵀ` parameterization of
-//!   [Wang+ 2021, Khodak+ 2021], whose ill-conditioning near small singular
-//!   values Fig. 4 demonstrates.
-//! * [`svd_prune`] — post-hoc SVD truncation of a trained dense net
-//!   (Table 8's first column) and its DLRT retraining counterpart.
+//! * [`dense`] — He-normal initialization for the full-rank reference rows
+//!   of Tables 1, 5, 6 (the red dots of Fig. 3).
+//! * [`vanilla`] — the two initializations of the `W = U Vᵀ`
+//!   parameterization [Wang+ 2021, Khodak+ 2021], including the decaying
+//!   spectrum whose ill-conditioning Fig. 4 demonstrates.
+//! * [`svd_prune`] — post-hoc SVD truncation of a trained net (Table 8's
+//!   first column) feeding the DLRT retraining counterpart.
 
 pub mod dense;
 pub mod svd_prune;
 pub mod vanilla;
 
-pub use dense::DenseTrainer;
+pub use dense::he_normal;
 pub use svd_prune::svd_prune_factors;
-pub use vanilla::{VanillaInit, VanillaTrainer};
+pub use vanilla::{vanilla_factors, VanillaInit};

@@ -1,18 +1,15 @@
-//! Vanilla two-factor low-rank baseline: `W = U Vᵀ`, plain descent on both
-//! factors (the strategy of [Wang+ 2021, Khodak+ 2021]).
+//! Vanilla two-factor initialization: `W = U Vᵀ`, plain descent on both
+//! factors (the strategy of [Wang+ 2021, Khodak+ 2021]). Training runs
+//! through the unified [`crate::dlrt::Network`] (layers of
+//! [`crate::dlrt::LayerSpec::Vanilla`]); this module keeps the two weight
+//! initializations Fig. 4 compares.
 //!
 //! Fig. 4's point: this parameterization is ill-conditioned when `W` has
 //! small singular values — the manifold curvature is `∝ 1/σ_min` — so a
 //! "decay" initialization (exponentially decaying spectrum) slows vanilla
-//! training badly while DLRT is unaffected. [`VanillaInit`] reproduces both
-//! of the figure's initializations.
+//! training badly while DLRT is unaffected.
 
-use crate::backend::LayerFactors;
-use crate::data::{Batch, Batcher, Dataset};
-use crate::dlrt::{FactorOptimizer, OptKind};
 use crate::linalg::{householder_qr, matmul, Matrix, Rng};
-use crate::runtime::{ArchInfo, Runtime};
-use crate::Result;
 
 /// Fig. 4's two weight initializations.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,118 +21,72 @@ pub enum VanillaInit {
     Decay { rate: f32 },
 }
 
-/// Two-factor trainer state.
-pub struct VanillaTrainer {
-    pub arch_name: String,
-    pub arch: ArchInfo,
-    pub us: Vec<Matrix>,
-    pub vs: Vec<Matrix>,
-    pub bs: Vec<Vec<f32>>,
-    opt_u: Vec<FactorOptimizer>,
-    opt_v: Vec<FactorOptimizer>,
-    opt_b: Vec<FactorOptimizer>,
+/// Initialize one layer's two-factor pair `(U: m x r, V: n x r)`.
+pub fn vanilla_factors(
+    m: usize,
+    n: usize,
+    r: usize,
+    init: VanillaInit,
+    rng: &mut Rng,
+) -> (Matrix, Matrix) {
+    let he = (2.0 / n as f32).sqrt();
+    match init {
+        VanillaInit::Plain => {
+            let mut u = rng.normal_matrix(m, r);
+            let mut v = rng.normal_matrix(n, r);
+            // scale so W = U Vᵀ has He-like magnitude
+            let scale = (he / (r as f32).sqrt()).sqrt();
+            u.scale(scale);
+            v.scale(scale);
+            (u, v)
+        }
+        VanillaInit::Decay { rate } => {
+            // W = Q1 D² Q2ᵀ with σ_i = σ_max(He) · rate^i: the top
+            // singular value matches a dense He matrix's edge
+            // (Marchenko-Pastur: σ_max ≈ √(2/n)(√m+√n)) while the
+            // tail decays exponentially — the paper's "random
+            // choice forced to have an exponential decay on the
+            // singular values". Most of the He energy is missing,
+            // which is exactly what makes this run slow (Fig. 4).
+            let q1 = householder_qr(&rng.normal_matrix(m, r));
+            let q2 = householder_qr(&rng.normal_matrix(n, r));
+            let sig_max = (2.0 / n as f32).sqrt() * ((m as f32).sqrt() + (n as f32).sqrt());
+            let mut d = Matrix::zeros(r, r);
+            for i in 0..r {
+                d[(i, i)] = (sig_max * rate.powi(i as i32)).sqrt();
+            }
+            (matmul(&q1, &d), matmul(&q2, &d))
+        }
+    }
 }
 
-impl VanillaTrainer {
-    pub fn new(
-        rt: &Runtime,
-        arch_name: &str,
-        opt: OptKind,
-        rank: usize,
-        init: VanillaInit,
-        rng: &mut Rng,
-    ) -> Result<Self> {
-        let arch = rt.arch(arch_name)?;
-        let cap = rt.rank_cap(arch_name, "vanilla_grads")?.unwrap_or(usize::MAX);
-        let mut us = Vec::new();
-        let mut vs = Vec::new();
-        let mut bs = Vec::new();
-        for l in &arch.layers {
-            let r = rank.max(1).min(cap).min(l.max_rank());
-            let he = (2.0 / l.n as f32).sqrt();
-            let (u, v) = match init {
-                VanillaInit::Plain => {
-                    let mut u = rng.normal_matrix(l.m, r);
-                    let mut v = rng.normal_matrix(l.n, r);
-                    // scale so W = U Vᵀ has He-like magnitude
-                    let scale = (he / (r as f32).sqrt()).sqrt();
-                    u.scale(scale);
-                    v.scale(scale);
-                    (u, v)
-                }
-                VanillaInit::Decay { rate } => {
-                    // W = Q1 D² Q2ᵀ with σ_i = σ_max(He) · rate^i: the top
-                    // singular value matches a dense He matrix's edge
-                    // (Marchenko-Pastur: σ_max ≈ √(2/n)(√m+√n)) while the
-                    // tail decays exponentially — the paper's "random
-                    // choice forced to have an exponential decay on the
-                    // singular values". Most of the He energy is missing,
-                    // which is exactly what makes this run slow (Fig. 4).
-                    let q1 = householder_qr(&rng.normal_matrix(l.m, r));
-                    let q2 = householder_qr(&rng.normal_matrix(l.n, r));
-                    let sig_max =
-                        (2.0 / l.n as f32).sqrt() * ((l.m as f32).sqrt() + (l.n as f32).sqrt());
-                    let mut d = Matrix::zeros(r, r);
-                    for i in 0..r {
-                        d[(i, i)] = (sig_max * rate.powi(i as i32)).sqrt();
-                    }
-                    (matmul(&q1, &d), matmul(&q2, &d))
-                }
-            };
-            us.push(u);
-            vs.push(v);
-            bs.push(vec![0.0; l.m]);
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::jacobi_svd;
+
+    #[test]
+    fn decay_init_has_decaying_spectrum() {
+        let mut rng = Rng::new(11);
+        let (u, v) = vanilla_factors(24, 20, 6, VanillaInit::Decay { rate: 0.5 }, &mut rng);
+        let w = crate::linalg::matmul_nt(&u, &v); // W = U Vᵀ
+        let svd = jacobi_svd(&w);
+        // consecutive singular values halve (up to numerical slack)
+        for i in 1..4 {
+            let ratio = svd.sigma[i] / svd.sigma[i - 1];
+            assert!(
+                (ratio - 0.5).abs() < 0.1,
+                "σ_{i}/σ_{} = {ratio}, expected ≈ 0.5",
+                i - 1
+            );
         }
-        let n = arch.layers.len();
-        Ok(VanillaTrainer {
-            arch_name: arch_name.into(),
-            arch,
-            us,
-            vs,
-            bs,
-            opt_u: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-            opt_v: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-            opt_b: (0..n).map(|_| FactorOptimizer::new(opt)).collect(),
-        })
     }
 
-    pub fn ranks(&self) -> Vec<usize> {
-        self.us.iter().map(|u| u.cols()).collect()
-    }
-
-    /// One simultaneous descent step on `U, V, b`. Returns (loss, ncorrect).
-    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<(f32, f32)> {
-        let grads = rt.vanilla_grads(&self.arch_name, &self.us, &self.vs, &self.bs, batch)?;
-        for k in 0..self.us.len() {
-            self.opt_u[k].update(&mut self.us[k], &grads.du[k], lr);
-            self.opt_v[k].update(&mut self.vs[k], &grads.dv[k], lr);
-            self.opt_b[k].update_vec(&mut self.bs[k], &grads.db[k], lr);
-        }
-        Ok((grads.loss, grads.ncorrect))
-    }
-
-    /// Evaluate via the S-form `forward` service by lifting `U Vᵀ` to
-    /// `U · I · Vᵀ` (identity core).
-    pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
-        let cap = rt.batch_cap(&self.arch_name)?;
-        let eyes: Vec<Matrix> = self.us.iter().map(|u| Matrix::eye(u.cols(), u.cols())).collect();
-        let layers: Vec<LayerFactors<'_>> = self
-            .us
-            .iter()
-            .zip(&eyes)
-            .zip(&self.vs)
-            .zip(&self.bs)
-            .map(|(((u, s), v), b)| LayerFactors { u, s, v, bias: b })
-            .collect();
-        let mut total_loss = 0.0f64;
-        let mut total_correct = 0.0f64;
-        let mut total = 0.0f64;
-        for batch in Batcher::sequential(data, cap) {
-            let stats = rt.forward(&self.arch_name, &layers, &batch)?;
-            total_loss += stats.loss as f64 * batch.count as f64;
-            total_correct += stats.ncorrect as f64;
-            total += batch.count as f64;
-        }
-        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    #[test]
+    fn plain_init_shapes() {
+        let mut rng = Rng::new(12);
+        let (u, v) = vanilla_factors(10, 8, 4, VanillaInit::Plain, &mut rng);
+        assert_eq!(u.shape(), (10, 4));
+        assert_eq!(v.shape(), (8, 4));
     }
 }

@@ -37,10 +37,13 @@ impl Mode {
         }
     }
 
+    /// Parse a mode name. Accepts the canonical names plus the shorthand
+    /// aliases used in `layer_modes` lists: `lowrank`/`adaptive` for
+    /// adaptive DLRT, `fixed` for fixed-rank DLRT.
     pub fn parse(s: &str) -> Result<Mode> {
         Ok(match s {
-            "adaptive_dlrt" => Mode::AdaptiveDlrt,
-            "fixed_dlrt" => Mode::FixedDlrt,
+            "adaptive_dlrt" | "adaptive" | "lowrank" => Mode::AdaptiveDlrt,
+            "fixed_dlrt" | "fixed" => Mode::FixedDlrt,
             "dense" => Mode::Dense,
             "vanilla" => Mode::Vanilla,
             _ => bail!("unknown mode '{s}'"),
@@ -133,7 +136,21 @@ pub struct Config {
     /// are cheaper).
     pub freeze_rank_after_epochs: usize,
     /// Extra orthonormality checks each step (slow; tests/debugging).
+    /// Wired through the trainer into the per-step basis assertions of the
+    /// unified model core.
     pub paranoid: bool,
+    /// Per-layer mode overrides for mixed-parameterization nets, e.g. the
+    /// TRP-style `layer_modes = "dense,dense,lowrank,lowrank"` (dense conv
+    /// prefix + adaptive low-rank dense tail). Empty = `mode` applies to
+    /// every layer; a `_` entry inherits `mode` for that layer. Length
+    /// must match the architecture's layer count.
+    pub layer_modes: Vec<Mode>,
+    /// Per-layer rank overrides; `None` entries (spelled `_` in TOML)
+    /// inherit `init_rank`/`fixed_rank` by mode. Shorter lists leave the
+    /// tail at the default.
+    pub layer_ranks: Vec<Option<usize>>,
+    /// Per-layer τ overrides; `None` entries (spelled `_`) inherit `tau`.
+    pub layer_taus: Vec<Option<f32>>,
 }
 
 impl Config {
@@ -157,13 +174,63 @@ impl Config {
             Some(d) => LrSchedule::Exponential { decay: d },
             None => LrSchedule::Constant,
         };
+        let mode = Mode::parse(doc.get_str("mode").unwrap_or("adaptive_dlrt"))?;
+        let layer_modes: Vec<Mode> = match doc.get_str("layer_modes") {
+            Some(s) if !s.trim().is_empty() => s
+                .split(',')
+                .map(|e| {
+                    let e = e.trim();
+                    // `_` (or an empty entry) inherits the whole-net mode,
+                    // matching the layer_ranks/layer_taus convention
+                    if e.is_empty() || e == "_" {
+                        Ok(mode)
+                    } else {
+                        Mode::parse(e)
+                    }
+                })
+                .collect::<Result<_>>()
+                .context("parsing layer_modes")?,
+            _ => Vec::new(),
+        };
+        let layer_ranks: Vec<Option<usize>> = match doc.get_str("layer_ranks") {
+            Some(s) if !s.trim().is_empty() => s
+                .split(',')
+                .map(|e| -> Result<Option<usize>> {
+                    let e = e.trim();
+                    if e.is_empty() || e == "_" {
+                        Ok(None)
+                    } else {
+                        e.parse::<usize>()
+                            .map(Some)
+                            .with_context(|| format!("layer_ranks entry '{e}'"))
+                    }
+                })
+                .collect::<Result<_>>()?,
+            _ => Vec::new(),
+        };
+        let layer_taus: Vec<Option<f32>> = match doc.get_str("layer_taus") {
+            Some(s) if !s.trim().is_empty() => s
+                .split(',')
+                .map(|e| -> Result<Option<f32>> {
+                    let e = e.trim();
+                    if e.is_empty() || e == "_" {
+                        Ok(None)
+                    } else {
+                        e.parse::<f32>()
+                            .map(Some)
+                            .with_context(|| format!("layer_taus entry '{e}'"))
+                    }
+                })
+                .collect::<Result<_>>()?,
+            _ => Vec::new(),
+        };
         let cfg = Config {
             arch: doc
                 .get_str("arch")
                 .ok_or_else(|| anyhow::anyhow!("config needs `arch`"))?
                 .to_string(),
             backend: str_or("backend", "native"),
-            mode: Mode::parse(doc.get_str("mode").unwrap_or("adaptive_dlrt"))?,
+            mode,
             integrator: Integrator::parse(doc.get_str("integrator").unwrap_or("adam"))?,
             lr: doc.get_f32("lr").unwrap_or(0.001),
             lr_schedule,
@@ -179,6 +246,9 @@ impl Config {
             artifacts_dir: str_or("artifacts_dir", "artifacts"),
             freeze_rank_after_epochs: doc.get_usize("freeze_rank_after_epochs").unwrap_or(0),
             paranoid: doc.get_bool("paranoid").unwrap_or(false),
+            layer_modes,
+            layer_ranks,
+            layer_taus,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -229,6 +299,26 @@ impl Config {
             KvValue::Num(self.freeze_rank_after_epochs as f64),
         );
         doc.insert("paranoid", KvValue::Bool(self.paranoid));
+        if !self.layer_modes.is_empty() {
+            let joined: Vec<&str> = self.layer_modes.iter().map(|m| m.as_str()).collect();
+            doc.insert("layer_modes", KvValue::Str(joined.join(",")));
+        }
+        if !self.layer_ranks.is_empty() {
+            let joined: Vec<String> = self
+                .layer_ranks
+                .iter()
+                .map(|r| r.map(|v| v.to_string()).unwrap_or_else(|| "_".into()))
+                .collect();
+            doc.insert("layer_ranks", KvValue::Str(joined.join(",")));
+        }
+        if !self.layer_taus.is_empty() {
+            let joined: Vec<String> = self
+                .layer_taus
+                .iter()
+                .map(|t| t.map(|v| v.to_string()).unwrap_or_else(|| "_".into()))
+                .collect();
+            doc.insert("layer_taus", KvValue::Str(joined.join(",")));
+        }
         doc.to_string()
     }
 
@@ -246,6 +336,19 @@ impl Config {
         );
         if let LrSchedule::Exponential { decay } = self.lr_schedule {
             ensure!(decay > 0.0 && decay <= 1.0, "decay must be in (0, 1]");
+        }
+        for (k, r) in self.layer_ranks.iter().enumerate() {
+            if let Some(r) = r {
+                ensure!(*r >= 1, "layer_ranks[{k}] must be >= 1 (got {r})");
+            }
+        }
+        for (k, t) in self.layer_taus.iter().enumerate() {
+            if let Some(t) = t {
+                ensure!(
+                    (0.0..1.0).contains(t),
+                    "layer_taus[{k}] must be in [0, 1) (got {t})"
+                );
+            }
         }
         Ok(())
     }
@@ -278,7 +381,42 @@ mod tests {
             assert_eq!(back.lr_schedule, cfg.lr_schedule);
             assert_eq!(back.data, cfg.data);
             assert_eq!(back.seed, cfg.seed);
+            assert_eq!(back.layer_modes, cfg.layer_modes);
+            assert_eq!(back.layer_ranks, cfg.layer_ranks);
+            assert_eq!(back.layer_taus, cfg.layer_taus);
         }
+    }
+
+    #[test]
+    fn per_layer_overrides_parse_and_roundtrip() {
+        let src = r#"
+arch = "lenet"
+layer_modes = "dense, dense, lowrank, _"
+layer_ranks = "_, _, 48, _"
+layer_taus = "_,_,0.2,_"
+"#;
+        let cfg = Config::from_toml_str(src).unwrap();
+        // `_` inherits the whole-net mode (default adaptive_dlrt)
+        assert_eq!(
+            cfg.layer_modes,
+            vec![Mode::Dense, Mode::Dense, Mode::AdaptiveDlrt, Mode::AdaptiveDlrt]
+        );
+        assert_eq!(cfg.layer_ranks, vec![None, None, Some(48), None]);
+        assert_eq!(cfg.layer_taus[2], Some(0.2));
+        let back = Config::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.layer_modes, cfg.layer_modes);
+        assert_eq!(back.layer_ranks, cfg.layer_ranks);
+        assert_eq!(back.layer_taus, cfg.layer_taus);
+        // bad entries are descriptive errors
+        assert!(Config::from_toml_str("arch = \"x\"\nlayer_modes = \"dense,warp\"").is_err());
+        assert!(Config::from_toml_str("arch = \"x\"\nlayer_ranks = \"1,two\"").is_err());
+        // validation catches out-of-range overrides
+        let mut cfg = base();
+        cfg.layer_taus = vec![Some(1.5)];
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.layer_ranks = vec![Some(0)];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

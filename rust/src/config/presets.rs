@@ -28,6 +28,9 @@ fn base(arch: &str) -> Config {
         artifacts_dir: "artifacts".into(),
         freeze_rank_after_epochs: 0,
         paranoid: false,
+        layer_modes: Vec::new(),
+        layer_ranks: Vec::new(),
+        layer_taus: Vec::new(),
     }
 }
 
@@ -119,6 +122,25 @@ pub fn tab1_lenet_dense() -> Config {
     c
 }
 
+/// TRP-style mixed-parameterization LeNet5 (Trained Rank Pruning, Xu+
+/// 2019, trains exactly this shape): the conv prefix stays *dense* while
+/// the wide fully-connected tail trains rank-adaptively. Inexpressible
+/// before the per-layer model core; the proof-of-architecture preset.
+/// Layers: conv 20x25, conv 50x500 (dense) | fc 500x800, fc 10x500
+/// (adaptive; the 10-class head is pinned at full rank as always).
+pub fn trp_lenet(tau: f32) -> Config {
+    let mut c = base("lenet");
+    c.mode = Mode::AdaptiveDlrt;
+    c.layer_modes = vec![Mode::Dense, Mode::Dense, Mode::AdaptiveDlrt, Mode::AdaptiveDlrt];
+    c.tau = tau;
+    c.integrator = Integrator::Sgd;
+    c.lr = 0.05;
+    c.lr_schedule = LrSchedule::Exponential { decay: 0.96 };
+    c.init_rank = 64;
+    c.epochs = 12;
+    c
+}
+
 /// Fig. 4: DLRT vs vanilla UVᵀ on LeNet5, fixed lr 0.01, fixed rank.
 pub fn fig4_dlrt(rank: usize) -> Config {
     let mut c = base("lenet");
@@ -200,6 +222,7 @@ pub fn all() -> Vec<(String, Config)> {
     for tau in [0.11f32, 0.15, 0.2, 0.3] {
         out.push((format!("tab1_tau{tau}"), tab1_lenet(tau)));
     }
+    out.push(("trp_lenet".into(), trp_lenet(0.15)));
     for rank in [8usize, 32] {
         out.push((format!("fig4_dlrt_rank{rank}"), fig4_dlrt(rank)));
         out.push((format!("fig4_vanilla_rank{rank}"), fig4_vanilla(rank)));

@@ -1,14 +1,22 @@
-//! Factor checkpoints: JSON serialization of the per-layer `U, S, V, b`.
+//! Network checkpoints: JSON serialization of per-layer training state.
+//!
+//! **Format v2** covers every layer kind of the unified model core — one
+//! object per layer tagged `"kind": "dlrt" | "dense" | "vanilla"` with the
+//! tensors that kind owns (`U, S, V, b` / `W, b` / `U, V, b`). **v1**
+//! files (KLS-only, untagged `U, S, V, b` layers) keep loading; they map
+//! to all-DLRT layer lists. Restoring a checkpoint into a [`Network`]
+//! verifies that each layer's kind matches the configured `layer_modes` —
+//! a v2 file cannot silently re-parameterize a net.
 //!
 //! JSON keeps checkpoints human-inspectable and diff-able; the low-rank
 //! nets the paper produces are small (tens of KB to a few MB), so no binary
 //! format is warranted.
 
-use crate::dlrt::LowRankFactors;
+use crate::dlrt::{LayerState, LowRankFactors, Network};
 use crate::linalg::Matrix;
 use crate::util::Json;
 use crate::Result;
-use anyhow::Context;
+use anyhow::{bail, ensure, Context};
 use std::path::Path;
 
 fn matrix_to_json(m: &Matrix) -> Json {
@@ -27,24 +35,95 @@ fn matrix_from_json(v: &Json) -> Result<Matrix> {
     Ok(Matrix::from_vec(rows, cols, data))
 }
 
-/// Save factors to a JSON checkpoint.
+/// One layer's persisted state, as loaded from a checkpoint file.
+pub enum CheckpointLayer {
+    /// Factored `U S Vᵀ` + bias (DLRT layers; every v1 layer).
+    Dlrt(LowRankFactors),
+    /// Dense `W` + bias.
+    Dense { w: Matrix, bias: Vec<f32> },
+    /// Two-factor `U Vᵀ` + bias.
+    Vanilla { u: Matrix, v: Matrix, bias: Vec<f32> },
+}
+
+impl CheckpointLayer {
+    /// Kind tag, matching [`LayerState::kind`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CheckpointLayer::Dlrt(_) => "dlrt",
+            CheckpointLayer::Dense { .. } => "dense",
+            CheckpointLayer::Vanilla { .. } => "vanilla",
+        }
+    }
+}
+
+fn factors_to_json(f: &LowRankFactors) -> Vec<(&'static str, Json)> {
+    vec![
+        ("rank", Json::num(f.rank() as f64)),
+        ("u", matrix_to_json(&f.u)),
+        ("s", matrix_to_json(&f.s)),
+        ("v", matrix_to_json(&f.v)),
+        ("bias", Json::f32_array(&f.bias)),
+    ]
+}
+
+fn factors_from_json(l: &Json) -> Result<LowRankFactors> {
+    let f = LowRankFactors {
+        u: matrix_from_json(l.req("u")?)?,
+        s: matrix_from_json(l.req("s")?)?,
+        v: matrix_from_json(l.req("v")?)?,
+        bias: l.req("bias")?.to_f32_vec()?,
+    };
+    ensure!(
+        f.s.rows() == f.s.cols()
+            && f.u.cols() == f.s.rows()
+            && f.v.cols() == f.s.rows()
+            && f.bias.len() == f.u.rows(),
+        "inconsistent factor shapes in checkpoint"
+    );
+    Ok(f)
+}
+
+/// Save KLS-only factors as a **v1** checkpoint (kept for the pruning /
+/// retraining paths that traffic in bare factor lists).
 pub fn save_factors(path: &Path, arch: &str, layers: &[LowRankFactors]) -> Result<()> {
     let doc = Json::obj(vec![
         ("version", Json::num(1.0)),
         ("arch", Json::str(arch)),
-        (
-            "layers",
-            Json::arr(layers.iter().map(|f| {
-                Json::obj(vec![
-                    ("rank", Json::num(f.rank() as f64)),
-                    ("u", matrix_to_json(&f.u)),
-                    ("s", matrix_to_json(&f.s)),
-                    ("v", matrix_to_json(&f.v)),
-                    ("bias", Json::f32_array(&f.bias)),
-                ])
-            })),
-        ),
+        ("layers", Json::arr(layers.iter().map(|f| Json::obj(factors_to_json(f))))),
     ]);
+    write_doc(path, &doc)
+}
+
+/// Save a full [`Network`] — any mix of layer kinds — as a **v2**
+/// checkpoint.
+pub fn save_network(path: &Path, net: &Network) -> Result<()> {
+    let layers = net.layers.iter().map(|ls| match ls {
+        LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+            let mut fields = vec![("kind", Json::str("dlrt"))];
+            fields.extend(factors_to_json(&layer.factors));
+            Json::obj(fields)
+        }
+        LayerState::Dense { w, bias, .. } => Json::obj(vec![
+            ("kind", Json::str("dense")),
+            ("w", matrix_to_json(w)),
+            ("bias", Json::f32_array(bias)),
+        ]),
+        LayerState::Vanilla { u, v, bias, .. } => Json::obj(vec![
+            ("kind", Json::str("vanilla")),
+            ("u", matrix_to_json(u)),
+            ("v", matrix_to_json(v)),
+            ("bias", Json::f32_array(bias)),
+        ]),
+    });
+    let doc = Json::obj(vec![
+        ("version", Json::num(2.0)),
+        ("arch", Json::str(&*net.arch_name)),
+        ("layers", Json::arr(layers)),
+    ]);
+    write_doc(path, &doc)
+}
+
+fn write_doc(path: &Path, doc: &Json) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -53,34 +132,148 @@ pub fn save_factors(path: &Path, arch: &str, layers: &[LowRankFactors]) -> Resul
     Ok(())
 }
 
-/// Load factors from a JSON checkpoint; returns `(arch_name, layers)`.
-pub fn load_factors(path: &Path) -> Result<(String, Vec<LowRankFactors>)> {
+/// Load any checkpoint version; returns `(arch_name, layers)`.
+pub fn load_network(path: &Path) -> Result<(String, Vec<CheckpointLayer>)> {
     let s = std::fs::read_to_string(path)
         .with_context(|| format!("reading checkpoint {}", path.display()))?;
     let v = Json::parse(&s).context("parsing checkpoint")?;
+    let version = match v.get("version") {
+        Some(j) => j.as_usize()?,
+        None => 1,
+    };
+    ensure!(
+        version == 1 || version == 2,
+        "unsupported checkpoint version {version} (this build reads v1 and v2)"
+    );
     let arch = v.req("arch")?.as_str()?.to_string();
     let layers = v
         .req("layers")?
         .as_arr()?
         .iter()
-        .map(|l| -> Result<LowRankFactors> {
-            let f = LowRankFactors {
-                u: matrix_from_json(l.req("u")?)?,
-                s: matrix_from_json(l.req("s")?)?,
-                v: matrix_from_json(l.req("v")?)?,
-                bias: l.req("bias")?.to_f32_vec()?,
+        .enumerate()
+        .map(|(k, l)| -> Result<CheckpointLayer> {
+            let kind = match l.get("kind") {
+                Some(j) => j.as_str()?,
+                None => "dlrt", // v1 layers are untagged KLS factors
             };
-            anyhow::ensure!(
-                f.s.rows() == f.s.cols()
-                    && f.u.cols() == f.s.rows()
-                    && f.v.cols() == f.s.rows()
-                    && f.bias.len() == f.u.rows(),
-                "inconsistent factor shapes in checkpoint"
-            );
-            Ok(f)
+            Ok(match kind {
+                "dlrt" => CheckpointLayer::Dlrt(factors_from_json(l)?),
+                "dense" => {
+                    let w = matrix_from_json(l.req("w")?)?;
+                    let bias = l.req("bias")?.to_f32_vec()?;
+                    ensure!(bias.len() == w.rows(), "layer {k}: bias/weight mismatch");
+                    CheckpointLayer::Dense { w, bias }
+                }
+                "vanilla" => {
+                    let u = matrix_from_json(l.req("u")?)?;
+                    let v2 = matrix_from_json(l.req("v")?)?;
+                    let bias = l.req("bias")?.to_f32_vec()?;
+                    ensure!(
+                        u.cols() == v2.cols() && bias.len() == u.rows(),
+                        "layer {k}: inconsistent two-factor shapes"
+                    );
+                    CheckpointLayer::Vanilla { u, v: v2, bias }
+                }
+                other => bail!("layer {k}: unknown checkpoint layer kind '{other}'"),
+            })
         })
         .collect::<Result<_>>()?;
     Ok((arch, layers))
+}
+
+/// Load a KLS-only checkpoint as bare factors; errors if the file holds
+/// dense or vanilla layers (use [`load_network`] + [`restore_network`]).
+pub fn load_factors(path: &Path) -> Result<(String, Vec<LowRankFactors>)> {
+    let (arch, layers) = load_network(path)?;
+    let factors = layers
+        .into_iter()
+        .enumerate()
+        .map(|(k, l)| match l {
+            CheckpointLayer::Dlrt(f) => Ok(f),
+            other => bail!(
+                "layer {k} is a '{}' layer — this checkpoint needs a full network restore \
+                 (load_network), not a factor load",
+                other.kind()
+            ),
+        })
+        .collect::<Result<_>>()?;
+    Ok((arch, factors))
+}
+
+/// Restore persisted layer states into a built network. Every layer's kind
+/// must match what the network's configured `layer_modes` produced, and
+/// every tensor must match the architecture's dimensions — a checkpoint
+/// cannot silently re-parameterize or re-shape a net. Optimizer moments
+/// reset (the loaded basis is new).
+pub fn restore_network(net: &mut Network, layers: Vec<CheckpointLayer>) -> Result<()> {
+    ensure!(
+        layers.len() == net.layers.len(),
+        "checkpoint has {} layers, network has {}",
+        layers.len(),
+        net.layers.len()
+    );
+    for (k, ((ls, cl), li)) in
+        net.layers.iter_mut().zip(layers).zip(&net.arch.layers).enumerate()
+    {
+        match (ls, cl) {
+            (
+                LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer },
+                CheckpointLayer::Dlrt(f),
+            ) => {
+                ensure!(
+                    f.m() == li.m && f.n() == li.n,
+                    "layer {k}: checkpoint factors are {}x{}, arch wants {}x{}",
+                    f.m(),
+                    f.n(),
+                    li.m,
+                    li.n
+                );
+                layer.set_factors(f);
+            }
+            (
+                LayerState::Dense { w, bias, opt_w, opt_b },
+                CheckpointLayer::Dense { w: w2, bias: b2 },
+            ) => {
+                ensure!(
+                    w2.shape() == (li.m, li.n),
+                    "layer {k}: checkpoint weight {:?}, arch wants {}x{}",
+                    w2.shape(),
+                    li.m,
+                    li.n
+                );
+                *w = w2;
+                *bias = b2;
+                opt_w.reset();
+                opt_b.reset();
+            }
+            (
+                LayerState::Vanilla { u, v, bias, opt_u, opt_v, opt_b },
+                CheckpointLayer::Vanilla { u: u2, v: v2, bias: b2 },
+            ) => {
+                ensure!(
+                    u2.rows() == li.m && v2.rows() == li.n,
+                    "layer {k}: checkpoint two-factor dims {:?}/{:?}, arch wants {}x{}",
+                    u2.shape(),
+                    v2.shape(),
+                    li.m,
+                    li.n
+                );
+                *u = u2;
+                *v = v2;
+                *bias = b2;
+                opt_u.reset();
+                opt_v.reset();
+                opt_b.reset();
+            }
+            (ls, cl) => bail!(
+                "layer {k}: checkpoint holds a '{}' layer but the configured layer_modes \
+                 make this layer '{}' — fix layer_modes or pick the matching checkpoint",
+                cl.kind(),
+                ls.kind()
+            ),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -90,7 +283,7 @@ mod tests {
     use crate::util::testutil::TestDir;
 
     #[test]
-    fn roundtrip() {
+    fn v1_roundtrip() {
         let mut rng = Rng::new(3);
         let layers = vec![
             LowRankFactors::random(8, 6, 3, &mut rng),
@@ -109,6 +302,25 @@ mod tests {
             assert!(a.v.fro_dist(&b.v) == 0.0);
             assert_eq!(a.bias, b.bias);
         }
+    }
+
+    #[test]
+    fn v1_without_version_field_still_loads() {
+        // the earliest files in the wild predate the version key
+        let dir = TestDir::new();
+        let p = dir.join("old.json");
+        std::fs::write(
+            &p,
+            r#"{"arch":"a","layers":[{"rank":1,
+                "u":{"rows":2,"cols":1,"data":[1,0]},
+                "s":{"rows":1,"cols":1,"data":[2]},
+                "v":{"rows":3,"cols":1,"data":[0,1,0]},
+                "bias":[0,0]}]}"#,
+        )
+        .unwrap();
+        let (arch, layers) = load_network(&p).unwrap();
+        assert_eq!(arch, "a");
+        assert!(matches!(layers[0], CheckpointLayer::Dlrt(_)));
     }
 
     #[test]
@@ -131,5 +343,14 @@ mod tests {
         )
         .unwrap();
         assert!(load_factors(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let dir = TestDir::new();
+        let p = dir.join("future.json");
+        std::fs::write(&p, r#"{"version":3,"arch":"a","layers":[]}"#).unwrap();
+        let err = load_network(&p).unwrap_err().to_string();
+        assert!(err.contains("version 3"), "{err}");
     }
 }

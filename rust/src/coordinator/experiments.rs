@@ -5,11 +5,11 @@
 //! logic here means the "what the paper measured" encoding exists exactly
 //! once (DESIGN.md §6 experiment index).
 
-use super::trainer::{ModelState, Trainer};
-use crate::baselines::{svd_prune_factors, VanillaInit, VanillaTrainer};
+use super::trainer::Trainer;
+use crate::baselines::{svd_prune_factors, VanillaInit};
 use crate::config::{presets, Config, Mode};
 use crate::data::Batcher;
-use crate::dlrt::KlsIntegrator;
+use crate::dlrt::{LayerSpec, Network, OptKind, StepTimings};
 use crate::linalg::Rng;
 use crate::metrics::params::LayerCount;
 use crate::metrics::{self, RunRecord, StepTimer, TimingStats};
@@ -54,6 +54,9 @@ pub struct TimingRow {
     pub train_batch: TimingStats,
     /// Full-dataset prediction wall clock.
     pub predict: TimingStats,
+    /// Mean per-step phase breakdown (kl graph / host K-L / s graph /
+    /// host S) — where the step time goes.
+    pub phases: StepTimings,
 }
 
 /// Fig. 1 (a,b) / Tables 3-4: train-batch and predict timings of fixed-rank
@@ -97,18 +100,25 @@ fn time_model(
     let batches: Vec<_> = batcher.epoch(&t.split.train).take(train_iters + 1).collect();
     let lr = t.cfg.lr;
     let mut train_timer = StepTimer::new();
+    let mut phases = StepTimings::default();
     // one warmup step (compiles the executables)
     let mut first = true;
     for batch in batches.iter().cycle().take(train_iters + 1) {
         if first {
-            step_once(t, batch, lr)?;
+            t.model.step(&t.rt, batch, lr)?;
             first = false;
             continue;
         }
         train_timer.start();
-        step_once(t, batch, lr)?;
+        let st = t.model.step(&t.rt, batch, lr)?;
         train_timer.stop();
+        phases.accumulate(&st.timings);
     }
+    let n = train_iters.max(1) as f64;
+    phases.kl_graph_s /= n;
+    phases.host_kl_s /= n;
+    phases.s_graph_s /= n;
+    phases.host_s_s /= n;
     let mut predict_timer = StepTimer::new();
     // warmup
     t.evaluate_on(&t.split.train)?;
@@ -122,22 +132,8 @@ fn time_model(
         ranks: t.model.ranks(),
         train_batch: train_timer.stats(),
         predict: predict_timer.stats(),
+        phases,
     })
-}
-
-fn step_once(t: &mut Trainer, batch: &crate::data::Batch, lr: f32) -> Result<()> {
-    match &mut t.model {
-        ModelState::Kls(k) => {
-            k.step(&t.rt, batch, lr)?;
-        }
-        ModelState::Dense(d) => {
-            d.step(&t.rt, batch, lr)?;
-        }
-        ModelState::Vanilla(v) => {
-            v.step(&t.rt, batch, lr)?;
-        }
-    }
-    Ok(())
 }
 
 // ============================================================ Fig. 2 / 6
@@ -196,6 +192,16 @@ pub fn tab1_lenet(taus: &[f32], n_epochs: usize, n_data: usize) -> Result<Vec<Ru
     Ok(out)
 }
 
+/// TRP-style mixed net (dense conv prefix + adaptive low-rank dense tail)
+/// on LeNet5 — the configuration Trained Rank Pruning trains, expressible
+/// only with the per-layer model core.
+pub fn trp_lenet(tau: f32, n_epochs: usize, n_data: usize) -> Result<RunRecord> {
+    let mut cfg = presets::trp_lenet(tau);
+    cfg.epochs = n_epochs;
+    cfg.data = crate::config::DataSource::Mnist { root: "data/mnist".into(), n_synth: n_data };
+    run(cfg, &format!("trp_lenet_tau{tau}"))
+}
+
 // ================================================================= Fig. 4
 
 /// One per-step learning curve.
@@ -218,10 +224,8 @@ pub fn fig4_curves(rank: usize, n_steps: usize, n_data: usize) -> Result<Vec<Cur
     let mut batcher = Batcher::new(t.split.train.len(), cap, true, 13);
     let batches: Vec<_> = batcher.epoch(&t.split.train).collect();
     let mut losses = Vec::new();
-    if let ModelState::Kls(k) = &mut t.model {
-        for batch in batches.iter().cycle().take(n_steps) {
-            losses.push(k.step(&t.rt, batch, lr)?.loss);
-        }
+    for batch in batches.iter().cycle().take(n_steps) {
+        losses.push(t.model.step(&t.rt, batch, lr)?.loss);
     }
     curves.push(Curve { label: "DLRT".into(), losses });
 
@@ -232,19 +236,18 @@ pub fn fig4_curves(rank: usize, n_steps: usize, n_data: usize) -> Result<Vec<Cur
     ] {
         let mut t = Trainer::new(cfg.clone())?;
         let mut rng = Rng::new(cfg.seed ^ 0xF16);
-        let mut v = VanillaTrainer::new(
+        t.model = Network::uniform(
             &t.rt,
             &cfg.arch,
-            crate::dlrt::OptKind::Sgd,
-            rank,
-            init,
+            LayerSpec::Vanilla { rank, init },
+            OptKind::Sgd,
+            false,
             &mut rng,
         )?;
         let mut losses = Vec::new();
         for batch in batches.iter().cycle().take(n_steps) {
-            losses.push(v.step(&t.rt, batch, lr)?.0);
+            losses.push(t.model.step(&t.rt, batch, lr)?.loss);
         }
-        t.model = ModelState::Vanilla(v);
         curves.push(Curve { label: label.into(), losses });
     }
     Ok(curves)
@@ -314,15 +317,11 @@ pub fn tab8_pruning(
     cfg.data = crate::config::DataSource::Mnist { root: "data/mnist".into(), n_synth: n_data };
     let mut t = Trainer::new(cfg.clone())?;
     let dense_rec = t.run("tab8_dense", |_| {})?;
-    let dense = match &t.model {
-        ModelState::Dense(d) => d,
-        _ => unreachable!(),
-    };
 
     let arch = t.rt.arch(&cfg.arch)?;
     let mut rows = Vec::new();
     for &rank in ranks {
-        let pruned = svd_prune_factors(dense, rank);
+        let pruned = svd_prune_factors(&t.model, rank);
         // raw truncation accuracy
         let mut cfg_eval = cfg.clone();
         cfg_eval.mode = Mode::FixedDlrt;
@@ -363,10 +362,10 @@ pub fn tab8_pruning(
 
 // ====================================================== shared: descent etc.
 
-/// Measures whether a KLS integrator descends on a fixed batch — used by
-/// the ablation benches (Thm 2 in vivo).
+/// Measures whether a network descends on a fixed batch — used by the
+/// ablation benches (Thm 2 in vivo).
 pub fn descent_profile(
-    integrator: &mut KlsIntegrator,
+    net: &mut Network,
     rt: &crate::runtime::Runtime,
     batch: &crate::data::Batch,
     lr: f32,
@@ -374,7 +373,7 @@ pub fn descent_profile(
 ) -> Result<Vec<f32>> {
     let mut losses = Vec::with_capacity(steps);
     for _ in 0..steps {
-        losses.push(integrator.step(rt, batch, lr)?.loss);
+        losses.push(net.step(rt, batch, lr)?.loss);
     }
     Ok(losses)
 }

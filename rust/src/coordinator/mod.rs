@@ -1,14 +1,17 @@
 //! L3 coordinator: the training orchestrator.
 //!
 //! Drives the full experiment lifecycle: data loading/splitting/
-//! normalization, model construction per [`crate::config::Mode`], the
-//! epoch/step loop with the KLS integrator (or a baseline), rank-freeze
-//! scheduling, metrics recording and checkpoints. Every example and bench
-//! is a thin wrapper over [`Trainer`].
+//! normalization, building the unified per-layer [`crate::dlrt::Network`]
+//! from a [`crate::config::Config`] (whole-net mode or per-layer
+//! `layer_modes`), the epoch/step loop, rank-freeze scheduling, metrics
+//! recording and checkpoints. Every example and bench is a thin wrapper
+//! over [`Trainer`].
 
 pub mod checkpoint;
 pub mod experiments;
 pub mod trainer;
 
-pub use checkpoint::{load_factors, save_factors};
-pub use trainer::{train, ModelState, Trainer, ValOrTest};
+pub use checkpoint::{
+    load_factors, load_network, restore_network, save_factors, save_network, CheckpointLayer,
+};
+pub use trainer::{layer_specs, train, Trainer, ValOrTest};

@@ -1,39 +1,25 @@
-//! The training loop.
+//! The training loop, on the unified per-layer model core.
 
-use crate::baselines::{DenseTrainer, VanillaInit, VanillaTrainer};
+use crate::baselines::VanillaInit;
 use crate::config::{Config, DataSource, Integrator, Mode};
 use crate::data::{self, Batcher, Dataset, Split};
-use crate::dlrt::{KlsIntegrator, LowRankFactors, OptKind, PIN_THRESHOLD};
+use crate::dlrt::{
+    LayerSpec, LayerState, LowRankFactors, Network, OptKind, StepTimings, PIN_THRESHOLD,
+};
 use crate::linalg::Rng;
 use crate::metrics::params::LayerCount;
 use crate::metrics::{self, EpochRecord, RunRecord, StepTimer};
-use crate::runtime::Runtime;
+use crate::runtime::{ArchInfo, Runtime};
 use crate::Result;
+use anyhow::ensure;
 use std::path::Path;
-
-/// The model being trained, by mode.
-pub enum ModelState {
-    Kls(KlsIntegrator),
-    Dense(DenseTrainer),
-    Vanilla(VanillaTrainer),
-}
-
-impl ModelState {
-    pub fn ranks(&self) -> Vec<usize> {
-        match self {
-            ModelState::Kls(k) => k.ranks(),
-            ModelState::Dense(_) => vec![],
-            ModelState::Vanilla(v) => v.ranks(),
-        }
-    }
-}
 
 /// Orchestrates one experiment run.
 pub struct Trainer {
     pub cfg: Config,
     pub rt: Runtime,
     pub split: Split,
-    pub model: ModelState,
+    pub model: Network,
     rng: Rng,
 }
 
@@ -44,6 +30,57 @@ fn opt_kind(cfg: &Config) -> OptKind {
         Integrator::Momentum => OptKind::Momentum { beta: cfg.momentum },
         Integrator::Adam => OptKind::adam_default(),
     }
+}
+
+/// Resolve the config's whole-net mode + per-layer overrides into one
+/// [`LayerSpec`] per architecture layer: `layer_modes` picks each layer's
+/// parameterization (empty = `mode` everywhere), `layer_ranks`/`layer_taus`
+/// override the rank/τ defaults per layer.
+pub fn layer_specs(cfg: &Config, arch: &ArchInfo) -> Result<Vec<LayerSpec>> {
+    let n = arch.layers.len();
+    if !cfg.layer_modes.is_empty() {
+        ensure!(
+            cfg.layer_modes.len() == n,
+            "layer_modes has {} entries but arch '{}' has {} layers",
+            cfg.layer_modes.len(),
+            cfg.arch,
+            n
+        );
+    }
+    ensure!(
+        cfg.layer_ranks.len() <= n,
+        "layer_ranks has {} entries but arch '{}' has {} layers",
+        cfg.layer_ranks.len(),
+        cfg.arch,
+        n
+    );
+    ensure!(
+        cfg.layer_taus.len() <= n,
+        "layer_taus has {} entries but arch '{}' has {} layers",
+        cfg.layer_taus.len(),
+        cfg.arch,
+        n
+    );
+    let mut specs = Vec::with_capacity(n);
+    for k in 0..n {
+        let mode = cfg.layer_modes.get(k).copied().unwrap_or(cfg.mode);
+        let rank_override = cfg.layer_ranks.get(k).copied().flatten();
+        let tau = cfg.layer_taus.get(k).copied().flatten().unwrap_or(cfg.tau);
+        specs.push(match mode {
+            Mode::AdaptiveDlrt => LayerSpec::Adaptive {
+                init_rank: rank_override.unwrap_or(cfg.init_rank),
+                tau,
+                min_rank: cfg.min_rank,
+            },
+            Mode::FixedDlrt => LayerSpec::Fixed { rank: rank_override.unwrap_or(cfg.fixed_rank) },
+            Mode::Dense => LayerSpec::Dense,
+            Mode::Vanilla => LayerSpec::Vanilla {
+                rank: rank_override.unwrap_or(cfg.fixed_rank),
+                init: VanillaInit::Plain,
+            },
+        });
+    }
+    Ok(specs)
 }
 
 /// Load + split + normalize data per the config (paper §5.1: 50K/10K/10K
@@ -84,46 +121,17 @@ impl Trainer {
             split.train.dim,
             arch.input_dim
         );
-        let model = match cfg.mode {
-            Mode::AdaptiveDlrt => ModelState::Kls(KlsIntegrator::new(
-                &rt,
-                &cfg.arch,
-                opt_kind(&cfg),
-                cfg.init_rank,
-                true,
-                cfg.tau,
-                cfg.min_rank,
-                &mut rng,
-            )?),
-            Mode::FixedDlrt => ModelState::Kls(KlsIntegrator::new(
-                &rt,
-                &cfg.arch,
-                opt_kind(&cfg),
-                cfg.fixed_rank,
-                false,
-                cfg.tau,
-                cfg.min_rank,
-                &mut rng,
-            )?),
-            Mode::Dense => {
-                ModelState::Dense(DenseTrainer::new(&rt, &cfg.arch, opt_kind(&cfg), &mut rng)?)
-            }
-            Mode::Vanilla => ModelState::Vanilla(VanillaTrainer::new(
-                &rt,
-                &cfg.arch,
-                opt_kind(&cfg),
-                cfg.fixed_rank,
-                VanillaInit::Plain,
-                &mut rng,
-            )?),
-        };
+        let specs = layer_specs(&cfg, &arch)?;
+        let model =
+            Network::new(&rt, &cfg.arch, &specs, opt_kind(&cfg), cfg.paranoid, &mut rng)?;
         Ok(Trainer { cfg, rt, split, model, rng })
     }
 
-    /// Replace the model with a pre-built integrator (pruning/retraining).
+    /// Replace the model with a pre-built all-DLRT network from factors
+    /// (pruning/retraining paths).
     pub fn with_factors(mut self, layers: Vec<LowRankFactors>, adaptive: bool) -> Result<Self> {
         let arch = self.rt.arch(&self.cfg.arch)?;
-        self.model = ModelState::Kls(KlsIntegrator::from_layers(
+        let mut model = Network::from_factors(
             &self.cfg.arch,
             arch,
             layers,
@@ -131,7 +139,9 @@ impl Trainer {
             adaptive,
             self.cfg.tau,
             self.cfg.min_rank,
-        ));
+        );
+        model.paranoid = self.cfg.paranoid;
+        self.model = model;
         Ok(self)
     }
 
@@ -147,12 +157,12 @@ impl Trainer {
             if self.cfg.freeze_rank_after_epochs > 0
                 && epoch >= self.cfg.freeze_rank_after_epochs
             {
-                if let ModelState::Kls(k) = &mut self.model {
-                    k.adaptive = false;
-                }
+                self.model.freeze_ranks();
             }
             let mut train_timer = StepTimer::new();
+            let mut phase = StepTimings::default();
             let mut loss_sum = 0.0f64;
+            let mut loss_after_kl_sum = 0.0f64;
             let mut correct = 0.0f64;
             let mut seen = 0.0f64;
             let mut steps = 0usize;
@@ -167,17 +177,12 @@ impl Trainer {
                     break;
                 }
                 train_timer.start();
-                let (loss, nc) = match &mut self.model {
-                    ModelState::Kls(k) => {
-                        let st = k.step(&self.rt, &batch, lr)?;
-                        (st.loss, st.ncorrect)
-                    }
-                    ModelState::Dense(d) => d.step(&self.rt, &batch, lr)?,
-                    ModelState::Vanilla(v) => v.step(&self.rt, &batch, lr)?,
-                };
+                let st = self.model.step(&self.rt, &batch, lr)?;
                 train_timer.stop();
-                loss_sum += loss as f64 * batch.count as f64;
-                correct += nc as f64;
+                phase.accumulate(&st.timings);
+                loss_sum += st.loss as f64 * batch.count as f64;
+                loss_after_kl_sum += st.loss_after_kl as f64 * batch.count as f64;
+                correct += st.ncorrect as f64;
                 seen += batch.count as f64;
                 steps += 1;
             }
@@ -194,6 +199,11 @@ impl Trainer {
                 ranks: self.model.ranks(),
                 train_seconds: train_timer.samples().iter().sum(),
                 eval_seconds: eval_timer.samples().iter().sum(),
+                train_loss_after_kl: (loss_after_kl_sum / seen.max(1.0)) as f32,
+                kl_graph_seconds: phase.kl_graph_s,
+                host_kl_seconds: phase.host_kl_s,
+                s_graph_seconds: phase.s_graph_s,
+                host_s_seconds: phase.host_s_s,
             };
             on_epoch(&rec);
             epochs.push(rec);
@@ -222,33 +232,28 @@ impl Trainer {
     }
 
     pub fn evaluate_on(&self, data: &Dataset) -> Result<(f32, f32)> {
-        match &self.model {
-            ModelState::Kls(k) => k.evaluate(&self.rt, data),
-            ModelState::Dense(d) => d.evaluate(&self.rt, data),
-            ModelState::Vanilla(v) => v.evaluate(&self.rt, data),
-        }
+        self.model.evaluate(&self.rt, data)
     }
 
     /// (eval, train, dense) parameter counts under the paper's conventions
     /// (see `metrics::params`): conv archs use the compact train count
-    /// (Table 1), MLP archs the augmented one (Tables 5-6); pinned MLP
-    /// heads are counted dense, conv heads low-rank — exactly how the
-    /// paper's tables break down (verified digit-for-digit in params.rs).
+    /// (Table 1), MLP archs the augmented one (Tables 5-6); dense layers
+    /// (and pinned MLP heads) are counted dense, everything else low-rank
+    /// at its effective rank — exactly how the paper's tables break down
+    /// (verified digit-for-digit in params.rs).
     pub fn param_accounting(&self) -> (usize, usize, usize) {
-        let arch = self.rt.arch(&self.cfg.arch).expect("arch exists");
+        let arch = &self.model.arch;
         let is_conv = arch.layers.iter().any(|l| l.kind == "conv");
-        let ranks = self.model.ranks();
         let layers: Vec<LayerCount> = arch
             .layers
             .iter()
-            .enumerate()
-            .map(|(k, l)| {
+            .zip(&self.model.layers)
+            .map(|(l, ls)| {
                 let pinned = l.max_rank() <= PIN_THRESHOLD;
-                let r = ranks.get(k).copied().unwrap_or(l.max_rank());
-                if ranks.is_empty() || (pinned && !is_conv) {
-                    LayerCount::Dense { m: l.m, n: l.n }
-                } else {
-                    LayerCount::LowRank { m: l.m, n: l.n, r }
+                match ls {
+                    LayerState::Dense { .. } => LayerCount::Dense { m: l.m, n: l.n },
+                    _ if pinned && !is_conv => LayerCount::Dense { m: l.m, n: l.n },
+                    _ => LayerCount::LowRank { m: l.m, n: l.n, r: ls.rank() },
                 }
             })
             .collect();

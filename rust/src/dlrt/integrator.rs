@@ -1,16 +1,18 @@
-//! The rank-adaptive KLS integrator (paper Algorithm 1).
+//! Per-layer KLS math (paper Algorithm 1) — one [`DlrtLayer`] owns one
+//! layer's factors, optimizer moments and staged basis state.
 //!
-//! One training step on a batch:
+//! Algorithm 1 is a *per-layer* procedure; the whole-net scheduling lives
+//! in [`crate::dlrt::Network`], which phases every layer's work as:
 //!
-//! 1. **K & L steps** — one [`Runtime::kl_grads`] evaluation returns every
-//!    layer's `∂K` and `∂L` (two taped backward passes, §4.2); the host
-//!    applies the per-factor optimizer to `K⁰ = U S` and `L⁰ = V Sᵀ`.
-//! 2. **Basis update** — Householder QR of `K¹` (fixed-rank) or of the
+//! 1. **K & L steps** — the backend's Kl-phase sweep returns this layer's
+//!    `∂K` and `∂L` (§4.2); [`DlrtLayer::apply_kl`] applies the per-factor
+//!    optimizer to `K⁰ = U S` and `L⁰ = V Sᵀ`, then
+//! 2. **basis update** — Householder QR of `K¹` (fixed-rank) or of the
 //!    augmented `[K¹ | U⁰]` (adaptive, Alg. 1 lines 9-10); projections
-//!    `M = U¹ᵀU⁰`, `N = V¹ᵀV⁰`, `S̃ = M S⁰ Nᵀ`.
-//! 3. **S step** — one [`Runtime::s_grads`] evaluation on the new bases
-//!    returns `∂S` and `∂bias`; optimizer applied on the host.
-//! 4. **Truncation** (adaptive) — Jacobi SVD of `S¹`, truncate at
+//!    `M = U¹ᵀU⁰`, `N = V¹ᵀV⁰`, `S̃ = M S⁰ Nᵀ` — staged on the layer.
+//! 3. **S step** — the backend's S-phase sweep on the staged bases returns
+//!    `∂S` and `∂bias`; [`DlrtLayer::apply_s`] applies the optimizer, then
+//! 4. **truncation** (adaptive) — Jacobi SVD of `S¹`, truncate at
 //!    `ϑ = τ‖Σ‖_F` (Alg. 1 lines 17-21), rotate `U, V` by the singular
 //!    vectors. The new core is diagonal.
 //!
@@ -26,249 +28,179 @@
 //! stays at 10 in every table.
 
 use super::{FactorOptimizer, LowRankFactors, OptKind};
-use crate::backend::LayerFactors;
-use crate::data::Batch;
-use crate::linalg::{householder_qr, jacobi_svd, matmul, matmul_tn, orthonormality_error, Matrix, Rng};
-use crate::runtime::{ArchInfo, Runtime};
+use crate::backend::LayerParams;
+use crate::linalg::{
+    householder_qr, jacobi_svd, matmul, matmul_tn, orthonormality_error, Matrix,
+};
 use crate::Result;
-use anyhow::ensure;
+use anyhow::{anyhow, ensure};
 
 /// Layers at or below this max-rank are trained at full rank and excluded
 /// from adaptation (classifier heads).
 pub const PIN_THRESHOLD: usize = 16;
 
-/// Metrics of one integrator step.
-#[derive(Debug, Clone, Copy)]
-pub struct StepStats {
-    /// Loss measured by the K-form forward (before any update this step).
-    pub loss: f32,
-    /// Weighted #correct on this batch (same forward).
-    pub ncorrect: f32,
-    /// Loss measured by the S-step forward (after the K/L update).
-    pub loss_after_kl: f32,
-    /// Per-phase wall clock (§Perf breakdown).
-    pub timings: StepTimings,
-}
-
-/// Where one integrator step's wall clock went.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct StepTimings {
-    /// kl_grads backend evaluation (incl. any packing).
-    pub kl_graph_s: f64,
-    /// Host K/L optimizer + QR + projections.
-    pub host_kl_s: f64,
-    /// s_grads backend evaluation (incl. any packing).
-    pub s_graph_s: f64,
-    /// Host S optimizer + SVD truncation + basis rotation.
-    pub host_s_s: f64,
-}
-
-/// Per-layer staged state between the K/L and S phases.
+/// Staged per-layer state between the K/L and S phases: the updated bases
+/// `U¹, V¹` and the projected core `S̃`.
 struct Staged {
     u1: Matrix,
     v1: Matrix,
     s_tilde: Matrix,
 }
 
-/// The integrator: factor state + optimizer states + rank policy.
-pub struct KlsIntegrator {
-    pub arch_name: String,
-    pub arch: ArchInfo,
-    pub layers: Vec<LowRankFactors>,
-    opt_k: Vec<FactorOptimizer>,
-    opt_l: Vec<FactorOptimizer>,
-    opt_s: Vec<FactorOptimizer>,
-    opt_b: Vec<FactorOptimizer>,
-    /// Rank adaptation on/off (Alg. 1's `adaptive` flag). Mutable so the
-    /// trainer can freeze ranks after the settling epochs (§5.1).
-    pub adaptive: bool,
-    pub tau: f32,
-    pub min_rank: usize,
-    /// Extra orthonormality assertions each step.
-    pub paranoid: bool,
+/// One layer's DLRT state: factors at the true current rank, one optimizer
+/// per factor tensor, and (between the K/L and S phases of a step) the
+/// staged bases.
+pub struct DlrtLayer {
+    pub factors: LowRankFactors,
+    opt_k: FactorOptimizer,
+    opt_l: FactorOptimizer,
+    opt_s: FactorOptimizer,
+    opt_b: FactorOptimizer,
+    /// The layer matrix's `min(m, n)` — decides pinning.
+    max_rank: usize,
+    staged: Option<Staged>,
 }
 
-impl KlsIntegrator {
-    /// Random initialization at `init_rank` (clamped per layer and by the
-    /// backend's largest supported `kl_grads` rank, if it has one).
-    pub fn new(
-        rt: &Runtime,
-        arch_name: &str,
-        opt: OptKind,
-        init_rank: usize,
-        adaptive: bool,
-        tau: f32,
-        min_rank: usize,
-        rng: &mut Rng,
-    ) -> Result<Self> {
-        let arch = rt.arch(arch_name)?;
-        let cap = rt.rank_cap(arch_name, "kl_grads")?.unwrap_or(usize::MAX);
-        let layers: Vec<LowRankFactors> = arch
-            .layers
-            .iter()
-            .map(|l| {
-                let r = if l.max_rank() <= PIN_THRESHOLD {
-                    l.max_rank()
-                } else {
-                    init_rank.min(cap)
-                };
-                LowRankFactors::random(l.m, l.n, r, rng)
-            })
-            .collect();
-        Ok(Self::from_layers(arch_name, arch, layers, opt, adaptive, tau, min_rank))
-    }
-
-    /// Build from existing factors (pruning/retraining paths).
-    pub fn from_layers(
-        arch_name: &str,
-        arch: ArchInfo,
-        layers: Vec<LowRankFactors>,
-        opt: OptKind,
-        adaptive: bool,
-        tau: f32,
-        min_rank: usize,
-    ) -> Self {
-        let n = layers.len();
-        let mk = |_| FactorOptimizer::new(opt);
-        KlsIntegrator {
-            arch_name: arch_name.into(),
-            arch,
-            layers,
-            opt_k: (0..n).map(mk).collect(),
-            opt_l: (0..n).map(mk).collect(),
-            opt_s: (0..n).map(mk).collect(),
-            opt_b: (0..n).map(mk).collect(),
-            adaptive,
-            tau,
-            min_rank,
-            paranoid: false,
+impl DlrtLayer {
+    pub fn new(factors: LowRankFactors, opt: OptKind, max_rank: usize) -> DlrtLayer {
+        DlrtLayer {
+            factors,
+            opt_k: FactorOptimizer::new(opt),
+            opt_l: FactorOptimizer::new(opt),
+            opt_s: FactorOptimizer::new(opt),
+            opt_b: FactorOptimizer::new(opt),
+            max_rank,
+            staged: None,
         }
     }
 
-    /// Current per-layer ranks.
-    pub fn ranks(&self) -> Vec<usize> {
-        self.layers.iter().map(|f| f.rank()).collect()
+    /// Current true rank.
+    pub fn rank(&self) -> usize {
+        self.factors.rank()
     }
 
-    /// Is layer `k` excluded from rank adaptation?
-    pub fn pinned(&self, k: usize) -> bool {
-        self.arch.layers[k].max_rank() <= PIN_THRESHOLD
+    /// Is this layer excluded from rank adaptation (tiny classifier head)?
+    pub fn pinned(&self) -> bool {
+        self.max_rank <= PIN_THRESHOLD
     }
 
-    /// Borrowed factor views for a backend call.
-    fn factor_refs(&self) -> Vec<LayerFactors<'_>> {
-        self.layers
-            .iter()
-            .map(|f| LayerFactors { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
-            .collect()
+    /// Borrowed factored view of the current parameters.
+    pub fn params(&self) -> LayerParams<'_> {
+        let f = &self.factors;
+        LayerParams::Factored { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias }
     }
 
-    /// One full KLS training step on a batch.
-    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
-        let n_layers = self.layers.len();
-        let mut timings = StepTimings::default();
-        let t0 = std::time::Instant::now();
+    /// Borrowed factored view of the staged (augmented) bases — the inputs
+    /// of the S-phase gradient sweep. Panics if no K/L phase is staged;
+    /// the [`crate::dlrt::Network`] scheduler guarantees the ordering.
+    pub fn staged_params(&self) -> LayerParams<'_> {
+        let st = self.staged.as_ref().expect("staged K/L state present (scheduler invariant)");
+        LayerParams::Factored {
+            u: &st.u1,
+            s: &st.s_tilde,
+            v: &st.v1,
+            bias: &self.factors.bias,
+        }
+    }
 
-        // ---- K & L gradient evaluation (one backend call) ----------------
-        let kl = rt.kl_grads(&self.arch_name, &self.factor_refs(), batch)?;
-        timings.kl_graph_s = t0.elapsed().as_secs_f64();
-        let t0 = std::time::Instant::now();
+    /// K/L half of one step (Alg. 1 lines 5-15): optimizer steps on
+    /// `K⁰ = U S` and `L⁰ = V Sᵀ`, QR basis update (augmented to
+    /// `min(2r, m, n, s_cap)` when `adaptive` and not pinned), and the
+    /// `S̃` projection — staged on the layer until [`DlrtLayer::apply_s`].
+    ///
+    /// `paranoid` adds per-step orthonormality assertions on the new bases.
+    pub fn apply_kl(
+        &mut self,
+        dk: &Matrix,
+        dl: &Matrix,
+        lr: f32,
+        adaptive: bool,
+        s_cap: usize,
+        paranoid: bool,
+    ) -> Result<()> {
+        let f = &self.factors;
+        let r = f.rank();
+        let (m, n) = (f.m(), f.n());
+        let mut k1 = f.k();
+        self.opt_k.update(&mut k1, dk, lr);
+        let mut l1 = f.l();
+        self.opt_l.update(&mut l1, dl, lr);
 
         // The augmented rank is capped by the largest rank the backend can
         // evaluate an S-step at (compiled-bucket ceiling on XLA, unbounded
         // natively) — the basis can only grow as far as its gradients can
         // be computed (DESIGN.md §2, bucket policy).
-        let s_cap = rt.rank_cap(&self.arch_name, "s_grads")?.unwrap_or(usize::MAX);
-
-        // ---- host K/L optimizer steps + basis update ---------------------
-        let mut staged = Vec::with_capacity(n_layers);
-        for k in 0..n_layers {
-            let f = &self.layers[k];
-            let r = f.rank();
-            let (m, n) = (f.m(), f.n());
-            let mut k1 = f.k();
-            self.opt_k[k].update(&mut k1, &kl.dk[k], lr);
-            let mut l1 = f.l();
-            self.opt_l[k].update(&mut l1, &kl.dl[k], lr);
-
-            let raug = (2 * r).min(m).min(n).min(s_cap);
-            let augment = self.adaptive && !self.pinned(k) && raug > r;
-            let (u1, v1) = if augment {
-                let u1 = householder_qr(&k1.hcat(&f.u)).take_cols(raug);
-                let v1 = householder_qr(&l1.hcat(&f.v)).take_cols(raug);
-                (u1, v1)
-            } else {
-                (householder_qr(&k1), householder_qr(&l1))
-            };
-            if self.paranoid {
-                ensure!(orthonormality_error(&u1) < 1e-3, "layer {k}: U1 lost orthonormality");
-                ensure!(orthonormality_error(&v1) < 1e-3, "layer {k}: V1 lost orthonormality");
-            }
-            // S̃ = (U¹ᵀ U⁰) S⁰ (V⁰ᵀ V¹) — Alg. 1 lines 11-15
-            let m_k = matmul_tn(&u1, &f.u);
-            let n_k = matmul_tn(&v1, &f.v);
-            let s_tilde = matmul(&matmul(&m_k, &f.s), &n_k.transpose());
-            staged.push(Staged { u1, v1, s_tilde });
+        let raug = (2 * r).min(m).min(n).min(s_cap);
+        let augment = adaptive && !self.pinned() && raug > r;
+        let f = &self.factors;
+        let (u1, v1) = if augment {
+            let u1 = householder_qr(&k1.hcat(&f.u)).take_cols(raug);
+            let v1 = householder_qr(&l1.hcat(&f.v)).take_cols(raug);
+            (u1, v1)
+        } else {
+            (householder_qr(&k1), householder_qr(&l1))
+        };
+        if paranoid {
+            ensure!(orthonormality_error(&u1) < 1e-3, "U1 lost orthonormality");
+            ensure!(orthonormality_error(&v1) < 1e-3, "V1 lost orthonormality");
         }
+        // S̃ = (U¹ᵀ U⁰) S⁰ (V⁰ᵀ V¹) — Alg. 1 lines 11-15
+        let m_k = matmul_tn(&u1, &f.u);
+        let n_k = matmul_tn(&v1, &f.v);
+        let s_tilde = matmul(&matmul(&m_k, &f.s), &n_k.transpose());
+        self.staged = Some(Staged { u1, v1, s_tilde });
+        Ok(())
+    }
 
-        timings.host_kl_s = t0.elapsed().as_secs_f64();
-        let t0 = std::time::Instant::now();
+    /// S half of one step: optimizer steps on `S̃` and the bias, then —
+    /// when a `(τ, min_rank)` truncation policy is given — Alg. 1 lines
+    /// 17-21: SVD-truncate the core at `ϑ = τ‖Σ‖_F` and rotate the bases.
+    /// Consumes the staged K/L state.
+    pub fn apply_s(
+        &mut self,
+        ds: &Matrix,
+        db: &[f32],
+        lr: f32,
+        truncate: Option<(f32, usize)>,
+    ) -> Result<()> {
+        let st = self
+            .staged
+            .take()
+            .ok_or_else(|| anyhow!("S update without a staged K/L phase"))?;
+        let mut s1 = st.s_tilde;
+        self.opt_s.update(&mut s1, ds, lr);
+        self.opt_b.update_vec(&mut self.factors.bias, db, lr);
 
-        // ---- S step (one backend call on the staged bases) ---------------
-        let staged_refs: Vec<LayerFactors<'_>> = staged
-            .iter()
-            .zip(&self.layers)
-            .map(|(st, f)| LayerFactors { u: &st.u1, s: &st.s_tilde, v: &st.v1, bias: &f.bias })
-            .collect();
-        let sg = rt.s_grads(&self.arch_name, &staged_refs, batch)?;
-        drop(staged_refs);
-        timings.s_graph_s = t0.elapsed().as_secs_f64();
-        let t0 = std::time::Instant::now();
-
-        // ---- host S/bias optimizer steps + truncation --------------------
-        for (k, st) in staged.into_iter().enumerate() {
-            let mut s1 = st.s_tilde;
-            self.opt_s[k].update(&mut s1, &sg.ds[k], lr);
-            let truncate = self.adaptive && !self.pinned(k);
-            let f = &mut self.layers[k];
-            self.opt_b[k].update_vec(&mut f.bias, &sg.db[k], lr);
-
-            if truncate {
-                // Alg. 1 lines 17-21: SVD-truncate the core, rotate bases.
+        match truncate {
+            Some((tau, min_rank)) => {
                 let svd = jacobi_svd(&s1);
-                let theta = self.tau * svd.sigma_fro();
-                let r_new = svd.truncation_rank(theta, self.min_rank);
+                let theta = tau * svd.sigma_fro();
+                let r_new = svd.truncation_rank(theta, min_rank);
                 let mut s_next = Matrix::zeros(r_new, r_new);
                 for i in 0..r_new {
                     s_next[(i, i)] = svd.sigma[i];
                 }
-                f.u = matmul(&st.u1, &svd.u.take_cols(r_new));
-                f.v = matmul(&st.v1, &svd.vt.transpose().take_cols(r_new));
-                f.s = s_next;
-            } else {
-                f.u = st.u1;
-                f.v = st.v1;
-                f.s = s1;
+                self.factors.u = matmul(&st.u1, &svd.u.take_cols(r_new));
+                self.factors.v = matmul(&st.v1, &svd.vt.transpose().take_cols(r_new));
+                self.factors.s = s_next;
+            }
+            None => {
+                self.factors.u = st.u1;
+                self.factors.v = st.v1;
+                self.factors.s = s1;
             }
         }
-
-        timings.host_s_s = t0.elapsed().as_secs_f64();
-        Ok(StepStats { loss: kl.loss, ncorrect: kl.ncorrect, loss_after_kl: sg.loss, timings })
+        Ok(())
     }
 
-    /// Evaluate loss/accuracy over a dataset via the backend's `forward`.
-    /// Returns `(mean_loss, accuracy)`.
-    pub fn evaluate(&self, rt: &Runtime, data: &crate::data::Dataset) -> Result<(f32, f32)> {
-        let batch_cap = rt.batch_cap(&self.arch_name)?;
-        let mut total_loss = 0.0f64;
-        let mut total_correct = 0.0f64;
-        let mut total = 0.0f64;
-        for batch in crate::data::Batcher::sequential(data, batch_cap) {
-            let stats = rt.forward(&self.arch_name, &self.factor_refs(), &batch)?;
-            total_loss += stats.loss as f64 * batch.count as f64;
-            total_correct += stats.ncorrect as f64;
-            total += batch.count as f64;
-        }
-        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    /// Replace the factors wholesale (checkpoint restore). Drops any staged
+    /// state and resets every optimizer moment — the basis is new.
+    pub fn set_factors(&mut self, factors: LowRankFactors) {
+        self.factors = factors;
+        self.staged = None;
+        self.opt_k.reset();
+        self.opt_l.reset();
+        self.opt_s.reset();
+        self.opt_b.reset();
     }
 }

@@ -1,18 +1,22 @@
-//! The DLRT core: low-rank factor state, per-factor optimizers, and the
-//! KLS basis-update & Galerkin integrator (paper Algorithm 1).
+//! The unified model core: per-layer training state for every weight
+//! parameterization, the per-layer KLS basis-update & Galerkin math (paper
+//! Algorithm 1), per-factor optimizers, and the [`Network`] step scheduler
+//! that phases it all.
 //!
-//! The heavy gradient evaluations run inside the compiled L2 graphs
-//! (`kl_grads`, `s_grads`); this module owns everything the graphs cannot:
-//! the dynamically-shaped host linear algebra (QR re-orthogonalization,
-//! basis augmentation, SVD truncation), the optimizer states, and the rank
-//! bookkeeping that drives bucket selection.
+//! The heavy gradient evaluations run behind the two-call
+//! [`crate::backend::ComputeBackend`] contract; this module owns everything
+//! the graphs cannot: the dynamically-shaped host linear algebra (QR
+//! re-orthogonalization, basis augmentation, SVD truncation), the optimizer
+//! states, and the per-layer rank bookkeeping.
 
 mod factors;
 mod integrator;
+mod network;
 mod optimizer;
 
 pub use factors::LowRankFactors;
-pub use integrator::{KlsIntegrator, StepStats, StepTimings, PIN_THRESHOLD};
+pub use integrator::{DlrtLayer, PIN_THRESHOLD};
+pub use network::{LayerSpec, LayerState, Network, StepStats, StepTimings};
 pub use optimizer::{FactorOptimizer, OptKind};
 
 /// Rank at or below which a layer is pinned (see [`integrator`] docs).

@@ -1,0 +1,474 @@
+//! The unified per-layer model core: one [`Network`] engine drives every
+//! parameterization the repo trains — rank-adaptive DLRT, fixed-rank DLRT,
+//! dense, two-factor vanilla — *and any per-layer mix of them* (the
+//! TRP-style dense-conv-prefix + low-rank-tail nets of Xu+ 2019, the
+//! heterogeneous per-layer rank policies of Shin+ 2025).
+//!
+//! A network is a list of [`LayerState`]s, each owning its weights,
+//! optimizer moments and rank policy. [`Network::step`] is the one step
+//! scheduler, phasing the work exactly as Algorithm 1 does:
+//!
+//! 1. **gradient eval** — one backend sweep ([`GradPhase::Kl`]) returns
+//!    every layer's phase-1 gradients: `∂K/∂L` for factored layers, full
+//!    `∂W/∂b` (or `∂U/∂V/∂b`) for dense (two-factor) layers;
+//! 2. **host K/L update** — factored layers run the optimizer + QR
+//!    augmentation and stage their new bases; non-factored layers take
+//!    their complete optimizer update here;
+//! 3. **S-step eval** — a second sweep ([`GradPhase::S`]) on the staged
+//!    bases returns `∂S/∂b` for the factored layers — *skipped entirely*
+//!    when the net has no factored layer, so dense/vanilla nets pay
+//!    exactly one backend call per step;
+//! 4. **truncation** — adaptive factored layers SVD-truncate their core at
+//!    their per-layer `τ`.
+//!
+//! Phases a layer doesn't need are skipped per layer; phases no layer
+//! needs are skipped per step.
+
+use super::integrator::{DlrtLayer, PIN_THRESHOLD};
+use super::{FactorOptimizer, LowRankFactors, OptKind};
+use crate::backend::{GradPhase, LayerGrads, LayerParams};
+use crate::baselines::{he_normal, vanilla_factors, VanillaInit};
+use crate::data::{Batch, Batcher, Dataset};
+use crate::linalg::{Matrix, Rng};
+use crate::runtime::{ArchInfo, Runtime};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+/// Metrics of one scheduler step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Loss measured by the phase-1 forward (before any update this step).
+    pub loss: f32,
+    /// Weighted #correct on this batch (same forward).
+    pub ncorrect: f32,
+    /// Loss measured by the S-phase forward (after the K/L and dense
+    /// updates). Equals `loss` when the S phase was skipped (no factored
+    /// layer in the net).
+    pub loss_after_kl: f32,
+    /// Per-phase wall clock (§Perf breakdown).
+    pub timings: StepTimings,
+}
+
+/// Where one scheduler step's wall clock went.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTimings {
+    /// Phase-1 (`kl`) backend evaluation (incl. any packing).
+    pub kl_graph_s: f64,
+    /// Host K/L optimizer + QR + projections (+ dense/vanilla updates).
+    pub host_kl_s: f64,
+    /// S-phase backend evaluation (incl. any packing).
+    pub s_graph_s: f64,
+    /// Host S optimizer + SVD truncation + basis rotation.
+    pub host_s_s: f64,
+}
+
+impl StepTimings {
+    /// Running sum (epoch aggregation).
+    pub fn accumulate(&mut self, other: &StepTimings) {
+        self.kl_graph_s += other.kl_graph_s;
+        self.host_kl_s += other.host_kl_s;
+        self.s_graph_s += other.s_graph_s;
+        self.host_s_s += other.host_s_s;
+    }
+
+    /// Total seconds across all four phases.
+    pub fn total(&self) -> f64 {
+        self.kl_graph_s + self.host_kl_s + self.s_graph_s + self.host_s_s
+    }
+}
+
+/// What one layer should be, when building a fresh [`Network`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerSpec {
+    /// Rank-adaptive DLRT at `init_rank` with a per-layer truncation
+    /// policy.
+    Adaptive { init_rank: usize, tau: f32, min_rank: usize },
+    /// Fixed-rank DLRT.
+    Fixed { rank: usize },
+    /// Dense full-rank layer.
+    Dense,
+    /// Two-factor `W = U Vᵀ` layer (Fig. 4 baseline).
+    Vanilla { rank: usize, init: VanillaInit },
+}
+
+/// One layer's training state: weights + optimizer moments + rank policy.
+pub enum LayerState {
+    /// Rank-adaptive DLRT layer: truncates at `ϑ = τ‖Σ‖_F`, never below
+    /// `min_rank`.
+    DlrtAdaptive { layer: DlrtLayer, tau: f32, min_rank: usize },
+    /// Fixed-rank DLRT layer (basis updates, no augmentation/truncation).
+    DlrtFixed { layer: DlrtLayer },
+    /// Dense layer: plain optimizer steps on `W, b` in phase 1.
+    Dense {
+        w: Matrix,
+        bias: Vec<f32>,
+        opt_w: FactorOptimizer,
+        opt_b: FactorOptimizer,
+    },
+    /// Two-factor `W = U Vᵀ` layer: simultaneous descent on `U, V, b`.
+    Vanilla {
+        u: Matrix,
+        v: Matrix,
+        bias: Vec<f32>,
+        opt_u: FactorOptimizer,
+        opt_v: FactorOptimizer,
+        opt_b: FactorOptimizer,
+    },
+}
+
+impl LayerState {
+    /// Borrowed parameter view for a backend call.
+    pub fn params(&self) -> LayerParams<'_> {
+        match self {
+            LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+                layer.params()
+            }
+            LayerState::Dense { w, bias, .. } => LayerParams::Dense { w, bias },
+            LayerState::Vanilla { u, v, bias, .. } => LayerParams::TwoFactor { u, v, bias },
+        }
+    }
+
+    /// Parameter view for the S-phase sweep: staged bases for DLRT layers,
+    /// the (already updated) current parameters for everything else.
+    fn staged_params(&self) -> LayerParams<'_> {
+        match self {
+            LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+                layer.staged_params()
+            }
+            other => other.params(),
+        }
+    }
+
+    /// Does this layer use the factored `U S Vᵀ` parameterization (and
+    /// hence participate in the S phase)?
+    pub fn is_factored(&self) -> bool {
+        matches!(
+            self,
+            LayerState::DlrtAdaptive { .. } | LayerState::DlrtFixed { .. }
+        )
+    }
+
+    /// The DLRT state, when this layer has one.
+    pub fn dlrt(&self) -> Option<&DlrtLayer> {
+        match self {
+            LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+                Some(layer)
+            }
+            _ => None,
+        }
+    }
+
+    /// Effective rank of the layer's weight representation: the true DLRT
+    /// rank, `min(m, n)` for dense layers, the factor width for vanilla.
+    pub fn rank(&self) -> usize {
+        match self {
+            LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+                layer.rank()
+            }
+            LayerState::Dense { w, .. } => w.rows().min(w.cols()),
+            LayerState::Vanilla { u, .. } => u.cols(),
+        }
+    }
+
+    /// Checkpoint kind tag ("dlrt" | "dense" | "vanilla").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LayerState::DlrtAdaptive { .. } | LayerState::DlrtFixed { .. } => "dlrt",
+            LayerState::Dense { .. } => "dense",
+            LayerState::Vanilla { .. } => "vanilla",
+        }
+    }
+}
+
+/// The unified model: per-layer states plus the arch they parameterize.
+pub struct Network {
+    pub arch_name: String,
+    pub arch: ArchInfo,
+    pub layers: Vec<LayerState>,
+    /// Extra orthonormality assertions each step (`Config.paranoid`).
+    pub paranoid: bool,
+}
+
+impl Network {
+    /// Build a fresh network from per-layer specs (random initialization).
+    /// DLRT ranks are clamped per layer and by the backend's largest
+    /// supported phase-1 rank, if it has one; tiny layers
+    /// (`min(m,n) ≤ PIN_THRESHOLD`) train at full rank regardless.
+    pub fn new(
+        rt: &Runtime,
+        arch_name: &str,
+        specs: &[LayerSpec],
+        opt: OptKind,
+        paranoid: bool,
+        rng: &mut Rng,
+    ) -> Result<Network> {
+        let arch = rt.arch(arch_name)?;
+        ensure!(
+            specs.len() == arch.layers.len(),
+            "{} layer specs for arch '{arch_name}' with {} layers",
+            specs.len(),
+            arch.layers.len()
+        );
+        // Only DLRT layers consult the backend's rank ceiling (their
+        // phase-1 gradients come from the kl_grads family); skip the query
+        // otherwise — on the artifact backend it would demand kl_grads
+        // artifacts that dense- or vanilla-only manifests never compiled.
+        // Vanilla ranks clamp to the layer dimensions alone: the two-call
+        // contract cannot see the vanilla_grads bucket ladder, so an
+        // oversized rank surfaces at the first step as the adapter's
+        // "rank exceeds compiled slot" error instead of a silent clamp.
+        let needs_dlrt_cap = specs
+            .iter()
+            .any(|s| matches!(s, LayerSpec::Adaptive { .. } | LayerSpec::Fixed { .. }));
+        let cap = if needs_dlrt_cap {
+            rt.rank_cap(arch_name, GradPhase::Kl)?.unwrap_or(usize::MAX)
+        } else {
+            usize::MAX
+        };
+        let mut layers = Vec::with_capacity(specs.len());
+        for (li, spec) in arch.layers.iter().zip(specs) {
+            let max_rank = li.max_rank();
+            let state = match *spec {
+                LayerSpec::Adaptive { init_rank, tau, min_rank } => {
+                    let r = if max_rank <= PIN_THRESHOLD { max_rank } else { init_rank.min(cap) };
+                    LayerState::DlrtAdaptive {
+                        layer: DlrtLayer::new(
+                            LowRankFactors::random(li.m, li.n, r, rng),
+                            opt,
+                            max_rank,
+                        ),
+                        tau,
+                        min_rank,
+                    }
+                }
+                LayerSpec::Fixed { rank } => {
+                    let r = if max_rank <= PIN_THRESHOLD { max_rank } else { rank.min(cap) };
+                    LayerState::DlrtFixed {
+                        layer: DlrtLayer::new(
+                            LowRankFactors::random(li.m, li.n, r, rng),
+                            opt,
+                            max_rank,
+                        ),
+                    }
+                }
+                LayerSpec::Dense => LayerState::Dense {
+                    w: he_normal(li.m, li.n, rng),
+                    bias: vec![0.0; li.m],
+                    opt_w: FactorOptimizer::new(opt),
+                    opt_b: FactorOptimizer::new(opt),
+                },
+                LayerSpec::Vanilla { rank, init } => {
+                    let r = rank.max(1).min(max_rank);
+                    let (u, v) = vanilla_factors(li.m, li.n, r, init, rng);
+                    LayerState::Vanilla {
+                        u,
+                        v,
+                        bias: vec![0.0; li.m],
+                        opt_u: FactorOptimizer::new(opt),
+                        opt_v: FactorOptimizer::new(opt),
+                        opt_b: FactorOptimizer::new(opt),
+                    }
+                }
+            };
+            layers.push(state);
+        }
+        Ok(Network { arch_name: arch_name.into(), arch, layers, paranoid })
+    }
+
+    /// Convenience: the same spec for every layer (the four pure modes).
+    pub fn uniform(
+        rt: &Runtime,
+        arch_name: &str,
+        spec: LayerSpec,
+        opt: OptKind,
+        paranoid: bool,
+        rng: &mut Rng,
+    ) -> Result<Network> {
+        let n = rt.arch(arch_name)?.layers.len();
+        Network::new(rt, arch_name, &vec![spec; n], opt, paranoid, rng)
+    }
+
+    /// Build an all-DLRT network from existing factors (pruning/retraining
+    /// and checkpoint paths).
+    pub fn from_factors(
+        arch_name: &str,
+        arch: ArchInfo,
+        factors: Vec<LowRankFactors>,
+        opt: OptKind,
+        adaptive: bool,
+        tau: f32,
+        min_rank: usize,
+    ) -> Network {
+        let layers: Vec<LayerState> = arch
+            .layers
+            .iter()
+            .zip(factors)
+            .map(|(li, f)| {
+                let layer = DlrtLayer::new(f, opt, li.max_rank());
+                if adaptive {
+                    LayerState::DlrtAdaptive { layer, tau, min_rank }
+                } else {
+                    LayerState::DlrtFixed { layer }
+                }
+            })
+            .collect();
+        Network { arch_name: arch_name.into(), arch, layers, paranoid: false }
+    }
+
+    /// Per-layer effective ranks — empty for a pure dense net (which has
+    /// no meaningful rank trajectory to record).
+    pub fn ranks(&self) -> Vec<usize> {
+        if self.layers.iter().all(|l| matches!(l, LayerState::Dense { .. })) {
+            return Vec::new();
+        }
+        self.layers.iter().map(|l| l.rank()).collect()
+    }
+
+    /// Stop rank adaptation: every adaptive DLRT layer becomes fixed-rank
+    /// (the trainer's `freeze_rank_after_epochs` schedule, §5.1).
+    pub fn freeze_ranks(&mut self) {
+        for ls in &mut self.layers {
+            if matches!(ls, LayerState::DlrtAdaptive { .. }) {
+                // swap through an inert placeholder to take the DlrtLayer
+                // by value (the variants own their state)
+                let placeholder = LayerState::Dense {
+                    w: Matrix::zeros(0, 0),
+                    bias: Vec::new(),
+                    opt_w: FactorOptimizer::new(OptKind::Sgd),
+                    opt_b: FactorOptimizer::new(OptKind::Sgd),
+                };
+                let LayerState::DlrtAdaptive { layer, .. } = std::mem::replace(ls, placeholder)
+                else {
+                    unreachable!("guarded by the matches! above");
+                };
+                *ls = LayerState::DlrtFixed { layer };
+            }
+        }
+    }
+
+    /// Is any layer still rank-adaptive?
+    pub fn adaptive(&self) -> bool {
+        self.layers.iter().any(|l| matches!(l, LayerState::DlrtAdaptive { .. }))
+    }
+
+    /// One scheduler step on a batch (module docs). Returns the phase-1
+    /// loss/#correct plus the per-phase breakdown.
+    pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let mut timings = StepTimings::default();
+        let t0 = std::time::Instant::now();
+
+        // ---- phase 1: one gradient sweep over the current parameters ----
+        let params: Vec<LayerParams<'_>> = self.layers.iter().map(|l| l.params()).collect();
+        let kl = rt.grads(&self.arch_name, &params, GradPhase::Kl, batch)?;
+        drop(params);
+        timings.kl_graph_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+
+        ensure!(
+            kl.layers.len() == self.layers.len(),
+            "backend returned {} gradient entries for {} layers",
+            kl.layers.len(),
+            self.layers.len()
+        );
+        // The S-phase rank ceiling only matters when an S phase will run —
+        // don't demand s_grads artifacts for dense/vanilla-only nets.
+        let any_factored = self.layers.iter().any(|l| l.is_factored());
+        let s_cap = if any_factored {
+            rt.rank_cap(&self.arch_name, GradPhase::S)?.unwrap_or(usize::MAX)
+        } else {
+            usize::MAX
+        };
+
+        // ---- host K/L phase; non-factored layers fully update here ------
+        let paranoid = self.paranoid;
+        for (k, (ls, g)) in self.layers.iter_mut().zip(kl.layers).enumerate() {
+            match (ls, g) {
+                (LayerState::DlrtAdaptive { layer, .. }, LayerGrads::Kl { dk, dl }) => {
+                    layer
+                        .apply_kl(&dk, &dl, lr, true, s_cap, paranoid)
+                        .with_context(|| format!("layer {k}"))?;
+                }
+                (LayerState::DlrtFixed { layer }, LayerGrads::Kl { dk, dl }) => {
+                    layer
+                        .apply_kl(&dk, &dl, lr, false, s_cap, paranoid)
+                        .with_context(|| format!("layer {k}"))?;
+                }
+                (LayerState::Dense { w, bias, opt_w, opt_b }, LayerGrads::Dense { dw, db }) => {
+                    opt_w.update(w, &dw, lr);
+                    opt_b.update_vec(bias, &db, lr);
+                }
+                (
+                    LayerState::Vanilla { u, v, bias, opt_u, opt_v, opt_b },
+                    LayerGrads::TwoFactor { du, dv, db },
+                ) => {
+                    opt_u.update(u, &du, lr);
+                    opt_v.update(v, &dv, lr);
+                    opt_b.update_vec(bias, &db, lr);
+                }
+                _ => bail!(
+                    "layer {k}: backend returned a mismatched gradient variant in the K/L phase"
+                ),
+            }
+        }
+        timings.host_kl_s = t0.elapsed().as_secs_f64();
+
+        // ---- S phase: skipped entirely when no layer is factored --------
+        let mut loss_after_kl = kl.loss;
+        if any_factored {
+            let t0 = std::time::Instant::now();
+            let staged: Vec<LayerParams<'_>> =
+                self.layers.iter().map(|l| l.staged_params()).collect();
+            let sg = rt.grads(&self.arch_name, &staged, GradPhase::S, batch)?;
+            drop(staged);
+            timings.s_graph_s = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+
+            ensure!(
+                sg.layers.len() == self.layers.len(),
+                "backend returned {} gradient entries for {} layers",
+                sg.layers.len(),
+                self.layers.len()
+            );
+            for (k, (ls, g)) in self.layers.iter_mut().zip(sg.layers).enumerate() {
+                match (ls, g) {
+                    (
+                        LayerState::DlrtAdaptive { layer, tau, min_rank },
+                        LayerGrads::S { ds, db },
+                    ) => {
+                        let policy =
+                            if layer.pinned() { None } else { Some((*tau, *min_rank)) };
+                        layer.apply_s(&ds, &db, lr, policy)?;
+                    }
+                    (LayerState::DlrtFixed { layer }, LayerGrads::S { ds, db }) => {
+                        layer.apply_s(&ds, &db, lr, None)?;
+                    }
+                    (other, LayerGrads::None) if !other.is_factored() => {}
+                    _ => bail!(
+                        "layer {k}: backend returned a mismatched gradient variant in the S phase"
+                    ),
+                }
+            }
+            loss_after_kl = sg.loss;
+            timings.host_s_s = t0.elapsed().as_secs_f64();
+        }
+
+        Ok(StepStats { loss: kl.loss, ncorrect: kl.ncorrect, loss_after_kl, timings })
+    }
+
+    /// Evaluate loss/accuracy over a dataset via the backend's `forward`.
+    /// Returns `(mean_loss, accuracy)`.
+    pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
+        let batch_cap = rt.batch_cap(&self.arch_name)?;
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0.0f64;
+        let params: Vec<LayerParams<'_>> = self.layers.iter().map(|l| l.params()).collect();
+        for batch in Batcher::sequential(data, batch_cap) {
+            let stats = rt.forward(&self.arch_name, &params, &batch)?;
+            total_loss += stats.loss as f64 * batch.count as f64;
+            total_correct += stats.ncorrect as f64;
+            total += batch.count as f64;
+        }
+        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+    }
+}

@@ -5,14 +5,18 @@
 //! (Schotthöfer, Zangrando, Kusch, Ceruti, Tudisco — NeurIPS 2022).
 //!
 //! Three-layer architecture (see `DESIGN.md`):
-//! * **L3** — the training coordinator: KLS integrator sequencing, rank
-//!   adaptation, optimizers, data pipeline, metrics, CLI.
-//! * **L2** — the pluggable compute-backend layer ([`backend`]): who
-//!   evaluates the `kl_grads` / `s_grads` / `forward` graphs. The default
+//! * **L3** — the training coordinator over the unified per-layer model
+//!   core ([`dlrt::Network`]): every layer independently picks its
+//!   parameterization (adaptive/fixed DLRT, dense, two-factor vanilla —
+//!   mixes included), and one step scheduler phases Algorithm 1 across
+//!   them; plus rank adaptation, optimizers, data pipeline, metrics, CLI.
+//! * **L2** — the pluggable compute-backend layer ([`backend`]): two calls
+//!   (`grads` over a per-layer parameter list + `forward`). The default
 //!   [`backend::NativeBackend`] is pure Rust — hand-derived backward passes
 //!   batched over the threaded [`linalg`] kernels — so the crate builds,
 //!   trains and tests hermetically. `--features xla` adds the PJRT path
-//!   executing JAX graphs AOT-lowered to HLO text by `python/compile/aot.py`.
+//!   executing JAX graphs AOT-lowered to HLO text by `python/compile/aot.py`
+//!   (homogeneous nets only, via a thin adapter).
 //! * **L1** — Pallas kernels inside those compiled graphs (XLA path only).
 //!
 //! Python never runs on the training path: even on the XLA backend the

@@ -85,13 +85,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out)?;
     record.save_json(&out.join(format!("{name}.json")))?;
     record.save_epochs_csv(&out.join(format!("{name}_epochs.csv")))?;
-    if let coordinator::ModelState::Kls(k) = &trainer.model {
-        coordinator::save_factors(
-            &out.join(format!("{name}_model.json")),
-            &trainer.cfg.arch,
-            &k.layers,
-        )?;
-    }
+    // v2 checkpoints cover every layer kind (dense / vanilla / DLRT mixes)
+    coordinator::save_network(&out.join(format!("{name}_model.json")), &trainer.model)?;
     println!("run record written to {}", out.display());
     Ok(())
 }
@@ -103,9 +98,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let preset = args.get_or("preset", "quickstart");
     let cfg =
         presets::by_name(preset).ok_or_else(|| anyhow::anyhow!("unknown preset '{preset}'"))?;
-    let (arch, layers) = coordinator::load_factors(&PathBuf::from(checkpoint))?;
+    let (arch, layers) = coordinator::load_network(&PathBuf::from(checkpoint))?;
     anyhow::ensure!(arch == cfg.arch, "checkpoint arch {arch} != preset arch {}", cfg.arch);
-    let trainer = Trainer::new(cfg)?.with_factors(layers, false)?;
+    let mut trainer = Trainer::new(cfg)?;
+    coordinator::restore_network(&mut trainer.model, layers)?;
     let (loss, acc) = trainer.evaluate(&ValOrTest::Test)?;
     println!("test loss {loss:.4}, accuracy {:.2}%", 100.0 * acc);
     Ok(())

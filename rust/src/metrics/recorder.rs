@@ -23,6 +23,18 @@ pub struct EpochRecord {
     pub train_seconds: f64,
     /// Wall-clock seconds spent in evaluation this epoch.
     pub eval_seconds: f64,
+    /// Mean batch loss measured by the S-phase forward (after the K/L and
+    /// dense updates of each step); equals `train_loss` for nets with no
+    /// factored layer (the S phase is skipped there).
+    pub train_loss_after_kl: f32,
+    /// Per-phase wall clock of the step scheduler, summed over the epoch:
+    /// phase-1 backend sweep / host K-L (QR, optimizer) / S-phase backend
+    /// sweep / host S (SVD truncation). Zeros in records written before
+    /// the breakdown existed.
+    pub kl_graph_seconds: f64,
+    pub host_kl_seconds: f64,
+    pub s_graph_seconds: f64,
+    pub host_s_seconds: f64,
 }
 
 impl EpochRecord {
@@ -36,19 +48,38 @@ impl EpochRecord {
             ("ranks", Json::usize_array(&self.ranks)),
             ("train_seconds", Json::num(self.train_seconds)),
             ("eval_seconds", Json::num(self.eval_seconds)),
+            ("train_loss_after_kl", Json::num(self.train_loss_after_kl as f64)),
+            ("kl_graph_seconds", Json::num(self.kl_graph_seconds)),
+            ("host_kl_seconds", Json::num(self.host_kl_seconds)),
+            ("s_graph_seconds", Json::num(self.s_graph_seconds)),
+            ("host_s_seconds", Json::num(self.host_s_seconds)),
         ])
     }
 
     fn from_json(v: &Json) -> Result<EpochRecord> {
+        // the per-phase breakdown + loss_after_kl arrived with the unified
+        // model core; older records load with the new fields defaulted
+        let opt_f64 = |key: &str| -> Result<f64> {
+            v.get(key).map(|j| j.as_f64()).transpose().map(|o| o.unwrap_or(0.0))
+        };
+        let train_loss = v.req("train_loss")?.as_f32()?;
         Ok(EpochRecord {
             epoch: v.req("epoch")?.as_usize()?,
-            train_loss: v.req("train_loss")?.as_f32()?,
+            train_loss,
             train_acc: v.req("train_acc")?.as_f32()?,
             val_loss: v.req("val_loss")?.as_f32()?,
             val_acc: v.req("val_acc")?.as_f32()?,
             ranks: v.req("ranks")?.to_usize_vec()?,
             train_seconds: v.req("train_seconds")?.as_f64()?,
             eval_seconds: v.req("eval_seconds")?.as_f64()?,
+            train_loss_after_kl: match v.get("train_loss_after_kl") {
+                Some(j) => j.as_f32()?,
+                None => train_loss,
+            },
+            kl_graph_seconds: opt_f64("kl_graph_seconds")?,
+            host_kl_seconds: opt_f64("host_kl_seconds")?,
+            s_graph_seconds: opt_f64("s_graph_seconds")?,
+            host_s_seconds: opt_f64("host_s_seconds")?,
         })
     }
 }
@@ -135,13 +166,15 @@ impl RunRecord {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "epoch,train_loss,train_acc,val_loss,val_acc,train_seconds,eval_seconds,ranks"
+            "epoch,train_loss,train_acc,val_loss,val_acc,train_seconds,eval_seconds,\
+             train_loss_after_kl,kl_graph_seconds,host_kl_seconds,s_graph_seconds,\
+             host_s_seconds,ranks"
         )?;
         for e in &self.epochs {
             let ranks = e.ranks.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(" ");
             writeln!(
                 f,
-                "{},{:.6},{:.4},{:.6},{:.4},{:.3},{:.3},{}",
+                "{},{:.6},{:.4},{:.6},{:.4},{:.3},{:.3},{:.6},{:.3},{:.3},{:.3},{:.3},{}",
                 e.epoch,
                 e.train_loss,
                 e.train_acc,
@@ -149,6 +182,11 @@ impl RunRecord {
                 e.val_acc,
                 e.train_seconds,
                 e.eval_seconds,
+                e.train_loss_after_kl,
+                e.kl_graph_seconds,
+                e.host_kl_seconds,
+                e.s_graph_seconds,
+                e.host_s_seconds,
                 ranks
             )?;
         }
@@ -188,6 +226,11 @@ mod tests {
                 ranks: vec![4, 8],
                 train_seconds: 1.5,
                 eval_seconds: 0.2,
+                train_loss_after_kl: 0.9,
+                kl_graph_seconds: 0.7,
+                host_kl_seconds: 0.3,
+                s_graph_seconds: 0.4,
+                host_s_seconds: 0.1,
             }],
             test_loss: 1.05,
             test_acc: 0.47,
@@ -211,6 +254,25 @@ mod tests {
         assert_eq!(back.epochs[0].ranks, vec![4, 8]);
         assert_eq!(back.final_ranks, vec![4, 8]);
         assert_eq!(back.eval_params, 250);
+        assert_eq!(back.epochs[0].train_loss_after_kl, 0.9);
+        assert_eq!(back.epochs[0].kl_graph_seconds, 0.7);
+        assert_eq!(back.epochs[0].host_s_seconds, 0.1);
+    }
+
+    #[test]
+    fn loads_records_without_phase_breakdown() {
+        // records written before the unified model core carry no
+        // per-phase fields — they must still load, defaulted
+        let legacy = r#"{"name":"old","config_toml":"arch = \"mlp_tiny\"\n",
+            "epochs":[{"epoch":0,"train_loss":1.5,"train_acc":0.4,
+                       "val_loss":1.6,"val_acc":0.35,"ranks":[4],
+                       "train_seconds":1.0,"eval_seconds":0.1}],
+            "test_loss":1.4,"test_acc":0.5,"final_ranks":[4],
+            "eval_params":10,"train_params":20,"dense_params":40}"#;
+        let back = RunRecord::from_json_str(legacy).unwrap();
+        assert_eq!(back.epochs[0].train_loss_after_kl, 1.5); // = train_loss
+        assert_eq!(back.epochs[0].kl_graph_seconds, 0.0);
+        assert_eq!(back.epochs[0].s_graph_seconds, 0.0);
     }
 
     #[test]

@@ -5,15 +5,16 @@
 //!
 //! * **native** (default) — [`crate::backend::NativeBackend`], pure-Rust
 //!   forward/backward passes over a preset-derived [`ArchInfo`]; no
-//!   artifacts, no FFI, builds and tests hermetically.
+//!   artifacts, no FFI, builds and tests hermetically. Mixed per-layer
+//!   parameterizations (dense prefix + low-rank tail, …) are first-class.
 //! * **jnp / pallas** (`--features xla`) — `backend::XlaBackend` over the
 //!   PJRT runtime ([`pjrt::PjrtRuntime`]): AOT-compiled HLO artifacts
 //!   described by a [`manifest::Manifest`], executed through the `xla`
-//!   crate with rank-bucketed executables.
+//!   crate with rank-bucketed executables. Homogeneous nets only.
 //!
-//! The integrator and the baseline trainers only ever see `&Runtime`; which
-//! machinery evaluates their gradients is decided once, from the config's
-//! `backend` field, at [`Runtime::for_config`].
+//! The model core ([`crate::dlrt::Network`]) only ever sees `&Runtime`;
+//! which machinery evaluates its gradients is decided once, from the
+//! config's `backend` field, at [`Runtime::for_config`].
 
 pub mod manifest;
 #[cfg(feature = "xla")]
@@ -26,12 +27,10 @@ pub use manifest::{ArchInfo, ArtifactInfo, LayerInfo, Manifest, TensorSpec};
 pub use pjrt::{Executable, PjrtRuntime};
 
 use crate::backend::{
-    ComputeBackend, DenseGrads, EvalStats, KlGrads, LayerFactors, NativeBackend, SGrads,
-    VanillaGrads,
+    ComputeBackend, EvalStats, GradPhase, GradsOut, LayerParams, NativeBackend,
 };
 use crate::config::Config;
 use crate::data::Batch;
-use crate::linalg::Matrix;
 use crate::Result;
 
 /// The compute-backend dispatcher every trainer holds.
@@ -82,66 +81,30 @@ impl Runtime {
         self.backend.batch_cap(arch)
     }
 
-    pub fn rank_cap(&self, arch: &str, graph: &str) -> Result<Option<usize>> {
-        self.backend.rank_cap(arch, graph)
+    pub fn rank_cap(&self, arch: &str, phase: GradPhase) -> Result<Option<usize>> {
+        self.backend.rank_cap(arch, phase)
     }
 
-    pub fn kl_grads(
+    /// One taped gradient sweep over a per-layer parameter list
+    /// ([`ComputeBackend::grads`]).
+    pub fn grads(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
         batch: &Batch,
-    ) -> Result<KlGrads> {
-        self.backend.kl_grads(arch, layers, batch)
+    ) -> Result<GradsOut> {
+        self.backend.grads(arch, layers, phase, batch)
     }
 
-    pub fn s_grads(
-        &self,
-        arch: &str,
-        layers: &[LayerFactors<'_>],
-        batch: &Batch,
-    ) -> Result<SGrads> {
-        self.backend.s_grads(arch, layers, batch)
-    }
-
+    /// Evaluation forward over one batch ([`ComputeBackend::forward`]).
     pub fn forward(
         &self,
         arch: &str,
-        layers: &[LayerFactors<'_>],
+        layers: &[LayerParams<'_>],
         batch: &Batch,
     ) -> Result<EvalStats> {
         self.backend.forward(arch, layers, batch)
-    }
-
-    pub fn dense_grads(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<DenseGrads> {
-        self.backend.dense_grads(arch, ws, bs, batch)
-    }
-
-    pub fn dense_forward(
-        &self,
-        arch: &str,
-        ws: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<EvalStats> {
-        self.backend.dense_forward(arch, ws, bs, batch)
-    }
-
-    pub fn vanilla_grads(
-        &self,
-        arch: &str,
-        us: &[Matrix],
-        vs: &[Matrix],
-        bs: &[Vec<f32>],
-        batch: &Batch,
-    ) -> Result<VanillaGrads> {
-        self.backend.vanilla_grads(arch, us, vs, bs, batch)
     }
 }
 
@@ -172,7 +135,7 @@ mod tests {
         let arch = rt.arch("mlp_tiny").unwrap();
         assert_eq!(arch.input_dim, 64);
         assert_eq!(rt.batch_cap("mlp500").unwrap(), 256);
-        assert!(rt.rank_cap("mlp784", "s_grads").unwrap().is_none());
+        assert!(rt.rank_cap("mlp784", GradPhase::S).unwrap().is_none());
         assert!(rt.arch("nope").is_err());
     }
 

@@ -1,14 +1,15 @@
-//! Full-stack training integration: the Trainer on every mode, rank
-//! adaptation, pruning + retraining, and checkpoint round-trips — all on
-//! the hermetic native backend. Uses the tiny arch + toy data so each test
-//! completes in seconds.
+//! Full-stack training integration: the Trainer on every pure mode and on
+//! mixed per-layer nets, rank adaptation, pruning + retraining, paranoid
+//! self-checks, and checkpoint round-trips (v1 + v2, resume-equivalence) —
+//! all on the hermetic native backend. Uses the tiny arch + toy data so
+//! each test completes in seconds.
 
 use dlrt::baselines::svd_prune_factors;
-use dlrt::baselines::DenseTrainer;
 use dlrt::config::{presets, Config, DataSource, Integrator, Mode};
-use dlrt::coordinator::{load_factors, save_factors, ModelState, Trainer, ValOrTest};
-use dlrt::dlrt::OptKind;
-use dlrt::linalg::{orthonormality_error, Rng};
+use dlrt::coordinator::{
+    load_network, restore_network, save_network, Trainer, ValOrTest,
+};
+use dlrt::linalg::orthonormality_error;
 use dlrt::util::testutil::TestDir;
 
 fn toy_cfg(mode: Mode) -> Config {
@@ -16,6 +17,13 @@ fn toy_cfg(mode: Mode) -> Config {
     cfg.mode = mode;
     cfg.epochs = 3;
     cfg.data = DataSource::Toy { n: 1_200 };
+    cfg
+}
+
+/// TRP-style mixed toy config: dense first layer, adaptive low-rank tail.
+fn toy_mixed_cfg() -> Config {
+    let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
+    cfg.layer_modes = vec![Mode::Dense, Mode::AdaptiveDlrt, Mode::AdaptiveDlrt];
     cfg
 }
 
@@ -61,22 +69,41 @@ fn fixed_dlrt_and_dense_and_vanilla_all_train() {
 }
 
 #[test]
-fn integrator_preserves_orthonormality_through_real_graphs() {
+fn mixed_net_trains_on_toy_task() {
+    // dense layer 0 + adaptive layers 1-2 in one Network: the per-layer
+    // core's bread and butter, at toy scale
+    let mut t = Trainer::new(toy_mixed_cfg()).unwrap();
+    assert_eq!(t.model.layers[0].kind(), "dense");
+    assert!(t.model.layers[1].is_factored());
+    let rec = t.run("it_mixed", |_| {}).unwrap();
+    assert!(rec.test_acc > 0.75, "mixed net failed to learn (acc {})", rec.test_acc);
+    // the dense layer reports full rank, the adaptive middle truncates
+    // below its 32x32 max rank (it would sit at the full 32 if the
+    // augment-then-truncate loop never cut anything)
+    assert_eq!(rec.final_ranks[0], 32); // dense 32x64
+    assert!(rec.final_ranks[1] < 32, "adaptive tail never truncated: {:?}", rec.final_ranks);
+    let first = rec.epochs.first().unwrap().train_loss;
+    let last = rec.epochs.last().unwrap().train_loss;
+    assert!(last < first, "mixed loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn paranoid_run_on_healthy_net_succeeds_and_checks_orthonormality() {
+    // Config.paranoid is wired through the Trainer into the per-step basis
+    // assertions of the model core: a healthy run passes them all
     let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
-    cfg.paranoid = true; // integrator self-checks every step
+    cfg.paranoid = true;
     cfg.epochs = 2;
     let mut t = Trainer::new(cfg).unwrap();
+    assert!(t.model.paranoid, "cfg.paranoid must reach the network");
     t.run("it_paranoid", |_| {}).unwrap();
-    if let ModelState::Kls(k) = &t.model {
-        for (i, f) in k.layers.iter().enumerate() {
-            assert!(
-                orthonormality_error(&f.u) < 1e-3,
-                "layer {i}: U drifted off the Stiefel manifold"
-            );
-            assert!(orthonormality_error(&f.v) < 1e-3, "layer {i}: V drifted");
-        }
-    } else {
-        panic!("expected KLS model");
+    for (i, ls) in t.model.layers.iter().enumerate() {
+        let f = &ls.dlrt().expect("all-DLRT net").factors;
+        assert!(
+            orthonormality_error(&f.u) < 1e-3,
+            "layer {i}: U drifted off the Stiefel manifold"
+        );
+        assert!(orthonormality_error(&f.v) < 1e-3, "layer {i}: V drifted");
     }
 }
 
@@ -90,6 +117,8 @@ fn rank_freeze_stops_adaptation() {
     t.run("it_freeze", |e| rank_history.push(e.ranks.clone())).unwrap();
     // after the freeze epoch, ranks must be constant
     assert_eq!(rank_history[1], rank_history[2], "ranks changed after freeze");
+    // freezing converted the adaptive layers to fixed-rank
+    assert!(!t.model.adaptive(), "freeze must leave no adaptive layer");
 }
 
 #[test]
@@ -102,16 +131,13 @@ fn svd_prune_collapses_then_retraining_recovers() {
     let dense_rec = t.run("it_dense_base", |_| {}).unwrap();
     assert!(dense_rec.test_acc > 0.85);
 
-    let dense = match &t.model {
-        ModelState::Dense(d) => d,
-        _ => panic!("expected dense model"),
-    };
-    let pruned = svd_prune_factors(dense, 2); // aggressive rank-2 truncation
+    let pruned = svd_prune_factors(&t.model, 2); // aggressive rank-2 truncation
 
     // evaluate the raw truncation (no retraining)
     let mut cfg_eval = cfg.clone();
     cfg_eval.mode = Mode::FixedDlrt;
-    let t_pruned = Trainer::new(cfg_eval.clone()).unwrap().with_factors(pruned.clone(), false).unwrap();
+    let t_pruned =
+        Trainer::new(cfg_eval.clone()).unwrap().with_factors(pruned.clone(), false).unwrap();
     let (_, acc_raw) = t_pruned.evaluate(&ValOrTest::Test).unwrap();
 
     // retrain the same factors with fixed-rank DLRT
@@ -130,34 +156,77 @@ fn svd_prune_collapses_then_retraining_recovers() {
 }
 
 #[test]
-fn checkpoints_roundtrip_through_trainer() {
-    let mut t = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap();
-    let rec = t.run("it_ckpt", |_| {}).unwrap();
+fn resume_equivalence_pure_kls() {
+    // train 1 epoch -> save -> load into a fresh trainer -> evaluate must
+    // match the in-memory model exactly (same floats, not approximately)
+    let mut cfg = toy_cfg(Mode::AdaptiveDlrt);
+    cfg.epochs = 1;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.run("it_resume_kls", |_| {}).unwrap();
+    let (live_loss, live_acc) = t.evaluate(&ValOrTest::Test).unwrap();
+
     let dir = TestDir::new();
-    let path = dir.join("model.json");
-    let layers = match &t.model {
-        ModelState::Kls(k) => k.layers.clone(),
-        _ => unreachable!(),
-    };
-    save_factors(&path, "mlp_tiny", &layers).unwrap();
-    let (arch, loaded) = load_factors(&path).unwrap();
+    let path = dir.join("kls.json");
+    save_network(&path, &t.model).unwrap();
+    let (arch, layers) = load_network(&path).unwrap();
     assert_eq!(arch, "mlp_tiny");
-    let t2 = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap().with_factors(loaded, false).unwrap();
-    let (_, acc) = t2.evaluate(&ValOrTest::Test).unwrap();
-    assert!(
-        (acc - rec.test_acc).abs() < 1e-5,
-        "checkpoint eval mismatch: {acc} vs {}",
-        rec.test_acc
-    );
+    let mut t2 = Trainer::new(cfg).unwrap();
+    restore_network(&mut t2.model, layers).unwrap();
+    let (loss, acc) = t2.evaluate(&ValOrTest::Test).unwrap();
+    assert_eq!(loss, live_loss, "restored eval loss differs");
+    assert_eq!(acc, live_acc, "restored eval accuracy differs");
 }
 
 #[test]
-fn dense_trainer_param_count_matches_arch() {
-    let rt = dlrt::runtime::Runtime::native();
-    let mut rng = Rng::new(0);
-    let d = DenseTrainer::new(&rt, "mlp_tiny", OptKind::Sgd, &mut rng).unwrap();
+fn resume_equivalence_mixed_net() {
+    // the same exact-resume guarantee for a TRP-style mixed net: the v2
+    // checkpoint carries the dense layer verbatim
+    let mut cfg = toy_mixed_cfg();
+    cfg.epochs = 1;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.run("it_resume_mixed", |_| {}).unwrap();
+    let (live_loss, live_acc) = t.evaluate(&ValOrTest::Test).unwrap();
+
+    let dir = TestDir::new();
+    let path = dir.join("mixed.json");
+    save_network(&path, &t.model).unwrap();
+    let (_, layers) = load_network(&path).unwrap();
+    assert_eq!(layers[0].kind(), "dense");
+    assert_eq!(layers[1].kind(), "dlrt");
+    let mut t2 = Trainer::new(cfg).unwrap();
+    restore_network(&mut t2.model, layers).unwrap();
+    let (loss, acc) = t2.evaluate(&ValOrTest::Test).unwrap();
+    assert_eq!(loss, live_loss, "restored mixed eval loss differs");
+    assert_eq!(acc, live_acc, "restored mixed eval accuracy differs");
+}
+
+#[test]
+fn checkpoint_rejects_layer_kind_mismatch() {
+    // a v2 checkpoint of a mixed net must not restore into a net whose
+    // layer_modes configure different kinds
+    let mut cfg = toy_mixed_cfg();
+    cfg.epochs = 1;
+    let t = Trainer::new(cfg).unwrap();
+    let dir = TestDir::new();
+    let path = dir.join("mixed.json");
+    save_network(&path, &t.model).unwrap();
+    let (_, layers) = load_network(&path).unwrap();
+
+    // pure-KLS trainer: layer 0 is 'dlrt' there, but the checkpoint says 'dense'
+    let mut t2 = Trainer::new(toy_cfg(Mode::AdaptiveDlrt)).unwrap();
+    let err = restore_network(&mut t2.model, layers).unwrap_err().to_string();
+    assert!(err.contains("layer_modes"), "unhelpful mismatch error: {err}");
+}
+
+#[test]
+fn dense_param_accounting_matches_arch() {
+    let t = Trainer::new(toy_cfg(Mode::Dense)).unwrap();
+    let (eval, train, dense) = t.param_accounting();
     // mlp_tiny: 32x64 + 32x32 + 10x32 (paper convention: no biases)
-    assert_eq!(d.param_count(), 32 * 64 + 32 * 32 + 10 * 32);
+    let expect = 32 * 64 + 32 * 32 + 10 * 32;
+    assert_eq!(dense, expect);
+    assert_eq!(eval, expect, "a dense net evaluates at its dense size");
+    assert_eq!(train, expect, "a dense net trains at its dense size");
 }
 
 #[test]

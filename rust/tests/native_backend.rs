@@ -1,21 +1,23 @@
 //! Native-backend correctness.
 //!
-//! * Finite-difference gradient checks of the `kl_grads` / `s_grads`
-//!   services on small custom architectures — one fully-connected, one
-//!   convolutional (im2col + max-pool path) — the analytic `∂K`, `∂L`,
-//!   `∂S`, `∂bias` (and a dense `∂W` spot check) must match central
-//!   differences of the `forward` loss entry by entry.
-//! * End-to-end smokes: rank-adaptive training through `ModelState::Kls`
-//!   must decrease the loss and truncate ranks below init, on toy data
-//!   (MLP) and on LeNet5 (conv) — the Algorithm 1 loop running entirely on
-//!   the hermetic pure-Rust path.
+//! * Finite-difference gradient checks of the two-call `grads` service on
+//!   small custom architectures — one fully-connected, one convolutional
+//!   (im2col + max-pool path), one *mixed* (dense layer + factored layer
+//!   in the same sweep) — the analytic `∂K`, `∂L`, `∂S`, `∂bias` (and
+//!   dense `∂W` spot checks) must match central differences of the
+//!   `forward` loss entry by entry.
+//! * End-to-end smokes: rank-adaptive training through the unified
+//!   `Network` must decrease the loss and truncate ranks below init, on
+//!   toy data (MLP), on LeNet5 (conv), and on the TRP-style mixed
+//!   dense-conv-prefix + low-rank-tail LeNet — Algorithm 1's scheduler
+//!   running entirely on the hermetic pure-Rust path.
 //! * Preset/registry consistency: every preset that declares
 //!   `backend = "native"` must resolve its architecture in the native
 //!   registry, so a preset/registry drift cannot silently recur.
 
-use dlrt::backend::{ComputeBackend, LayerFactors, NativeBackend};
+use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams, NativeBackend};
 use dlrt::config::{presets, DataSource};
-use dlrt::coordinator::{ModelState, Trainer};
+use dlrt::coordinator::Trainer;
 use dlrt::data::Batch;
 use dlrt::dlrt::LowRankFactors;
 use dlrt::linalg::{Matrix, Rng};
@@ -118,11 +120,43 @@ fn conv_layers(seed: u64) -> Vec<LowRankFactors> {
     ]
 }
 
-fn refs(layers: &[LowRankFactors]) -> Vec<LayerFactors<'_>> {
+fn refs(layers: &[LowRankFactors]) -> Vec<LayerParams<'_>> {
     layers
         .iter()
-        .map(|f| LayerFactors { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
+        .map(|f| LayerParams::Factored { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias })
         .collect()
+}
+
+/// Per-layer ∂K/∂L of a Kl-phase grads call over an all-factored net.
+fn kl_of(out: GradsOut) -> (Vec<Matrix>, Vec<Matrix>) {
+    let mut dk = Vec::new();
+    let mut dl = Vec::new();
+    for g in out.layers {
+        match g {
+            LayerGrads::Kl { dk: a, dl: b } => {
+                dk.push(a);
+                dl.push(b);
+            }
+            _ => panic!("expected Kl grads for every factored layer"),
+        }
+    }
+    (dk, dl)
+}
+
+/// Per-layer ∂S/∂b of an S-phase grads call over an all-factored net.
+fn s_of(out: GradsOut) -> (Vec<Matrix>, Vec<Vec<f32>>) {
+    let mut ds = Vec::new();
+    let mut db = Vec::new();
+    for g in out.layers {
+        match g {
+            LayerGrads::S { ds: a, db: b } => {
+                ds.push(a);
+                db.push(b);
+            }
+            _ => panic!("expected S grads for every factored layer"),
+        }
+    }
+    (ds, db)
 }
 
 fn loss_of(be: &NativeBackend, arch: &str, layers: &[LowRankFactors], batch: &Batch) -> f32 {
@@ -193,7 +227,8 @@ impl FdReport {
     }
 }
 
-/// FD-check every ∂K and ∂L entry of `kl_grads` against the `forward` loss.
+/// FD-check every ∂K and ∂L entry of the Kl phase against the `forward`
+/// loss.
 fn check_kl_finite_differences(
     be: &NativeBackend,
     arch: &str,
@@ -202,8 +237,8 @@ fn check_kl_finite_differences(
     eps: f32,
     max_outliers: usize,
 ) {
-    let kl = be.kl_grads(arch, &refs(layers), batch).unwrap();
-    let mut report = FdReport::new(&format!("{arch} kl_grads"));
+    let (dk_all, dl_all) = kl_of(be.grads(arch, &refs(layers), GradPhase::Kl, batch).unwrap());
+    let mut report = FdReport::new(&format!("{arch} grads/kl"));
     for l in 0..layers.len() {
         let r = layers[l].rank();
         // K-step: reparameterize layer l as W = K Vᵀ (u := K, s := I)
@@ -220,7 +255,7 @@ fn check_kl_finite_differences(
                         bias: ls[l].bias.clone(),
                     };
                 });
-                report.check(kl.dk[l][(i, j)], numeric, &format!("dK[{l}][{i},{j}]"));
+                report.check(dk_all[l][(i, j)], numeric, &format!("dK[{l}][{i},{j}]"));
             }
         }
         // L-step: reparameterize layer l as W = U Lᵀ (v := L, s := I)
@@ -237,14 +272,15 @@ fn check_kl_finite_differences(
                         bias: ls[l].bias.clone(),
                     };
                 });
-                report.check(kl.dl[l][(i, j)], numeric, &format!("dL[{l}][{i},{j}]"));
+                report.check(dl_all[l][(i, j)], numeric, &format!("dL[{l}][{i},{j}]"));
             }
         }
     }
     report.finish(max_outliers);
 }
 
-/// FD-check every ∂S and ∂bias entry of `s_grads` against the `forward` loss.
+/// FD-check every ∂S and ∂bias entry of the S phase against the `forward`
+/// loss.
 fn check_s_finite_differences(
     be: &NativeBackend,
     arch: &str,
@@ -253,8 +289,8 @@ fn check_s_finite_differences(
     eps: f32,
     max_outliers: usize,
 ) {
-    let sg = be.s_grads(arch, &refs(layers), batch).unwrap();
-    let mut report = FdReport::new(&format!("{arch} s_grads"));
+    let (ds_all, db_all) = s_of(be.grads(arch, &refs(layers), GradPhase::S, batch).unwrap());
+    let mut report = FdReport::new(&format!("{arch} grads/s"));
     for l in 0..layers.len() {
         let r = layers[l].rank();
         for i in 0..r {
@@ -262,14 +298,14 @@ fn check_s_finite_differences(
                 let numeric = central_diff(be, arch, layers, batch, eps, |ls, e| {
                     ls[l].s[(i, j)] += e;
                 });
-                report.check(sg.ds[l][(i, j)], numeric, &format!("dS[{l}][{i},{j}]"));
+                report.check(ds_all[l][(i, j)], numeric, &format!("dS[{l}][{i},{j}]"));
             }
         }
         for i in 0..layers[l].m() {
             let numeric = central_diff(be, arch, layers, batch, eps, |ls, e| {
                 ls[l].bias[i] += e;
             });
-            report.check(sg.db[l][i], numeric, &format!("db[{l}][{i}]"));
+            report.check(db_all[l][i], numeric, &format!("db[{l}][{i}]"));
         }
     }
     report.finish(max_outliers);
@@ -321,8 +357,12 @@ fn conv_factored_forward_matches_dense_reconstruction() {
     let batch = tiny_batch_dim(49, 72);
     let low = be.forward(CONV_ARCH, &refs(&layers), &batch).unwrap();
     let ws: Vec<Matrix> = layers.iter().map(|f| f.reconstruct()).collect();
-    let bs: Vec<Vec<f32>> = layers.iter().map(|f| f.bias.clone()).collect();
-    let dense = be.dense_forward(CONV_ARCH, &ws, &bs, &batch).unwrap();
+    let dense_params: Vec<LayerParams<'_>> = ws
+        .iter()
+        .zip(&layers)
+        .map(|(w, f)| LayerParams::Dense { w, bias: &f.bias })
+        .collect();
+    let dense = be.forward(CONV_ARCH, &dense_params, &batch).unwrap();
     assert!(
         (low.loss - dense.loss).abs() < 1e-4,
         "conv factored vs dense forward: {} vs {}",
@@ -339,20 +379,100 @@ fn dense_grads_match_finite_differences_spot_check() {
     let ws = vec![rng.normal_matrix(7, DIM), rng.normal_matrix(CLASSES, 7)];
     let bs = vec![vec![0.1; 7], vec![-0.1; CLASSES]];
     let batch = tiny_batch(32);
-    let grads = be.dense_grads(ARCH, &ws, &bs, &batch).unwrap();
+    let params: Vec<LayerParams<'_>> = ws
+        .iter()
+        .zip(&bs)
+        .map(|(w, b)| LayerParams::Dense { w, bias: b })
+        .collect();
+    let out = be.grads(ARCH, &params, GradPhase::Kl, &batch).unwrap();
+    let dense_loss = |ws: &[Matrix]| {
+        let params: Vec<LayerParams<'_>> = ws
+            .iter()
+            .zip(&bs)
+            .map(|(w, b)| LayerParams::Dense { w, bias: b })
+            .collect();
+        be.forward(ARCH, &params, &batch).unwrap().loss
+    };
     let eps = 1e-2;
     for (l, w) in ws.iter().enumerate() {
+        let dw = match &out.layers[l] {
+            LayerGrads::Dense { dw, .. } => dw,
+            _ => panic!("expected dense grads"),
+        };
         for &(i, j) in &[(0usize, 0usize), (1, 2), (w.rows() - 1, w.cols() - 1)] {
             let mut plus = ws.clone();
             plus[l][(i, j)] += eps;
             let mut minus = ws.clone();
             minus[l][(i, j)] -= eps;
-            let fp = be.dense_forward(ARCH, &plus, &bs, &batch).unwrap().loss;
-            let fm = be.dense_forward(ARCH, &minus, &bs, &batch).unwrap().loss;
-            let numeric = (fp - fm) / (2.0 * eps);
-            assert_close(grads.dw[l][(i, j)], numeric, &format!("dW[{l}][{i},{j}]"));
+            let numeric = (dense_loss(&plus) - dense_loss(&minus)) / (2.0 * eps);
+            assert_close(dw[(i, j)], numeric, &format!("dW[{l}][{i},{j}]"));
         }
     }
+}
+
+#[test]
+fn mixed_net_grads_match_finite_differences() {
+    // dense layer 0 + factored layer 1 in ONE sweep: both layers' analytic
+    // gradients must match finite differences of the mixed forward — the
+    // correctness core of the TRP-style dense-prefix + low-rank-tail nets
+    let be = backend();
+    let layers = tiny_layers(81);
+    let w0 = layers[0].reconstruct();
+    let b0 = layers[0].bias.clone();
+    let f1 = &layers[1];
+    let r = f1.rank();
+    let batch = tiny_batch(82);
+    let params = vec![
+        LayerParams::Dense { w: &w0, bias: &b0 },
+        LayerParams::Factored { u: &f1.u, s: &f1.s, v: &f1.v, bias: &f1.bias },
+    ];
+    let out = be.grads(ARCH, &params, GradPhase::Kl, &batch).unwrap();
+    let dw = match &out.layers[0] {
+        LayerGrads::Dense { dw, .. } => dw,
+        _ => panic!("expected dense grads for layer 0"),
+    };
+    let dk = match &out.layers[1] {
+        LayerGrads::Kl { dk, .. } => dk,
+        _ => panic!("expected Kl grads for layer 1"),
+    };
+    let loss_with = |w0p: &Matrix, f1p: &LowRankFactors| {
+        let params = vec![
+            LayerParams::Dense { w: w0p, bias: &b0 },
+            LayerParams::Factored { u: &f1p.u, s: &f1p.s, v: &f1p.v, bias: &f1p.bias },
+        ];
+        be.forward(ARCH, &params, &batch).unwrap().loss
+    };
+    let eps = 1e-2;
+    // dense entries
+    for &(i, j) in &[(0usize, 0usize), (3, 4), (6, 8)] {
+        let mut plus = w0.clone();
+        plus[(i, j)] += eps;
+        let mut minus = w0.clone();
+        minus[(i, j)] -= eps;
+        let numeric = (loss_with(&plus, f1) - loss_with(&minus, f1)) / (2.0 * eps);
+        assert_close(dw[(i, j)], numeric, &format!("mixed dW[{i},{j}]"));
+    }
+    // K entries of the factored layer: perturb K with S := I
+    let k0 = f1.k();
+    for &(i, j) in &[(0usize, 0usize), (2, 1), (4, 3)] {
+        let perturbed = |e: f32| LowRankFactors {
+            u: {
+                let mut k = k0.clone();
+                k[(i, j)] += e;
+                k
+            },
+            s: Matrix::eye(r, r),
+            v: f1.v.clone(),
+            bias: f1.bias.clone(),
+        };
+        let numeric = (loss_with(&w0, &perturbed(eps)) - loss_with(&w0, &perturbed(-eps)))
+            / (2.0 * eps);
+        assert_close(dk[(i, j)], numeric, &format!("mixed dK[{i},{j}]"));
+    }
+    // the S phase of the same mixed net only grads the factored layer
+    let s = be.grads(ARCH, &params, GradPhase::S, &batch).unwrap();
+    assert!(matches!(s.layers[0], LayerGrads::None));
+    assert!(matches!(s.layers[1], LayerGrads::S { .. }));
 }
 
 #[test]
@@ -364,14 +484,14 @@ fn kl_and_s_gradients_are_consistent_projections() {
         (ARCH, tiny_layers(41), tiny_batch(42)),
         (CONV_ARCH, conv_layers(43), tiny_batch_dim(49, 44)),
     ] {
-        let kl = be.kl_grads(arch, &refs(&layers), &batch).unwrap();
-        let sg = be.s_grads(arch, &refs(&layers), &batch).unwrap();
+        let (dk, _) = kl_of(be.grads(arch, &refs(&layers), GradPhase::Kl, &batch).unwrap());
+        let (ds, _) = s_of(be.grads(arch, &refs(&layers), GradPhase::S, &batch).unwrap());
         for (l, f) in layers.iter().enumerate() {
-            let proj = dlrt::linalg::matmul_tn(&f.u, &kl.dk[l]);
+            let proj = dlrt::linalg::matmul_tn(&f.u, &dk[l]);
             assert!(
-                proj.fro_dist(&sg.ds[l]) < 1e-4,
+                proj.fro_dist(&ds[l]) < 1e-4,
                 "{arch} layer {l}: Uᵀ∂K != ∂S ({})",
-                proj.fro_dist(&sg.ds[l])
+                proj.fro_dist(&ds[l])
             );
         }
     }
@@ -393,7 +513,8 @@ fn native_presets_resolve_their_archs() {
 
 #[test]
 fn adaptive_training_two_epoch_smoke_on_toy() {
-    // The acceptance run: ModelState::Kls end-to-end on the native backend.
+    // The acceptance run: the unified Network end-to-end on the native
+    // backend, all layers adaptive DLRT.
     let mut cfg = presets::quickstart();
     assert_eq!(cfg.backend, "native");
     cfg.epochs = 2;
@@ -401,7 +522,7 @@ fn adaptive_training_two_epoch_smoke_on_toy() {
     cfg.data = DataSource::Toy { n: 1_200 };
     let mut t = Trainer::new(cfg).unwrap();
     let rec = t.run("native_smoke", |_| {}).unwrap();
-    assert!(matches!(t.model, ModelState::Kls(_)));
+    assert!(t.model.layers.iter().all(|l| l.is_factored()));
     let first = rec.epochs.first().unwrap().train_loss;
     let last = rec.epochs.last().unwrap().train_loss;
     assert!(last < first, "loss did not decrease: {first} -> {last}");
@@ -442,4 +563,38 @@ fn lenet_adaptive_smoke_decreases_loss_and_truncates() {
     );
     // the paper's accounting applies (conv = compact convention)
     assert!(rec.eval_params > 0 && rec.eval_params < rec.dense_params);
+}
+
+#[test]
+fn trp_mixed_lenet_smoke_trains_and_truncates() {
+    // the tentpole proof: a TRP-style mixed net — dense conv prefix +
+    // adaptive low-rank dense tail — trains end-to-end on the native
+    // backend; inexpressible before the per-layer model core
+    let mut cfg = presets::trp_lenet(0.3);
+    assert_eq!(cfg.backend, "native");
+    cfg.epochs = 3;
+    cfg.max_steps_per_epoch = 2;
+    cfg.init_rank = 20;
+    cfg.data = DataSource::Mnist { root: "data/mnist-absent".into(), n_synth: 1_500 };
+    let mut t = Trainer::new(cfg).unwrap();
+    assert_eq!(t.model.layers[0].kind(), "dense");
+    assert_eq!(t.model.layers[1].kind(), "dense");
+    assert!(t.model.layers[2].is_factored() && t.model.layers[3].is_factored());
+    let rec = t.run("trp_smoke", |_| {}).unwrap();
+    let first = rec.epochs.first().unwrap().train_loss;
+    let last = rec.epochs.last().unwrap().train_loss;
+    assert!(last < first, "mixed TRP loss did not decrease: {first} -> {last}");
+    // dense conv layers report their full rank; the adaptive fc tail
+    // truncates below its init rank 20; the head stays pinned at 10
+    assert_eq!(rec.final_ranks.len(), 4);
+    assert_eq!(rec.final_ranks[0], 20, "dense conv1 is full-rank");
+    assert_eq!(rec.final_ranks[1], 50, "dense conv2 is full-rank");
+    assert!(
+        rec.final_ranks[2] < 20,
+        "low-rank tail did not truncate: {:?}",
+        rec.final_ranks
+    );
+    assert_eq!(*rec.final_ranks.last().unwrap(), 10, "head stays pinned");
+    // the S phase ran (factored layers present), so its wall clock is real
+    assert!(rec.epochs[0].s_graph_seconds > 0.0);
 }
