@@ -1,0 +1,161 @@
+//! Bench: serving throughput & latency of the frozen-model engine —
+//! dense vs merged low-rank on LeNet5 and the MNIST MLP, at equal batch
+//! size. Emits `BENCH_serve.json` (imgs/sec, p50/p99 request latency) —
+//! the paper's Fig. 1 inference claim (`O((n+m)r)` vs `O(mn)`) measured
+//! on the serving path instead of the training path.
+//!
+//! Smoke budget by default; `DLRT_FULL=1` for longer timing runs.
+
+use dlrt::coordinator::experiments;
+use dlrt::dlrt::{LayerSpec, Network, OptKind};
+use dlrt::linalg::Rng;
+use dlrt::runtime::Runtime;
+use dlrt::serve::{Engine, EngineConfig, FrozenModel};
+use dlrt::util::bench::{time_fn, Table};
+use dlrt::util::Json;
+use std::time::{Duration, Instant};
+
+/// Freeze a randomly-initialized net at serving shape: weights don't
+/// affect wall clock, ranks and dimensions do.
+fn frozen(arch: &str, rank: Option<usize>, seed: u64) -> dlrt::Result<FrozenModel> {
+    let rt = Runtime::native();
+    let spec = match rank {
+        None => LayerSpec::Dense,
+        Some(r) => LayerSpec::Fixed { rank: r },
+    };
+    let mut rng = Rng::new(seed);
+    let net = Network::uniform(&rt, arch, spec, OptKind::Sgd, false, &mut rng)?;
+    Ok(net.export())
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+struct Row {
+    model: &'static str,
+    arch: &'static str,
+    ranks: Vec<usize>,
+    stored_params: usize,
+    dense_params: usize,
+    batch: usize,
+    imgs_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let (iters, n_requests) = if full { (30, 400) } else { (6, 60) };
+    let batch = 256usize;
+    println!(
+        "serve_throughput: batch {batch}, {iters} timed batches, {n_requests} latency \
+         requests per model ({})",
+        if full { "full" } else { "smoke" }
+    );
+
+    let specs: [(&'static str, &'static str, Option<usize>); 4] = [
+        ("lenet_dense", "lenet", None),
+        ("lenet_lowrank", "lenet", Some(10)),
+        ("mnist_mlp_dense", "mlp500", None),
+        ("mnist_mlp_lowrank", "mlp500", Some(10)),
+    ];
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (model_name, arch, rank) in specs {
+        let model = frozen(arch, rank, 0xBE9C)?;
+        let dim = model.arch.input_dim;
+        let mut rng = Rng::new(7);
+
+        // --- batched throughput: full batches through forward_logits ----
+        let x = rng.normal_matrix(batch, dim);
+        let stats = time_fn(1, iters, || model.forward_logits(&x).unwrap());
+        let imgs_per_sec = batch as f64 / stats.mean;
+
+        // --- request latency: single requests through the engine --------
+        // zero coalescing delay: sequential requests never have co-riders,
+        // so any positive max_delay would put a constant floor under every
+        // sample and mask the dense-vs-low-rank forward gap being measured
+        let engine = Engine::start(
+            model.clone(),
+            EngineConfig { batch_cap: 32, max_delay: Duration::ZERO, workers: 1 },
+        )?;
+        let mut lat: Vec<f64> = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let features = rng.normal_matrix(1, dim).into_vec();
+            let t0 = Instant::now();
+            engine.infer(features)?;
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+
+        rows.push(Row {
+            model: model_name,
+            arch,
+            ranks: model.ranks(),
+            stored_params: model.stored_params(),
+            dense_params: model.dense_params(),
+            batch,
+            imgs_per_sec,
+            p50_ms: p50 * 1e3,
+            p99_ms: p99 * 1e3,
+        });
+    }
+
+    let mut table = Table::new(&[
+        "model", "arch", "ranks", "params", "imgs/sec", "p50 lat", "p99 lat",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.model.to_string(),
+            r.arch.to_string(),
+            format!("{:?}", r.ranks),
+            r.stored_params.to_string(),
+            format!("{:.0}", r.imgs_per_sec),
+            format!("{:.2} ms", r.p50_ms),
+            format!("{:.2} ms", r.p99_ms),
+        ]);
+    }
+    table.print();
+
+    let ips = |name: &str| {
+        rows.iter().find(|r| r.model == name).map(|r| r.imgs_per_sec).unwrap_or(0.0)
+    };
+    let lenet_speedup = ips("lenet_lowrank") / ips("lenet_dense").max(1e-9);
+    let mlp_speedup = ips("mnist_mlp_lowrank") / ips("mnist_mlp_dense").max(1e-9);
+    println!(
+        "shape check: low-rank lenet ≥ 2x dense throughput at batch {batch}: {} \
+         ({lenet_speedup:.2}x); mnist_mlp: {mlp_speedup:.2}x",
+        lenet_speedup >= 2.0
+    );
+
+    let json_rows = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("model", Json::str(r.model)),
+            ("arch", Json::str(r.arch)),
+            ("ranks", Json::usize_array(&r.ranks)),
+            ("stored_params", Json::num(r.stored_params as f64)),
+            ("dense_params", Json::num(r.dense_params as f64)),
+            ("batch", Json::num(r.batch as f64)),
+            ("imgs_per_sec", Json::num(r.imgs_per_sec)),
+            ("p50_ms", Json::num(r.p50_ms)),
+            ("p99_ms", Json::num(r.p99_ms)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_throughput")),
+        ("mode", Json::str(if full { "full" } else { "smoke" })),
+        ("batch", Json::num(batch as f64)),
+        ("rows", Json::arr(json_rows)),
+        ("lenet_lowrank_vs_dense_speedup", Json::num(lenet_speedup)),
+        ("mnist_mlp_lowrank_vs_dense_speedup", Json::num(mlp_speedup)),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

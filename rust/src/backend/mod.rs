@@ -13,6 +13,12 @@
 //! * [`ComputeBackend::forward`] — the evaluation forward over the same
 //!   per-layer list.
 //!
+//! A third, *serving-only* call rides the same forward machinery:
+//! [`ComputeBackend::forward_logits`] returns the raw logit matrix of the
+//! evaluation forward — no tape, no gradient bookkeeping, no softmax-stats
+//! reduction. It exists for the [`crate::serve`] subsystem (and its parity
+//! tests): training never consumes logits, serving consumes nothing else.
+//!
 //! Everything else — optimizers, QR augmentation, SVD truncation, rank
 //! bookkeeping — is host math that stays backend-independent.
 //!
@@ -159,4 +165,15 @@ pub trait ComputeBackend {
     /// Evaluation forward over one batch.
     fn forward(&self, arch: &str, layers: &[LayerParams<'_>], batch: &Batch)
         -> Result<EvalStats>;
+
+    /// Raw logits (`B x num_classes`, `B` = the padded batch size) of the
+    /// same evaluation forward — the serving primitive. Rows at index
+    /// `>= batch.count` correspond to padding (weight 0) and carry no
+    /// meaning; callers must ignore them.
+    fn forward_logits(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<Matrix>;
 }

@@ -234,7 +234,9 @@ fn forward_pass(
 /// Weighted softmax cross-entropy over a batch of logits. Returns the
 /// weighted-mean loss, the weighted correct count, and (when requested)
 /// `δ = ∂loss/∂logits` with the `1/Σw` normalization already applied.
-fn softmax_stats(
+/// Crate-visible so the serving path ([`crate::serve`]) measures loss and
+/// accuracy with arithmetic identical to training evaluation.
+pub(crate) fn softmax_stats(
     logits: &Matrix,
     y: &[i32],
     w: &[f32],
@@ -609,6 +611,42 @@ impl ComputeBackend for NativeBackend {
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
     }
+
+    fn forward_logits(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<Matrix> {
+        let arch = &self.entry(arch)?.1;
+        let x = batch_matrix(batch, arch.input_dim)?;
+        forward_logits_raw(arch, layers, x)
+    }
+}
+
+/// The evaluation forward minus the tape and minus the softmax-stats
+/// reduction — byte-for-byte the logits `forward` scores. Crate-visible
+/// because it is the single forward walk both `NativeBackend` *and* the
+/// frozen-model serving path ([`crate::serve`]) evaluate: frozen layers
+/// lower to [`LayerParams`] views (merged low-rank → `TwoFactor`), so
+/// train and serve cannot drift apart layer-walk-wise by construction.
+pub(crate) fn forward_logits_raw(
+    arch: &ArchInfo,
+    layers: &[LayerParams<'_>],
+    x: Matrix,
+) -> Result<Matrix> {
+    check_params(arch, layers)?;
+    ensure!(
+        x.cols() == arch.input_dim,
+        "feature width {} != arch input dim {}",
+        x.cols(),
+        arch.input_dim
+    );
+    ensure!(x.rows() > 0, "forward on an empty batch (0 rows)");
+    let weights: Vec<Weights<'_>> = layers.iter().map(Weights::of).collect();
+    let biases: Vec<&[f32]> = layers.iter().map(|p| p.bias()).collect();
+    let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
+    Ok(logits)
 }
 
 #[cfg(test)]
@@ -866,6 +904,21 @@ mod tests {
         let batch = tiny_batch(4, 30, 10, 14);
         let err = be.forward("bad_conv", &refs(&layers), &batch).unwrap_err().to_string();
         assert!(err.contains("incoming activation width"), "{err}");
+    }
+
+    #[test]
+    fn forward_logits_reproduces_forward_stats_exactly() {
+        // the serving primitive is the same forward: scoring its logits
+        // with the shared softmax reduction must equal `forward` bitwise
+        let be = NativeBackend::new();
+        let layers = tiny_layers(21);
+        let batch = tiny_batch(32, 64, 10, 22);
+        let logits = be.forward_logits("mlp_tiny", &refs(&layers), &batch).unwrap();
+        assert_eq!(logits.shape(), (32, 10));
+        let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false).unwrap();
+        let fwd = be.forward("mlp_tiny", &refs(&layers), &batch).unwrap();
+        assert_eq!(loss, fwd.loss);
+        assert_eq!(ncorrect, fwd.ncorrect);
     }
 
     #[test]

@@ -322,6 +322,49 @@ impl XlaBackend {
             self.flavor
         )
     }
+
+    /// Classify, load and run the forward-family artifact for a layer
+    /// list. Every such graph emits `[logits, loss, ncorrect]`; `forward`
+    /// unpacks the reductions, `forward_logits` the logit matrix.
+    fn run_forward_family(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<(std::rc::Rc<Executable>, Vec<xla::Literal>)> {
+        let Some(kind) = classify(layers) else {
+            return self.reject_mixed(arch);
+        };
+        match kind {
+            NetKind::Factored => {
+                let views = factored(layers);
+                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
+                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
+                Ok((exe, outs))
+            }
+            NetKind::Dense => {
+                let views = dense_views(layers);
+                let exe = self.rt.load(arch, "dense_forward", &self.flavor, 0)?;
+                let outs = exe.run(&pack_dense(&exe, &views, batch)?)?;
+                Ok((exe, outs))
+            }
+            NetKind::TwoFactor => {
+                // no dedicated vanilla forward artifact: lift W = U Vᵀ to
+                // U · I · Vᵀ and evaluate through the factored graph
+                let two = two_factor_views(layers);
+                let eyes: Vec<Matrix> =
+                    two.iter().map(|(u, _, _)| Matrix::eye(u.cols(), u.cols())).collect();
+                let views: Vec<(&Matrix, &Matrix, &Matrix, &[f32])> = two
+                    .iter()
+                    .zip(&eyes)
+                    .map(|(&(u, v, bias), eye)| (u, eye, v, bias))
+                    .collect();
+                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
+                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
+                Ok((exe, outs))
+            }
+        }
+    }
 }
 
 impl ComputeBackend for XlaBackend {
@@ -389,44 +432,22 @@ impl ComputeBackend for XlaBackend {
         layers: &[LayerParams<'_>],
         batch: &Batch,
     ) -> Result<EvalStats> {
-        let Some(kind) = classify(layers) else {
-            return self.reject_mixed(arch);
-        };
-        match kind {
-            NetKind::Factored => {
-                let views = factored(layers);
-                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
-                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
-                // outputs: [logits, loss, ncorrect]
-                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
-                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
-                Ok(EvalStats { loss, ncorrect })
-            }
-            NetKind::Dense => {
-                let views = dense_views(layers);
-                let exe = self.rt.load(arch, "dense_forward", &self.flavor, 0)?;
-                let outs = exe.run(&pack_dense(&exe, &views, batch)?)?;
-                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
-                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
-                Ok(EvalStats { loss, ncorrect })
-            }
-            NetKind::TwoFactor => {
-                // no dedicated vanilla forward artifact: lift W = U Vᵀ to
-                // U · I · Vᵀ and evaluate through the factored graph
-                let two = two_factor_views(layers);
-                let eyes: Vec<Matrix> =
-                    two.iter().map(|(u, _, _)| Matrix::eye(u.cols(), u.cols())).collect();
-                let views: Vec<(&Matrix, &Matrix, &Matrix, &[f32])> = two
-                    .iter()
-                    .zip(&eyes)
-                    .map(|(&(u, v, bias), eye)| (u, eye, v, bias))
-                    .collect();
-                let exe = self.load_for_rank(arch, "forward", max_rank(&views))?;
-                let outs = exe.run(&pack_factors(&exe, &views, batch)?)?;
-                let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
-                let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
-                Ok(EvalStats { loss, ncorrect })
-            }
-        }
+        // outputs: [logits, loss, ncorrect]
+        let (exe, outs) = self.run_forward_family(arch, layers, batch)?;
+        let loss = literals::unpack_scalar(&exe.info.outputs[1], &outs[1])?;
+        let ncorrect = literals::unpack_scalar(&exe.info.outputs[2], &outs[2])?;
+        Ok(EvalStats { loss, ncorrect })
+    }
+
+    fn forward_logits(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<Matrix> {
+        // same artifact family; the serving call unpacks the logit matrix
+        // (output 0) instead of the reductions
+        let (exe, outs) = self.run_forward_family(arch, layers, batch)?;
+        literals::unpack_matrix(&exe.info.outputs[0], &outs[0])
     }
 }

@@ -19,7 +19,9 @@ use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::path::Path;
 
-fn matrix_to_json(m: &Matrix) -> Json {
+// Crate-visible: the frozen-model serializer (`crate::serve`) shares the
+// same matrix wire format, so checkpoints and frozen models diff alike.
+pub(crate) fn matrix_to_json(m: &Matrix) -> Json {
     Json::obj(vec![
         ("rows", Json::num(m.rows() as f64)),
         ("cols", Json::num(m.cols() as f64)),
@@ -27,7 +29,7 @@ fn matrix_to_json(m: &Matrix) -> Json {
     ])
 }
 
-fn matrix_from_json(v: &Json) -> Result<Matrix> {
+pub(crate) fn matrix_from_json(v: &Json) -> Result<Matrix> {
     let rows = v.req("rows")?.as_usize()?;
     let cols = v.req("cols")?.as_usize()?;
     let data = v.req("data")?.to_f32_vec()?;

@@ -456,8 +456,16 @@ impl Network {
     }
 
     /// Evaluate loss/accuracy over a dataset via the backend's `forward`.
-    /// Returns `(mean_loss, accuracy)`.
+    /// Returns `(mean_loss, accuracy)`. An empty dataset is an error — it
+    /// used to come back as `(0.0, 0.0)` through a `total.max(1.0)` guard,
+    /// which reads as a perfect loss on a run that measured nothing.
     pub fn evaluate(&self, rt: &Runtime, data: &Dataset) -> Result<(f32, f32)> {
+        ensure!(
+            !data.is_empty(),
+            "evaluate on an empty dataset: no samples to measure loss/accuracy on \
+             (arch '{}')",
+            self.arch_name
+        );
         let batch_cap = rt.batch_cap(&self.arch_name)?;
         let mut total_loss = 0.0f64;
         let mut total_correct = 0.0f64;
@@ -469,6 +477,16 @@ impl Network {
             total_correct += stats.ncorrect as f64;
             total += batch.count as f64;
         }
-        Ok(((total_loss / total.max(1.0)) as f32, (total_correct / total.max(1.0)) as f32))
+        Ok(((total_loss / total) as f32, (total_correct / total) as f32))
+    }
+
+    /// Freeze this network into its forward-only serving form: DLRT layers
+    /// merge their core into the right factor (`U, S·Vᵀ` — the paper's
+    /// `O((n+m)r)` inference contraction), dense layers copy `W`, vanilla
+    /// layers keep their two factors. Optimizer moments, staged bases and
+    /// rank policies do not survive the export — serving needs none of
+    /// them. See [`crate::serve`].
+    pub fn export(&self) -> crate::serve::FrozenModel {
+        crate::serve::FrozenModel::from_network(self)
     }
 }

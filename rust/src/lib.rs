@@ -19,6 +19,12 @@
 //!   (homogeneous nets only, via a thin adapter).
 //! * **L1** — Pallas kernels inside those compiled graphs (XLA path only).
 //!
+//! Orthogonal to training, the [`serve`] subsystem freezes a trained
+//! network into its merged-factor inference form (`U, S·Vᵀ` per low-rank
+//! layer — the paper's `O((n+m)r)` deployment contraction) and serves it
+//! through a thread-pooled micro-batching engine; `tests/serve_parity.rs`
+//! locks serving to training evaluation.
+//!
 //! Python never runs on the training path: even on the XLA backend the
 //! coordinator executes pre-compiled graphs through the PJRT C API and
 //! performs the host-side linear algebra (thin QR, small SVD) in [`linalg`].
@@ -32,6 +38,7 @@ pub mod dlrt;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

@@ -170,6 +170,25 @@ impl Matrix {
         m
     }
 
+    /// Per-row index of the maximum entry, ties to the lowest index — the
+    /// class-prediction rule over a logits matrix (identical tie-breaking
+    /// to the training accuracy's argmax, so serving and evaluation agree
+    /// sample for sample).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
     /// Matrix-vector product `self * x`.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
@@ -257,6 +276,12 @@ mod tests {
         assert_eq!(p.take_block(2, 2), a);
         assert_eq!(p[(3, 2)], 0.0);
         assert_eq!(p.fro_norm(), a.fro_norm());
+    }
+
+    #[test]
+    fn argmax_rows_breaks_ties_low() {
+        let m = Matrix::from_vec(3, 3, vec![0.0, 2.0, 1.0, 5.0, 5.0, 4.0, -1.0, -3.0, -1.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0, 0]);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! dlrt train --preset tab1_tau0.15 --out runs/        # run a paper preset
 //! dlrt train --config my.toml                         # run a custom config
 //! dlrt eval  --checkpoint runs/model.json             # evaluate a checkpoint
+//! dlrt export --checkpoint runs/model.json \
+//!             --out runs/model_frozen.json            # freeze for serving
 //! dlrt presets                                        # list presets
 //! dlrt inspect                                        # dump the manifest
 //! ```
@@ -21,6 +23,7 @@ USAGE:
   dlrt train [--preset NAME | --config FILE] [--out DIR] [--epochs N]
              [--artifacts DIR] [--seed N]
   dlrt eval --checkpoint FILE [--preset NAME]
+  dlrt export --checkpoint FILE [--out FILE]
   dlrt presets
   dlrt inspect [--artifacts DIR]
 ";
@@ -34,6 +37,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "export" => cmd_export(&args),
         "presets" => {
             for (name, cfg) in presets::all() {
                 println!(
@@ -104,6 +108,38 @@ fn cmd_eval(args: &Args) -> Result<()> {
     coordinator::restore_network(&mut trainer.model, layers)?;
     let (loss, acc) = trainer.evaluate(&ValOrTest::Test)?;
     println!("test loss {loss:.4}, accuracy {:.2}%", 100.0 * acc);
+    Ok(())
+}
+
+/// Freeze a training checkpoint (v1 or v2, any layer-kind mix) into the
+/// serving model format: low-rank layers merge `S` into `Vᵀ`, dense layers
+/// pass through. The arch geometry resolves against the native registry.
+fn cmd_export(args: &Args) -> Result<()> {
+    let checkpoint = args
+        .get("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("export requires --checkpoint"))?;
+    let checkpoint = PathBuf::from(checkpoint);
+    let out = match args.get("out") {
+        Some(o) => PathBuf::from(o),
+        None => {
+            let stem = checkpoint.file_stem().and_then(|s| s.to_str()).unwrap_or("model");
+            checkpoint.with_file_name(format!("{stem}_frozen.json"))
+        }
+    };
+    let (arch_name, layers) = coordinator::load_network(&checkpoint)?;
+    let rt = dlrt::runtime::Runtime::native();
+    let arch = rt.arch(&arch_name)?;
+    let model = dlrt::serve::FrozenModel::from_checkpoint(&arch_name, arch, layers)?;
+    let (stored, dense) = (model.stored_params(), model.dense_params());
+    model.save(&out)?;
+    println!(
+        "frozen '{arch_name}' model: {} layers, ranks {:?}, {stored} stored params \
+         ({:.1}% of the {dense}-param dense net) -> {}",
+        model.layers.len(),
+        model.ranks(),
+        100.0 * stored as f64 / dense as f64,
+        out.display()
+    );
     Ok(())
 }
 

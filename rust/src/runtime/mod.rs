@@ -106,6 +106,18 @@ impl Runtime {
     ) -> Result<EvalStats> {
         self.backend.forward(arch, layers, batch)
     }
+
+    /// Raw logits of the evaluation forward — the serving primitive
+    /// ([`ComputeBackend::forward_logits`]). Rows past `batch.count` are
+    /// padding and must be ignored.
+    pub fn forward_logits(
+        &self,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<crate::linalg::Matrix> {
+        self.backend.forward_logits(arch, layers, batch)
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -1,0 +1,427 @@
+//! The frozen inference form of a trained network.
+//!
+//! A [`FrozenModel`] is a per-layer list of [`FrozenLayer`]s — dense `W`
+//! or a merged low-rank pair — plus the architecture they parameterize.
+//! The low-rank merge folds the small core into the right factor once at
+//! export time: the stored pair is `(U, L)` with `L = V·Sᵀ = (S·Vᵀ)ᵀ`
+//! (the integrator's own L factor, kept `n x r` so batched products
+//! stream row-major), and the serving forward is two thin GEMMs per
+//! layer — `x · L · Uᵀ`, the paper's `O((n + m) r)` deployment
+//! contraction — where training pays an extra `r x r` product per batch.
+//!
+//! The forward itself is **not** reimplemented here: frozen layers lower
+//! to [`crate::backend::LayerParams`] views (`Dense`, merged → `TwoFactor`)
+//! and evaluate through the native backend's single forward walk
+//! ([`crate::backend::native::forward_logits_raw`]) — conv lowering,
+//! pooling and activation conventions cannot drift between training and
+//! serving because they are one function. A consequence worth tests
+//! relying on: all-dense *and* all-vanilla nets serve bitwise-identically
+//! to their training forward; DLRT nets differ only by the merge's float
+//! reassociation.
+//!
+//! Serialization is a versioned JSON document (`format = "dlrt-frozen"`,
+//! version [`FROZEN_VERSION`]); floats survive the f32 → JSON → f32 round
+//! trip exactly, so save → load → forward is bitwise-reproducible (the
+//! parity suite asserts it).
+
+use crate::backend::native::{forward_logits_raw, softmax_stats};
+use crate::backend::LayerParams;
+use crate::coordinator::checkpoint::{matrix_from_json, matrix_to_json, CheckpointLayer};
+use crate::data::{Batcher, Dataset};
+use crate::dlrt::{LayerState, LowRankFactors, Network};
+use crate::linalg::Matrix;
+use crate::runtime::{ArchInfo, Runtime};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::path::Path;
+
+/// Format tag of the frozen-model file.
+pub const FROZEN_FORMAT: &str = "dlrt-frozen";
+/// Current frozen-model file version.
+pub const FROZEN_VERSION: usize = 1;
+
+/// One layer's inference-time weights. Conv layers use the same variants —
+/// their "dense" weight is the `out_ch x (in_ch·k²)` kernel matrix.
+#[derive(Clone)]
+pub enum FrozenLayer {
+    /// Dense `W (m x n)` + bias.
+    Dense { w: Matrix, bias: Vec<f32> },
+    /// Merged low-rank pair: `u (m x r)` and the merged right factor
+    /// `vs = V·Sᵀ (n x r)` + bias, so `W = u · vsᵀ` without ever
+    /// materializing it.
+    LowRank { u: Matrix, vs: Matrix, bias: Vec<f32> },
+}
+
+impl FrozenLayer {
+    /// Merge training factors `U S Vᵀ` into the serving pair `(U, V·Sᵀ)` —
+    /// the right factor is exactly the integrator's `L`.
+    pub fn from_factors(f: &LowRankFactors) -> FrozenLayer {
+        FrozenLayer::LowRank { u: f.u.clone(), vs: f.l(), bias: f.bias.clone() }
+    }
+
+    /// Serving rank: `None` for dense layers.
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            FrozenLayer::Dense { .. } => None,
+            FrozenLayer::LowRank { u, .. } => Some(u.cols()),
+        }
+    }
+
+    /// Stored parameter count (weights + bias).
+    pub fn stored_params(&self) -> usize {
+        match self {
+            FrozenLayer::Dense { w, bias } => w.rows() * w.cols() + bias.len(),
+            FrozenLayer::LowRank { u, vs, bias } => {
+                u.rows() * u.cols() + vs.rows() * vs.cols() + bias.len()
+            }
+        }
+    }
+
+    fn bias(&self) -> &[f32] {
+        match self {
+            FrozenLayer::Dense { bias, .. } | FrozenLayer::LowRank { bias, .. } => bias,
+        }
+    }
+
+    /// The compute view this layer lowers to: merged low-rank pairs are
+    /// exactly the two-factor parameterization the backend already walks.
+    fn params(&self) -> LayerParams<'_> {
+        match self {
+            FrozenLayer::Dense { w, bias } => LayerParams::Dense { w, bias },
+            FrozenLayer::LowRank { u, vs, bias } => {
+                LayerParams::TwoFactor { u, v: vs, bias }
+            }
+        }
+    }
+}
+
+/// A frozen network: inference weights plus the architecture geometry.
+#[derive(Clone)]
+pub struct FrozenModel {
+    pub arch_name: String,
+    pub arch: ArchInfo,
+    pub layers: Vec<FrozenLayer>,
+}
+
+impl FrozenModel {
+    /// Freeze a trained network into its inference form
+    /// ([`crate::dlrt::Network::export`] is the ergonomic entry point):
+    /// DLRT layers merge their core into the right factor, dense layers
+    /// copy `W`, vanilla two-factor layers keep their factors (their core
+    /// is the identity, so merging is a copy).
+    pub fn from_network(net: &Network) -> FrozenModel {
+        let layers = net
+            .layers
+            .iter()
+            .map(|ls| match ls {
+                LayerState::DlrtAdaptive { layer, .. } | LayerState::DlrtFixed { layer } => {
+                    FrozenLayer::from_factors(&layer.factors)
+                }
+                LayerState::Dense { w, bias, .. } => {
+                    FrozenLayer::Dense { w: w.clone(), bias: bias.clone() }
+                }
+                LayerState::Vanilla { u, v, bias, .. } => FrozenLayer::LowRank {
+                    u: u.clone(),
+                    vs: v.clone(),
+                    bias: bias.clone(),
+                },
+            })
+            .collect();
+        FrozenModel { arch_name: net.arch_name.clone(), arch: net.arch.clone(), layers }
+    }
+
+    /// Freeze persisted checkpoint layers (v1 or v2, any kind mix) without
+    /// rebuilding a trainable network — the `dlrt export` CLI path.
+    pub fn from_checkpoint(
+        arch_name: &str,
+        arch: ArchInfo,
+        layers: Vec<CheckpointLayer>,
+    ) -> Result<FrozenModel> {
+        let frozen = layers
+            .into_iter()
+            .map(|cl| match cl {
+                CheckpointLayer::Dlrt(f) => FrozenLayer::from_factors(&f),
+                CheckpointLayer::Dense { w, bias } => FrozenLayer::Dense { w, bias },
+                CheckpointLayer::Vanilla { u, v, bias } => {
+                    FrozenLayer::LowRank { u, vs: v, bias }
+                }
+            })
+            .collect();
+        let model = FrozenModel { arch_name: arch_name.into(), arch, layers: frozen };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Shape-check every layer against the architecture, so a malformed
+    /// model file (or an arch mismatch) fails at load time with a
+    /// descriptive error instead of a kernel assert mid-request.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.layers.len() == self.arch.layers.len(),
+            "frozen model has {} layers but arch '{}' has {}",
+            self.layers.len(),
+            self.arch_name,
+            self.arch.layers.len()
+        );
+        for (k, (fl, li)) in self.layers.iter().zip(&self.arch.layers).enumerate() {
+            match fl {
+                FrozenLayer::Dense { w, .. } => {
+                    ensure!(
+                        w.shape() == (li.m, li.n),
+                        "layer {k}: frozen weight {:?} != layer {}x{}",
+                        w.shape(),
+                        li.m,
+                        li.n
+                    );
+                }
+                FrozenLayer::LowRank { u, vs, .. } => {
+                    ensure!(
+                        u.rows() == li.m && vs.rows() == li.n && u.cols() == vs.cols(),
+                        "layer {k}: frozen factors U {:?} / VSᵀ {:?} don't chain as {}x{}",
+                        u.shape(),
+                        vs.shape(),
+                        li.m,
+                        li.n
+                    );
+                }
+            }
+            ensure!(
+                fl.bias().len() == li.m,
+                "layer {k}: bias len {} != m {}",
+                fl.bias().len(),
+                li.m
+            );
+        }
+        Ok(())
+    }
+
+    /// Per-layer serving ranks (`min(m, n)` reported for dense layers).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .zip(&self.arch.layers)
+            .map(|(fl, li)| fl.rank().unwrap_or(li.m.min(li.n)))
+            .collect()
+    }
+
+    /// Total stored parameters of the frozen form.
+    pub fn stored_params(&self) -> usize {
+        self.layers.iter().map(|l| l.stored_params()).sum()
+    }
+
+    /// Parameters of the dense reference (weights + biases) — the
+    /// compression denominator.
+    pub fn dense_params(&self) -> usize {
+        self.arch.layers.iter().map(|l| l.m * l.n + l.m).sum()
+    }
+
+    /// Batched serving forward: `x (B x input_dim)` → logits
+    /// `(B x num_classes)`. Lowers every layer to its [`LayerParams`] view
+    /// and runs the native backend's one forward walk — see the module
+    /// docs for the bitwise/tolerance parity this buys. Every kernel is
+    /// row-independent: a sample's logits do not depend on what else is
+    /// in the batch.
+    pub fn forward_logits(&self, x: &Matrix) -> Result<Matrix> {
+        ensure!(
+            x.cols() == self.arch.input_dim,
+            "feature width {} != arch '{}' input dim {}",
+            x.cols(),
+            self.arch_name,
+            self.arch.input_dim
+        );
+        ensure!(x.rows() > 0, "forward_logits on an empty batch (0 rows)");
+        let params: Vec<LayerParams<'_>> = self.layers.iter().map(|fl| fl.params()).collect();
+        forward_logits_raw(&self.arch, &params, x.clone())
+    }
+
+    /// Class predictions (per-row logits argmax, ties to the lowest index
+    /// — the same rule the training accuracy uses).
+    pub fn predict(&self, x: &Matrix) -> Result<Vec<usize>> {
+        Ok(self.forward_logits(x)?.argmax_rows())
+    }
+
+    /// `(mean loss, accuracy)` over a dataset, batched at `batch_cap` —
+    /// the serving mirror of `Network::evaluate`, sharing its forward and
+    /// softmax/aggregation code so unmerged nets match it bitwise. Errors
+    /// on an empty dataset rather than reporting fake-perfect stats.
+    pub fn evaluate(&self, data: &Dataset, batch_cap: usize) -> Result<(f32, f32)> {
+        ensure!(
+            !data.is_empty(),
+            "evaluate on an empty dataset: no samples to measure loss/accuracy on"
+        );
+        ensure!(batch_cap > 0, "evaluate needs a positive batch size");
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut total = 0.0f64;
+        for batch in Batcher::sequential(data, batch_cap) {
+            let x = Matrix::from_vec(batch.w.len(), data.dim, batch.x.clone());
+            let logits = self.forward_logits(&x)?;
+            let (loss, ncorrect) = eval_logits(&logits, &batch.y, &batch.w)?;
+            total_loss += loss as f64 * batch.count as f64;
+            total_correct += ncorrect as f64;
+            total += batch.count as f64;
+        }
+        Ok(((total_loss / total) as f32, (total_correct / total) as f32))
+    }
+
+    /// Save as a versioned JSON model file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let layers = self.layers.iter().map(|fl| match fl {
+            FrozenLayer::Dense { w, bias } => crate::util::Json::obj(vec![
+                ("kind", crate::util::Json::str("dense")),
+                ("w", matrix_to_json(w)),
+                ("bias", crate::util::Json::f32_array(bias)),
+            ]),
+            FrozenLayer::LowRank { u, vs, bias } => crate::util::Json::obj(vec![
+                ("kind", crate::util::Json::str("lowrank")),
+                ("u", matrix_to_json(u)),
+                ("vs", matrix_to_json(vs)),
+                ("bias", crate::util::Json::f32_array(bias)),
+            ]),
+        });
+        let doc = crate::util::Json::obj(vec![
+            ("format", crate::util::Json::str(FROZEN_FORMAT)),
+            ("version", crate::util::Json::num(FROZEN_VERSION as f64)),
+            ("arch", crate::util::Json::str(&*self.arch_name)),
+            ("layers", crate::util::Json::arr(layers)),
+        ]);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing frozen model {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a frozen model file; the architecture geometry is resolved
+    /// through the runtime's registry and every tensor is shape-checked.
+    pub fn load(path: &Path, rt: &Runtime) -> Result<FrozenModel> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading frozen model {}", path.display()))?;
+        let v = crate::util::Json::parse(&s).context("parsing frozen model")?;
+        let format = v.req("format")?.as_str()?;
+        ensure!(
+            format == FROZEN_FORMAT,
+            "not a frozen model file (format '{format}', expected '{FROZEN_FORMAT}')"
+        );
+        let version = v.req("version")?.as_usize()?;
+        ensure!(
+            version == FROZEN_VERSION,
+            "unsupported frozen model version {version} (this build reads v{FROZEN_VERSION})"
+        );
+        let arch_name = v.req("arch")?.as_str()?.to_string();
+        let arch = rt
+            .arch(&arch_name)
+            .with_context(|| format!("resolving frozen model arch '{arch_name}'"))?;
+        let layers = v
+            .req("layers")?
+            .as_arr()?
+            .iter()
+            .enumerate()
+            .map(|(k, l)| -> Result<FrozenLayer> {
+                Ok(match l.req("kind")?.as_str()? {
+                    "dense" => FrozenLayer::Dense {
+                        w: matrix_from_json(l.req("w")?)?,
+                        bias: l.req("bias")?.to_f32_vec()?,
+                    },
+                    "lowrank" => FrozenLayer::LowRank {
+                        u: matrix_from_json(l.req("u")?)?,
+                        vs: matrix_from_json(l.req("vs")?)?,
+                        bias: l.req("bias")?.to_f32_vec()?,
+                    },
+                    other => bail!("layer {k}: unknown frozen layer kind '{other}'"),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let model = FrozenModel { arch_name, arch, layers };
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+/// Weighted softmax cross-entropy stats of a logits batch: `(weighted mean
+/// loss, weighted correct count)`. This is the exact reduction the
+/// training backends apply after their forward (same code), exposed so
+/// serving and parity tests measure with identical arithmetic.
+pub fn eval_logits(logits: &Matrix, y: &[i32], w: &[f32]) -> Result<(f32, f32)> {
+    ensure!(
+        y.len() == logits.rows() && w.len() == logits.rows(),
+        "eval_logits arity mismatch: {} logit rows vs {} labels / {} weights",
+        logits.rows(),
+        y.len(),
+        w.len()
+    );
+    let (loss, ncorrect, _) = softmax_stats(logits, y, w, false)?;
+    Ok((loss, ncorrect))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, Rng};
+    use crate::util::testutil::TestDir;
+
+    fn tiny_frozen(seed: u64) -> FrozenModel {
+        let rt = Runtime::native();
+        let arch = rt.arch("mlp_tiny").unwrap();
+        let mut rng = Rng::new(seed);
+        let layers = vec![
+            FrozenLayer::from_factors(&LowRankFactors::random(32, 64, 6, &mut rng)),
+            FrozenLayer::Dense { w: rng.normal_matrix(32, 32), bias: vec![0.1; 32] },
+            FrozenLayer::from_factors(&LowRankFactors::random(10, 32, 5, &mut rng)),
+        ];
+        FrozenModel { arch_name: "mlp_tiny".into(), arch, layers }
+    }
+
+    #[test]
+    fn merged_layer_matches_three_factor_product() {
+        let mut rng = Rng::new(1);
+        let f = LowRankFactors::random(12, 9, 4, &mut rng);
+        let fl = FrozenLayer::from_factors(&f);
+        let FrozenLayer::LowRank { u, vs, .. } = &fl else { panic!("expected merged") };
+        assert_eq!((u.shape(), vs.shape()), ((12, 4), (9, 4)));
+        // W = U · (V Sᵀ)ᵀ reconstructs U S Vᵀ
+        assert!(matmul_nt(u, vs).fro_dist(&f.reconstruct()) < 1e-4);
+    }
+
+    #[test]
+    fn save_load_forward_is_bitwise() {
+        let model = tiny_frozen(3);
+        model.validate().unwrap();
+        let mut rng = Rng::new(4);
+        let x = rng.normal_matrix(7, 64);
+        let a = model.forward_logits(&x).unwrap();
+        let dir = TestDir::new();
+        let p = dir.join("m.json");
+        model.save(&p).unwrap();
+        let back = FrozenModel::load(&p, &Runtime::native()).unwrap();
+        let b = back.forward_logits(&x).unwrap();
+        assert_eq!(a.data(), b.data(), "save → load → forward must be bitwise");
+        assert_eq!(model.stored_params(), back.stored_params());
+    }
+
+    #[test]
+    fn shape_and_version_errors_are_descriptive() {
+        let mut model = tiny_frozen(5);
+        // break a layer shape
+        model.layers[1] = FrozenLayer::Dense { w: Matrix::zeros(3, 3), bias: vec![0.0; 3] };
+        let err = model.validate().unwrap_err().to_string();
+        assert!(err.contains("layer 1"), "{err}");
+        // future version is rejected
+        let dir = TestDir::new();
+        let p = dir.join("future.json");
+        std::fs::write(&p, r#"{"format":"dlrt-frozen","version":9,"arch":"mlp_tiny","layers":[]}"#)
+            .unwrap();
+        let err = FrozenModel::load(&p, &Runtime::native()).unwrap_err();
+        assert!(format!("{err:#}").contains("version 9"), "{err:#}");
+        // wrong input width is a clean error
+        let model = tiny_frozen(6);
+        let err = model.forward_logits(&Matrix::zeros(2, 7)).unwrap_err().to_string();
+        assert!(err.contains("input dim"), "{err}");
+        // empty batch / dataset are errors, not fake stats
+        assert!(model.forward_logits(&Matrix::zeros(0, 64)).is_err());
+        let empty = Dataset { features: vec![], labels: vec![], dim: 64, num_classes: 10 };
+        let err = model.evaluate(&empty, 32).unwrap_err().to_string();
+        assert!(err.contains("empty dataset"), "{err}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Serving subsystem: frozen low-rank model export + batched inference.
+//!
+//! Training needs factors, optimizer moments, staged bases and a taped
+//! backward sweep; *serving* needs none of it. This module is the
+//! forward-only half of the paper's payoff (§4.2, Fig. 1): a rank-`r`
+//! layer evaluates at `O((n + m) r)` per sample by contracting
+//! `x · (S Vᵀ)ᵀ · Uᵀ` instead of the full `m x n` weight — the same
+//! merged-factor deployment story Trained Rank Pruning ships (Xu+ 2019).
+//!
+//! Two pieces:
+//!
+//! * [`FrozenModel`] ([`frozen`]) — the inference form of a trained
+//!   [`crate::dlrt::Network`]. Each layer freezes to either a dense `W` or
+//!   a **merged** low-rank pair `(U, V·Sᵀ)` with its bias
+//!   ([`FrozenLayer`]); conv layers keep their im2col lowering, and the
+//!   forward delegates to the native backend's one layer walk. Produced
+//!   by [`crate::dlrt::Network::export`] or from a saved v1/v2 checkpoint
+//!   ([`FrozenModel::from_checkpoint`] — the `dlrt export` CLI), and
+//!   serialized to a versioned JSON model file whose load → forward is
+//!   bitwise-reproducible.
+//! * [`Engine`] ([`engine`]) — a thread-pooled micro-batching server over
+//!   one frozen model: single requests queue, coalesce up to `batch_cap`
+//!   or a deadline, and drain as one batched forward whose matmuls run on
+//!   the threaded [`crate::linalg`] kernels ([`crate::util::pool`]).
+//!   Per-sample logits are independent of batch composition (every kernel
+//!   is row-independent), so micro-batching changes latency, never
+//!   answers.
+//!
+//! Parity with training is locked down three ways (`tests/serve_parity.rs`):
+//! the backend's `forward_logits` agrees exactly with
+//! `Network::evaluate`'s stats, frozen logits preserve the argmax and
+//! match to float-merge tolerance, and the truncation bound
+//! `‖W − U S Vᵀ‖_F ≤ τ‖Σ‖_F` is property-tested against the merged
+//! serving weight (`tests/theorems.rs`).
+
+pub mod engine;
+pub mod frozen;
+
+pub use engine::{Engine, EngineConfig, EngineStats, Prediction};
+pub use frozen::{eval_logits, FrozenLayer, FrozenModel, FROZEN_FORMAT, FROZEN_VERSION};

@@ -1,0 +1,118 @@
+//! Deterministic regression trace: one seeded, few-step TRP-LeNet run
+//! whose per-epoch loss trace is snapshot-compared, so a future kernel or
+//! refactor PR cannot silently drift the training numerics.
+//!
+//! The snapshot is self-bootstrapping: the first run on a checkout trains
+//! the trace **twice**, asserts the two runs agree bitwise (the
+//! determinism contract of DESIGN.md §5), writes
+//! `tests/snapshots/trp_lenet_trace.json`, and passes; every later run
+//! compares against the file with a small relative tolerance. The
+//! drift-vs-history check therefore only bites once a snapshot is
+//! committed — run the suite once and commit the generated file (and
+//! after an *intentional* numerics change, delete it and commit the
+//! regenerated one with the PR that changed the math). Until then the
+//! bootstrap branch still pins within-build determinism, which is what a
+//! fresh checkout can honestly verify.
+
+use dlrt::config::{presets, DataSource};
+use dlrt::coordinator::Trainer;
+use dlrt::util::Json;
+use std::path::PathBuf;
+
+/// Relative tolerance per compared scalar. Tight enough to catch a changed
+/// contraction or reduction order, loose enough for cross-platform libm
+/// differences (exp/ln in the softmax).
+const REL_TOL: f64 = 2e-3;
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/snapshots/trp_lenet_trace.json")
+}
+
+/// One seeded trace run: mixed TRP net, 2 epochs x 3 steps on synthetic
+/// MNIST; the bogus data root pins the synthetic generator even when a
+/// real MNIST copy exists locally.
+fn run_trace() -> (Vec<(f64, f64, f64)>, Vec<usize>) {
+    let mut cfg = presets::trp_lenet(0.15);
+    cfg.epochs = 2;
+    cfg.seed = 42;
+    cfg.max_steps_per_epoch = 3;
+    cfg.data = DataSource::Mnist { root: "data/__regression_trace__".into(), n_synth: 1_500 };
+    let mut t = Trainer::new(cfg).unwrap();
+    let rec = t.run("regression_trace", |_| {}).unwrap();
+    assert_eq!(rec.epochs.len(), 2);
+    let trace = rec
+        .epochs
+        .iter()
+        .map(|e| (e.train_loss as f64, e.train_loss_after_kl as f64, e.val_loss as f64))
+        .collect();
+    (trace, rec.final_ranks.clone())
+}
+
+#[test]
+fn trp_lenet_loss_trace_matches_snapshot() {
+    let (got, got_ranks) = run_trace();
+
+    let path = snapshot_path();
+    if !path.exists() {
+        // bootstrap: no history to diff against, so pin what a fresh
+        // checkout *can* verify — the trace is bitwise reproducible —
+        // then write the snapshot for future runs to compare with
+        let (again, again_ranks) = run_trace();
+        assert_eq!(got, again, "seeded trace is not deterministic within one build");
+        assert_eq!(got_ranks, again_ranks, "seeded ranks are not deterministic");
+        let epochs = got.iter().map(|&(tl, tak, vl)| {
+            Json::obj(vec![
+                ("train_loss", Json::num(tl)),
+                ("train_loss_after_kl", Json::num(tak)),
+                ("val_loss", Json::num(vl)),
+            ])
+        });
+        let doc = Json::obj(vec![
+            ("config", Json::str("trp_lenet tau=0.15 seed=42 2x3 steps n=1500")),
+            ("epochs", Json::arr(epochs)),
+            ("final_ranks", Json::usize_array(&got_ranks)),
+        ]);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        eprintln!(
+            "regression_trace: wrote new snapshot {} — commit it to pin the numerics",
+            path.display()
+        );
+        return;
+    }
+
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let want = doc.req("epochs").unwrap().as_arr().unwrap();
+    assert_eq!(
+        want.len(),
+        got.len(),
+        "snapshot has {} epochs, run produced {} — regenerate the snapshot \
+         if the trace config changed intentionally",
+        want.len(),
+        got.len()
+    );
+    let close = |name: &str, epoch: usize, a: f64, b: f64| {
+        assert!(
+            (a - b).abs() <= REL_TOL * b.abs().max(1e-3),
+            "numeric drift in {name} at epoch {epoch}: ran {a}, snapshot {b} \
+             (rel tol {REL_TOL}); if this PR changed the math on purpose, \
+             delete {} and commit the regenerated snapshot",
+            snapshot_path().display()
+        );
+    };
+    for (epoch, (w, &(tl, tak, vl))) in want.iter().zip(&got).enumerate() {
+        close("train_loss", epoch, tl, w.req("train_loss").unwrap().as_f64().unwrap());
+        close(
+            "train_loss_after_kl",
+            epoch,
+            tak,
+            w.req("train_loss_after_kl").unwrap().as_f64().unwrap(),
+        );
+        close("val_loss", epoch, vl, w.req("val_loss").unwrap().as_f64().unwrap());
+    }
+    let want_ranks = doc.req("final_ranks").unwrap().to_usize_vec().unwrap();
+    assert_eq!(
+        got_ranks, want_ranks,
+        "final ranks drifted from the snapshot — truncation decisions changed"
+    );
+}

@@ -1,0 +1,253 @@
+//! Serving parity suite: the frozen-model export and the micro-batching
+//! engine are locked to training evaluation for every layer mode the
+//! repo trains (dense, vanilla, fixed-rank, adaptive, and the TRP-style
+//! mixed `trp_lenet`).
+//!
+//! Three tiers of guarantee, from bitwise to tolerance:
+//!
+//! 1. **`forward_logits` ≡ `forward`** — scoring the backend's raw logits
+//!    with the shared softmax reduction reproduces `Network::evaluate`'s
+//!    loss/accuracy *exactly* (same floats): the serving primitive is the
+//!    training forward, not a reimplementation.
+//! 2. **Frozen ≈ live** — the merged-factor export preserves every argmax
+//!    (up to numerical ties) and matches logits to reassociation
+//!    tolerance; for all-dense nets the frozen forward is bitwise equal.
+//! 3. **Reproducibility** — export → save → load → forward is bitwise,
+//!    and every engine answer is bitwise equal to the frozen batch
+//!    forward regardless of micro-batch composition.
+
+use dlrt::config::{presets, Config, DataSource, Integrator, Mode};
+use dlrt::coordinator::Trainer;
+use dlrt::data::Batcher;
+use dlrt::linalg::Matrix;
+use dlrt::serve::{self, Engine, EngineConfig, FrozenModel};
+use dlrt::util::testutil::TestDir;
+use std::time::Duration;
+
+fn toy_cfg(mode: Mode) -> Config {
+    let mut cfg = presets::quickstart();
+    cfg.mode = mode;
+    cfg.epochs = 2;
+    cfg.data = DataSource::Toy { n: 1_200 };
+    cfg
+}
+
+/// Tiny TRP-LeNet run: dense conv prefix + adaptive tail, a few steps on
+/// synthetic MNIST (bogus root so a local real dataset can't change the
+/// trace or the runtime).
+fn trp_cfg() -> Config {
+    let mut cfg = presets::trp_lenet(0.3);
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = 3;
+    cfg.data = DataSource::Mnist { root: "data/__serve_parity__".into(), n_synth: 1_200 };
+    cfg
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Margin between the top two entries (0 for single-class rows).
+fn top2_margin(xs: &[f32]) -> f32 {
+    let b = argmax(xs);
+    let mut second = f32::NEG_INFINITY;
+    for (j, &v) in xs.iter().enumerate() {
+        if j != b && v > second {
+            second = v;
+        }
+    }
+    if second.is_finite() {
+        xs[b] - second
+    } else {
+        0.0
+    }
+}
+
+/// Train the config, export, and run the full parity ladder. `exact_eval`
+/// additionally demands bitwise loss/accuracy equality between the frozen
+/// model and `Network::evaluate` (holds when no layer was merged, i.e.
+/// all-dense nets).
+fn assert_serve_parity(cfg: Config, name: &str, exact_eval: bool) {
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run(name, |_| {}).unwrap();
+    let data = t.split.test.clone();
+    assert!(!data.is_empty());
+    let cap = t.rt.batch_cap(&t.cfg.arch).unwrap();
+    let (eval_loss, eval_acc) = t.model.evaluate(&t.rt, &data).unwrap();
+
+    // --- tier 1: forward_logits reproduces evaluate() exactly -----------
+    let params: Vec<_> = t.model.layers.iter().map(|l| l.params()).collect();
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0.0f64;
+    let mut total = 0.0f64;
+    let mut live_rows: Vec<Vec<f32>> = Vec::with_capacity(data.len());
+    for batch in Batcher::sequential(&data, cap) {
+        let logits = t.rt.forward_logits(&t.cfg.arch, &params, &batch).unwrap();
+        assert_eq!(logits.shape(), (batch.w.len(), data.num_classes));
+        let (loss, ncorrect) = serve::eval_logits(&logits, &batch.y, &batch.w).unwrap();
+        total_loss += loss as f64 * batch.count as f64;
+        total_correct += ncorrect as f64;
+        total += batch.count as f64;
+        for i in 0..batch.count {
+            live_rows.push(logits.row(i).to_vec());
+        }
+    }
+    assert_eq!(
+        (total_loss / total) as f32,
+        eval_loss,
+        "[{name}] forward_logits + shared softmax must reproduce evaluate() loss exactly"
+    );
+    assert_eq!(
+        (total_correct / total) as f32,
+        eval_acc,
+        "[{name}] forward_logits accuracy must reproduce evaluate() exactly"
+    );
+
+    // --- tier 2: frozen export preserves answers ------------------------
+    let frozen = t.model.export();
+    let x = Matrix::from_vec(data.len(), data.dim, data.features.clone());
+    let frozen_logits = frozen.forward_logits(&x).unwrap();
+    assert_eq!(frozen_logits.shape(), (data.len(), data.num_classes));
+    let frozen_labels = frozen_logits.argmax_rows();
+    for (i, live) in live_rows.iter().enumerate() {
+        let frow = frozen_logits.row(i);
+        let scale = live.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+        for (j, (&a, &b)) in live.iter().zip(frow).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * scale,
+                "[{name}] sample {i} logit {j}: live {a} vs frozen {b}"
+            );
+        }
+        // argmax must survive the merge whenever it isn't a numerical tie
+        if top2_margin(live) > 1e-3 * scale {
+            assert_eq!(
+                frozen_labels[i],
+                argmax(live),
+                "[{name}] sample {i}: merged export flipped a decisive argmax"
+            );
+        }
+    }
+    let (frozen_loss, frozen_acc) = frozen.evaluate(&data, cap).unwrap();
+    if exact_eval {
+        assert_eq!(frozen_loss, eval_loss, "[{name}] dense frozen eval must be bitwise");
+        assert_eq!(frozen_acc, eval_acc, "[{name}] dense frozen acc must be bitwise");
+    } else {
+        assert!(
+            (frozen_loss - eval_loss).abs() <= 1e-3 * (1.0 + eval_loss.abs()),
+            "[{name}] frozen loss {frozen_loss} vs live {eval_loss}"
+        );
+        assert!(
+            (frozen_acc - eval_acc).abs() <= 0.02,
+            "[{name}] frozen accuracy {frozen_acc} vs live {eval_acc}"
+        );
+    }
+
+    // --- tier 3: save → load → forward is bitwise; engine == frozen -----
+    let dir = TestDir::new();
+    let path = dir.join(format!("{name}_frozen.json"));
+    frozen.save(&path).unwrap();
+    let loaded = FrozenModel::load(&path, &t.rt).unwrap();
+    let logits2 = loaded.forward_logits(&x).unwrap();
+    assert_eq!(
+        frozen_logits.data(),
+        logits2.data(),
+        "[{name}] export → save → load → forward must be bitwise-reproducible"
+    );
+
+    let engine = Engine::start(
+        loaded,
+        EngineConfig { batch_cap: 8, max_delay: Duration::from_millis(1), workers: 2 },
+    )
+    .unwrap();
+    for i in 0..data.len().min(8) {
+        let pred = engine.infer(data.feature_row(i).to_vec()).unwrap();
+        assert_eq!(
+            pred.logits,
+            frozen_logits.row(i).to_vec(),
+            "[{name}] engine answer {i} differs from the frozen batch forward"
+        );
+        assert_eq!(pred.label, frozen_labels[i]);
+    }
+}
+
+#[test]
+fn parity_dense() {
+    // no merged layer: the whole ladder holds bitwise
+    assert_serve_parity(toy_cfg(Mode::Dense), "serve_dense", true);
+}
+
+#[test]
+fn parity_vanilla() {
+    let mut cfg = toy_cfg(Mode::Vanilla);
+    cfg.fixed_rank = 8;
+    // vanilla needs a gentler optimizer (Fig. 4's point)
+    cfg.integrator = Integrator::Adam;
+    cfg.lr = 0.005;
+    // vanilla's core is the identity: the frozen layer carries the same
+    // two factors training evaluated, so the whole ladder holds bitwise
+    assert_serve_parity(cfg, "serve_vanilla", true);
+}
+
+#[test]
+fn parity_fixed_dlrt() {
+    let mut cfg = toy_cfg(Mode::FixedDlrt);
+    cfg.fixed_rank = 8;
+    assert_serve_parity(cfg, "serve_fixed", false);
+}
+
+#[test]
+fn parity_adaptive_dlrt() {
+    assert_serve_parity(toy_cfg(Mode::AdaptiveDlrt), "serve_adaptive", false);
+}
+
+#[test]
+fn parity_trp_lenet_mixed() {
+    // dense conv prefix + adaptive low-rank tail through the conv serving
+    // path (im2col + pooling), the paper's deployment shape
+    assert_serve_parity(trp_cfg(), "serve_trp_lenet", false);
+}
+
+#[test]
+fn empty_dataset_eval_is_an_error_not_fake_stats() {
+    // regression: evaluate() used to return (0.0, 0.0) — a "perfect" loss
+    // — through a total.max(1.0) guard when the dataset was empty
+    let mut cfg = toy_cfg(Mode::Dense);
+    cfg.epochs = 1;
+    let t = Trainer::new(cfg).unwrap();
+    let empty = dlrt::data::Dataset {
+        features: vec![],
+        labels: vec![],
+        dim: t.split.test.dim,
+        num_classes: t.split.test.num_classes,
+    };
+    let err = t.model.evaluate(&t.rt, &empty).unwrap_err().to_string();
+    assert!(err.contains("empty dataset"), "unhelpful error: {err}");
+    let frozen = t.model.export();
+    let err = frozen.evaluate(&empty, 32).unwrap_err().to_string();
+    assert!(err.contains("empty dataset"), "unhelpful error: {err}");
+}
+
+#[test]
+fn frozen_export_is_smaller_for_lowrank_nets() {
+    // the deployment story: a truncated net stores (m+n)r + r² + m per
+    // layer instead of mn + m — the export must realize that saving
+    let mut cfg = toy_cfg(Mode::FixedDlrt);
+    cfg.fixed_rank = 4;
+    cfg.epochs = 1;
+    let t = Trainer::new(cfg).unwrap();
+    let frozen = t.model.export();
+    assert!(
+        frozen.stored_params() < frozen.dense_params(),
+        "rank-4 frozen model must undercut dense storage: {} vs {}",
+        frozen.stored_params(),
+        frozen.dense_params()
+    );
+    // ranks surface for capacity planning
+    assert_eq!(frozen.ranks().len(), t.model.layers.len());
+}

@@ -202,6 +202,64 @@ fn adaptive_rank_tracks_target_rank() {
 }
 
 #[test]
+fn truncation_bound_controls_merged_serving_weight() {
+    // The serving export merges W = U S Vᵀ into the pair (U, S·Vᵀ). This
+    // property test ties that path to the paper's approximation guarantee
+    // (§4.3 / Alg. 1 line 19): after a τ-truncation of the core, the
+    // *merged inference weight* satisfies ‖W − W_trunc‖_F ≤ ϑ = τ‖Σ‖_F —
+    // orthonormal bases preserve the Frobenius norm, so the error is
+    // exactly the discarded tail energy, which truncation_rank bounds by ϑ.
+    use dlrt::dlrt::LowRankFactors;
+    use dlrt::serve::FrozenLayer;
+    use dlrt::util::testutil::property;
+
+    property(25, |rng| {
+        let m = 12 + rng.below(20);
+        let n = 10 + rng.below(24);
+        let rmax = m.min(n);
+        let r = (4 + rng.below(8)).min(rmax);
+        let tau = [0.05f32, 0.15, 0.3][rng.below(3)];
+        let f = LowRankFactors::random(m, n, r, rng);
+        let w0 = f.reconstruct();
+
+        // τ-truncate the core exactly as Alg. 1 does after freeze_ranks
+        let svd = jacobi_svd(&f.s);
+        let theta = tau * svd.sigma_fro();
+        let r_new = svd.truncation_rank(theta, 1);
+        assert!(r_new >= 1 && r_new <= r);
+        let mut s_new = Matrix::zeros(r_new, r_new);
+        for i in 0..r_new {
+            s_new[(i, i)] = svd.sigma[i];
+        }
+        let truncated = LowRankFactors {
+            u: matmul(&f.u, &svd.u.take_cols(r_new)),
+            s: s_new,
+            v: matmul(&f.v, &svd.vt.transpose().take_cols(r_new)),
+            bias: f.bias.clone(),
+        };
+
+        // merge through the *serving* path and reconstruct the inference
+        // weight the engine would actually apply (W = U · (V Sᵀ)ᵀ)
+        let frozen = FrozenLayer::from_factors(&truncated);
+        let FrozenLayer::LowRank { u, vs, .. } = &frozen else {
+            panic!("factors must freeze to a merged low-rank layer");
+        };
+        assert_eq!((u.shape(), vs.shape()), ((m, r_new), (n, r_new)));
+        let w_served = matmul_nt(u, vs);
+
+        // float slack: QR/SVD orthonormality is ~1e-4, reconstruction adds
+        // rounding proportional to ‖W‖
+        let slack = 1e-3 * w0.fro_norm().max(1.0);
+        let err = w_served.fro_dist(&w0);
+        assert!(
+            err <= theta + slack,
+            "merged serving weight violates the truncation bound: \
+             ‖W − U(SVᵀ)‖ = {err} > ϑ = {theta} (+{slack}) at τ={tau}, {m}x{n} r={r}→{r_new}"
+        );
+    });
+}
+
+#[test]
 fn fixed_rank_flow_exactness_on_manifold() {
     // if W0 and A share the same rank-r subspaces, the fixed-rank KLS flow
     // must reproduce the exact flow to O(η²) per step ("exactness" of the
