@@ -1,0 +1,158 @@
+//! Bench: training-step throughput of the sharded step executor — dense
+//! vs adaptive low-rank on the MNIST MLP (`mlp500`) and the TRP-style
+//! mixed LeNet (`trp_lenet`), at `grad_shards` ∈ {1, 2, 4}. Emits
+//! `BENCH_train.json` (steps/sec and imgs/sec per configuration plus
+//! shard-4-vs-shard-1 speedups) — the repo's training-throughput
+//! trajectory starts here; the CI `train-bench` job fails when sharded
+//! steps/sec regresses below single-shard on the low-rank config.
+//!
+//! Smoke budget by default; `DLRT_FULL=1` for longer timing runs. Pin
+//! `DLRT_THREADS` for reproducible worker counts.
+
+use dlrt::config::{presets, Config, DataSource, Mode};
+use dlrt::coordinator::experiments;
+use dlrt::coordinator::Trainer;
+use dlrt::data::{Batch, Batcher};
+use dlrt::util::bench::Table;
+use dlrt::util::Json;
+use std::time::Instant;
+
+struct Row {
+    model: &'static str,
+    arch: String,
+    shards: usize,
+    batch: usize,
+    steps_per_sec: f64,
+    imgs_per_sec: f64,
+}
+
+/// Small synthetic-MNIST budget shared by every configuration: the bench
+/// measures step wall-clock, not convergence, so the dataset only needs
+/// to be big enough for a few distinct full batches.
+fn bench_data(cfg: &mut Config) {
+    cfg.data = DataSource::Mnist { root: "data/__train_throughput__".into(), n_synth: 1_500 };
+    cfg.seed = 42;
+}
+
+/// Time `steps` scheduler steps (after one untimed warmup step) cycling
+/// over a fixed set of padded batches.
+fn bench_one(
+    model: &'static str,
+    base: &Config,
+    shards: usize,
+    steps: usize,
+) -> dlrt::Result<Row> {
+    let cfg = presets::with_grad_shards(base.clone(), shards);
+    let arch = cfg.arch.clone();
+    let lr = cfg.lr;
+    let mut t = Trainer::new(cfg)?;
+    let batch_cap = t.rt.batch_cap(&arch)?;
+    let mut batcher = Batcher::new(t.split.train.len(), batch_cap, true, 7);
+    let batches: Vec<Batch> = batcher.epoch(&t.split.train).collect();
+    anyhow::ensure!(!batches.is_empty(), "bench dataset yields no full batch");
+    t.model.step(&t.rt, &batches[0], lr)?; // warmup: touches every phase
+    let t0 = Instant::now();
+    for i in 0..steps {
+        t.model.step(&t.rt, &batches[i % batches.len()], lr)?;
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Row {
+        model,
+        arch,
+        shards,
+        batch: batch_cap,
+        steps_per_sec: steps as f64 / secs,
+        imgs_per_sec: steps as f64 * batch_cap as f64 / secs,
+    })
+}
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let steps = if full { 40 } else { 6 };
+    let shard_counts = [1usize, 2, 4];
+    println!(
+        "train_throughput: {steps} timed steps per configuration, grad_shards {shard_counts:?} \
+         ({})",
+        if full { "full" } else { "smoke" }
+    );
+
+    let mut mlp_dense = presets::fig3_sweep("mlp500", 0.1);
+    mlp_dense.mode = Mode::Dense;
+    let mut mlp_lowrank = presets::fig3_sweep("mlp500", 0.1);
+    mlp_lowrank.init_rank = 64;
+    let lenet_dense = presets::tab1_lenet_dense();
+    let lenet_lowrank = presets::trp_lenet(0.15);
+
+    let mut models: Vec<(&'static str, Config)> = vec![
+        ("mlp500_dense", mlp_dense),
+        ("mlp500_lowrank", mlp_lowrank),
+        ("trp_lenet_dense", lenet_dense),
+        ("trp_lenet_lowrank", lenet_lowrank),
+    ];
+    for (_, cfg) in models.iter_mut() {
+        bench_data(cfg);
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (model, cfg) in &models {
+        for &k in &shard_counts {
+            rows.push(bench_one(*model, cfg, k, steps)?);
+        }
+    }
+    emit(&rows, full, steps)
+}
+
+fn emit(rows: &[Row], full: bool, steps: usize) -> dlrt::Result<()> {
+    let mut table = Table::new(&["model", "arch", "shards", "batch", "steps/sec", "imgs/sec"]);
+    for r in rows {
+        table.row(&[
+            r.model.to_string(),
+            r.arch.clone(),
+            r.shards.to_string(),
+            r.batch.to_string(),
+            format!("{:.2}", r.steps_per_sec),
+            format!("{:.0}", r.imgs_per_sec),
+        ]);
+    }
+    table.print();
+
+    let sps = |model: &str, shards: usize| {
+        rows.iter()
+            .find(|r| r.model == model && r.shards == shards)
+            .map(|r| r.steps_per_sec)
+            .unwrap_or(0.0)
+    };
+    let speedup = |model: &str, shards: usize| sps(model, shards) / sps(model, 1).max(1e-9);
+    let lenet_speedup = speedup("trp_lenet_lowrank", 4);
+    let mlp_speedup = speedup("mlp500_lowrank", 4);
+    println!(
+        "shape check: trp_lenet low-rank shard-4 ≥ shard-1 steps/sec: {} ({lenet_speedup:.2}x); \
+         mlp500 low-rank: {mlp_speedup:.2}x",
+        lenet_speedup >= 1.0
+    );
+
+    let json_rows = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("model", Json::str(r.model)),
+            ("arch", Json::str(r.arch.as_str())),
+            ("grad_shards", Json::num(r.shards as f64)),
+            ("batch", Json::num(r.batch as f64)),
+            ("steps_per_sec", Json::num(r.steps_per_sec)),
+            ("imgs_per_sec", Json::num(r.imgs_per_sec)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("bench", Json::str("train_throughput")),
+        ("mode", Json::str(if full { "full" } else { "smoke" })),
+        ("timed_steps", Json::num(steps as f64)),
+        ("rows", Json::arr(json_rows)),
+        ("trp_lenet_lowrank_shard4_vs_shard1", Json::num(lenet_speedup)),
+        ("trp_lenet_lowrank_shard2_vs_shard1", Json::num(speedup("trp_lenet_lowrank", 2))),
+        ("mlp500_lowrank_shard4_vs_shard1", Json::num(mlp_speedup)),
+        ("mlp500_dense_shard4_vs_shard1", Json::num(speedup("mlp500_dense", 4))),
+        ("trp_lenet_dense_shard4_vs_shard1", Json::num(speedup("trp_lenet_dense", 4))),
+    ]);
+    std::fs::write("BENCH_train.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_train.json");
+    Ok(())
+}

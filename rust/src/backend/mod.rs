@@ -115,12 +115,137 @@ pub enum LayerGrads {
     None,
 }
 
+impl LayerGrads {
+    /// Scale every gradient tensor of this layer by `a` (shard reduction).
+    pub fn scale(&mut self, a: f32) {
+        match self {
+            LayerGrads::Kl { dk, dl } => {
+                dk.scale(a);
+                dl.scale(a);
+            }
+            LayerGrads::S { ds, db } => {
+                ds.scale(a);
+                for x in db.iter_mut() {
+                    *x *= a;
+                }
+            }
+            LayerGrads::Dense { dw, db } => {
+                dw.scale(a);
+                for x in db.iter_mut() {
+                    *x *= a;
+                }
+            }
+            LayerGrads::TwoFactor { du, dv, db } => {
+                du.scale(a);
+                dv.scale(a);
+                for x in db.iter_mut() {
+                    *x *= a;
+                }
+            }
+            LayerGrads::None => {}
+        }
+    }
+
+    /// `self += other`, entrywise. Both sides must carry the same variant
+    /// with the same shapes — guaranteed when they came from `grads` calls
+    /// over the same layer list and phase (shard reduction).
+    pub fn accumulate(&mut self, other: &LayerGrads) -> Result<()> {
+        match (self, other) {
+            (LayerGrads::Kl { dk, dl }, LayerGrads::Kl { dk: odk, dl: odl }) => {
+                dk.axpy(1.0, odk);
+                dl.axpy(1.0, odl);
+            }
+            (LayerGrads::S { ds, db }, LayerGrads::S { ds: ods, db: odb }) => {
+                ds.axpy(1.0, ods);
+                add_vec(db, odb)?;
+            }
+            (LayerGrads::Dense { dw, db }, LayerGrads::Dense { dw: odw, db: odb }) => {
+                dw.axpy(1.0, odw);
+                add_vec(db, odb)?;
+            }
+            (
+                LayerGrads::TwoFactor { du, dv, db },
+                LayerGrads::TwoFactor { du: odu, dv: odv, db: odb },
+            ) => {
+                du.axpy(1.0, odu);
+                dv.axpy(1.0, odv);
+                add_vec(db, odb)?;
+            }
+            (LayerGrads::None, LayerGrads::None) => {}
+            _ => anyhow::bail!(
+                "shard reduction: mismatched gradient variants (shards must run the same \
+                 layer list and phase)"
+            ),
+        }
+        Ok(())
+    }
+}
+
+fn add_vec(a: &mut [f32], b: &[f32]) -> Result<()> {
+    anyhow::ensure!(a.len() == b.len(), "shard reduction: bias arity {} vs {}", a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+    Ok(())
+}
+
 /// Result of one [`ComputeBackend::grads`] evaluation: per-layer gradients
 /// plus the batch loss / weighted correct count of the forward it taped.
 pub struct GradsOut {
     pub layers: Vec<LayerGrads>,
     pub loss: f32,
     pub ncorrect: f32,
+}
+
+/// Combine per-shard [`GradsOut`]s into the whole-batch result via a
+/// **fixed-order tree reduction** (DESIGN.md §8). Each entry carries the
+/// shard's batch weight mass `Σw`; because every backend normalizes its
+/// gradients and loss by its *own* shard's `Σw`, each shard is first
+/// rescaled by `Σw_shard / Σw_total` and the rescaled outputs are then
+/// pairwise-summed in index order — `(0+1)+(2+3)…` — so the float
+/// summation order depends only on the shard count, never on thread
+/// scheduling. `ncorrect` is a plain count and sums unscaled.
+///
+/// In exact arithmetic the result equals the unsharded evaluation; in f32
+/// it differs only by summation-order rounding (locked by the shard
+/// equivalence tests). An all-padding shard has `Σw = 0` and contributes
+/// exactly zero; if *every* shard is padding the result is all zeros, not
+/// NaN.
+pub fn reduce_grad_shards(parts: Vec<(GradsOut, f64)>) -> Result<GradsOut> {
+    anyhow::ensure!(!parts.is_empty(), "shard reduction over zero shards");
+    let w_total: f64 = parts.iter().map(|(_, w)| *w).sum();
+    let mut scaled: Vec<GradsOut> = Vec::with_capacity(parts.len());
+    for (mut out, w) in parts {
+        let alpha = if w_total > 0.0 { (w / w_total) as f32 } else { 0.0 };
+        for g in &mut out.layers {
+            g.scale(alpha);
+        }
+        out.loss *= alpha;
+        scaled.push(out);
+    }
+    // pairwise tree: combine (0,1), (2,3), … until one result remains
+    while scaled.len() > 1 {
+        let mut next: Vec<GradsOut> = Vec::with_capacity(scaled.len().div_ceil(2));
+        let mut it = scaled.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                anyhow::ensure!(
+                    a.layers.len() == b.layers.len(),
+                    "shard reduction: {} vs {} gradient entries",
+                    a.layers.len(),
+                    b.layers.len()
+                );
+                for (ga, gb) in a.layers.iter_mut().zip(&b.layers) {
+                    ga.accumulate(gb)?;
+                }
+                a.loss += b.loss;
+                a.ncorrect += b.ncorrect;
+            }
+            next.push(a);
+        }
+        scaled = next;
+    }
+    Ok(scaled.pop().expect("non-empty by construction"))
 }
 
 /// Weighted loss / correct-count of a forward evaluation over one batch
@@ -151,6 +276,30 @@ pub trait ComputeBackend {
     /// backend returns its largest compiled bucket for the phase's
     /// artifact family.
     fn rank_cap(&self, arch: &str, phase: GradPhase) -> Result<Option<usize>>;
+
+    /// Validate a configured per-step gradient shard count for this
+    /// backend, once, at [`crate::runtime::Runtime`] construction. The
+    /// conservative default accepts only the unsharded `grad_shards = 1`;
+    /// backends that can evaluate several concurrent `grads` calls (and
+    /// return a [`ComputeBackend::sync_view`]) override this to accept
+    /// more.
+    fn check_grad_shards(&self, shards: usize) -> Result<()> {
+        anyhow::ensure!(
+            shards <= 1,
+            "backend '{}' evaluates grads serially and does not support data-parallel \
+             sharding (grad_shards = {shards}); set grad_shards = 1",
+            self.name()
+        );
+        Ok(())
+    }
+
+    /// Thread-safe view of this backend for the sharded step executor
+    /// ([`crate::exec`]): worker threads evaluate concurrent `grads` calls
+    /// through it. `None` (the default) means the backend cannot be shared
+    /// across threads and sharded execution is unavailable.
+    fn sync_view(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        None
+    }
 
     /// One taped forward + backward sweep over the per-layer parameters,
     /// contracting each layer's gradients per the phase (module docs).

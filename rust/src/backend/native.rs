@@ -54,12 +54,83 @@ use crate::linalg::{
 use crate::runtime::ArchInfo;
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
+use std::sync::Mutex;
 
 /// The native backend: an architecture registry plus the math below. The
 /// registry ships the paper's MLPs ([`super::archs`]); tests and custom
 /// experiments can add more via [`NativeBackend::with_arch`].
+///
+/// The backend is `Sync` (registry immutable, scratch pool mutex-guarded)
+/// and exposes itself through [`ComputeBackend::sync_view`], so the
+/// sharded step executor ([`crate::exec`]) may evaluate several `grads`
+/// calls concurrently from worker threads.
 pub struct NativeBackend {
     archs: Vec<(String, ArchInfo, usize)>,
+    scratch: ScratchPool,
+}
+
+/// Free-list of `f32` buffers recycled across `grads` calls: the batch
+/// feature matrix draws from it and every taped activation/patch matrix
+/// returns to it, so steady-state training steps — per shard, under the
+/// sharded executor — stop allocating fresh workspaces. Checkout is
+/// per-call (buffers leave the pool while in use), so concurrent shard
+/// workers never alias a workspace.
+struct ScratchPool {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+/// Pool retention cap: bounds idle memory at `MAX_POOLED` × the largest
+/// workspace while comfortably covering the shard workers' concurrent
+/// checkouts plus the per-step tape returns.
+const MAX_POOLED: usize = 16;
+
+impl ScratchPool {
+    fn new() -> ScratchPool {
+        ScratchPool { free: Mutex::new(Vec::new()) }
+    }
+
+    /// A buffer holding exactly `src` (recycled allocation when one with
+    /// enough capacity is pooled, fresh otherwise). Prefers the smallest
+    /// adequate buffer so over-large workspaces stay available for the
+    /// requests that need them.
+    fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        let recycled = {
+            let mut free = self.free.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None; // (index, capacity)
+            for (i, b) in free.iter().enumerate() {
+                let cap = b.capacity();
+                if cap >= src.len() {
+                    match best {
+                        Some((_, bc)) if bc <= cap => {}
+                        _ => best = Some((i, cap)),
+                    }
+                }
+            }
+            best.map(|(i, _)| free.swap_remove(i))
+        };
+        match recycled {
+            Some(mut b) => {
+                b.clear();
+                b.extend_from_slice(src);
+                b
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Return buffers to the pool (drops them once the retention cap is
+    /// reached).
+    fn put_all(&self, bufs: impl IntoIterator<Item = Vec<f32>>) {
+        let mut free = self.free.lock().unwrap();
+        for b in bufs {
+            if free.len() >= MAX_POOLED {
+                break;
+            }
+            if b.capacity() > 0 {
+                free.push(b);
+            }
+        }
+    }
 }
 
 impl Default for NativeBackend {
@@ -70,7 +141,7 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend { archs: super::archs::builtin() }
+        NativeBackend { archs: super::archs::builtin(), scratch: ScratchPool::new() }
     }
 
     /// Register an additional architecture under `name` with the given
@@ -131,8 +202,10 @@ impl<'a> Weights<'a> {
 }
 
 /// Batch features as a `B x dim` matrix (B = the padded batch size; padded
-/// rows carry weight 0 and fall out of every reduction).
-fn batch_matrix(batch: &Batch, dim: usize) -> Result<Matrix> {
+/// rows carry weight 0 and fall out of every reduction). The buffer comes
+/// from `scratch` when one is supplied — values are identical either way,
+/// only the allocation is recycled.
+fn batch_matrix(batch: &Batch, dim: usize, scratch: Option<&ScratchPool>) -> Result<Matrix> {
     let bsz = batch.w.len();
     ensure!(
         batch.y.len() == bsz,
@@ -147,7 +220,11 @@ fn batch_matrix(batch: &Batch, dim: usize) -> Result<Matrix> {
         bsz,
         dim
     );
-    Ok(Matrix::from_vec(bsz, dim, batch.x.clone()))
+    let buf = match scratch {
+        Some(pool) => pool.take_copy(&batch.x),
+        None => batch.x.clone(),
+    };
+    Ok(Matrix::from_vec(bsz, dim, buf))
 }
 
 /// Per-layer record of one taped forward pass.
@@ -328,15 +405,20 @@ fn relu_mask(d: &mut Matrix, act: &Matrix) {
 /// the loss w.r.t. layer `l`'s *final* output (post-ReLU, post-pool); each
 /// branch converts it to the pre-activation delta before sinking, then
 /// propagates to layer `l-1`'s final output.
+///
+/// Returns the per-layer tapes alongside the stats so the caller can
+/// recycle their buffers into the scratch pool. `x` is the prepared
+/// batch feature matrix (see `batch_matrix`); `batch` supplies labels
+/// and weights.
 fn backprop(
     arch: &ArchInfo,
     weights: &[Weights<'_>],
     biases: &[&[f32]],
     batch: &Batch,
+    x: Matrix,
     stop_below: usize,
     mut sink: impl FnMut(usize, &Matrix, &Matrix),
-) -> Result<EvalStats> {
-    let x = batch_matrix(batch, arch.input_dim)?;
+) -> Result<(EvalStats, Vec<Tape>)> {
     let (tapes, logits) = forward_pass(arch, weights, biases, x, true);
     let (loss, ncorrect, delta) = softmax_stats(&logits, &batch.y, &batch.w, true)?;
     let mut delta = delta.expect("delta requested");
@@ -373,7 +455,7 @@ fn backprop(
             }
         }
     }
-    Ok(EvalStats { loss, ncorrect })
+    Ok((EvalStats { loss, ncorrect }, tapes))
 }
 
 /// Structural validation shared by every service: supported layer kinds,
@@ -554,8 +636,9 @@ impl ComputeBackend for NativeBackend {
                 .position(|p| matches!(p, LayerParams::Factored { .. }))
                 .unwrap_or(layers.len()),
         };
+        let x = batch_matrix(batch, arch.input_dim, Some(&self.scratch))?;
         let mut out: Vec<LayerGrads> = (0..layers.len()).map(|_| LayerGrads::None).collect();
-        let stats = backprop(arch, &weights, &biases, batch, stop_below, |l, delta, a| {
+        let (st, tapes) = backprop(arch, &weights, &biases, batch, x, stop_below, |l, delta, a| {
             out[l] = match (&layers[l], phase) {
                 (LayerParams::Factored { u, v, .. }, GradPhase::Kl) => {
                     let av = matmul(a, v); // B x r
@@ -593,7 +676,14 @@ impl ComputeBackend for NativeBackend {
                 }
             };
         })?;
-        Ok(GradsOut { layers: out, loss: stats.loss, ncorrect: stats.ncorrect })
+        // recycle the taped workspaces: the next grads call (same step's S
+        // phase, the next step, or a sibling shard) draws its batch matrix
+        // from these buffers instead of allocating
+        self.scratch.put_all(tapes.into_iter().flat_map(|t| {
+            let Tape { input, conv } = t;
+            std::iter::once(input.into_vec()).chain(conv.map(|c| c.act.into_vec()))
+        }));
+        Ok(GradsOut { layers: out, loss: st.loss, ncorrect: st.ncorrect })
     }
 
     fn forward(
@@ -606,7 +696,10 @@ impl ComputeBackend for NativeBackend {
         check_params(arch, layers)?;
         let weights: Vec<Weights<'_>> = layers.iter().map(Weights::of).collect();
         let biases: Vec<&[f32]> = layers.iter().map(|p| p.bias()).collect();
-        let x = batch_matrix(batch, arch.input_dim)?;
+        // tape-free path: the batch matrix is dropped inside the forward,
+        // so drawing it from the scratch pool would drain buffers that
+        // never come back — allocate plainly instead
+        let x = batch_matrix(batch, arch.input_dim, None)?;
         let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
@@ -619,8 +712,25 @@ impl ComputeBackend for NativeBackend {
         batch: &Batch,
     ) -> Result<Matrix> {
         let arch = &self.entry(arch)?.1;
-        let x = batch_matrix(batch, arch.input_dim)?;
+        // tape-free path: see `forward` — pool buffers would not return
+        let x = batch_matrix(batch, arch.input_dim, None)?;
         forward_logits_raw(arch, layers, x)
+    }
+
+    fn check_grad_shards(&self, shards: usize) -> Result<()> {
+        ensure!(
+            (1..=crate::exec::MAX_GRAD_SHARDS).contains(&shards),
+            "grad_shards must be in [1, {}] (got {shards})",
+            crate::exec::MAX_GRAD_SHARDS
+        );
+        Ok(())
+    }
+
+    fn sync_view(&self) -> Option<&(dyn ComputeBackend + Sync)> {
+        // registry is immutable after construction; the scratch pool is
+        // mutex-guarded with per-call buffer checkout — concurrent shard
+        // sweeps are safe and numerically independent
+        Some(self)
     }
 }
 
@@ -919,6 +1029,31 @@ mod tests {
         let fwd = be.forward("mlp_tiny", &refs(&layers), &batch).unwrap();
         assert_eq!(loss, fwd.loss);
         assert_eq!(ncorrect, fwd.ncorrect);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        // repeated grads calls on one backend instance draw recycled
+        // workspaces from the scratch pool — the numerics must not notice
+        let be = NativeBackend::new();
+        let layers = tiny_layers(31);
+        let batch = tiny_batch(32, 64, 10, 32);
+        let (dk0, dl0, loss0, nc0) =
+            kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &batch).unwrap());
+        for _ in 0..3 {
+            let (dk, dl, loss, nc) =
+                kl_of(be.grads("mlp_tiny", &refs(&layers), GradPhase::Kl, &batch).unwrap());
+            assert_eq!(loss, loss0);
+            assert_eq!(nc, nc0);
+            for (a, b) in dk.iter().zip(&dk0) {
+                assert_eq!(a.data(), b.data(), "∂K drifted across scratch reuse");
+            }
+            for (a, b) in dl.iter().zip(&dl0) {
+                assert_eq!(a.data(), b.data(), "∂L drifted across scratch reuse");
+            }
+        }
+        // the pool respects its retention cap
+        assert!(be.scratch.free.lock().unwrap().len() <= MAX_POOLED);
     }
 
     #[test]

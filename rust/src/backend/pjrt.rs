@@ -372,6 +372,20 @@ impl ComputeBackend for XlaBackend {
         &self.flavor
     }
 
+    fn check_grad_shards(&self, shards: usize) -> Result<()> {
+        // every artifact graph is AOT-compiled for one fixed batch shape,
+        // and the runtime's executable cache is single-threaded (Rc) — a
+        // row-sharded sub-batch has no compiled slot to run in
+        ensure!(
+            shards <= 1,
+            "the '{}' backend executes AOT-compiled graphs with a fixed batch shape and \
+             cannot evaluate row-sharded grads calls (grad_shards = {shards}); use \
+             backend = \"native\" for data-parallel sharding, or set grad_shards = 1",
+            self.flavor
+        );
+        Ok(())
+    }
+
     fn arch(&self, arch: &str) -> Result<ArchInfo> {
         self.rt
             .manifest()

@@ -151,6 +151,12 @@ pub struct Config {
     pub layer_ranks: Vec<Option<usize>>,
     /// Per-layer τ overrides; `None` entries (spelled `_`) inherit `tau`.
     pub layer_taus: Vec<Option<f32>>,
+    /// Row shards per gradient sweep: every `grads` call splits its batch
+    /// across this many worker replicas and tree-reduces the results
+    /// deterministically (DESIGN.md §8). `1` (the default) bypasses the
+    /// sharded executor and is bitwise-identical to the unsharded
+    /// pipeline. Only the native backend accepts values above 1.
+    pub grad_shards: usize,
 }
 
 impl Config {
@@ -249,6 +255,7 @@ impl Config {
             layer_modes,
             layer_ranks,
             layer_taus,
+            grad_shards: doc.get_usize("grad_shards").unwrap_or(1),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -299,6 +306,7 @@ impl Config {
             KvValue::Num(self.freeze_rank_after_epochs as f64),
         );
         doc.insert("paranoid", KvValue::Bool(self.paranoid));
+        doc.insert("grad_shards", KvValue::Num(self.grad_shards as f64));
         if !self.layer_modes.is_empty() {
             let joined: Vec<&str> = self.layer_modes.iter().map(|m| m.as_str()).collect();
             doc.insert("layer_modes", KvValue::Str(joined.join(",")));
@@ -350,6 +358,12 @@ impl Config {
                 );
             }
         }
+        ensure!(
+            (1..=crate::exec::MAX_GRAD_SHARDS).contains(&self.grad_shards),
+            "grad_shards must be in [1, {}] (got {})",
+            crate::exec::MAX_GRAD_SHARDS,
+            self.grad_shards
+        );
         Ok(())
     }
 
@@ -384,7 +398,23 @@ mod tests {
             assert_eq!(back.layer_modes, cfg.layer_modes);
             assert_eq!(back.layer_ranks, cfg.layer_ranks);
             assert_eq!(back.layer_taus, cfg.layer_taus);
+            assert_eq!(back.grad_shards, cfg.grad_shards);
         }
+    }
+
+    #[test]
+    fn grad_shards_parses_validates_and_roundtrips() {
+        // absent -> the unsharded default
+        let cfg = Config::from_toml_str("arch = \"mlp_tiny\"").unwrap();
+        assert_eq!(cfg.grad_shards, 1);
+        let cfg = Config::from_toml_str("arch = \"mlp_tiny\"\ngrad_shards = 4").unwrap();
+        assert_eq!(cfg.grad_shards, 4);
+        let back = Config::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.grad_shards, 4);
+        assert!(Config::from_toml_str("arch = \"x\"\ngrad_shards = 0").is_err());
+        let mut cfg = base();
+        cfg.grad_shards = crate::exec::MAX_GRAD_SHARDS + 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -31,7 +31,16 @@ fn base(arch: &str) -> Config {
         layer_modes: Vec::new(),
         layer_ranks: Vec::new(),
         layer_taus: Vec::new(),
+        grad_shards: 1,
     }
+}
+
+/// Any preset, with its gradient sweeps sharded across `shards` worker
+/// replicas (the `benches/train_throughput.rs` sweep and CI train-bench
+/// job parameterize presets through this).
+pub fn with_grad_shards(mut cfg: Config, shards: usize) -> Config {
+    cfg.grad_shards = shards;
+    cfg
 }
 
 /// Minimal fast run on the tiny architecture (examples/quickstart.rs).

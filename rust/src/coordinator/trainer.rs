@@ -166,15 +166,18 @@ impl Trainer {
             let mut correct = 0.0f64;
             let mut seen = 0.0f64;
             let mut steps = 0usize;
-            // stream batches straight from the epoch iterator: one padded
-            // batch is alive at a time (collecting the whole epoch up
-            // front duplicated the entire padded training set in memory).
-            // The iterator borrows `self.split.train` while the step
-            // borrows `self.model`/`self.rt` — disjoint fields, so the
-            // borrows coexist.
-            for batch in batcher.epoch(&self.split.train) {
-                if self.cfg.max_steps_per_epoch > 0 && steps >= self.cfg.max_steps_per_epoch {
-                    break;
+            // double-buffered prefetch: a producer thread pads/copies the
+            // *next* batch while the current step runs, instead of putting
+            // that copy on the step's critical path. The batch sequence is
+            // bitwise-identical to the serial iterator (same shuffle, same
+            // chunking), and bounded lookahead keeps one batch in flight.
+            // The prefetcher borrows `self.split.train` while the step
+            // closure borrows `self.model`/`self.rt` — disjoint fields, so
+            // the borrows coexist.
+            let max_steps = self.cfg.max_steps_per_epoch;
+            batcher.epoch_prefetched(&self.split.train, |batch| -> Result<bool> {
+                if max_steps > 0 && steps >= max_steps {
+                    return Ok(false);
                 }
                 train_timer.start();
                 let st = self.model.step(&self.rt, &batch, lr)?;
@@ -185,7 +188,8 @@ impl Trainer {
                 correct += st.ncorrect as f64;
                 seen += batch.count as f64;
                 steps += 1;
-            }
+                Ok(true)
+            })?;
             let mut eval_timer = StepTimer::new();
             eval_timer.start();
             let (val_loss, val_acc) = self.evaluate(&ValOrTest::Val)?;

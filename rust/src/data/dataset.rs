@@ -143,6 +143,61 @@ impl Batcher {
         })
     }
 
+    /// Double-buffered epoch: a producer thread pads/copies batches and
+    /// hands them through a bounded channel while the caller's `f`
+    /// consumes the previous one — so batch materialization overlaps the
+    /// training step instead of serializing with it (DESIGN.md §8).
+    ///
+    /// The batch *sequence* is identical to [`Batcher::epoch`] with the
+    /// same RNG state (one shuffle per call, same chunking, same padding),
+    /// so training numerics are bitwise-unchanged by prefetching.
+    ///
+    /// `f` returns `Ok(true)` to continue, `Ok(false)` to stop early
+    /// (step-budget caps); its error aborts the epoch and is returned.
+    /// Either way the producer unblocks when its channel closes and the
+    /// scope joins it before returning.
+    pub fn epoch_prefetched<E>(
+        &mut self,
+        data: &Dataset,
+        mut f: impl FnMut(Batch) -> std::result::Result<bool, E>,
+    ) -> std::result::Result<(), E> {
+        self.rng.shuffle(&mut self.order);
+        let batch = self.batch;
+        let drop_last = self.drop_last;
+        let order: &[usize] = &self.order;
+        let mut out = Ok(());
+        std::thread::scope(|s| {
+            // capacity 1 + the batch being built + the batch in `f` = the
+            // classic double buffer (one step of lookahead, bounded memory)
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(1);
+            s.spawn(move || {
+                for bi in 0..order.len().div_ceil(batch) {
+                    let lo = bi * batch;
+                    let hi = (lo + batch).min(order.len());
+                    if drop_last && hi - lo < batch {
+                        break; // only the final chunk can be short
+                    }
+                    if tx.send(make_batch(data, &order[lo..hi], batch)).is_err() {
+                        break; // consumer stopped early
+                    }
+                }
+            });
+            for b in rx {
+                match f(b) {
+                    Ok(true) => {}
+                    Ok(false) => break,
+                    Err(e) => {
+                        out = Err(e);
+                        break;
+                    }
+                }
+            }
+            // `rx` is consumed/dropped here: a blocked producer send fails
+            // and the thread exits before the scope joins
+        });
+        out
+    }
+
     /// Iterate in index order without shuffling (evaluation).
     pub fn sequential<'a>(data: &'a Dataset, batch: usize) -> impl Iterator<Item = Batch> + 'a {
         (0..data.len().div_ceil(batch)).map(move |bi| {
@@ -236,6 +291,46 @@ mod tests {
         assert_eq!(batches[2].w, vec![1.0, 1.0, 0.0, 0.0]);
         // padded feature rows are zero
         assert!(batches[2].x[2 * 3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prefetched_epoch_matches_serial_epoch_bitwise() {
+        let d = toy(25);
+        // same seed -> same shuffle sequence on both batchers
+        let mut serial = Batcher::new(d.len(), 8, true, 11);
+        let mut prefetched = Batcher::new(d.len(), 8, true, 11);
+        for _epoch in 0..2 {
+            let want: Vec<Batch> = serial.epoch(&d).collect();
+            let mut got: Vec<Batch> = Vec::new();
+            prefetched
+                .epoch_prefetched(&d, |b| -> Result<bool, ()> {
+                    got.push(b);
+                    Ok(true)
+                })
+                .unwrap();
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.x, b.x);
+                assert_eq!(a.y, b.y);
+                assert_eq!(a.w, b.w);
+                assert_eq!(a.count, b.count);
+            }
+        }
+    }
+
+    #[test]
+    fn prefetched_epoch_stops_early_and_propagates_errors() {
+        let d = toy(64);
+        let mut b = Batcher::new(d.len(), 8, true, 13);
+        let mut seen = 0usize;
+        b.epoch_prefetched(&d, |_| -> Result<bool, ()> {
+            seen += 1;
+            Ok(seen < 3) // stop after the 3rd batch
+        })
+        .unwrap();
+        assert_eq!(seen, 3);
+        let err = b.epoch_prefetched(&d, |_| Err("boom"));
+        assert_eq!(err, Err("boom"));
     }
 
     #[test]

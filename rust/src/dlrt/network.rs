@@ -23,6 +23,14 @@
 //!
 //! Phases a layer doesn't need are skipped per layer; phases no layer
 //! needs are skipped per step.
+//!
+//! Both backend sweeps (phase 1 and the S phase) go through
+//! [`Runtime::grads`], i.e. through the sharded step executor
+//! ([`crate::exec`]): under `grad_shards > 1` each sweep's batch is
+//! row-sharded across worker replicas and the per-layer gradients are
+//! tree-reduced in fixed order before the host phases run — the scheduler
+//! below is oblivious to the fan-out, and at the default `grad_shards = 1`
+//! the call is a bitwise passthrough to the backend.
 
 use super::integrator::{DlrtLayer, PIN_THRESHOLD};
 use super::{FactorOptimizer, LowRankFactors, OptKind};
@@ -352,7 +360,11 @@ impl Network {
     }
 
     /// One scheduler step on a batch (module docs). Returns the phase-1
-    /// loss/#correct plus the per-phase breakdown.
+    /// loss/#correct plus the per-phase breakdown. Both gradient sweeps
+    /// ride the runtime's sharded executor — `kl_graph_s`/`s_graph_s`
+    /// therefore cover the shard fan-out *and* the deterministic
+    /// reduction, keeping the timing split comparable across shard
+    /// counts.
     pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
         let mut timings = StepTimings::default();
         let t0 = std::time::Instant::now();

@@ -1,0 +1,291 @@
+//! Sharded step execution: data-parallel `grads` evaluation with a
+//! deterministic reduction (DESIGN.md §8).
+//!
+//! The paper's whole point is that the low-rank manifold shrinks per-step
+//! *math* to `O((n+m)r)` — which leaves the step pipeline's *structure*
+//! (one serial backend sweep per phase) as the next bottleneck. This
+//! module removes it: [`ShardedExecutor::grads`] splits a padded batch
+//! into `grad_shards` contiguous **row shards**, evaluates
+//! [`ComputeBackend::grads`] per shard on scoped worker threads, and
+//! combines the per-shard results with the fixed-order tree reduction of
+//! [`crate::backend::reduce_grad_shards`].
+//!
+//! Determinism contract:
+//! * `grad_shards = 1` **bypasses this module entirely** — the call goes
+//!   straight to the backend, so the unsharded path is bitwise-identical
+//!   to the pre-sharding pipeline (locked by the `regression_trace`
+//!   snapshot and `tests/shard_exec.rs`).
+//! * For any fixed shard count, results are bitwise-reproducible across
+//!   reruns: the shard split is a pure function of `(batch, k)`, each
+//!   backend sweep is thread-count-independent (disjoint-row kernels with
+//!   per-row sequential accumulation), and the reduction order is fixed by
+//!   shard index — never by thread completion order.
+//! * Different shard counts differ only by f32 summation-order rounding
+//!   (the shard-equivalence property test pins the tolerance).
+//!
+//! Worker-budget policy: with `k` shards the executor hands every shard
+//! worker a scoped thread cap of `⌈threads/k⌉` ([`pool::with_thread_cap`])
+//! so the per-shard kernels' own data-parallelism doesn't multiply with
+//! shard-parallelism and oversubscribe the machine.
+//!
+//! The per-shard sub-batch buffers are recycled across steps through an
+//! internal pool — steady-state sharded steps copy rows into existing
+//! allocations instead of growing fresh ones.
+
+use crate::backend::{reduce_grad_shards, ComputeBackend, GradPhase, GradsOut, LayerParams};
+use crate::data::Batch;
+use crate::util::pool;
+use crate::Result;
+use anyhow::{anyhow, ensure};
+use std::sync::Mutex;
+
+/// Upper bound on configurable shard counts — far above any useful host
+/// fan-out, low enough to catch a mistyped config.
+pub const MAX_GRAD_SHARDS: usize = 64;
+
+/// How many recycled shard-buffer sets the executor retains (one per
+/// concurrent caller; the trainer is single-threaded, so this is slack).
+const MAX_POOLED_SETS: usize = 4;
+
+/// The data-parallel step executor a [`crate::runtime::Runtime`] owns.
+pub struct ShardedExecutor {
+    shards: usize,
+    /// Recycled per-shard sub-batch sets (interior mutability: `grads`
+    /// runs behind `&self`, mirroring the backend contract).
+    bufs: Mutex<Vec<Vec<Batch>>>,
+}
+
+impl ShardedExecutor {
+    /// An executor splitting every `grads` call into `shards` row shards
+    /// (`1` = unsharded passthrough).
+    pub fn new(shards: usize) -> ShardedExecutor {
+        ShardedExecutor { shards: shards.max(1), bufs: Mutex::new(Vec::new()) }
+    }
+
+    /// The configured shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Evaluate one gradient sweep, sharded across worker replicas when
+    /// configured. See the module docs for the determinism contract.
+    pub fn grads(
+        &self,
+        backend: &dyn ComputeBackend,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let bsz = batch.w.len();
+        // a batch with fewer rows than shards clamps down (still
+        // deterministic: the effective count is a pure function of the
+        // batch shape and the configured shard count)
+        let k = self.shards.min(bsz.max(1));
+        if k <= 1 {
+            return backend.grads(arch, layers, phase, batch);
+        }
+        let sync = backend.sync_view().ok_or_else(|| {
+            anyhow!(
+                "backend '{}' has no thread-safe view; it cannot evaluate sharded grads \
+                 (grad_shards = {})",
+                backend.name(),
+                self.shards
+            )
+        })?;
+        ensure!(
+            batch.y.len() == bsz && batch.x.len() % bsz == 0,
+            "sharded grads: malformed batch ({} features, {} labels, {} weights)",
+            batch.x.len(),
+            batch.y.len(),
+            bsz
+        );
+        let dim = batch.x.len() / bsz;
+
+        // ---- split: contiguous, balanced row ranges ---------------------
+        let mut shards = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        shards.resize_with(k, || Batch { x: Vec::new(), y: Vec::new(), w: Vec::new(), count: 0 });
+        let base = bsz / k;
+        let rem = bsz % k;
+        let mut lo = 0usize;
+        for (i, sb) in shards.iter_mut().enumerate() {
+            let hi = lo + base + usize::from(i < rem);
+            sb.x.clear();
+            sb.x.extend_from_slice(&batch.x[lo * dim..hi * dim]);
+            sb.y.clear();
+            sb.y.extend_from_slice(&batch.y[lo..hi]);
+            sb.w.clear();
+            sb.w.extend_from_slice(&batch.w[lo..hi]);
+            // real rows form a prefix of the padded batch
+            sb.count = batch.count.clamp(lo, hi) - lo;
+            lo = hi;
+        }
+
+        // ---- evaluate: one worker per shard, shard 0 on this thread -----
+        let inner_threads = pool::default_threads().div_ceil(k);
+        let mut results: Vec<Option<Result<GradsOut>>> = (0..k).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut slots = results.iter_mut().zip(shards.iter());
+            let first = slots.next();
+            for (slot, sb) in slots {
+                s.spawn(move || {
+                    *slot = Some(pool::with_thread_cap(inner_threads, || {
+                        sync.grads(arch, layers, phase, sb)
+                    }));
+                });
+            }
+            if let Some((slot, sb)) = first {
+                *slot = Some(pool::with_thread_cap(inner_threads, || {
+                    sync.grads(arch, layers, phase, sb)
+                }));
+            }
+        });
+
+        // ---- reduce: fixed-order weighted tree --------------------------
+        let mut parts: Vec<(GradsOut, f64)> = Vec::with_capacity(k);
+        let mut first_err = None;
+        for (res, sb) in results.into_iter().zip(shards.iter()) {
+            match res.expect("every shard slot is filled") {
+                Ok(out) => {
+                    let wsum: f64 = sb.w.iter().map(|&x| x as f64).sum();
+                    parts.push((out, wsum));
+                }
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        let mut pool_guard = self.bufs.lock().unwrap();
+        if pool_guard.len() < MAX_POOLED_SETS {
+            pool_guard.push(shards);
+        }
+        drop(pool_guard);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        reduce_grad_shards(parts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{LayerGrads, NativeBackend};
+    use crate::linalg::{Matrix, Rng};
+
+    fn unit_batch(bsz: usize, dim: usize, classes: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        Batch {
+            x: (0..bsz * dim).map(|_| rng.normal()).collect(),
+            y: (0..bsz).map(|_| rng.below(classes) as i32).collect(),
+            w: vec![1.0; bsz],
+            count: bsz,
+        }
+    }
+
+    #[test]
+    fn reduce_combines_weighted_means() {
+        // two shards with unequal weight mass: the combined loss is the
+        // weighted mean, gradients the weighted sum of per-shard means
+        let g = |v: f32, loss: f32, nc: f32| GradsOut {
+            layers: vec![
+                LayerGrads::Dense { dw: Matrix::from_vec(1, 2, vec![v, 2.0 * v]), db: vec![v] },
+                LayerGrads::None,
+            ],
+            loss,
+            ncorrect: nc,
+        };
+        let out = reduce_grad_shards(vec![(g(1.0, 4.0, 3.0), 3.0), (g(5.0, 8.0, 1.0), 1.0)])
+            .unwrap();
+        // α = (0.75, 0.25): dw = 0.75*[1,2] + 0.25*[5,10] = [2, 4]
+        let LayerGrads::Dense { dw, db } = &out.layers[0] else { panic!("dense grads") };
+        assert_eq!(dw.data(), &[2.0, 4.0]);
+        assert_eq!(db.as_slice(), &[2.0]);
+        assert!(matches!(out.layers[1], LayerGrads::None));
+        assert_eq!(out.loss, 0.75 * 4.0 + 0.25 * 8.0);
+        assert_eq!(out.ncorrect, 4.0); // counts add unscaled
+    }
+
+    #[test]
+    fn reduce_zero_weight_total_is_zero_not_nan() {
+        let g = GradsOut {
+            layers: vec![LayerGrads::S {
+                ds: Matrix::from_vec(1, 1, vec![7.0]),
+                db: vec![7.0],
+            }],
+            loss: 0.0,
+            ncorrect: 0.0,
+        };
+        let out = reduce_grad_shards(vec![(g, 0.0)]).unwrap();
+        let LayerGrads::S { ds, db } = &out.layers[0] else { panic!("s grads") };
+        assert_eq!(ds.data(), &[0.0]);
+        assert_eq!(db.as_slice(), &[0.0]);
+        assert!(out.loss == 0.0 && !out.loss.is_nan());
+    }
+
+    #[test]
+    fn reduce_rejects_mismatched_variants() {
+        let a = GradsOut {
+            layers: vec![LayerGrads::Dense { dw: Matrix::zeros(1, 1), db: vec![0.0] }],
+            loss: 0.0,
+            ncorrect: 0.0,
+        };
+        let b = GradsOut { layers: vec![LayerGrads::None], loss: 0.0, ncorrect: 0.0 };
+        assert!(reduce_grad_shards(vec![(a, 1.0), (b, 1.0)]).is_err());
+        assert!(reduce_grad_shards(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn executor_clamps_to_batch_rows_and_recycles_buffers() {
+        // a 2-row batch under a 64-shard executor degrades to 2 shards and
+        // still matches the direct evaluation within float-reduction noise
+        let be = NativeBackend::new();
+        let mut rng = Rng::new(3);
+        let f = crate::dlrt::LowRankFactors::random(32, 64, 8, &mut rng);
+        let g = crate::dlrt::LowRankFactors::random(32, 32, 8, &mut rng);
+        let h = crate::dlrt::LowRankFactors::random(10, 32, 10, &mut rng);
+        let layers = [
+            LayerParams::Factored { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias },
+            LayerParams::Factored { u: &g.u, s: &g.s, v: &g.v, bias: &g.bias },
+            LayerParams::Factored { u: &h.u, s: &h.s, v: &h.v, bias: &h.bias },
+        ];
+        let batch = unit_batch(2, 64, 10, 4);
+        let ex = ShardedExecutor::new(MAX_GRAD_SHARDS);
+        let direct = be.grads("mlp_tiny", &layers, GradPhase::Kl, &batch).unwrap();
+        for _ in 0..3 {
+            // repeated calls exercise the buffer-recycling path
+            let sharded = ex.grads(&be, "mlp_tiny", &layers, GradPhase::Kl, &batch).unwrap();
+            assert!((sharded.loss - direct.loss).abs() <= 1e-5 * direct.loss.abs().max(1.0));
+            assert_eq!(sharded.ncorrect, direct.ncorrect);
+        }
+        assert!(ex.bufs.lock().unwrap().len() <= MAX_POOLED_SETS);
+    }
+
+    #[test]
+    fn shard_one_is_a_passthrough() {
+        let be = NativeBackend::new();
+        let mut rng = Rng::new(9);
+        let f = crate::dlrt::LowRankFactors::random(32, 64, 8, &mut rng);
+        let g = crate::dlrt::LowRankFactors::random(32, 32, 8, &mut rng);
+        let h = crate::dlrt::LowRankFactors::random(10, 32, 10, &mut rng);
+        let layers = [
+            LayerParams::Factored { u: &f.u, s: &f.s, v: &f.v, bias: &f.bias },
+            LayerParams::Factored { u: &g.u, s: &g.s, v: &g.v, bias: &g.bias },
+            LayerParams::Factored { u: &h.u, s: &h.s, v: &h.v, bias: &h.bias },
+        ];
+        let batch = unit_batch(16, 64, 10, 10);
+        let ex = ShardedExecutor::new(1);
+        let a = ex.grads(&be, "mlp_tiny", &layers, GradPhase::S, &batch).unwrap();
+        let b = be.grads("mlp_tiny", &layers, GradPhase::S, &batch).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.ncorrect, b.ncorrect);
+        for (ga, gb) in a.layers.iter().zip(&b.layers) {
+            match (ga, gb) {
+                (LayerGrads::S { ds: x, db: p }, LayerGrads::S { ds: y, db: q }) => {
+                    assert_eq!(x.data(), y.data());
+                    assert_eq!(p, q);
+                }
+                _ => panic!("expected S grads on both paths"),
+            }
+        }
+    }
+}

@@ -19,6 +19,11 @@
 //!   (homogeneous nets only, via a thin adapter).
 //! * **L1** — Pallas kernels inside those compiled graphs (XLA path only).
 //!
+//! Between L3 and L2 sits the sharded step executor ([`exec`]): every
+//! `grads` call can split its batch across worker replicas and combine
+//! the per-shard results with a fixed-order deterministic reduction
+//! (`grad_shards` config knob; DESIGN.md §8).
+//!
 //! Orthogonal to training, the [`serve`] subsystem freezes a trained
 //! network into its merged-factor inference form (`U, S·Vᵀ` per low-rank
 //! layer — the paper's `O((n+m)r)` deployment contraction) and serves it
@@ -35,6 +40,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dlrt;
+pub mod exec;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;

@@ -21,7 +21,7 @@ dlrt — Dynamical Low-Rank Training (NeurIPS 2022 reproduction)
 
 USAGE:
   dlrt train [--preset NAME | --config FILE] [--out DIR] [--epochs N]
-             [--artifacts DIR] [--seed N]
+             [--artifacts DIR] [--seed N] [--grad-shards K]
   dlrt eval --checkpoint FILE [--preset NAME]
   dlrt export --checkpoint FILE [--out FILE]
   dlrt presets
@@ -74,6 +74,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get_usize("seed")? {
         cfg.seed = s as u64;
+    }
+    if let Some(k) = args.get_usize("grad-shards")? {
+        cfg.grad_shards = k;
+        cfg.validate()?;
     }
     let name = args.get_or("preset", "custom").to_string();
     let out = PathBuf::from(args.get_or("out", "runs"));

@@ -31,38 +31,62 @@ use crate::backend::{
 };
 use crate::config::Config;
 use crate::data::Batch;
+use crate::exec::ShardedExecutor;
 use crate::Result;
 
-/// The compute-backend dispatcher every trainer holds.
+/// The compute-backend dispatcher every trainer holds. Gradient sweeps
+/// route through the owned [`ShardedExecutor`]: at the default
+/// `grad_shards = 1` that is a pure passthrough (bitwise-identical to
+/// calling the backend directly); at higher counts each [`Runtime::grads`]
+/// call splits its batch across worker replicas (DESIGN.md §8).
 pub struct Runtime {
     backend: Box<dyn ComputeBackend>,
+    exec: ShardedExecutor,
 }
 
 impl Runtime {
     /// The hermetic pure-Rust backend (default).
     pub fn native() -> Runtime {
-        Runtime { backend: Box::new(NativeBackend::new()) }
+        Runtime::with_backend(Box::new(NativeBackend::new()))
     }
 
     /// Wrap an arbitrary backend (tests, custom architectures).
     pub fn with_backend(backend: Box<dyn ComputeBackend>) -> Runtime {
-        Runtime { backend }
+        Runtime { backend, exec: ShardedExecutor::new(1) }
+    }
+
+    /// Reconfigure how many row shards every gradient sweep splits into.
+    /// Validated against the backend's sharding capability — the XLA
+    /// artifact backends reject anything above 1 with a descriptive error.
+    pub fn with_grad_shards(mut self, shards: usize) -> Result<Runtime> {
+        self.backend.check_grad_shards(shards)?;
+        self.exec = ShardedExecutor::new(shards);
+        Ok(self)
+    }
+
+    /// The configured shard count (1 = unsharded).
+    pub fn grad_shards(&self) -> usize {
+        self.exec.shards()
     }
 
     /// The PJRT artifact backend for one kernel flavor ("jnp" | "pallas").
     #[cfg(feature = "xla")]
     pub fn pjrt(artifacts_dir: impl AsRef<std::path::Path>, flavor: &str) -> Result<Runtime> {
-        Ok(Runtime { backend: Box::new(crate::backend::XlaBackend::new(artifacts_dir, flavor)?) })
+        Ok(Runtime::with_backend(Box::new(crate::backend::XlaBackend::new(
+            artifacts_dir,
+            flavor,
+        )?)))
     }
 
     /// Build the backend a config asks for (`backend = "native" | "jnp" |
-    /// "pallas"`).
+    /// "pallas"`), honoring its `grad_shards` knob.
     pub fn for_config(cfg: &Config) -> Result<Runtime> {
-        match cfg.backend.as_str() {
-            "native" => Ok(Runtime::native()),
-            "jnp" | "pallas" => pjrt_for_config(cfg),
+        let rt = match cfg.backend.as_str() {
+            "native" => Runtime::native(),
+            "jnp" | "pallas" => pjrt_for_config(cfg)?,
             other => anyhow::bail!("unknown backend '{other}' (expected native|jnp|pallas)"),
-        }
+        };
+        rt.with_grad_shards(cfg.grad_shards.max(1))
     }
 
     pub fn backend(&self) -> &dyn ComputeBackend {
@@ -86,7 +110,8 @@ impl Runtime {
     }
 
     /// One taped gradient sweep over a per-layer parameter list
-    /// ([`ComputeBackend::grads`]).
+    /// ([`ComputeBackend::grads`]), sharded across worker replicas when
+    /// `grad_shards > 1` ([`crate::exec`]).
     pub fn grads(
         &self,
         arch: &str,
@@ -94,7 +119,7 @@ impl Runtime {
         phase: GradPhase,
         batch: &Batch,
     ) -> Result<GradsOut> {
-        self.backend.grads(arch, layers, phase, batch)
+        self.exec.grads(self.backend.as_ref(), arch, layers, phase, batch)
     }
 
     /// Evaluation forward over one batch ([`ComputeBackend::forward`]).
@@ -149,6 +174,23 @@ mod tests {
         assert_eq!(rt.batch_cap("mlp500").unwrap(), 256);
         assert!(rt.rank_cap("mlp784", GradPhase::S).unwrap().is_none());
         assert!(rt.arch("nope").is_err());
+    }
+
+    #[test]
+    fn grad_shards_wiring() {
+        let rt = Runtime::native();
+        assert_eq!(rt.grad_shards(), 1);
+        let rt = rt.with_grad_shards(4).unwrap();
+        assert_eq!(rt.grad_shards(), 4);
+        // the native backend bounds the knob
+        assert!(Runtime::native().with_grad_shards(0).is_err());
+        assert!(Runtime::native()
+            .with_grad_shards(crate::exec::MAX_GRAD_SHARDS + 1)
+            .is_err());
+        // config plumbing reaches the executor
+        let mut cfg = presets::quickstart();
+        cfg.grad_shards = 2;
+        assert_eq!(Runtime::for_config(&cfg).unwrap().grad_shards(), 2);
     }
 
     #[test]

@@ -1,6 +1,54 @@
 //! Scoped data-parallel helper (rayon stand-in): split an index range over
 //! `std::thread::scope` workers. Used by the host matmul kernels on thin
 //! `n x 2r` operands where per-row work is uniform.
+//!
+//! Worker-count policy (DESIGN.md §8): [`default_threads`] resolves, in
+//! order, the calling thread's *scoped budget* ([`with_thread_cap`] — the
+//! sharded step executor hands each shard worker `total/k` so `k`
+//! concurrent backend sweeps never oversubscribe the machine), then the
+//! `DLRT_THREADS` env override (pinned, reproducible worker counts for
+//! benches and CI), then physical parallelism minus one. Thread count
+//! never affects numerics: every kernel built on this pool writes
+//! disjoint rows and accumulates per-row sequentially, so results are
+//! bitwise-identical at any worker count.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    /// Scoped per-thread worker budget (None = uncapped). See
+    /// [`with_thread_cap`].
+    static THREAD_CAP: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's worker budget capped at `cap` (min 1). Any
+/// [`default_threads`] consultation inside `f` — the matmul / im2col
+/// kernels sizing their scoped pools — sees at most `cap`. The previous
+/// budget is restored afterwards (on unwind too, via a drop guard, so a
+/// panicking sweep can't leak a tightened cap onto a reused thread);
+/// nesting takes the tighter cap.
+pub fn with_thread_cap<T>(cap: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_CAP.with(|c| {
+        let prev = c.get();
+        c.set(Some(prev.map_or(cap.max(1), |p| p.min(cap.max(1)))));
+        prev
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Parse a `DLRT_THREADS`-style override: a positive integer pins the
+/// worker count; anything else (unset, empty, `0`, garbage) falls back to
+/// the hardware default.
+fn threads_from_env(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
+}
 
 /// Run `f(start, end)` over `n` items split across up to `threads` chunks.
 /// `f` must be safe to run concurrently on disjoint ranges.
@@ -30,10 +78,25 @@ where
     });
 }
 
-/// Default worker count: physical parallelism minus one (leave a core for
-/// the PJRT runtime's own thread pool), at least 1.
+/// Default worker count: the calling thread's scoped budget
+/// ([`with_thread_cap`]) when one is set, else the `DLRT_THREADS` env
+/// override (read once per process), else physical parallelism minus one
+/// (leave a core for the PJRT runtime's own thread pool), at least 1.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(1).max(1)
+    static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+    let base = *ENV_THREADS.get_or_init(|| {
+        threads_from_env(std::env::var("DLRT_THREADS").ok().as_deref())
+    });
+    let base = base.unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1))
+            .unwrap_or(1)
+            .max(1)
+    });
+    match THREAD_CAP.with(|c| c.get()) {
+        Some(cap) => base.min(cap).max(1),
+        None => base,
+    }
 }
 
 /// Mutable-slice variant: splits `data` into per-chunk mutable sub-slices of
@@ -105,5 +168,34 @@ mod tests {
         let mut empty: Vec<f32> = vec![];
         par_rows_mut(&mut empty, 4, 2, |_, _| panic!("must not run"));
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        assert_eq!(threads_from_env(Some("4")), Some(4));
+        assert_eq!(threads_from_env(Some(" 2 ")), Some(2));
+        assert_eq!(threads_from_env(Some("0")), None);
+        assert_eq!(threads_from_env(Some("-3")), None);
+        assert_eq!(threads_from_env(Some("many")), None);
+        assert_eq!(threads_from_env(Some("")), None);
+        assert_eq!(threads_from_env(None), None);
+    }
+
+    #[test]
+    fn thread_cap_scopes_and_restores() {
+        let outside = default_threads();
+        with_thread_cap(1, || {
+            assert_eq!(default_threads(), 1);
+            // nesting takes the tighter cap and a looser inner cap is inert
+            with_thread_cap(8, || assert_eq!(default_threads(), 1));
+            // caps clamp to >= 1
+            with_thread_cap(0, || assert_eq!(default_threads(), 1));
+        });
+        assert_eq!(default_threads(), outside);
+        // the cap is per-thread: a spawned worker is uncapped
+        with_thread_cap(1, || {
+            let inner = std::thread::scope(|s| s.spawn(default_threads).join().unwrap());
+            assert_eq!(inner, outside);
+        });
     }
 }

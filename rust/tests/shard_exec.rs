@@ -1,0 +1,260 @@
+//! Shard-execution suite: the data-parallel step executor must (a) match
+//! the single-shard gradients/loss within float-reduction tolerance at any
+//! shard count, (b) be bitwise-reproducible across reruns at a fixed shard
+//! count, and (c) be an exact passthrough at `grad_shards = 1` — the
+//! committed `regression_trace` snapshot locks (c) end-to-end through the
+//! trainer, this file locks it at the backend boundary.
+//!
+//! The property net mirrors the TRP shape the refactor exists for: a
+//! dense conv prefix (LeNet's two conv layers as full kernel matrices)
+//! feeding an adaptive low-rank fully-connected tail.
+
+use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams, NativeBackend};
+use dlrt::baselines::he_normal;
+use dlrt::config::{presets, DataSource};
+use dlrt::coordinator::Trainer;
+use dlrt::data::Batch;
+use dlrt::dlrt::LowRankFactors;
+use dlrt::linalg::{Matrix, Rng};
+use dlrt::runtime::Runtime;
+
+/// Dense-conv prefix + adaptive low-rank tail on the `lenet` geometry:
+/// conv 20x25, conv 50x500 (dense kernels) | fc 500x800, fc 10x500
+/// (factored).
+struct MixedNet {
+    w0: Matrix,
+    b0: Vec<f32>,
+    w1: Matrix,
+    b1: Vec<f32>,
+    f2: LowRankFactors,
+    f3: LowRankFactors,
+}
+
+impl MixedNet {
+    fn new(seed: u64) -> MixedNet {
+        let mut rng = Rng::new(seed);
+        let mut net = MixedNet {
+            w0: he_normal(20, 25, &mut rng),
+            b0: (0..20).map(|_| 0.1 * rng.normal()).collect(),
+            w1: he_normal(50, 500, &mut rng),
+            b1: (0..50).map(|_| 0.1 * rng.normal()).collect(),
+            f2: LowRankFactors::random(500, 800, 16, &mut rng),
+            f3: LowRankFactors::random(10, 500, 10, &mut rng),
+        };
+        for b in net.f2.bias.iter_mut().chain(net.f3.bias.iter_mut()) {
+            *b = 0.1 * rng.normal();
+        }
+        net
+    }
+
+    fn params(&self) -> Vec<LayerParams<'_>> {
+        vec![
+            LayerParams::Dense { w: &self.w0, bias: &self.b0 },
+            LayerParams::Dense { w: &self.w1, bias: &self.b1 },
+            LayerParams::Factored {
+                u: &self.f2.u,
+                s: &self.f2.s,
+                v: &self.f2.v,
+                bias: &self.f2.bias,
+            },
+            LayerParams::Factored {
+                u: &self.f3.u,
+                s: &self.f3.s,
+                v: &self.f3.v,
+                bias: &self.f3.bias,
+            },
+        ]
+    }
+}
+
+/// A 24-row MNIST-shaped batch with a padding tail and one fractional
+/// weight, so the shard reduction's Σw-weighting is actually exercised.
+fn lenet_batch(seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let bsz = 24;
+    let count = 20;
+    let mut b = Batch {
+        x: (0..bsz * 784).map(|_| rng.normal()).collect(),
+        y: (0..bsz).map(|_| rng.below(10) as i32).collect(),
+        w: vec![1.0; bsz],
+        count,
+    };
+    for i in count..bsz {
+        b.w[i] = 0.0;
+        for v in &mut b.x[i * 784..(i + 1) * 784] {
+            *v = 0.0;
+        }
+    }
+    b.w[5] = 0.5;
+    b
+}
+
+fn rel_close(name: &str, a: f32, b: f32, tol: f32) {
+    assert!(
+        (a - b).abs() <= tol * b.abs().max(1e-3),
+        "{name}: {a} vs {b} (rel tol {tol})"
+    );
+}
+
+fn mat_close(name: &str, a: &Matrix, b: &Matrix, tol: f32) {
+    assert_eq!(a.shape(), b.shape(), "{name}: shape mismatch");
+    let denom = b.fro_norm().max(1e-6);
+    let dist = a.fro_dist(b);
+    assert!(dist <= tol * denom, "{name}: ‖Δ‖ = {dist} vs ‖ref‖ = {denom} (rel tol {tol})");
+}
+
+fn vec_close(name: &str, a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "{name}: arity mismatch");
+    let denom = b.iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt().max(1e-6) as f32;
+    let dist = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt() as f32;
+    assert!(dist <= tol * denom, "{name}: ‖Δ‖ = {dist} vs ‖ref‖ = {denom} (rel tol {tol})");
+}
+
+fn assert_grads_close(k: usize, sharded: &GradsOut, direct: &GradsOut, tol: f32) {
+    rel_close(&format!("loss (shards={k})"), sharded.loss, direct.loss, 1e-5);
+    // half-integer weights: the correct count is exactly representable
+    assert_eq!(sharded.ncorrect, direct.ncorrect, "ncorrect (shards={k})");
+    assert_eq!(sharded.layers.len(), direct.layers.len());
+    for (l, (a, b)) in sharded.layers.iter().zip(&direct.layers).enumerate() {
+        let tag = |t: &str| format!("layer {l} {t} (shards={k})");
+        match (a, b) {
+            (LayerGrads::Kl { dk, dl }, LayerGrads::Kl { dk: rk, dl: rl }) => {
+                mat_close(&tag("∂K"), dk, rk, tol);
+                mat_close(&tag("∂L"), dl, rl, tol);
+            }
+            (LayerGrads::S { ds, db }, LayerGrads::S { ds: rs, db: rb }) => {
+                mat_close(&tag("∂S"), ds, rs, tol);
+                vec_close(&tag("∂b"), db, rb, tol);
+            }
+            (LayerGrads::Dense { dw, db }, LayerGrads::Dense { dw: rw, db: rb }) => {
+                mat_close(&tag("∂W"), dw, rw, tol);
+                vec_close(&tag("∂b"), db, rb, tol);
+            }
+            (
+                LayerGrads::TwoFactor { du, dv, db },
+                LayerGrads::TwoFactor { du: ru, dv: rv, db: rb },
+            ) => {
+                mat_close(&tag("∂U"), du, ru, tol);
+                mat_close(&tag("∂V"), dv, rv, tol);
+                vec_close(&tag("∂b"), db, rb, tol);
+            }
+            (LayerGrads::None, LayerGrads::None) => {}
+            _ => panic!("layer {l}: sharded and direct runs returned different variants"),
+        }
+    }
+}
+
+fn grads_bitwise_eq(a: &GradsOut, b: &GradsOut) -> bool {
+    if a.loss.to_bits() != b.loss.to_bits() || a.ncorrect.to_bits() != b.ncorrect.to_bits() {
+        return false;
+    }
+    let bits = |m: &Matrix, n: &Matrix| {
+        m.shape() == n.shape()
+            && m.data().iter().zip(n.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    let vbits = |p: &[f32], q: &[f32]| {
+        p.len() == q.len() && p.iter().zip(q).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(&b.layers).all(|(x, y)| match (x, y) {
+            (LayerGrads::Kl { dk, dl }, LayerGrads::Kl { dk: a1, dl: a2 }) => {
+                bits(dk, a1) && bits(dl, a2)
+            }
+            (LayerGrads::S { ds, db }, LayerGrads::S { ds: a1, db: a2 }) => {
+                bits(ds, a1) && vbits(db, a2)
+            }
+            (LayerGrads::Dense { dw, db }, LayerGrads::Dense { dw: a1, db: a2 }) => {
+                bits(dw, a1) && vbits(db, a2)
+            }
+            (
+                LayerGrads::TwoFactor { du, dv, db },
+                LayerGrads::TwoFactor { du: a1, dv: a2, db: a3 },
+            ) => bits(du, a1) && bits(dv, a2) && vbits(db, a3),
+            (LayerGrads::None, LayerGrads::None) => true,
+            _ => false,
+        })
+}
+
+#[test]
+fn sharded_grads_match_single_shard_on_mixed_conv_net() {
+    let net = MixedNet::new(0xA11CE);
+    let params = net.params();
+    let batch = lenet_batch(7);
+    let direct = Runtime::native();
+    for phase in [GradPhase::Kl, GradPhase::S] {
+        let reference = direct.grads("lenet", &params, phase, &batch).unwrap();
+        for k in [2usize, 3, 4] {
+            let rt = Runtime::native().with_grad_shards(k).unwrap();
+            let sharded = rt.grads("lenet", &params, phase, &batch).unwrap();
+            assert_grads_close(k, &sharded, &reference, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn sharded_grads_are_bitwise_deterministic_at_fixed_shard_count() {
+    let net = MixedNet::new(0xDE7);
+    let params = net.params();
+    let batch = lenet_batch(8);
+    // two runs on one runtime (exercises recycled shard buffers) and one
+    // on a fresh runtime (no hidden per-instance state): all bitwise-equal
+    let rt = Runtime::native().with_grad_shards(3).unwrap();
+    let a = rt.grads("lenet", &params, GradPhase::Kl, &batch).unwrap();
+    let b = rt.grads("lenet", &params, GradPhase::Kl, &batch).unwrap();
+    let fresh = Runtime::native().with_grad_shards(3).unwrap();
+    let c = fresh.grads("lenet", &params, GradPhase::Kl, &batch).unwrap();
+    assert!(grads_bitwise_eq(&a, &b), "rerun on the same runtime drifted");
+    assert!(grads_bitwise_eq(&a, &c), "rerun on a fresh runtime drifted");
+}
+
+#[test]
+fn grad_shards_one_is_bitwise_identical_to_the_direct_backend() {
+    let net = MixedNet::new(0xF00D);
+    let params = net.params();
+    let batch = lenet_batch(9);
+    let be = NativeBackend::new();
+    let rt = Runtime::native(); // default grad_shards = 1
+    assert_eq!(rt.grad_shards(), 1);
+    for phase in [GradPhase::Kl, GradPhase::S] {
+        let through_rt = rt.grads("lenet", &params, phase, &batch).unwrap();
+        let direct = be.grads("lenet", &params, phase, &batch).unwrap();
+        assert!(
+            grads_bitwise_eq(&through_rt, &direct),
+            "the grad_shards = 1 passthrough is not bitwise-exact ({phase:?})"
+        );
+    }
+}
+
+#[test]
+fn sharded_training_run_learns_and_stays_close_to_unsharded() {
+    // end-to-end: the same seeded 2-epoch toy run under grad_shards 1 and
+    // 2 — both must learn, and the sharded trajectory must stay within
+    // float-reduction drift of the unsharded one
+    let run = |shards: usize| {
+        let mut cfg = presets::with_grad_shards(presets::quickstart(), shards);
+        cfg.epochs = 2;
+        cfg.seed = 1234;
+        cfg.data = DataSource::Toy { n: 800 };
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run(&format!("shard{shards}"), |_| {}).unwrap()
+    };
+    let base = run(1);
+    let sharded = run(2);
+    for rec in [&base, &sharded] {
+        let first = rec.epochs.first().unwrap().train_loss;
+        let last = rec.epochs.last().unwrap().train_loss;
+        assert!(last < first, "training did not reduce loss ({first} -> {last})");
+    }
+    rel_close(
+        "epoch-0 train loss, sharded vs unsharded",
+        sharded.epochs[0].train_loss,
+        base.epochs[0].train_loss,
+        0.02,
+    );
+    rel_close("final test loss, sharded vs unsharded", sharded.test_loss, base.test_loss, 0.15);
+}
