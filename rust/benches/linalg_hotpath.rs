@@ -3,55 +3,212 @@
 //! Per training step the host performs, per layer: two `n x r` GEMMs
 //! (K = U S, L = V Sᵀ), two thin QRs of `n x 2r`, two `2r x r` projections,
 //! one `2r x 2r` Jacobi SVD and two basis rotations. This bench times each
-//! primitive at the paper's real shapes so EXPERIMENTS.md §Perf can show
-//! where the host budget goes relative to the compiled-graph calls.
+//! primitive at the paper's real shapes, and for every GEMM case also
+//! times the retired f64 reference kernels (`matmul_ref` & co., kept
+//! solely as oracles) so the packed-panel microkernel's speedup is
+//! measured in-repo rather than asserted from memory.
+//!
+//! Emits `BENCH_linalg.json` with per-shape GFLOP/s for both kernels and
+//! two summary gates CI checks (DESIGN.md §9):
+//! `matmul_acceptance_speedup` (5120x512 · 512x256) and
+//! `matmul_tn_galerkin_min_speedup` (worst (n×2r)ᵀ·(n×r) projection).
+//!
+//! Smoke budget by default; `DLRT_FULL=1` for longer runs. Pin
+//! `DLRT_THREADS` for reproducible worker counts.
 
-use dlrt::linalg::{householder_qr, jacobi_svd, matmul, matmul_tn, Rng};
+use dlrt::coordinator::experiments;
+use dlrt::linalg::{
+    householder_qr, jacobi_svd, matmul, matmul_nt, matmul_nt_ref, matmul_ref, matmul_tn,
+    matmul_tn_ref, Matrix, Rng,
+};
 use dlrt::util::bench::{fmt_secs, time_fn, Table};
+use dlrt::util::Json;
 
-fn main() {
+struct GemmRow {
+    op: &'static str,
+    shape: String,
+    flops: f64,
+    mean_new: f64,
+    mean_ref: f64,
+}
+
+impl GemmRow {
+    fn gflops(&self) -> f64 {
+        self.flops / self.mean_new.max(1e-12) / 1e9
+    }
+    fn gflops_ref(&self) -> f64 {
+        self.flops / self.mean_ref.max(1e-12) / 1e9
+    }
+    fn speedup(&self) -> f64 {
+        self.mean_ref / self.mean_new.max(1e-12)
+    }
+}
+
+fn gemm_row(
+    op: &'static str,
+    shape: String,
+    flops: f64,
+    iters: usize,
+    new_f: impl FnMut() -> Matrix,
+    ref_f: impl FnMut() -> Matrix,
+) -> GemmRow {
+    let s_new = time_fn(1, iters, new_f);
+    let s_ref = time_fn(1, iters, ref_f);
+    GemmRow { op, shape, flops, mean_new: s_new.mean, mean_ref: s_ref.mean }
+}
+
+fn main() -> dlrt::Result<()> {
     let mut rng = Rng::new(0);
-    let full = std::env::var("DLRT_FULL").map(|v| v == "1").unwrap_or(false);
+    let full = experiments::full_mode();
     let iters = if full { 20 } else { 3 };
+    println!(
+        "linalg_hotpath: {iters} timed iterations per case ({})",
+        if full { "full" } else { "smoke" }
+    );
 
-    let mut table = Table::new(&["op", "shape", "mean", "std"]);
+    let mut gemms: Vec<GemmRow> = Vec::new();
 
-    // shapes from the paper's nets: (n, r) pairs seen by QR/GEMM
-    for &(n, r) in &[(500usize, 64usize), (784, 128), (5120, 64), (5120, 256)] {
+    // shapes from the paper's nets: (n, r) pairs seen by the integrator
+    let nr_pairs = [(500usize, 64usize), (784, 128), (5120, 64), (5120, 256)];
+
+    // K = U S coefficient GEMMs
+    for &(n, r) in &nr_pairs {
+        let u = rng.normal_matrix(n, r);
+        let core = rng.normal_matrix(r, r);
+        gemms.push(gemm_row(
+            "matmul (K=US)",
+            format!("{n}x{r} * {r}x{r}"),
+            2.0 * n as f64 * r as f64 * r as f64,
+            iters,
+            || matmul(&u, &core),
+            || matmul_ref(&u, &core),
+        ));
+    }
+
+    // Galerkin projections M = Qᵀ U — the matmul_tn acceptance family
+    for &(n, r) in &nr_pairs {
+        let q = rng.normal_matrix(n, 2 * r);
+        let u = rng.normal_matrix(n, r);
+        gemms.push(gemm_row(
+            "matmul_tn (M=QᵀU)",
+            format!("({n}x{})ᵀ * {n}x{r}", 2 * r),
+            2.0 * (2 * r) as f64 * r as f64 * n as f64,
+            iters,
+            || matmul_tn(&q, &u),
+            || matmul_tn_ref(&q, &u),
+        ));
+    }
+
+    // acceptance GEMM: the widest batch-side matmul in the repo's nets
+    {
+        let (m, k, n) = (5120usize, 512usize, 256usize);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        gemms.push(gemm_row(
+            "matmul (acceptance)",
+            format!("{m}x{k} * {k}x{n}"),
+            2.0 * m as f64 * k as f64 * n as f64,
+            iters,
+            || matmul(&a, &b),
+            || matmul_ref(&a, &b),
+        ));
+    }
+
+    // conv-shaped A·Bᵀ: im2col patches times kernel matrix, and the
+    // fc-backward shape delta·Wᵀ
+    {
+        let patches = rng.normal_matrix(36_864, 25);
+        let w = rng.normal_matrix(20, 25);
+        gemms.push(gemm_row(
+            "matmul_nt (conv fwd)",
+            "36864x25 * (20x25)ᵀ".into(),
+            2.0 * 36_864.0 * 25.0 * 20.0,
+            iters,
+            || matmul_nt(&patches, &w),
+            || matmul_nt_ref(&patches, &w),
+        ));
+        let delta = rng.normal_matrix(4096, 500);
+        let wfc = rng.normal_matrix(50, 500);
+        gemms.push(gemm_row(
+            "matmul_nt (fc bwd)",
+            "4096x500 * (50x500)ᵀ".into(),
+            2.0 * 4096.0 * 500.0 * 50.0,
+            iters,
+            || matmul_nt(&delta, &wfc),
+            || matmul_nt_ref(&delta, &wfc),
+        ));
+    }
+
+    let mut table =
+        Table::new(&["op", "shape", "mean", "GFLOP/s", "ref mean", "ref GFLOP/s", "speedup"]);
+    for g in &gemms {
+        table.row(&[
+            g.op.into(),
+            g.shape.clone(),
+            fmt_secs(g.mean_new),
+            format!("{:.2}", g.gflops()),
+            fmt_secs(g.mean_ref),
+            format!("{:.2}", g.gflops_ref()),
+            format!("{:.2}x", g.speedup()),
+        ]);
+    }
+    table.print();
+
+    // non-GEMM hot primitives, timed as before (no reference variants)
+    let mut extra = Table::new(&["op", "shape", "mean", "std"]);
+    for &(n, r) in &nr_pairs {
         let a = rng.normal_matrix(n, 2 * r);
         let s = time_fn(1, iters, || householder_qr(&a));
-        table.row(&[
+        extra.row(&[
             "householder_qr".into(),
             format!("{n}x{}", 2 * r),
             fmt_secs(s.mean),
             fmt_secs(s.std),
         ]);
-
-        let u = rng.normal_matrix(n, r);
-        let core = rng.normal_matrix(r, r);
-        let s = time_fn(1, iters, || matmul(&u, &core));
-        table.row(&["matmul (K=US)".into(), format!("{n}x{r} * {r}x{r}"), fmt_secs(s.mean), fmt_secs(s.std)]);
-
-        let q = rng.normal_matrix(n, 2 * r);
-        let s = time_fn(1, iters, || matmul_tn(&q, &u));
-        table.row(&[
-            "matmul_tn (M=QᵀU)".into(),
-            format!("({n}x{})ᵀ * {n}x{r}", 2 * r),
-            fmt_secs(s.mean),
-            fmt_secs(s.std),
-        ]);
     }
-
     for &r in &[32usize, 64, 128] {
         let core = rng.normal_matrix(2 * r, 2 * r);
         let s = time_fn(1, iters, || jacobi_svd(&core));
-        table.row(&[
-            "jacobi_svd".into(),
-            format!("{0}x{0}", 2 * r),
-            fmt_secs(s.mean),
-            fmt_secs(s.std),
-        ]);
+        extra.row(&["jacobi_svd".into(), format!("{0}x{0}", 2 * r), fmt_secs(s.mean), fmt_secs(s.std)]);
     }
+    extra.print();
 
-    table.print();
+    let acceptance_speedup = gemms
+        .iter()
+        .find(|g| g.op == "matmul (acceptance)")
+        .map(|g| g.speedup())
+        .unwrap_or(0.0);
+    let tn_min_speedup = gemms
+        .iter()
+        .filter(|g| g.op.starts_with("matmul_tn"))
+        .map(|g| g.speedup())
+        .fold(f64::INFINITY, f64::min);
+    let tn_min_speedup = if tn_min_speedup.is_finite() { tn_min_speedup } else { 0.0 };
+    println!(
+        "shape check: acceptance matmul speedup {acceptance_speedup:.2}x (gate ≥ 2.0); \
+         worst Galerkin matmul_tn speedup {tn_min_speedup:.2}x (gate ≥ 1.5)"
+    );
+
+    let json_rows = gemms.iter().map(|g| {
+        Json::obj(vec![
+            ("op", Json::str(g.op)),
+            ("shape", Json::str(g.shape.as_str())),
+            ("gflops", Json::num(g.gflops())),
+            ("gflops_ref", Json::num(g.gflops_ref())),
+            ("speedup", Json::num(g.speedup())),
+            ("mean_s", Json::num(g.mean_new)),
+            ("ref_mean_s", Json::num(g.mean_ref)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("bench", Json::str("linalg_hotpath")),
+        ("mode", Json::str(if full { "full" } else { "smoke" })),
+        ("iters", Json::num(iters as f64)),
+        ("rows", Json::arr(json_rows)),
+        ("matmul_acceptance_speedup", Json::num(acceptance_speedup)),
+        ("matmul_tn_galerkin_min_speedup", Json::num(tn_min_speedup)),
+    ]);
+    std::fs::write("BENCH_linalg.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_linalg.json");
+    Ok(())
 }

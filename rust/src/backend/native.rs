@@ -52,85 +52,27 @@ use crate::linalg::{
     col2im, im2col, matmul, matmul_nt, matmul_tn, maxpool2x2, unpool2x2, Matrix,
 };
 use crate::runtime::ArchInfo;
+use crate::util::scratch;
 use crate::Result;
 use anyhow::{anyhow, bail, ensure};
-use std::sync::Mutex;
 
 /// The native backend: an architecture registry plus the math below. The
 /// registry ships the paper's MLPs ([`super::archs`]); tests and custom
 /// experiments can add more via [`NativeBackend::with_arch`].
 ///
-/// The backend is `Sync` (registry immutable, scratch pool mutex-guarded)
+/// The backend is `Sync` (the registry is immutable after construction)
 /// and exposes itself through [`ComputeBackend::sync_view`], so the
 /// sharded step executor ([`crate::exec`]) may evaluate several `grads`
 /// calls concurrently from worker threads.
+///
+/// Workspace recycling lives in the process-global scratch pool
+/// ([`crate::util::scratch`], DESIGN.md §9): the batch feature matrix,
+/// every taped activation/patch matrix, the GEMM packing panels, and the
+/// max-pool routing tables all draw from it on construction and return on
+/// drop, so steady-state training steps — per shard, under the sharded
+/// executor — allocate nothing in the matmul/im2col path.
 pub struct NativeBackend {
     archs: Vec<(String, ArchInfo, usize)>,
-    scratch: ScratchPool,
-}
-
-/// Free-list of `f32` buffers recycled across `grads` calls: the batch
-/// feature matrix draws from it and every taped activation/patch matrix
-/// returns to it, so steady-state training steps — per shard, under the
-/// sharded executor — stop allocating fresh workspaces. Checkout is
-/// per-call (buffers leave the pool while in use), so concurrent shard
-/// workers never alias a workspace.
-struct ScratchPool {
-    free: Mutex<Vec<Vec<f32>>>,
-}
-
-/// Pool retention cap: bounds idle memory at `MAX_POOLED` × the largest
-/// workspace while comfortably covering the shard workers' concurrent
-/// checkouts plus the per-step tape returns.
-const MAX_POOLED: usize = 16;
-
-impl ScratchPool {
-    fn new() -> ScratchPool {
-        ScratchPool { free: Mutex::new(Vec::new()) }
-    }
-
-    /// A buffer holding exactly `src` (recycled allocation when one with
-    /// enough capacity is pooled, fresh otherwise). Prefers the smallest
-    /// adequate buffer so over-large workspaces stay available for the
-    /// requests that need them.
-    fn take_copy(&self, src: &[f32]) -> Vec<f32> {
-        let recycled = {
-            let mut free = self.free.lock().unwrap();
-            let mut best: Option<(usize, usize)> = None; // (index, capacity)
-            for (i, b) in free.iter().enumerate() {
-                let cap = b.capacity();
-                if cap >= src.len() {
-                    match best {
-                        Some((_, bc)) if bc <= cap => {}
-                        _ => best = Some((i, cap)),
-                    }
-                }
-            }
-            best.map(|(i, _)| free.swap_remove(i))
-        };
-        match recycled {
-            Some(mut b) => {
-                b.clear();
-                b.extend_from_slice(src);
-                b
-            }
-            None => src.to_vec(),
-        }
-    }
-
-    /// Return buffers to the pool (drops them once the retention cap is
-    /// reached).
-    fn put_all(&self, bufs: impl IntoIterator<Item = Vec<f32>>) {
-        let mut free = self.free.lock().unwrap();
-        for b in bufs {
-            if free.len() >= MAX_POOLED {
-                break;
-            }
-            if b.capacity() > 0 {
-                free.push(b);
-            }
-        }
-    }
 }
 
 impl Default for NativeBackend {
@@ -141,7 +83,7 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend { archs: super::archs::builtin(), scratch: ScratchPool::new() }
+        NativeBackend { archs: super::archs::builtin() }
     }
 
     /// Register an additional architecture under `name` with the given
@@ -202,10 +144,10 @@ impl<'a> Weights<'a> {
 }
 
 /// Batch features as a `B x dim` matrix (B = the padded batch size; padded
-/// rows carry weight 0 and fall out of every reduction). The buffer comes
-/// from `scratch` when one is supplied — values are identical either way,
-/// only the allocation is recycled.
-fn batch_matrix(batch: &Batch, dim: usize, scratch: Option<&ScratchPool>) -> Result<Matrix> {
+/// rows carry weight 0 and fall out of every reduction). The buffer is a
+/// pooled copy — values are identical to a fresh allocation, only the
+/// backing storage is recycled.
+fn batch_matrix(batch: &Batch, dim: usize) -> Result<Matrix> {
     let bsz = batch.w.len();
     ensure!(
         batch.y.len() == bsz,
@@ -220,11 +162,7 @@ fn batch_matrix(batch: &Batch, dim: usize, scratch: Option<&ScratchPool>) -> Res
         bsz,
         dim
     );
-    let buf = match scratch {
-        Some(pool) => pool.take_copy(&batch.x),
-        None => batch.x.clone(),
-    };
-    Ok(Matrix::from_vec(bsz, dim, buf))
+    Ok(Matrix::from_vec(bsz, dim, scratch::global().take_copy(&batch.x)))
 }
 
 /// Per-layer record of one taped forward pass.
@@ -242,7 +180,7 @@ struct ConvTape {
     /// Post-ReLU, pre-pool activations (`B·hp·wp x out_ch`) — the ReLU
     /// mask source for this layer's backward.
     act: Matrix,
-    pool_src: Option<Vec<u32>>,
+    pool_src: Option<scratch::IdxBuf>,
 }
 
 /// Network forward. Conv layers im2col their input, apply the kernel
@@ -282,7 +220,7 @@ fn forward_pass(
                 (next, ConvTape { act: z, pool_src: Some(idx) })
             } else {
                 let per = z.rows() / bsz * z.cols();
-                let next = Matrix::from_vec(bsz, per, z.data().to_vec());
+                let next = Matrix::from_vec(bsz, per, scratch::global().take_copy(z.data()));
                 (next, ConvTape { act: z, pool_src: None })
             };
             if keep_tape {
@@ -406,10 +344,11 @@ fn relu_mask(d: &mut Matrix, act: &Matrix) {
 /// branch converts it to the pre-activation delta before sinking, then
 /// propagates to layer `l-1`'s final output.
 ///
-/// Returns the per-layer tapes alongside the stats so the caller can
-/// recycle their buffers into the scratch pool. `x` is the prepared
-/// batch feature matrix (see `batch_matrix`); `batch` supplies labels
-/// and weights.
+/// The per-layer tapes drop at the end of the sweep, returning their
+/// buffers to the global scratch pool for the next grads call (same
+/// step's S phase, the next step, or a sibling shard). `x` is the
+/// prepared batch feature matrix (see `batch_matrix`); `batch` supplies
+/// labels and weights.
 fn backprop(
     arch: &ArchInfo,
     weights: &[Weights<'_>],
@@ -418,7 +357,7 @@ fn backprop(
     x: Matrix,
     stop_below: usize,
     mut sink: impl FnMut(usize, &Matrix, &Matrix),
-) -> Result<(EvalStats, Vec<Tape>)> {
+) -> Result<EvalStats> {
     let (tapes, logits) = forward_pass(arch, weights, biases, x, true);
     let (loss, ncorrect, delta) = softmax_stats(&logits, &batch.y, &batch.w, true)?;
     let mut delta = delta.expect("delta requested");
@@ -455,7 +394,7 @@ fn backprop(
             }
         }
     }
-    Ok((EvalStats { loss, ncorrect }, tapes))
+    Ok(EvalStats { loss, ncorrect })
 }
 
 /// Structural validation shared by every service: supported layer kinds,
@@ -636,9 +575,9 @@ impl ComputeBackend for NativeBackend {
                 .position(|p| matches!(p, LayerParams::Factored { .. }))
                 .unwrap_or(layers.len()),
         };
-        let x = batch_matrix(batch, arch.input_dim, Some(&self.scratch))?;
+        let x = batch_matrix(batch, arch.input_dim)?;
         let mut out: Vec<LayerGrads> = (0..layers.len()).map(|_| LayerGrads::None).collect();
-        let (st, tapes) = backprop(arch, &weights, &biases, batch, x, stop_below, |l, delta, a| {
+        let st = backprop(arch, &weights, &biases, batch, x, stop_below, |l, delta, a| {
             out[l] = match (&layers[l], phase) {
                 (LayerParams::Factored { u, v, .. }, GradPhase::Kl) => {
                     let av = matmul(a, v); // B x r
@@ -676,13 +615,6 @@ impl ComputeBackend for NativeBackend {
                 }
             };
         })?;
-        // recycle the taped workspaces: the next grads call (same step's S
-        // phase, the next step, or a sibling shard) draws its batch matrix
-        // from these buffers instead of allocating
-        self.scratch.put_all(tapes.into_iter().flat_map(|t| {
-            let Tape { input, conv } = t;
-            std::iter::once(input.into_vec()).chain(conv.map(|c| c.act.into_vec()))
-        }));
         Ok(GradsOut { layers: out, loss: st.loss, ncorrect: st.ncorrect })
     }
 
@@ -696,10 +628,7 @@ impl ComputeBackend for NativeBackend {
         check_params(arch, layers)?;
         let weights: Vec<Weights<'_>> = layers.iter().map(Weights::of).collect();
         let biases: Vec<&[f32]> = layers.iter().map(|p| p.bias()).collect();
-        // tape-free path: the batch matrix is dropped inside the forward,
-        // so drawing it from the scratch pool would drain buffers that
-        // never come back — allocate plainly instead
-        let x = batch_matrix(batch, arch.input_dim, None)?;
+        let x = batch_matrix(batch, arch.input_dim)?;
         let (_, logits) = forward_pass(arch, &weights, &biases, x, false);
         let (loss, ncorrect, _) = softmax_stats(&logits, &batch.y, &batch.w, false)?;
         Ok(EvalStats { loss, ncorrect })
@@ -712,8 +641,7 @@ impl ComputeBackend for NativeBackend {
         batch: &Batch,
     ) -> Result<Matrix> {
         let arch = &self.entry(arch)?.1;
-        // tape-free path: see `forward` — pool buffers would not return
-        let x = batch_matrix(batch, arch.input_dim, None)?;
+        let x = batch_matrix(batch, arch.input_dim)?;
         forward_logits_raw(arch, layers, x)
     }
 
@@ -727,9 +655,9 @@ impl ComputeBackend for NativeBackend {
     }
 
     fn sync_view(&self) -> Option<&(dyn ComputeBackend + Sync)> {
-        // registry is immutable after construction; the scratch pool is
-        // mutex-guarded with per-call buffer checkout — concurrent shard
-        // sweeps are safe and numerically independent
+        // registry is immutable after construction; the global scratch
+        // pool is mutex-guarded with exclusive buffer checkout —
+        // concurrent shard sweeps are safe and numerically independent
         Some(self)
     }
 }
@@ -1052,8 +980,6 @@ mod tests {
                 assert_eq!(a.data(), b.data(), "∂L drifted across scratch reuse");
             }
         }
-        // the pool respects its retention cap
-        assert!(be.scratch.free.lock().unwrap().len() <= MAX_POOLED);
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! into `grad_shards` contiguous **row shards**, evaluates
 //! [`ComputeBackend::grads`] per shard on scoped worker threads, and
 //! combines the per-shard results with the fixed-order tree reduction of
-//! [`crate::backend::reduce_grad_shards`].
+//! [`crate::backend::reduce_grad_shards`]. [`ShardedExecutor::forward`]
+//! shards evaluation sweeps over the same worker pool, reducing the two
+//! scalars (weighted-mean loss, correct count) in fixed shard order.
 //!
 //! Determinism contract:
 //! * `grad_shards = 1` **bypasses this module entirely** — the call goes
@@ -32,7 +34,9 @@
 //! internal pool — steady-state sharded steps copy rows into existing
 //! allocations instead of growing fresh ones.
 
-use crate::backend::{reduce_grad_shards, ComputeBackend, GradPhase, GradsOut, LayerParams};
+use crate::backend::{
+    reduce_grad_shards, ComputeBackend, EvalStats, GradPhase, GradsOut, LayerParams,
+};
 use crate::data::Batch;
 use crate::util::pool;
 use crate::Result;
@@ -104,22 +108,7 @@ impl ShardedExecutor {
 
         // ---- split: contiguous, balanced row ranges ---------------------
         let mut shards = self.bufs.lock().unwrap().pop().unwrap_or_default();
-        shards.resize_with(k, || Batch { x: Vec::new(), y: Vec::new(), w: Vec::new(), count: 0 });
-        let base = bsz / k;
-        let rem = bsz % k;
-        let mut lo = 0usize;
-        for (i, sb) in shards.iter_mut().enumerate() {
-            let hi = lo + base + usize::from(i < rem);
-            sb.x.clear();
-            sb.x.extend_from_slice(&batch.x[lo * dim..hi * dim]);
-            sb.y.clear();
-            sb.y.extend_from_slice(&batch.y[lo..hi]);
-            sb.w.clear();
-            sb.w.extend_from_slice(&batch.w[lo..hi]);
-            // real rows form a prefix of the padded batch
-            sb.count = batch.count.clamp(lo, hi) - lo;
-            lo = hi;
-        }
+        split_batch(batch, dim, k, &mut shards);
 
         // ---- evaluate: one worker per shard, shard 0 on this thread -----
         let inner_threads = pool::default_threads().div_ceil(k);
@@ -163,6 +152,119 @@ impl ShardedExecutor {
             return Err(e);
         }
         reduce_grad_shards(parts)
+    }
+
+    /// Evaluate one evaluation forward ([`ComputeBackend::forward`]),
+    /// sharded across the same worker pool as [`ShardedExecutor::grads`].
+    /// The reduction is two scalars combined in fixed shard order with f64
+    /// accumulation: `loss = Σ_s w_s·loss_s / Σ_s w_s` (each shard reports
+    /// a weighted mean over its own weight mass `w_s`) and
+    /// `ncorrect = Σ_s ncorrect_s`. Same determinism contract as `grads`:
+    /// `shards = 1` is a bitwise passthrough, fixed shard counts are
+    /// bitwise-reproducible.
+    pub fn forward(
+        &self,
+        backend: &dyn ComputeBackend,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        batch: &Batch,
+    ) -> Result<EvalStats> {
+        let bsz = batch.w.len();
+        let k = self.shards.min(bsz.max(1));
+        if k <= 1 {
+            return backend.forward(arch, layers, batch);
+        }
+        let sync = backend.sync_view().ok_or_else(|| {
+            anyhow!(
+                "backend '{}' has no thread-safe view; it cannot evaluate sharded forward \
+                 (grad_shards = {})",
+                backend.name(),
+                self.shards
+            )
+        })?;
+        ensure!(
+            batch.y.len() == bsz && batch.x.len() % bsz == 0,
+            "sharded forward: malformed batch ({} features, {} labels, {} weights)",
+            batch.x.len(),
+            batch.y.len(),
+            bsz
+        );
+        let dim = batch.x.len() / bsz;
+
+        let mut shards = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        split_batch(batch, dim, k, &mut shards);
+
+        let inner_threads = pool::default_threads().div_ceil(k);
+        let mut results: Vec<Option<Result<EvalStats>>> = (0..k).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut slots = results.iter_mut().zip(shards.iter());
+            let first = slots.next();
+            for (slot, sb) in slots {
+                s.spawn(move || {
+                    *slot = Some(pool::with_thread_cap(inner_threads, || {
+                        sync.forward(arch, layers, sb)
+                    }));
+                });
+            }
+            if let Some((slot, sb)) = first {
+                *slot = Some(pool::with_thread_cap(inner_threads, || {
+                    sync.forward(arch, layers, sb)
+                }));
+            }
+        });
+
+        // fixed-order two-scalar reduce (shard index order, f64 carry)
+        let mut loss = 0.0f64;
+        let mut ncorrect = 0.0f64;
+        let mut wtot = 0.0f64;
+        let mut first_err = None;
+        for (res, sb) in results.into_iter().zip(shards.iter()) {
+            match res.expect("every shard slot is filled") {
+                Ok(st) => {
+                    let wsum: f64 = sb.w.iter().map(|&x| x as f64).sum();
+                    loss += wsum * st.loss as f64;
+                    ncorrect += st.ncorrect as f64;
+                    wtot += wsum;
+                }
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        let mut pool_guard = self.bufs.lock().unwrap();
+        if pool_guard.len() < MAX_POOLED_SETS {
+            pool_guard.push(shards);
+        }
+        drop(pool_guard);
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(EvalStats {
+            loss: if wtot > 0.0 { (loss / wtot) as f32 } else { 0.0 },
+            ncorrect: ncorrect as f32,
+        })
+    }
+}
+
+/// Split a padded batch into `k` contiguous, balanced row shards, reusing
+/// the sub-batch buffers in `shards`. The split is a pure function of
+/// `(batch, k)` — shard boundaries never depend on thread scheduling.
+fn split_batch(batch: &Batch, dim: usize, k: usize, shards: &mut Vec<Batch>) {
+    let bsz = batch.w.len();
+    shards.resize_with(k, || Batch { x: Vec::new(), y: Vec::new(), w: Vec::new(), count: 0 });
+    let base = bsz / k;
+    let rem = bsz % k;
+    let mut lo = 0usize;
+    for (i, sb) in shards.iter_mut().enumerate() {
+        let hi = lo + base + usize::from(i < rem);
+        sb.x.clear();
+        sb.x.extend_from_slice(&batch.x[lo * dim..hi * dim]);
+        sb.y.clear();
+        sb.y.extend_from_slice(&batch.y[lo..hi]);
+        sb.w.clear();
+        sb.w.extend_from_slice(&batch.w[lo..hi]);
+        // real rows form a prefix of the padded batch
+        sb.count = batch.count.clamp(lo, hi) - lo;
+        lo = hi;
     }
 }
 

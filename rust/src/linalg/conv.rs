@@ -23,7 +23,7 @@
 //! thread count).
 
 use super::Matrix;
-use crate::util::pool;
+use crate::util::{pool, scratch};
 
 /// Total-work threshold below which threading overhead dominates (same
 /// policy as `linalg::matmul`).
@@ -107,15 +107,16 @@ pub fn col2im(cols: &Matrix, in_h: usize, in_w: usize, in_ch: usize, ksize: usiz
 /// 2x2 max-pool, stride 2, over channel-last rows: `z` is `B·hp·wp x C`
 /// (one row per pre-pool pixel). Returns the pooled `B·⌊hp/2⌋·⌊wp/2⌋ x C`
 /// matrix plus, per `(pooled row, channel)`, the source row index the max
-/// came from — the routing table [`unpool2x2`] scatters gradients through.
-pub fn maxpool2x2(z: &Matrix, hp: usize, wp: usize) -> (Matrix, Vec<u32>) {
+/// came from — the routing table [`unpool2x2`] scatters gradients through
+/// (a pooled [`scratch::IdxBuf`], recycled on drop like the matrices).
+pub fn maxpool2x2(z: &Matrix, hp: usize, wp: usize) -> (Matrix, scratch::IdxBuf) {
     let ch = z.cols();
     assert!(hp >= 2 && wp >= 2, "maxpool2x2 needs at least a 2x2 map (got {hp}x{wp})");
     assert_eq!(z.rows() % (hp * wp), 0, "maxpool2x2: {} rows vs {hp}x{wp} map", z.rows());
     let bsz = z.rows() / (hp * wp);
     let (ph, pw) = (hp / 2, wp / 2);
     let mut out = Matrix::zeros(bsz * ph * pw, ch);
-    let mut idx = vec![0u32; bsz * ph * pw * ch];
+    let mut idx = scratch::take_idx(bsz * ph * pw * ch);
     for orow in 0..bsz * ph * pw {
         let b = orow / (ph * pw);
         let rem = orow % (ph * pw);
@@ -271,6 +272,38 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-6); // 2.5 - 1.5, each at one slot
         assert_eq!(up[(idx[0] as usize, 0)], 2.5);
         assert_eq!(up[(idx[1] as usize, 1)], -1.5);
+    }
+
+    #[test]
+    fn recycled_patch_buffers_do_not_drift_values() {
+        // the im2col patch matrix and the maxpool routing table both ride
+        // the global scratch pool: dropping and recomputing them must be
+        // bitwise-stable (recycled buffers are fully reinitialized)
+        let mut rng = Rng::new(6);
+        let (bsz, h, w, c, k) = (3usize, 8usize, 8usize, 2usize, 3usize);
+        let img = rng.normal_matrix(bsz, h * w * c);
+        let (hp, wp) = (h - k + 1, w - k + 1);
+        let base_cols = im2col(&img, h, w, c, k);
+        let (base_pool, base_idx) = maxpool2x2(&base_cols, hp, wp);
+        for _ in 0..3 {
+            // each iteration drops last round's buffers back into the pool
+            // and draws them out again
+            let cols = im2col(&img, h, w, c, k);
+            assert!(
+                cols.data().iter().zip(base_cols.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "im2col drifted across buffer recycling"
+            );
+            let (pooled, idx) = maxpool2x2(&cols, hp, wp);
+            assert!(
+                pooled
+                    .data()
+                    .iter()
+                    .zip(base_pool.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "maxpool drifted across buffer recycling"
+            );
+            assert_eq!(&idx[..], &base_idx[..], "argmax routing drifted across recycling");
+        }
     }
 
     #[test]

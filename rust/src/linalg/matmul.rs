@@ -1,14 +1,216 @@
-//! Blocked, rayon-parallel dense products for host-side integrator math.
+//! Cache-blocked packed-panel GEMM — the shared microkernel behind every
+//! dense product in the crate (DESIGN.md §9).
 //!
-//! Shapes here are thin (`n x 2r` bases, `2r x 2r` cores), so the kernels
-//! optimize for cache reuse on tall-skinny operands rather than giant GEMM.
-//! f64 accumulation keeps the QR/SVD downstream numerically clean in f32.
+//! All three entry points ([`matmul`], [`matmul_nt`], [`matmul_tn`]) lower
+//! to one blocked kernel: operands are packed into contiguous block-major
+//! panels (so transposed variants stop paying strided access), and an
+//! `MR x NR` register tile accumulates through an 8-wide unrolled inner
+//! loop that the autovectorizer can lift to SIMD — plain `f32` arrays, no
+//! nightly features, no FMA contraction (Rust keeps `a * b + c` as two
+//! rounded ops, so results are IEEE-deterministic across targets).
+//!
+//! **Determinism contract.** The value of every output element is a sum
+//! accumulated in a fixed, shape-deterministic order: KC-sized k-blocks in
+//! increasing order (the sequential `pc` loop), sequentially within each
+//! block (the microkernel's `p` loop), with exactly one f32 add into C per
+//! block. Threading only splits the MC row-block loop — disjoint C rows,
+//! no shared accumulator — so reruns are bitwise-identical at *any* worker
+//! count. Versus the previous f64-accumulated row kernel this is a
+//! tolerance-level numeric change (f32 partial sums), re-baselined
+//! deliberately via the `regression_trace` snapshot contract.
+//!
+//! Packing buffers come from the global scratch pool, so steady-state
+//! calls allocate nothing. The old kernels survive as [`matmul_ref`] /
+//! [`matmul_nt_ref`] / [`matmul_tn_ref`]: the property-test oracles and
+//! the old-vs-new baseline in `benches/linalg_hotpath.rs`.
 
 use super::Matrix;
-use crate::util::pool;
+use crate::util::{pool, scratch};
+
+/// Register-tile rows: one microkernel call produces an `MR x NR` C tile.
+const MR: usize = 8;
+/// Register-tile columns — `MR * NR = 64` f32 accumulators, within the
+/// 16-ymm budget after vectorization on x86-64 and comfortable on aarch64.
+const NR: usize = 8;
+/// Rows of A packed per panel (L2-resident: `MC x KC` floats = 64 KiB).
+const MC: usize = 64;
+/// k-extent of one packing block (also the accumulation-block size that
+/// fixes the summation order).
+const KC: usize = 256;
+/// Columns of B packed per panel (L3-resident: `KC x NC` floats = 512 KiB).
+const NC: usize = 512;
 
 /// Total-flops threshold below which threading overhead dominates.
 const PAR_THRESHOLD: usize = 64 * 64 * 64;
+
+/// A GEMM operand: the stored matrix, read as-is (`N`) or logically
+/// transposed (`T`). Packing resolves the layout, so the kernel proper
+/// never sees a stride.
+#[derive(Clone, Copy)]
+enum Op<'a> {
+    N(&'a Matrix),
+    T(&'a Matrix),
+}
+
+/// Pack the `mc x kc` block of A at (`ic`, `pc`) into micro-panels of MR
+/// rows: `dst[ip*kc*MR + p*MR + r] = A[ic + ip*MR + r, pc + p]`, rows
+/// beyond `mc` zero-filled so the microkernel needs no row masking.
+fn pack_a(dst: &mut [f32], a: Op<'_>, ic: usize, mc: usize, pc: usize, kc: usize) {
+    let mp = mc.div_ceil(MR);
+    for ip in 0..mp {
+        let i0 = ic + ip * MR;
+        let ilive = (mc - ip * MR).min(MR);
+        let panel = &mut dst[ip * kc * MR..(ip + 1) * kc * MR];
+        if ilive < MR {
+            panel.fill(0.0);
+        }
+        match a {
+            Op::N(m) => {
+                // rows are contiguous in the source: read a row, scatter it
+                // k-major at stride MR
+                let ld = m.cols();
+                let src = m.data();
+                for r in 0..ilive {
+                    let row = &src[(i0 + r) * ld + pc..(i0 + r) * ld + pc + kc];
+                    for (p, &v) in row.iter().enumerate() {
+                        panel[p * MR + r] = v;
+                    }
+                }
+            }
+            Op::T(m) => {
+                // logical A[i, p] = m[p, i]: each stored row p contributes
+                // one contiguous run of MR panel entries
+                let ld = m.cols();
+                let src = m.data();
+                for p in 0..kc {
+                    let run = &src[(pc + p) * ld + i0..(pc + p) * ld + i0 + ilive];
+                    panel[p * MR..p * MR + ilive].copy_from_slice(run);
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `kc x nc` block of B at (`pc`, `jc`) into micro-panels of NR
+/// columns: `dst[jp*kc*NR + p*NR + c] = B[pc + p, jc + jp*NR + c]`,
+/// columns beyond `nc` zero-filled.
+fn pack_b(dst: &mut [f32], b: Op<'_>, pc: usize, kc: usize, jc: usize, nc: usize) {
+    let np = nc.div_ceil(NR);
+    for jp in 0..np {
+        let j0 = jc + jp * NR;
+        let jlive = (nc - jp * NR).min(NR);
+        let panel = &mut dst[jp * kc * NR..(jp + 1) * kc * NR];
+        if jlive < NR {
+            panel.fill(0.0);
+        }
+        match b {
+            Op::N(m) => {
+                // B rows are contiguous: one memcpy per k step
+                let ld = m.cols();
+                let src = m.data();
+                for p in 0..kc {
+                    let run = &src[(pc + p) * ld + j0..(pc + p) * ld + j0 + jlive];
+                    panel[p * NR..p * NR + jlive].copy_from_slice(run);
+                }
+            }
+            Op::T(m) => {
+                // logical B[p, j] = m[j, p]: stream each stored row j once,
+                // writing k-major at stride NR
+                let ld = m.cols();
+                let src = m.data();
+                for c in 0..jlive {
+                    let row = &src[(j0 + c) * ld + pc..(j0 + c) * ld + pc + kc];
+                    for (p, &v) in row.iter().enumerate() {
+                        panel[p * NR + c] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register microkernel: `acc += Ap · Bp` over one packed A micro-panel
+/// (`kc x MR`, k-major) and B micro-panel (`kc x NR`, k-major). The fixed
+/// 8x8 accumulator array and exact-chunk iteration give the autovectorizer
+/// a branch-free unrolled loop body.
+#[inline(always)]
+fn microkernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let a = av[r];
+            for c in 0..NR {
+                acc[r][c] += a * bv[c];
+            }
+        }
+    }
+}
+
+/// Multiply one packed A block against one packed B block into the C
+/// row-block `cblock` (`mc` rows of the full `n`-wide C, starting at
+/// global row `ic`; columns `jc..jc+nc`). Edge tiles accumulate into a
+/// full zero-padded register tile and mask only the writeback.
+fn macro_kernel(
+    cblock: &mut [f32],
+    n: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+) {
+    let mp = mc.div_ceil(MR);
+    let np = nc.div_ceil(NR);
+    for jp in 0..np {
+        let bpanel = &bp[jp * kc * NR..(jp + 1) * kc * NR];
+        let jlive = (nc - jp * NR).min(NR);
+        for ip in 0..mp {
+            let apanel = &ap[ip * kc * MR..(ip + 1) * kc * MR];
+            let ilive = (mc - ip * MR).min(MR);
+            let mut acc = [[0.0f32; NR]; MR];
+            microkernel(apanel, bpanel, &mut acc);
+            for r in 0..ilive {
+                let row0 = (ip * MR + r) * n + jc + jp * NR;
+                let crow = &mut cblock[row0..row0 + jlive];
+                for (dst, &v) in crow.iter_mut().zip(&acc[r][..jlive]) {
+                    *dst += v;
+                }
+            }
+        }
+    }
+}
+
+/// Blocked GEMM driver: `C += op(A) · op(B)` with `C` pre-zeroed by the
+/// caller. Loop nest (GotoBLAS order): `jc` over NC column blocks → `pc`
+/// over KC k-blocks (pack B once per block) → MC row-blocks (pack A,
+/// threaded — C rows are disjoint, so worker count cannot affect values).
+fn gemm(m: usize, n: usize, k: usize, a: Op<'_>, b: Op<'_>, c: &mut [f32]) {
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return; // C is already all-zero
+    }
+    let sp = scratch::global();
+    let threads = if m * n * k >= PAR_THRESHOLD { pool::default_threads() } else { 1 };
+    for jc in (0..n).step_by(NC) {
+        let nc = (n - jc).min(NC);
+        let np = nc.div_ceil(NR);
+        for pc in (0..k).step_by(KC) {
+            let kc = (k - pc).min(KC);
+            let mut bbuf = sp.take(np * kc * NR);
+            pack_b(&mut bbuf, b, pc, kc, jc, nc);
+            let bref = &bbuf;
+            pool::par_rows_mut(c, MC * n, threads, |iblk, cblock| {
+                let ic = iblk * MC;
+                let mc = cblock.len() / n;
+                let mut abuf = sp.take(mc.div_ceil(MR) * kc * MR);
+                pack_a(&mut abuf, a, ic, mc, pc, kc);
+                macro_kernel(cblock, n, jc, mc, nc, kc, &abuf, bref);
+                sp.put(abuf);
+            });
+            sp.put(bbuf);
+        }
+    }
+}
 
 /// `A * B` — (m,k) x (k,n) -> (m,n).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
@@ -16,15 +218,51 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let n = b.cols();
     let mut out = Matrix::zeros(m, n);
+    gemm(m, n, k, Op::N(a), Op::N(b), out.data_mut());
+    out
+}
+
+/// `A * Bᵀ` — (m,k) x (n,k) -> (m,n). B is packed from stored rows, so the
+/// transpose costs a pack-order change, not strided kernel access.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch {:?} x {:?}ᵀ", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    gemm(m, n, k, Op::N(a), Op::T(b), out.data_mut());
+    out
+}
+
+/// `Aᵀ * B` — (k,m) x (k,n) -> (m,n). Used for Galerkin projections `UᵀGV`.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch {:?}ᵀ x {:?}", a.shape(), b.shape());
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut out = Matrix::zeros(m, n);
+    gemm(m, n, k, Op::T(a), Op::N(b), out.data_mut());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels — the pre-blocking implementations (f64 accumulation,
+// no packing). Kept as the property-test oracle and as the "old" side of
+// the old-vs-new speedup fields in BENCH_linalg.json. Not used on any hot
+// path.
+// ---------------------------------------------------------------------------
+
+/// Reference `A * B`: per-row f64 SAXPY (the pre-blocking kernel).
+pub fn matmul_ref(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut out = Matrix::zeros(m, n);
     let work = m * n * k;
     let body = |i: usize, row_out: &mut [f32]| {
-        // accumulate row i: out[i,:] += a[i,l] * b[l,:]  (SAXPY order — B rows
-        // stream sequentially, friendly to hardware prefetch)
         let mut acc = vec![0.0f64; n];
         let arow = a.row(i);
         for (l, &ail) in arow.iter().enumerate() {
             if ail == 0.0 {
-                continue; // bucket-padded zero columns cost nothing
+                continue;
             }
             let brow = b.row(l);
             let ail = ail as f64;
@@ -41,8 +279,8 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
-/// `A * Bᵀ` — (m,k) x (n,k) -> (m,n). Both operands stream row-major.
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+/// Reference `A * Bᵀ`: per-element f64 dot (the pre-blocking kernel).
+pub fn matmul_nt_ref(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch {:?} x {:?}ᵀ", a.shape(), b.shape());
     let (m, k) = a.shape();
     let n = b.rows();
@@ -64,12 +302,12 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
-/// `Aᵀ * B` — (k,m) x (k,n) -> (m,n). Used for Galerkin projections `UᵀGV`.
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+/// Reference `Aᵀ * B`: single-threaded f64 accumulation (the pre-blocking
+/// kernel).
+pub fn matmul_tn_ref(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch {:?}ᵀ x {:?}", a.shape(), b.shape());
     let (k, m) = a.shape();
     let n = b.cols();
-    // accumulate in f64 then downcast once
     let mut acc = vec![0.0f64; m * n];
     for l in 0..k {
         let arow = a.row(l);
@@ -105,6 +343,18 @@ mod tests {
         c
     }
 
+    fn assert_close(tag: &str, got: &Matrix, want: &Matrix, tol: f32) {
+        assert_eq!(got.shape(), want.shape(), "{tag}: shape mismatch");
+        let denom = want.fro_norm().max(1.0);
+        let d = got.fro_dist(want);
+        assert!(d <= tol * denom, "{tag}: ‖Δ‖ = {d} vs ‖ref‖ = {denom}");
+    }
+
+    fn bitwise_eq(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
     #[test]
     fn matmul_matches_naive() {
         let mut rng = Rng::new(1);
@@ -112,6 +362,105 @@ mod tests {
             let a = rng.normal_matrix(m, k);
             let b = rng.normal_matrix(k, n);
             assert!(matmul(&a, &b).fro_dist(&naive(&a, &b)) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn packed_kernels_match_naive_on_adversarial_shapes() {
+        // m/k/n = 1, primes, exact register/cache-block multiples, and
+        // block±1 tails; every entry point against the naive triple loop.
+        // For k ≤ KC the packed accumulation order *equals* the naive
+        // order (single k-block, sequential p), so equality is bitwise.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 5, 1),
+            (5, 1, 3),
+            (1, 257, 1),
+            (7, 13, 31),
+            (8, 8, 8),
+            (9, 7, 63),
+            (65, 31, 9),
+            (63, 255, 127),
+            (64, 256, 512),
+            (65, 257, 64),
+            (16, 513, 16),
+            (130, 70, 3),
+        ];
+        let mut rng = Rng::new(42);
+        for (m, k, n) in shapes {
+            let a = rng.normal_matrix(m, k);
+            let b = rng.normal_matrix(k, n);
+            let want = naive(&a, &b);
+            let tag = format!("({m},{k},{n})");
+            let got = matmul(&a, &b);
+            if k <= 256 {
+                assert!(bitwise_eq(&got, &want), "matmul {tag}: single k-block must be bitwise");
+            } else {
+                assert_close(&format!("matmul {tag}"), &got, &want, 1e-4);
+            }
+            assert_close(&format!("matmul_nt {tag}"), &matmul_nt(&a, &b.transpose()), &want, 1e-4);
+            assert_close(&format!("matmul_tn {tag}"), &matmul_tn(&a.transpose(), &b), &want, 1e-4);
+        }
+    }
+
+    #[test]
+    fn packed_kernels_match_f64_reference() {
+        let mut rng = Rng::new(7);
+        for (m, k, n) in [(33, 129, 65), (100, 300, 50), (257, 64, 31)] {
+            let a = rng.normal_matrix(m, k);
+            let bt = rng.normal_matrix(n, k);
+            let b = bt.transpose();
+            let tag = format!("({m},{k},{n})");
+            assert_close(&format!("vs ref {tag}"), &matmul(&a, &b), &matmul_ref(&a, &b), 1e-4);
+            assert_close(
+                &format!("nt vs ref {tag}"),
+                &matmul_nt(&a, &bt),
+                &matmul_nt_ref(&a, &bt),
+                1e-4,
+            );
+            let at = a.transpose();
+            assert_close(
+                &format!("tn vs ref {tag}"),
+                &matmul_tn(&at, &b),
+                &matmul_tn_ref(&at, &b),
+                1e-4,
+            );
+        }
+    }
+
+    #[test]
+    fn zero_extent_operands_produce_zero_shapes() {
+        let mut rng = Rng::new(9);
+        let a = rng.normal_matrix(4, 0);
+        let b = rng.normal_matrix(0, 6);
+        let c = matmul(&a, &b); // inner dim 0: a well-defined all-zero (4,6)
+        assert_eq!(c.shape(), (4, 6));
+        assert!(c.data().iter().all(|&v| v == 0.0));
+        assert_eq!(matmul(&rng.normal_matrix(0, 5), &rng.normal_matrix(5, 3)).shape(), (0, 3));
+        assert_eq!(matmul(&rng.normal_matrix(3, 5), &rng.normal_matrix(5, 0)).shape(), (3, 0));
+        assert_eq!(matmul_nt(&rng.normal_matrix(0, 5), &rng.normal_matrix(4, 5)).shape(), (0, 4));
+        assert_eq!(matmul_tn(&rng.normal_matrix(5, 0), &rng.normal_matrix(5, 4)).shape(), (0, 4));
+    }
+
+    #[test]
+    fn reruns_are_bitwise_identical_across_thread_caps() {
+        // large enough to cross PAR_THRESHOLD, ragged enough to exercise
+        // every tail path; the accumulation order must not see the worker
+        // count (DESIGN.md §9 determinism contract)
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (150, 300, 90);
+        let a = rng.normal_matrix(m, k);
+        let b = rng.normal_matrix(k, n);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let base = (matmul(&a, &b), matmul_nt(&a, &bt), matmul_tn(&at, &b));
+        for cap in [1usize, 2, 5] {
+            let got = crate::util::pool::with_thread_cap(cap, || {
+                (matmul(&a, &b), matmul_nt(&a, &bt), matmul_tn(&at, &b))
+            });
+            assert!(bitwise_eq(&got.0, &base.0), "matmul drifted at cap {cap}");
+            assert!(bitwise_eq(&got.1, &base.1), "matmul_nt drifted at cap {cap}");
+            assert!(bitwise_eq(&got.2, &base.2), "matmul_tn drifted at cap {cap}");
         }
     }
 

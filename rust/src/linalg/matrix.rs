@@ -3,11 +3,19 @@
 //! Row-major matches the layout `xla::Literal` expects for rank-2 arrays, so
 //! factor matrices move between the host integrator and the PJRT runtime
 //! without transposition (see `runtime::literals`).
+//!
+//! Backing storage is pooled (DESIGN.md §9): construction draws a buffer
+//! from [`scratch::global`] and [`Drop`] returns it, so every transient
+//! matrix in the hot path — matmul outputs, im2col patch matrices, taped
+//! activations, gradient shards — recycles a warm allocation instead of
+//! hitting the allocator. The pool hands buffers out zeroed/overwritten,
+//! so pooling is invisible to values and to determinism.
 
+use crate::util::scratch;
 use std::fmt;
 
 /// Dense row-major matrix of `f32`.
-#[derive(Clone, PartialEq)]
+#[derive(PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
@@ -15,9 +23,9 @@ pub struct Matrix {
 }
 
 impl Matrix {
-    /// All-zeros matrix.
+    /// All-zeros matrix (pooled backing buffer).
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: scratch::global().take(rows * cols) }
     }
 
     /// Identity (rectangular allowed: ones on the main diagonal).
@@ -29,12 +37,13 @@ impl Matrix {
         m
     }
 
-    /// Build from a closure over `(row, col)`.
+    /// Build from a closure over `(row, col)` (pooled backing buffer).
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
-        let mut data = Vec::with_capacity(rows * cols);
+        let mut data = scratch::global().take(rows * cols);
         for i in 0..rows {
-            for j in 0..cols {
-                data.push(f(i, j));
+            let row = &mut data[i * cols..(i + 1) * cols];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = f(i, j);
             }
         }
         Matrix { rows, cols, data }
@@ -66,8 +75,11 @@ impl Matrix {
         &mut self.data
     }
 
-    pub fn into_vec(self) -> Vec<f32> {
-        self.data
+    /// Take ownership of the backing buffer. The buffer leaves the scratch
+    /// pool's custody; hand it back via `scratch::global().put(..)` when
+    /// it should be recycled.
+    pub fn into_vec(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.data)
     }
 
     /// Borrow row `i` as a slice.
@@ -201,6 +213,24 @@ impl Matrix {
                     .sum::<f64>() as f32
             })
             .collect()
+    }
+}
+
+impl Clone for Matrix {
+    fn clone(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: scratch::global().take_copy(&self.data),
+        }
+    }
+}
+
+impl Drop for Matrix {
+    fn drop(&mut self) {
+        // return the backing buffer to the global pool (no-op for tiny or
+        // already-taken buffers)
+        scratch::global().put(std::mem::take(&mut self.data));
     }
 }
 

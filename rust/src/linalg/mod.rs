@@ -18,7 +18,7 @@ mod rng;
 mod svd;
 
 pub use conv::{col2im, im2col, maxpool2x2, unpool2x2};
-pub use matmul::{matmul, matmul_nt, matmul_tn};
+pub use matmul::{matmul, matmul_nt, matmul_nt_ref, matmul_ref, matmul_tn, matmul_tn_ref};
 pub use matrix::Matrix;
 pub use qr::{householder_qr, orthonormality_error};
 pub use rng::Rng;

@@ -34,11 +34,12 @@ use crate::data::Batch;
 use crate::exec::ShardedExecutor;
 use crate::Result;
 
-/// The compute-backend dispatcher every trainer holds. Gradient sweeps
-/// route through the owned [`ShardedExecutor`]: at the default
-/// `grad_shards = 1` that is a pure passthrough (bitwise-identical to
-/// calling the backend directly); at higher counts each [`Runtime::grads`]
-/// call splits its batch across worker replicas (DESIGN.md §8).
+/// The compute-backend dispatcher every trainer holds. Gradient *and*
+/// evaluation sweeps route through the owned [`ShardedExecutor`]: at the
+/// default `grad_shards = 1` that is a pure passthrough (bitwise-identical
+/// to calling the backend directly); at higher counts each
+/// [`Runtime::grads`] / [`Runtime::forward`] call splits its batch across
+/// worker replicas (DESIGN.md §8).
 pub struct Runtime {
     backend: Box<dyn ComputeBackend>,
     exec: ShardedExecutor,
@@ -122,14 +123,16 @@ impl Runtime {
         self.exec.grads(self.backend.as_ref(), arch, layers, phase, batch)
     }
 
-    /// Evaluation forward over one batch ([`ComputeBackend::forward`]).
+    /// Evaluation forward over one batch ([`ComputeBackend::forward`]),
+    /// row-sharded across worker replicas when `grad_shards > 1`
+    /// ([`crate::exec`]).
     pub fn forward(
         &self,
         arch: &str,
         layers: &[LayerParams<'_>],
         batch: &Batch,
     ) -> Result<EvalStats> {
-        self.backend.forward(arch, layers, batch)
+        self.exec.forward(self.backend.as_ref(), arch, layers, batch)
     }
 
     /// Raw logits of the evaluation forward — the serving primitive

@@ -1,12 +1,14 @@
 //! In-tree replacements for crates unavailable in the offline build
 //! environment (DESIGN.md §3): JSON, flat-TOML config parsing, CLI args,
-//! a scoped thread pool, a micro-bench harness, and property-test helpers.
+//! a scoped thread pool, a scratch-buffer pool, a micro-bench harness, and
+//! property-test helpers.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod kv;
 pub mod pool;
+pub mod scratch;
 pub mod testutil; // also used by integration tests & benches
 
 pub use json::Json;

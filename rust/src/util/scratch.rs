@@ -1,0 +1,391 @@
+//! Process-global scratch-buffer pool — the memory discipline behind the
+//! allocation-free steady state (DESIGN.md §9).
+//!
+//! Every hot-path workspace in the crate — GEMM packing panels and outputs,
+//! im2col patch matrices, batch feature copies, taped activations, shard
+//! gradient buffers — is a flat `Vec<f32>` (plus the max-pool argmax
+//! routing tables, `Vec<u32>`). This module keeps one global free-list per
+//! element type and hands buffers out by best fit: after a warmup step has
+//! populated the pool with one training step's working set, subsequent
+//! steps recycle the same allocations indefinitely.
+//!
+//! Integration is deliberately funnel-shaped: [`crate::linalg::Matrix`]
+//! draws its buffer from [`ScratchPool::take`] on construction and returns
+//! it on `Drop`, so *every* matrix in the crate participates without
+//! call-site bookkeeping — a dropped matmul output, taped activation, or
+//! reduced gradient shard is automatically the backing store of the next
+//! one of comparable size. Checkout is exclusive (a buffer leaves the pool
+//! while in use), so concurrent shard workers never alias a workspace.
+//!
+//! Determinism: a recycled buffer is always fully reinitialized before it
+//! is handed out ([`ScratchPool::take`] zero-fills, [`ScratchPool::take_copy`]
+//! overwrites), so pooling can never leak values across checkouts — reruns
+//! stay bitwise-identical whether a buffer was fresh or recycled (locked by
+//! the scratch-reuse tests in `backend::native` and `tests/steady_state*`).
+//!
+//! Accounting: [`ScratchPool::fresh_allocs`] counts pool-class requests
+//! that missed the free list and hit the allocator, [`ScratchPool::reuses`]
+//! those served from it. The steady-state tests pin "zero heap allocations
+//! in the matmul/im2col path after warmup" as `fresh_allocs` staying flat
+//! across training steps. Sub-[`MIN_POOL_LEN`] requests (tiny cores,
+//! biases) bypass the pool and its counters entirely — the mutex would
+//! cost more than the allocation.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Requests below this many elements are allocator-served and uncounted:
+/// a pool round-trip (mutex + free-list scan) costs more than a small
+/// allocation, and tiny buffers would crowd big workspaces out of the
+/// retention caps.
+pub const MIN_POOL_LEN: usize = 64;
+
+/// Retention caps for the `f32` shelf: bounds idle pool memory at
+/// `MAX_F32_BUFS` buffers / `MAX_F32_ELEMS` total elements (512 MiB).
+/// The idle set approximates one sharded conv training step's working
+/// set, which these caps comfortably exceed.
+const MAX_F32_BUFS: usize = 256;
+const MAX_F32_ELEMS: usize = 128 << 20;
+
+/// Retention caps for the `u32` shelf (max-pool argmax routing tables —
+/// one live table per conv layer per shard).
+const MAX_U32_BUFS: usize = 64;
+const MAX_U32_ELEMS: usize = 16 << 20;
+
+/// One element type's free list. `elems` tracks the summed capacity so the
+/// byte cap is O(1) to enforce.
+struct Shelf<T> {
+    bufs: Vec<Vec<T>>,
+    elems: usize,
+    max_bufs: usize,
+    max_elems: usize,
+}
+
+impl<T> Shelf<T> {
+    fn new(max_bufs: usize, max_elems: usize) -> Shelf<T> {
+        Shelf { bufs: Vec::new(), elems: 0, max_bufs, max_elems }
+    }
+
+    /// Remove and return the smallest pooled buffer with capacity ≥ `len`
+    /// (best fit: over-large workspaces stay available for the requests
+    /// that need them).
+    fn take_best(&mut self, len: usize) -> Option<Vec<T>> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in self.bufs.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
+                best = Some((i, cap));
+            }
+        }
+        best.map(|(i, cap)| {
+            self.elems -= cap;
+            self.bufs.swap_remove(i)
+        })
+    }
+
+    /// Retain `b` for reuse, respecting the caps. When the shelf is full,
+    /// a bigger newcomer evicts the smallest pooled buffer — the pool
+    /// drifts toward the largest working set it has seen, which is what
+    /// steady-state reuse needs.
+    fn put(&mut self, b: Vec<T>) {
+        let cap = b.capacity();
+        if cap < MIN_POOL_LEN {
+            return;
+        }
+        if self.bufs.len() < self.max_bufs && self.elems + cap <= self.max_elems {
+            self.elems += cap;
+            self.bufs.push(b);
+            return;
+        }
+        if let Some((i, smallest)) =
+            self.bufs.iter().enumerate().map(|(i, x)| (i, x.capacity())).min_by_key(|&(_, c)| c)
+        {
+            if smallest < cap && self.elems - smallest + cap <= self.max_elems {
+                self.elems -= smallest;
+                self.bufs.swap_remove(i);
+                self.elems += cap;
+                self.bufs.push(b);
+            }
+        }
+    }
+}
+
+/// A free-list pool of scratch buffers with allocation accounting. One
+/// process-global instance ([`global`]) serves the whole crate; tests may
+/// build private instances to assert accounting in isolation.
+pub struct ScratchPool {
+    f32s: Mutex<Shelf<f32>>,
+    u32s: Mutex<Shelf<u32>>,
+    fresh: AtomicU64,
+    reused: AtomicU64,
+}
+
+/// Never poison-panic inside `Drop`: a panicking test thread must not
+/// abort the process when an unwinding `Matrix` returns its buffer.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool {
+            f32s: Mutex::new(Shelf::new(MAX_F32_BUFS, MAX_F32_ELEMS)),
+            u32s: Mutex::new(Shelf::new(MAX_U32_BUFS, MAX_U32_ELEMS)),
+            fresh: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements (recycled when a
+    /// pooled buffer has the capacity, fresh otherwise).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        if len < MIN_POOL_LEN {
+            return vec![0.0; len];
+        }
+        match lock(&self.f32s).take_best(len) {
+            Some(mut b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// A buffer holding exactly `src`.
+    pub fn take_copy(&self, src: &[f32]) -> Vec<f32> {
+        if src.len() < MIN_POOL_LEN {
+            return src.to_vec();
+        }
+        match lock(&self.f32s).take_best(src.len()) {
+            Some(mut b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.extend_from_slice(src);
+                b
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                src.to_vec()
+            }
+        }
+    }
+
+    /// Return a buffer for reuse. Dropping a [`crate::linalg::Matrix`]
+    /// calls this automatically; only code holding a raw `Vec<f32>` (e.g.
+    /// one obtained via `Matrix::into_vec`) needs to call it directly.
+    pub fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() >= MIN_POOL_LEN {
+            lock(&self.f32s).put(buf);
+        }
+    }
+
+    /// Return several buffers for reuse.
+    pub fn put_all(&self, bufs: impl IntoIterator<Item = Vec<f32>>) {
+        let mut shelf = lock(&self.f32s);
+        for b in bufs {
+            if b.capacity() >= MIN_POOL_LEN {
+                shelf.put(b);
+            }
+        }
+    }
+
+    /// A zero-filled `u32` buffer of exactly `len` elements (max-pool
+    /// argmax routing tables).
+    pub fn take_u32(&self, len: usize) -> Vec<u32> {
+        if len < MIN_POOL_LEN {
+            return vec![0; len];
+        }
+        match lock(&self.u32s).take_best(len) {
+            Some(mut b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.resize(len, 0);
+                b
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0; len]
+            }
+        }
+    }
+
+    /// Return a `u32` buffer for reuse.
+    pub fn put_u32(&self, buf: Vec<u32>) {
+        if buf.capacity() >= MIN_POOL_LEN {
+            lock(&self.u32s).put(buf);
+        }
+    }
+
+    /// Pool-class requests that missed the free list and allocated. Flat
+    /// across steady-state training steps ⇔ the hot path allocates nothing.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Pool-class requests served from the free list.
+    pub fn reuses(&self) -> u64 {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently pooled (both shelves) — retention-cap tests.
+    pub fn idle_buffers(&self) -> usize {
+        lock(&self.f32s).bufs.len() + lock(&self.u32s).bufs.len()
+    }
+}
+
+/// The process-global pool every [`crate::linalg::Matrix`] and kernel
+/// workspace draws from.
+pub fn global() -> &'static ScratchPool {
+    static POOL: OnceLock<ScratchPool> = OnceLock::new();
+    POOL.get_or_init(ScratchPool::new)
+}
+
+/// A pooled `u32` index buffer that returns itself to the global pool on
+/// drop — the ownership wrapper for [`crate::linalg::maxpool2x2`]'s argmax
+/// routing table. Derefs to `&[u32]`.
+pub struct IdxBuf(Option<Vec<u32>>);
+
+/// A zero-filled pooled index buffer of exactly `len` entries.
+pub fn take_idx(len: usize) -> IdxBuf {
+    IdxBuf(Some(global().take_u32(len)))
+}
+
+impl Deref for IdxBuf {
+    type Target = [u32];
+    fn deref(&self) -> &[u32] {
+        self.0.as_deref().expect("IdxBuf is live until dropped")
+    }
+}
+
+impl DerefMut for IdxBuf {
+    fn deref_mut(&mut self) -> &mut [u32] {
+        self.0.as_deref_mut().expect("IdxBuf is live until dropped")
+    }
+}
+
+impl Drop for IdxBuf {
+    fn drop(&mut self) {
+        if let Some(b) = self.0.take() {
+            global().put_u32(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_take_put_cycle_stops_allocating() {
+        let p = ScratchPool::new();
+        // warmup: the working set is two buffers of distinct sizes
+        let a = p.take(1000);
+        let b = p.take(500);
+        assert_eq!(p.fresh_allocs(), 2);
+        p.put(a);
+        p.put(b);
+        for _ in 0..10 {
+            let a = p.take(1000);
+            let b = p.take(500);
+            assert!(a.iter().all(|&v| v == 0.0) && b.iter().all(|&v| v == 0.0));
+            p.put(a);
+            p.put(b);
+        }
+        assert_eq!(p.fresh_allocs(), 2, "steady-state cycles must not allocate");
+        assert_eq!(p.reuses(), 20);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate_buffer() {
+        let p = ScratchPool::new();
+        let mut big = p.take(4096);
+        let mut small = p.take(128);
+        big[0] = 1.0; // poison: must never leak into a checkout
+        small[0] = 1.0;
+        let (bigcap, smallcap) = (big.capacity(), small.capacity());
+        p.put(big);
+        p.put(small);
+        let got = p.take(100);
+        assert_eq!(got.capacity(), smallcap, "best fit picks the smaller buffer");
+        assert!(got.iter().all(|&v| v == 0.0), "recycled buffers are zeroed");
+        let got2 = p.take(100);
+        assert_eq!(got2.capacity(), bigcap, "then the remaining one");
+    }
+
+    #[test]
+    fn take_copy_reproduces_source_exactly() {
+        let p = ScratchPool::new();
+        let src: Vec<f32> = (0..300).map(|i| i as f32 * 0.5 - 7.0).collect();
+        p.put(p.take(1024)); // a pooled buffer with junk capacity
+        let got = p.take_copy(&src);
+        assert_eq!(got, src);
+        assert_eq!(p.reuses(), 1);
+    }
+
+    #[test]
+    fn tiny_requests_bypass_pool_and_counters() {
+        let p = ScratchPool::new();
+        let t = p.take(MIN_POOL_LEN - 1);
+        assert_eq!(t.len(), MIN_POOL_LEN - 1);
+        p.put(t);
+        assert_eq!(p.fresh_allocs(), 0);
+        assert_eq!(p.reuses(), 0);
+        assert_eq!(p.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn retention_caps_bound_idle_memory_and_prefer_big_buffers() {
+        let p = ScratchPool::new();
+        // overfill the shelf count cap with equal-size buffers
+        let bufs: Vec<Vec<f32>> = (0..MAX_F32_BUFS + 10).map(|_| vec![0.0f32; 128]).collect();
+        p.put_all(bufs);
+        assert_eq!(p.idle_buffers(), MAX_F32_BUFS);
+        // a bigger newcomer evicts a smallest entry instead of being dropped
+        p.put(vec![0.0f32; 100_000]);
+        assert_eq!(p.idle_buffers(), MAX_F32_BUFS);
+        let got = p.take(100_000);
+        assert!(got.capacity() >= 100_000, "the big buffer was retained");
+        assert_eq!(p.reuses(), 1);
+    }
+
+    #[test]
+    fn u32_shelf_recycles_index_buffers() {
+        let p = ScratchPool::new();
+        let mut a = p.take_u32(256);
+        a[3] = 77;
+        p.put_u32(a);
+        let b = p.take_u32(200);
+        assert_eq!(b.len(), 200);
+        assert!(b.iter().all(|&v| v == 0), "recycled index buffers are zeroed");
+        assert_eq!(p.fresh_allocs(), 1);
+        assert_eq!(p.reuses(), 1);
+    }
+
+    #[test]
+    fn idx_buf_returns_to_global_pool_on_drop() {
+        // a take/drop/take cycle through the guard type reuses the buffer
+        let g = global();
+        let before_len = {
+            let idx = take_idx(10_000);
+            assert_eq!(idx.len(), 10_000);
+            idx.len()
+        }; // dropped here → returned to the pool
+        assert_eq!(before_len, 10_000);
+        let r0 = g.reuses();
+        drop(take_idx(10_000));
+        // other tests share the global pool, so assert growth, not equality
+        assert!(g.reuses() > r0, "second take of the same size must reuse");
+    }
+}

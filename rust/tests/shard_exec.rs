@@ -231,6 +231,58 @@ fn grad_shards_one_is_bitwise_identical_to_the_direct_backend() {
 }
 
 #[test]
+fn sharded_evaluate_matches_single_shard() {
+    // Network::evaluate rides the executor: the row-sharded forward with
+    // its fixed-order two-scalar reduce must agree with the direct backend
+    // within float-reduction tolerance at any shard count
+    let net = MixedNet::new(0xE7A1);
+    let params = net.params();
+    let batch = lenet_batch(11);
+    let be = NativeBackend::new();
+    let reference = be.forward("lenet", &params, &batch).unwrap();
+    for k in [2usize, 3, 4] {
+        let rt = Runtime::native().with_grad_shards(k).unwrap();
+        let sharded = rt.forward("lenet", &params, &batch).unwrap();
+        rel_close(&format!("eval loss (shards={k})"), sharded.loss, reference.loss, 1e-4);
+        // half-integer weights: the correct count is exactly representable
+        assert_eq!(sharded.ncorrect, reference.ncorrect, "ncorrect (shards={k})");
+    }
+}
+
+#[test]
+fn sharded_evaluate_is_bitwise_deterministic_at_fixed_shard_count() {
+    let net = MixedNet::new(0xBEEF);
+    let params = net.params();
+    let batch = lenet_batch(12);
+    let rt = Runtime::native().with_grad_shards(3).unwrap();
+    let a = rt.forward("lenet", &params, &batch).unwrap();
+    let b = rt.forward("lenet", &params, &batch).unwrap();
+    let fresh = Runtime::native().with_grad_shards(3).unwrap();
+    let c = fresh.forward("lenet", &params, &batch).unwrap();
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "eval rerun on the same runtime drifted");
+    assert_eq!(a.ncorrect.to_bits(), b.ncorrect.to_bits());
+    assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "eval rerun on a fresh runtime drifted");
+    assert_eq!(a.ncorrect.to_bits(), c.ncorrect.to_bits());
+}
+
+#[test]
+fn evaluate_shard_one_is_bitwise_passthrough() {
+    let net = MixedNet::new(0xCAFE);
+    let params = net.params();
+    let batch = lenet_batch(13);
+    let be = NativeBackend::new();
+    let rt = Runtime::native(); // default grad_shards = 1
+    let through_rt = rt.forward("lenet", &params, &batch).unwrap();
+    let direct = be.forward("lenet", &params, &batch).unwrap();
+    assert_eq!(
+        through_rt.loss.to_bits(),
+        direct.loss.to_bits(),
+        "the grad_shards = 1 evaluate passthrough is not bitwise-exact"
+    );
+    assert_eq!(through_rt.ncorrect.to_bits(), direct.ncorrect.to_bits());
+}
+
+#[test]
 fn sharded_training_run_learns_and_stays_close_to_unsharded() {
     // end-to-end: the same seeded 2-epoch toy run under grad_shards 1 and
     // 2 — both must learn, and the sharded trajectory must stay within

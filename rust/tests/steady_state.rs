@@ -1,0 +1,65 @@
+//! Steady-state allocation accounting for the dense/low-rank MLP training
+//! path (DESIGN.md §9): after warmup, a sharded training step must draw
+//! every matmul workspace, packing panel, and batch matrix from the global
+//! scratch pool — zero fresh heap allocations in the hot path.
+//!
+//! This file intentionally holds a single #[test]: integration-test
+//! binaries run in their own process, so the process-global pool counters
+//! are not perturbed by unrelated tests.
+
+use dlrt::config::{presets, Mode};
+use dlrt::coordinator::Trainer;
+use dlrt::data::{Batch, Batcher};
+use dlrt::util::scratch;
+
+#[test]
+fn mlp_training_step_allocates_nothing_in_steady_state() {
+    // FixedDlrt pins every rank so buffer shapes cannot grow after warmup
+    // (adaptive rank augmentation would legitimately demand new sizes).
+    let mut cfg = presets::quickstart();
+    cfg.mode = Mode::FixedDlrt;
+    cfg.fixed_rank = 16;
+    let cfg = presets::with_grad_shards(cfg, 2);
+    let arch = cfg.arch.clone();
+    let lr = cfg.lr;
+
+    let mut t = Trainer::new(cfg).unwrap();
+    let batch_cap = t.rt.batch_cap(&arch).unwrap();
+    let mut batcher = Batcher::new(t.split.train.len(), batch_cap, true, 7);
+    let batches: Vec<Batch> = batcher.epoch(&t.split.train).collect();
+    assert!(!batches.is_empty(), "toy dataset yields no full batch");
+
+    // Warm up until the pool reaches its fixed point: two consecutive
+    // steps with zero fresh allocations. The bound is generous — the
+    // working set is a handful of distinct sizes per shard worker.
+    let pool = scratch::global();
+    let mut step = 0usize;
+    let mut flat_streak = 0usize;
+    while flat_streak < 2 && step < 25 {
+        let before = pool.fresh_allocs();
+        t.model.step(&t.rt, &batches[step % batches.len()], lr).unwrap();
+        step += 1;
+        if pool.fresh_allocs() == before {
+            flat_streak += 1;
+        } else {
+            flat_streak = 0;
+        }
+    }
+    assert!(
+        flat_streak >= 2,
+        "scratch pool never reached steady state: fresh allocs still \
+         growing after {step} warmup steps"
+    );
+
+    let baseline = pool.fresh_allocs();
+    for i in 0..5 {
+        t.model.step(&t.rt, &batches[(step + i) % batches.len()], lr).unwrap();
+    }
+    assert_eq!(
+        pool.fresh_allocs(),
+        baseline,
+        "steady-state MLP training step performed fresh pool-class heap \
+         allocations (batch/matmul/packing path must be fully recycled)"
+    );
+    assert!(pool.reuses() > 0, "pool recorded no reuse at all — accounting is broken");
+}

@@ -1,0 +1,62 @@
+//! Steady-state allocation accounting for the convolutional training path
+//! (DESIGN.md §9): the LeNet step routes im2col patch matrices, maxpool
+//! argmax indices, packed GEMM panels, and batch matrices through the
+//! global scratch pool, so a sharded conv training step must allocate
+//! nothing fresh once warmed up.
+//!
+//! Single #[test] on purpose — this binary owns its process-global pool
+//! counters (see rust/tests/steady_state.rs for the MLP-path twin).
+
+use dlrt::config::{presets, DataSource};
+use dlrt::coordinator::Trainer;
+use dlrt::data::{Batch, Batcher};
+use dlrt::util::scratch;
+
+#[test]
+fn conv_training_step_allocates_nothing_in_steady_state() {
+    // fig4_dlrt pins a global fixed rank: no adaptive augmentation, so
+    // every tape/workspace shape is constant from the first step on.
+    let mut cfg = presets::fig4_dlrt(16);
+    cfg.data = DataSource::Mnist { root: "data/__steady_state_conv__".into(), n_synth: 400 };
+    cfg.seed = 42;
+    let cfg = presets::with_grad_shards(cfg, 2);
+    let arch = cfg.arch.clone();
+    let lr = cfg.lr;
+
+    let mut t = Trainer::new(cfg).unwrap();
+    let batch_cap = t.rt.batch_cap(&arch).unwrap();
+    let mut batcher = Batcher::new(t.split.train.len(), batch_cap, true, 7);
+    let batches: Vec<Batch> = batcher.epoch(&t.split.train).collect();
+    assert!(!batches.is_empty(), "synthetic MNIST yields no full batch");
+
+    let pool = scratch::global();
+    let mut step = 0usize;
+    let mut flat_streak = 0usize;
+    while flat_streak < 2 && step < 25 {
+        let before = pool.fresh_allocs();
+        t.model.step(&t.rt, &batches[step % batches.len()], lr).unwrap();
+        step += 1;
+        if pool.fresh_allocs() == before {
+            flat_streak += 1;
+        } else {
+            flat_streak = 0;
+        }
+    }
+    assert!(
+        flat_streak >= 2,
+        "scratch pool never reached steady state on the conv path: fresh \
+         allocs still growing after {step} warmup steps"
+    );
+
+    let baseline = pool.fresh_allocs();
+    for i in 0..5 {
+        t.model.step(&t.rt, &batches[(step + i) % batches.len()], lr).unwrap();
+    }
+    assert_eq!(
+        pool.fresh_allocs(),
+        baseline,
+        "steady-state conv training step performed fresh pool-class heap \
+         allocations (im2col/maxpool/matmul path must be fully recycled)"
+    );
+    assert!(pool.reuses() > 0, "pool recorded no reuse at all — accounting is broken");
+}

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Refresh the committed bench baselines under rust/benches/baselines/.
+#
+# Run from the repo root on a quiet machine. Pins DLRT_THREADS=4 (the CI
+# worker count) and DLRT_FULL=1 (long timing runs) so the captured
+# numbers are comparable across refreshes; see the baselines README for
+# when refreshing is appropriate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+command -v cargo >/dev/null || {
+    echo "refresh_baselines: cargo not found — run on a toolchain-equipped machine" >&2
+    exit 1
+}
+
+export DLRT_QUIET=1
+export DLRT_THREADS=4
+export DLRT_FULL=1
+
+dest=rust/benches/baselines
+mkdir -p "$dest"
+
+echo "== train_throughput (DLRT_THREADS=4, full budget) =="
+cargo bench --bench train_throughput
+cp BENCH_train.json "$dest/BENCH_train.json"
+
+echo "== serve_throughput =="
+cargo bench --bench serve_throughput
+cp BENCH_serve.json "$dest/BENCH_serve.json"
+
+echo "== linalg_hotpath =="
+cargo bench --bench linalg_hotpath
+cp BENCH_linalg.json "$dest/BENCH_linalg.json"
+
+echo
+echo "baselines refreshed under $dest/ — review and commit:"
+git -c color.status=always status --short "$dest" || true
