@@ -1,0 +1,250 @@
+//! Policy: built-in zone rules, the allowlist file, and the unsafe
+//! ledger. Raw findings from [`crate::lints`] pass through here before
+//! anything is reported.
+//!
+//! Semantics (DESIGN.md §10):
+//! - L3 is allowed wholesale under `rust/src/linalg/` and `rust/src/exec/`
+//!   (the fixed-order reduction sites live there by design).
+//! - L4 is allowed wholesale under `rust/src/metrics/` and in
+//!   `rust/src/util/pool.rs`; benches are outside the scan root.
+//! - L5 hard zones `rust/src/serve/`, `rust/src/exec/`,
+//!   `rust/src/coordinator/` can never be allowlisted.
+//! - `file` allowlist entries exempt one file from one lint.
+//! - `ratchet` entries cap the L5 count for one file. Over the cap is an
+//!   error; under the cap is a warning telling you to ratchet down.
+//! - The ledger must match per-file unsafe counts exactly: a stale row
+//!   is as much an error as a missing one.
+
+use crate::lints::{Finding, Lint};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Policy {
+    /// (lint, file) pairs exempted outright.
+    pub file_allows: Vec<(Lint, String)>,
+    /// file -> max permitted L5 findings.
+    pub ratchets: BTreeMap<String, usize>,
+    /// file -> unsafe-site count from `rust/UNSAFE_LEDGER.md`.
+    pub ledger: BTreeMap<String, usize>,
+}
+
+/// One line of lint output after policy.
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Report {
+    Error(Finding),
+    Warning(String),
+}
+
+impl Policy {
+    /// Parse `allowlist.txt`. Lines: `L3 file <path>` or
+    /// `L5 ratchet <path> <count>`; `#` comments and blanks ignored.
+    pub fn parse_allowlist(text: &str) -> Result<Policy, String> {
+        let mut p = Policy::default();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let err = |m: &str| format!("allowlist.txt:{}: {m}: `{raw}`", i + 1);
+            let lint = it
+                .next()
+                .and_then(Lint::from_id)
+                .ok_or_else(|| err("expected lint id L1..L5"))?;
+            match it.next() {
+                Some("file") => {
+                    let path = it.next().ok_or_else(|| err("expected path"))?;
+                    p.file_allows.push((lint, path.to_string()));
+                }
+                Some("ratchet") => {
+                    if lint != Lint::L5PanicUnwrap {
+                        return Err(err("ratchet entries are L5-only"));
+                    }
+                    let path = it.next().ok_or_else(|| err("expected path"))?;
+                    let n = it
+                        .next()
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .ok_or_else(|| err("expected count"))?;
+                    p.ratchets.insert(path.to_string(), n);
+                }
+                _ => return Err(err("expected `file` or `ratchet`")),
+            }
+            if it.next().is_some() {
+                return Err(err("trailing tokens"));
+            }
+        }
+        Ok(p)
+    }
+
+    /// Parse `rust/UNSAFE_LEDGER.md` table rows:
+    /// `| rust/src/... | <count> | description |`.
+    pub fn parse_ledger(text: &str) -> Result<BTreeMap<String, usize>, String> {
+        let mut out = BTreeMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if !line.starts_with('|') {
+                continue;
+            }
+            let cells: Vec<&str> = line.trim_matches('|').split('|').map(str::trim).collect();
+            if cells.len() < 2 || cells[0] == "file" || cells[0].starts_with('-') {
+                continue;
+            }
+            let n = cells[1]
+                .parse::<usize>()
+                .map_err(|_| format!("UNSAFE_LEDGER.md:{}: bad count `{}`", i + 1, cells[1]))?;
+            if out.insert(cells[0].to_string(), n).is_some() {
+                return Err(format!("UNSAFE_LEDGER.md:{}: duplicate row `{}`", i + 1, cells[0]));
+            }
+        }
+        Ok(out)
+    }
+
+    fn allowed(&self, lint: Lint, file: &str) -> bool {
+        let builtin = match lint {
+            Lint::L3FloatReduce => {
+                file.starts_with("rust/src/linalg/") || file.starts_with("rust/src/exec/")
+            }
+            Lint::L4Wallclock => {
+                file.starts_with("rust/src/metrics/") || file == "rust/src/util/pool.rs"
+            }
+            _ => false,
+        };
+        builtin || self.file_allows.iter().any(|(l, f)| *l == lint && f == file)
+    }
+
+    fn hard_zone(file: &str) -> bool {
+        ["rust/src/serve/", "rust/src/exec/", "rust/src/coordinator/"]
+            .iter()
+            .any(|z| file.starts_with(z))
+    }
+
+    /// Apply the policy to raw findings plus per-file unsafe counts.
+    pub fn apply(
+        &self,
+        findings: Vec<Finding>,
+        unsafe_counts: &BTreeMap<String, usize>,
+    ) -> Vec<Report> {
+        let mut out: Vec<Report> = Vec::new();
+        let mut l5_counts: BTreeMap<String, usize> = BTreeMap::new();
+        for f in &findings {
+            if f.lint == Lint::L5PanicUnwrap {
+                *l5_counts.entry(f.file.clone()).or_insert(0) += 1;
+            }
+        }
+        for f in findings {
+            if self.allowed(f.lint, &f.file) {
+                continue;
+            }
+            if f.lint == Lint::L5PanicUnwrap && !Self::hard_zone(&f.file) {
+                if let Some(&cap) = self.ratchets.get(&f.file) {
+                    if l5_counts.get(&f.file).copied().unwrap_or(0) <= cap {
+                        continue;
+                    }
+                }
+            }
+            out.push(Report::Error(f));
+        }
+        // Ratchet-down nudges and dead entries.
+        for (file, &cap) in &self.ratchets {
+            let actual = l5_counts.get(file).copied().unwrap_or(0);
+            if Self::hard_zone(file) {
+                out.push(Report::Warning(format!(
+                    "allowlist: `{file}` is in an L5 hard zone; ratchet entry has no effect"
+                )));
+            } else if actual < cap {
+                out.push(Report::Warning(format!(
+                    "ratchet: `{file}` has {actual} L5 sites, cap is {cap} — lower the cap"
+                )));
+            }
+        }
+        // Ledger exact-match check.
+        for (file, &actual) in unsafe_counts {
+            let ledgered = self.ledger.get(file).copied().unwrap_or(0);
+            if actual != ledgered {
+                out.push(Report::Error(Finding {
+                    file: file.clone(),
+                    line: 1,
+                    lint: Lint::L2UnsafeLedger,
+                    msg: format!("UNSAFE_LEDGER.md says {ledgered} sites, file has {actual}"),
+                }));
+            }
+        }
+        for (file, &ledgered) in &self.ledger {
+            if !unsafe_counts.contains_key(file) {
+                out.push(Report::Error(Finding {
+                    file: file.clone(),
+                    line: 1,
+                    lint: Lint::L2UnsafeLedger,
+                    msg: format!("ledger row claims {ledgered} unsafe sites, file has none"),
+                }));
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allowlist_round_trip() {
+        let p = Policy::parse_allowlist(
+            "# comment\nL4 file rust/src/util/bench.rs\nL5 ratchet rust/src/util/scratch.rs 2\n",
+        )
+        .expect("parse");
+        assert!(p.allowed(Lint::L4Wallclock, "rust/src/util/bench.rs"));
+        assert_eq!(p.ratchets.get("rust/src/util/scratch.rs"), Some(&2));
+        assert!(Policy::parse_allowlist("L5 file\n").is_err());
+        assert!(Policy::parse_allowlist("L3 ratchet rust/src/a.rs 1\n").is_err());
+    }
+
+    #[test]
+    fn builtin_zones() {
+        let p = Policy::default();
+        assert!(p.allowed(Lint::L3FloatReduce, "rust/src/linalg/qr.rs"));
+        assert!(p.allowed(Lint::L4Wallclock, "rust/src/metrics/timer.rs"));
+        assert!(!p.allowed(Lint::L3FloatReduce, "rust/src/dlrt/network.rs"));
+        assert!(!p.allowed(Lint::L5PanicUnwrap, "rust/src/serve/engine.rs"));
+    }
+
+    #[test]
+    fn ratchet_caps_and_hard_zones() {
+        let f = |file: &str, line| Finding {
+            file: file.into(),
+            line,
+            lint: Lint::L5PanicUnwrap,
+            msg: String::new(),
+        };
+        let mut p = Policy::default();
+        p.ratchets.insert("rust/src/util/scratch.rs".into(), 2);
+        p.ratchets.insert("rust/src/serve/engine.rs".into(), 9);
+        let reports = p.apply(
+            vec![
+                f("rust/src/util/scratch.rs", 10),
+                f("rust/src/util/scratch.rs", 20),
+                f("rust/src/serve/engine.rs", 5),
+            ],
+            &BTreeMap::new(),
+        );
+        let errors: Vec<_> = reports.iter().filter(|r| matches!(r, Report::Error(_))).collect();
+        // scratch.rs is at its cap (no error); engine.rs is a hard zone
+        // (ratchet ignored, error stands)
+        assert_eq!(errors.len(), 1, "{reports:?}");
+    }
+
+    #[test]
+    fn ledger_mismatch_is_an_error_both_ways() {
+        let ledger = Policy::parse_ledger(
+            "| file | unsafe sites | why |\n|---|---|---|\n| rust/src/a.rs | 2 | ptr views |\n",
+        )
+        .expect("parse");
+        let p = Policy { ledger, ..Policy::default() };
+        let mut counts = BTreeMap::new();
+        counts.insert("rust/src/a.rs".to_string(), 3);
+        counts.insert("rust/src/b.rs".to_string(), 1);
+        let reports = p.apply(Vec::new(), &counts);
+        assert_eq!(reports.len(), 2, "{reports:?}");
+    }
+}

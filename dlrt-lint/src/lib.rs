@@ -1,0 +1,74 @@
+//! `dlrt-lint`: repo-specific static checks for the determinism and
+//! memory-discipline contracts. See DESIGN.md §10 for the contract this
+//! crate enforces and `allowlist.txt` for the current exemptions.
+//!
+//! Run as `cargo run -p dlrt-lint` from the workspace root; exits
+//! non-zero on any error-level finding.
+
+pub mod config;
+pub mod lints;
+pub mod source;
+
+pub use config::{Policy, Report};
+pub use lints::{Finding, Lint};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Lint one source string under a virtual repo-relative path, with no
+/// allowlist and an empty ledger. Fixture tests use this to assert that
+/// each fixture trips exactly its own lint.
+pub fn lint_single(virtual_path: &str, src: &str) -> Vec<Report> {
+    let report = lints::lint_file(virtual_path, src);
+    let mut counts = BTreeMap::new();
+    if report.unsafe_sites > 0 {
+        counts.insert(virtual_path.to_string(), report.unsafe_sites);
+    }
+    Policy::default().apply(report.findings, &counts)
+}
+
+/// Lint the whole tree rooted at `root` (the repo checkout). Reads
+/// `dlrt-lint/allowlist.txt` and `rust/UNSAFE_LEDGER.md` from it, scans
+/// every `.rs` file under `rust/src` in sorted order, and returns the
+/// post-policy reports.
+pub fn run(root: &Path) -> Result<Vec<Report>, String> {
+    let allow_path = root.join("dlrt-lint/allowlist.txt");
+    let allow_text = std::fs::read_to_string(&allow_path)
+        .map_err(|e| format!("{}: {e}", allow_path.display()))?;
+    let mut policy = Policy::parse_allowlist(&allow_text)?;
+    let ledger_path = root.join("rust/UNSAFE_LEDGER.md");
+    let ledger_text = std::fs::read_to_string(&ledger_path)
+        .map_err(|e| format!("{}: {e}", ledger_path.display()))?;
+    policy.ledger = Policy::parse_ledger(&ledger_text)?;
+
+    let src_root = root.join("rust/src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files).map_err(|e| format!("{}: {e}", src_root.display()))?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut unsafe_counts = BTreeMap::new();
+    for path in &files {
+        let rel = path.strip_prefix(root).unwrap_or(path).to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let report = lints::lint_file(&rel, &src);
+        findings.extend(report.findings);
+        if report.unsafe_sites > 0 {
+            unsafe_counts.insert(rel, report.unsafe_sites);
+        }
+    }
+    Ok(policy.apply(findings, &unsafe_counts))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

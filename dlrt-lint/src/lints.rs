@@ -1,0 +1,371 @@
+//! The five contract lints (DESIGN.md §10), run per file over a
+//! [`SourceModel`].
+//!
+//! Raw findings are policy-free: allowlists, hard zones, the unsafe
+//! ledger, and the L5 ratchet are applied afterwards by
+//! [`crate::config::Policy::apply`].
+
+use crate::source::{
+    method_calls, receiver_ident, stmt_end, stmt_start, word_occurrences, SourceModel,
+};
+
+/// Lint identifiers, stable across output and allowlist files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lint {
+    /// Iteration over `HashMap`/`HashSet` (non-deterministic order).
+    L1HashIter,
+    /// `unsafe` without a `// SAFETY:` comment or ledger entry.
+    L2UnsafeLedger,
+    /// Float `sum`/`fold`/`product` outside the fixed-order reduction sites.
+    L3FloatReduce,
+    /// Wall-clock / env reads outside the sanctioned modules.
+    L4Wallclock,
+    /// `unwrap()`/`expect()` in library code.
+    L5PanicUnwrap,
+}
+
+impl Lint {
+    pub fn id(self) -> &'static str {
+        match self {
+            Lint::L1HashIter => "L1",
+            Lint::L2UnsafeLedger => "L2",
+            Lint::L3FloatReduce => "L3",
+            Lint::L4Wallclock => "L4",
+            Lint::L5PanicUnwrap => "L5",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::L1HashIter => "hashmap-iter",
+            Lint::L2UnsafeLedger => "unsafe-ledger",
+            Lint::L3FloatReduce => "float-reduce",
+            Lint::L4Wallclock => "wallclock",
+            Lint::L5PanicUnwrap => "panic-unwrap",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Lint> {
+        match id {
+            "L1" => Some(Lint::L1HashIter),
+            "L2" => Some(Lint::L2UnsafeLedger),
+            "L3" => Some(Lint::L3FloatReduce),
+            "L4" => Some(Lint::L4Wallclock),
+            "L5" => Some(Lint::L5PanicUnwrap),
+            _ => None,
+        }
+    }
+}
+
+/// One raw violation site.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub lint: Lint,
+    pub msg: String,
+}
+
+/// Per-file lint result: the findings plus the file's unsafe-site count
+/// (every `unsafe` keyword occurrence, for the ledger comparison).
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub unsafe_sites: usize,
+}
+
+/// Methods that iterate a hash collection when called on one.
+const ITER_METHODS: &[&[u8]] =
+    &[b"iter", b"iter_mut", b"into_iter", b"drain", b"retain", b"keys", b"values"];
+/// Map/set-specific iteration methods, flagged on *any* receiver in files
+/// that use hash collections at all (catches cross-field receivers the
+/// in-file type tracking misses).
+const MAP_ONLY_METHODS: &[&[u8]] =
+    &[b"keys", b"values", b"values_mut", b"into_keys", b"into_values"];
+
+/// Run every lint over one file. `path` is the repo-relative path (used
+/// only for messages; policy is applied later).
+pub fn lint_file(path: &str, src: &str) -> FileReport {
+    let m = SourceModel::new(src);
+    let mut f: Vec<Finding> = Vec::new();
+    let push = |f: &mut Vec<Finding>, lint: Lint, line: usize, msg: String| {
+        f.push(Finding { file: path.to_string(), line, lint, msg });
+    };
+
+    // ---- L1: iteration over HashMap / HashSet ---------------------------
+    let uses_hash = word_occurrences(&m.blanked, b"HashMap", false)
+        .into_iter()
+        .chain(word_occurrences(&m.blanked, b"HashSet", false))
+        .next()
+        .is_some();
+    let tracked = hash_idents(&m);
+    for &name in ITER_METHODS {
+        for call in method_calls(&m.blanked, name) {
+            let recv = receiver_ident(&m.blanked, call.dot).map(<[u8]>::to_vec);
+            let hit = match &recv {
+                Some(r) if tracked.contains(r) => true,
+                _ => uses_hash && MAP_ONLY_METHODS.contains(&name),
+            };
+            if hit {
+                let line = m.line_of(call.pos);
+                let mname = String::from_utf8_lossy(name);
+                push(&mut f, Lint::L1HashIter, line, format!(".{mname}() on a hash collection"));
+            }
+        }
+    }
+    for pos in word_occurrences(&m.blanked, b"for", false) {
+        let end = m.blanked[pos..]
+            .iter()
+            .position(|&b| b == b'{' || b == b'\n')
+            .map_or(m.blanked.len(), |p| pos + p);
+        let head = &m.blanked[pos..end];
+        let Some(inpos) = word_occurrences(head, b"in", false).first().copied() else { continue };
+        for ident in ident_tokens(&head[inpos + 2..]) {
+            if tracked.contains(&ident) {
+                let line = m.line_of(pos);
+                let name = String::from_utf8_lossy(&ident);
+                push(&mut f, Lint::L1HashIter, line, format!("for-loop over `{name}`"));
+            }
+        }
+    }
+
+    // ---- L2: unsafe sites must carry // SAFETY: (ledger check is later) -
+    let mut unsafe_sites = 0usize;
+    for pos in word_occurrences(&m.blanked, b"unsafe", false) {
+        unsafe_sites += 1;
+        let line = m.line_of(pos);
+        if !m.has_safety_comment(line) {
+            push(&mut f, Lint::L2UnsafeLedger, line, "unsafe without // SAFETY: comment".into());
+        }
+    }
+
+    // ---- L3: float reductions -------------------------------------------
+    for &name in &[&b"sum"[..], b"product"] {
+        for call in method_calls(&m.blanked, name) {
+            let turbo = call.turbofish.as_slice();
+            let flagged = if contains(turbo, b"f32") || contains(turbo, b"f64") {
+                true
+            } else if turbo.is_empty() {
+                let span = &m.blanked[stmt_start(&m.blanked, call.pos)..call.pos];
+                contains(span, b": f32")
+                    || contains(span, b": f64")
+                    || contains(span, b":f32")
+                    || contains(span, b":f64")
+            } else {
+                false
+            };
+            if flagged {
+                let line = m.line_of(call.pos);
+                let mname = String::from_utf8_lossy(name);
+                push(&mut f, Lint::L3FloatReduce, line, format!("float {mname}() reduction"));
+            }
+        }
+    }
+    for call in method_calls(&m.blanked, b"fold") {
+        let Some(open) = m.blanked[call.pos..].iter().position(|&b| b == b'(') else { continue };
+        let open = call.pos + open;
+        let mut j = open + 1;
+        while j < m.blanked.len() && (m.blanked[j] == b' ' || m.blanked[j] == b'\n') {
+            j += 1;
+        }
+        let init = &m.blanked[j..m.blanked.len().min(j + 24)];
+        if float_init(init) {
+            let tail = &m.blanked[open..stmt_end(&m.blanked, open)];
+            // max/min folds commute and reassociate exactly — allowed
+            if !contains(tail, b"max") && !contains(tail, b"min") {
+                let line = m.line_of(call.pos);
+                push(&mut f, Lint::L3FloatReduce, line, "float fold() reduction".into());
+            }
+        }
+    }
+
+    // ---- L4: wall clock / env reads -------------------------------------
+    for (pat, prefix_ok) in
+        [(&b"Instant::now"[..], false), (b"SystemTime", false), (b"env::var", true)]
+    {
+        for pos in word_occurrences(&m.blanked, pat, prefix_ok) {
+            let line = m.line_of(pos);
+            let p = String::from_utf8_lossy(pat);
+            push(&mut f, Lint::L4Wallclock, line, format!("{p} use"));
+        }
+    }
+
+    // ---- L5: unwrap / expect in library code ----------------------------
+    for &name in &[&b"unwrap"[..], b"expect"] {
+        for call in method_calls(&m.blanked, name) {
+            // `self.expect(...)` is the receiver type's own method (the
+            // JSON parser has one), not Option/Result::expect
+            if receiver_ident(&m.blanked, call.dot) == Some(b"self") {
+                continue;
+            }
+            let line = m.line_of(call.pos);
+            let mname = String::from_utf8_lossy(name);
+            push(&mut f, Lint::L5PanicUnwrap, line, format!(".{mname}() in library code"));
+        }
+    }
+
+    // L3/L4/L5 are library-code lints: test modules are exempt. L1/L2
+    // stay on everywhere (ordering bugs and unledgered unsafe in tests
+    // are still bugs).
+    f.retain(|x| {
+        !matches!(x.lint, Lint::L3FloatReduce | Lint::L4Wallclock | Lint::L5PanicUnwrap)
+            || !m.in_test_span(x.line)
+    });
+    f.sort();
+    f.dedup();
+    FileReport { findings: f, unsafe_sites }
+}
+
+/// Identifiers declared with a `HashMap`/`HashSet` type in this file:
+/// `let x = HashMap::new()` bindings plus `name: ...HashMap<...>` type
+/// ascriptions (struct fields, params, annotated lets).
+fn hash_idents(m: &SourceModel) -> Vec<Vec<u8>> {
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    let text = &m.blanked;
+    for ty in [&b"HashMap"[..], b"HashSet"] {
+        for pos in word_occurrences(text, ty, false) {
+            let after = pos + ty.len();
+            let rest = &text[after..text.len().min(after + 2)];
+            if rest.starts_with(b"::") {
+                // `let x = HashMap::new()` — take the ident after `let`
+                let line_start = text[..pos].iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+                let head = &text[line_start..pos];
+                if let Some(letpos) = word_occurrences(head, b"let", false).first() {
+                    let mut toks = ident_tokens(&head[letpos + 3..]);
+                    toks.retain(|t| t != b"mut");
+                    if let Some(name) = toks.first() {
+                        out.push(name.clone());
+                    }
+                }
+            } else if rest.first() == Some(&b'<') {
+                // type position: the binder is the ident before the last
+                // `:` on the line prefix
+                let line_start = text[..pos].iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+                let head = &text[line_start..pos];
+                if let Some(colon) = head.iter().rposition(|&b| b == b':') {
+                    // skip `::` path separators
+                    if colon > 0 && head[colon - 1] == b':' {
+                        continue;
+                    }
+                    let toks = ident_tokens(&head[..colon]);
+                    if let Some(name) = toks.last() {
+                        out.push(name.clone());
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// All maximal identifier tokens in a byte slice.
+fn ident_tokens(text: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    for &b in text {
+        if crate::source::is_ident(b) {
+            cur.push(b);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn contains(hay: &[u8], needle: &[u8]) -> bool {
+    !needle.is_empty() && hay.windows(needle.len()).any(|w| w == needle)
+}
+
+/// Does a `.fold(` first argument start with a float initializer?
+fn float_init(init: &[u8]) -> bool {
+    if init.starts_with(b"f32::") || init.starts_with(b"f64::") {
+        return true;
+    }
+    if init.first().is_some_and(u8::is_ascii_digit) {
+        let mut k = 0usize;
+        while k < init.len() && (init[k].is_ascii_digit() || init[k] == b'.' || init[k] == b'_') {
+            k += 1;
+        }
+        let num = &init[..k];
+        if num.contains(&b'.') {
+            return true;
+        }
+        if init[k..].starts_with(b"f32") || init[k..].starts_with(b"f64") {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(path: &str, src: &str) -> Vec<(&'static str, usize)> {
+        lint_file(path, src).findings.iter().map(|f| (f.lint.id(), f.line)).collect()
+    }
+
+    #[test]
+    fn l1_flags_tracked_receivers_and_for_loops() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let mut m: HashMap<u32, u32> = HashMap::new();\n    for (k, v) in &m {}\n    let _ = m.iter().count();\n    let v: Vec<u32> = vec![];\n    let _ = v.iter().count();\n}\n";
+        let found = ids("rust/src/x.rs", src);
+        assert!(found.contains(&("L1", 4)), "{found:?}");
+        assert!(found.contains(&("L1", 5)), "{found:?}");
+        assert!(!found.contains(&("L1", 7)), "Vec iteration must not flag: {found:?}");
+    }
+
+    #[test]
+    fn l1_map_only_methods_flag_any_receiver_in_hash_using_files() {
+        let src = "use std::collections::HashMap;\nfn f(s: &Registry) {\n    for k in s.inner.keys() {}\n}\n";
+        assert!(ids("rust/src/x.rs", src).contains(&("L1", 3)));
+        // ...but not in files that never touch hash collections (BTreeMap)
+        let src2 = "fn f(s: &Registry) { for k in s.inner.keys() {} }\n";
+        assert!(ids("rust/src/x.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn l2_requires_nearby_safety_comment() {
+        let src = "fn f(p: *mut f32) {\n    // SAFETY: caller guarantees exclusivity\n    let _ = unsafe { *p };\n}\n\nfn g(p: *mut f32) {\n    let x = 1;\n    let y = x + 1;\n    let _ = y;\n    let _ = unsafe { *p };\n}\n";
+        let found = ids("rust/src/x.rs", src);
+        assert_eq!(found, vec![("L2", 10)], "{found:?}");
+    }
+
+    #[test]
+    fn l3_flags_float_sums_not_int_sums_or_minmax_folds() {
+        let src = "fn f(xs: &[f32], ys: &[usize]) -> f32 {\n    let a: f64 = xs.iter().map(|&x| x as f64).sum();\n    let b: usize = ys.iter().sum();\n    let c = xs.iter().sum::<f32>();\n    let d = xs.iter().fold(0.0f32, f32::max);\n    let e = xs.iter().fold(0.0f32, |s, &x| s + x);\n    a as f32 + b as f32 + c + d + e\n}\n";
+        let found = ids("rust/src/x.rs", src);
+        assert!(found.contains(&("L3", 2)), "{found:?}");
+        assert!(!found.contains(&("L3", 3)), "{found:?}");
+        assert!(found.contains(&("L3", 4)), "{found:?}");
+        assert!(!found.contains(&("L3", 5)), "max fold is order-safe: {found:?}");
+        assert!(found.contains(&("L3", 6)), "{found:?}");
+    }
+
+    #[test]
+    fn l4_flags_clock_and_env_reads() {
+        let src = "fn f() {\n    let t = std::time::Instant::now();\n    let v = std::env::var(\"X\");\n    let s = std::time::SystemTime::now();\n}\n";
+        let found = ids("rust/src/x.rs", src);
+        assert!(found.contains(&("L4", 2)));
+        assert!(found.contains(&("L4", 3)));
+        assert!(found.contains(&("L4", 4)));
+    }
+
+    #[test]
+    fn l5_skips_self_methods_and_test_mods() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nimpl P { fn g(&mut self) { self.expect(b'{'); } }\n#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        let found = ids("rust/src/x.rs", src);
+        assert_eq!(found, vec![("L5", 1)], "{found:?}");
+    }
+
+    #[test]
+    fn unsafe_site_count_covers_impls_and_blocks() {
+        let src = "// SAFETY: a\nunsafe impl Send for X {}\n// SAFETY: b\nfn f() { let _ = unsafe { g() }; }\n";
+        let r = lint_file("rust/src/x.rs", src);
+        assert_eq!(r.unsafe_sites, 2);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+}

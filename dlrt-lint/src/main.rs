@@ -1,0 +1,72 @@
+//! CLI entry point. `cargo run -p dlrt-lint [-- --root <path>]`.
+//! Exit 0: clean (warnings allowed). Exit 1: error-level findings.
+//! Exit 2: could not run (bad allowlist/ledger/IO).
+
+use dlrt_lint::Report;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!("usage: dlrt-lint [--root <repo-checkout>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("dlrt-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default to the workspace root: `cargo run -p dlrt-lint` sets cwd to
+    // the invocation dir, so walk up until rust/src appears.
+    let root = root.or_else(find_root).unwrap_or_else(|| PathBuf::from("."));
+
+    let reports = match dlrt_lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dlrt-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut errors = 0usize;
+    for r in &reports {
+        match r {
+            Report::Error(f) => {
+                errors += 1;
+                println!(
+                    "error[{}:{}]: {}:{}: {}",
+                    f.lint.id(),
+                    f.lint.name(),
+                    f.file,
+                    f.line,
+                    f.msg
+                );
+            }
+            Report::Warning(msg) => println!("warning: {msg}"),
+        }
+    }
+    if errors > 0 {
+        println!("dlrt-lint: {errors} error(s)");
+        ExitCode::FAILURE
+    } else {
+        println!("dlrt-lint: clean ({} warning(s))", reports.len() - errors);
+        ExitCode::SUCCESS
+    }
+}
+
+fn find_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() && dir.join("dlrt-lint").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,493 @@
+//! Source model: comment/literal blanking plus the token-level matchers
+//! the lints are built on.
+//!
+//! The pass never parses Rust properly (the workspace is hermetic, so no
+//! `syn`); instead every file is reduced to a *blanked* byte buffer of the
+//! same length as the original, in which comment text and string/char
+//! literal contents are replaced by spaces (newlines preserved). Pattern
+//! matching on the blanked buffer can then never fire inside a comment,
+//! doc example, or log message, and byte positions map 1:1 onto the
+//! original source for line reporting.
+
+use std::collections::BTreeSet;
+
+/// A lexed file: the blanked source plus the side tables lints need.
+pub struct SourceModel {
+    /// Original source with comments and literal contents blanked.
+    pub blanked: Vec<u8>,
+    /// 1-based lines whose comment text contains `SAFETY:`.
+    pub safety_lines: BTreeSet<usize>,
+    /// 1-based inclusive line spans of `#[cfg(test)] mod` bodies.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceModel {
+    pub fn new(src: &str) -> SourceModel {
+        let (blanked, safety_lines) = blank(src.as_bytes());
+        let test_spans = test_spans(&blanked);
+        SourceModel { blanked, safety_lines, test_spans }
+    }
+
+    /// 1-based line number of a byte position in the blanked buffer.
+    pub fn line_of(&self, pos: usize) -> usize {
+        self.blanked[..pos].iter().filter(|&&b| b == b'\n').count() + 1
+    }
+
+    /// Whether a 1-based line falls inside a `#[cfg(test)] mod` body.
+    pub fn in_test_span(&self, line: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Whether any comment on lines `line-6 ..= line` contains `SAFETY:`.
+    /// The window tolerates a few-line explanation under the `// SAFETY:`
+    /// header before the `unsafe` itself.
+    pub fn has_safety_comment(&self, line: usize) -> bool {
+        (line.saturating_sub(6)..=line).any(|l| self.safety_lines.contains(&l))
+    }
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn is_space(b: u8) -> bool {
+    b == b' ' || b == b'\t' || b == b'\n' || b == b'\r'
+}
+
+/// Blank comments and literal contents; collect `SAFETY:`-comment lines.
+fn blank(src: &[u8]) -> (Vec<u8>, BTreeSet<usize>) {
+    let n = src.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut safety = BTreeSet::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    // Record a comment's text: mark every line it spans that mentions
+    // SAFETY: (multi-line block comments are split on newlines).
+    let record = |start_line: usize, text: &[u8], safety: &mut BTreeSet<usize>| {
+        for (k, part) in text.split(|&b| b == b'\n').enumerate() {
+            if part.windows(7).any(|w| w == b"SAFETY:") {
+                safety.insert(start_line + k);
+            }
+        }
+    };
+    while i < n {
+        let c = src[i];
+        let nxt = if i + 1 < n { src[i + 1] } else { 0 };
+        if c == b'/' && nxt == b'/' {
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                j += 1;
+            }
+            record(line, &src[i..j], &mut safety);
+            out.resize(out.len() + (j - i), b' ');
+            i = j;
+            continue;
+        }
+        if c == b'/' && nxt == b'*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'/' && j + 1 < n && src[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == b'*' && j + 1 < n && src[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            record(start_line, &src[i..j], &mut safety);
+            for &b in &src[i..j] {
+                if b == b'\n' {
+                    out.push(b'\n');
+                    line += 1;
+                } else {
+                    out.push(b' ');
+                }
+            }
+            i = j;
+            continue;
+        }
+        if c == b'r' && (nxt == b'"' || nxt == b'#') {
+            // raw string r"..." / r#"..."# (identifier chars before `r`
+            // mean this is just the tail of an identifier — skip)
+            let prev_ident = i > 0 && is_ident(src[i - 1]);
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && src[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if !prev_ident && j < n && src[j] == b'"' {
+                out.push(b'r');
+                out.resize(out.len() + hashes, b'#');
+                out.push(b'"');
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if src[j] == b'"' && src[j + 1..].len() >= hashes
+                        && src[j + 1..j + 1 + hashes].iter().all(|&b| b == b'#')
+                    {
+                        break;
+                    }
+                    if src[j] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                    }
+                    j += 1;
+                }
+                out.push(b'"');
+                out.resize(out.len() + hashes, b'#');
+                i = (j + 1 + hashes).min(n);
+                continue;
+            }
+        }
+        if c == b'"' {
+            out.push(b'"');
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' && j + 1 < n {
+                    if src[j + 1] == b'\n' {
+                        out.push(b' ');
+                        out.push(b'\n');
+                        line += 1;
+                    } else {
+                        out.push(b' ');
+                        out.push(b' ');
+                    }
+                    j += 2;
+                    continue;
+                }
+                if src[j] == b'"' {
+                    break;
+                }
+                if src[j] == b'\n' {
+                    out.push(b'\n');
+                    line += 1;
+                } else {
+                    out.push(b' ');
+                }
+                j += 1;
+            }
+            out.push(b'"');
+            i = j + 1;
+            continue;
+        }
+        if c == b'\'' {
+            // char literal vs lifetime
+            if nxt == b'\\' {
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                out.push(b'\'');
+                out.resize(out.len() + j.saturating_sub(i + 1), b' ');
+                out.push(b'\'');
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && src[i + 2] == b'\'' {
+                out.push(b'\'');
+                out.push(b' ');
+                out.push(b'\'');
+                i += 3;
+                continue;
+            }
+            out.push(b'\'');
+            i += 1;
+            continue;
+        }
+        if c == b'\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, safety)
+}
+
+/// Positions where `word` occurs with a non-identifier byte on the left
+/// (and on the right too, unless `prefix_ok`).
+pub fn word_occurrences(blanked: &[u8], word: &[u8], prefix_ok: bool) -> Vec<usize> {
+    let mut res = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = find_from(blanked, word, start) {
+        start = off + 1;
+        if off > 0 && is_ident(blanked[off - 1]) {
+            continue;
+        }
+        let r = off + word.len();
+        if !prefix_ok && r < blanked.len() && is_ident(blanked[r]) {
+            continue;
+        }
+        res.push(off);
+    }
+    res
+}
+
+fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() || needle.is_empty() || hay.len() - from < needle.len() {
+        return None;
+    }
+    hay[from..].windows(needle.len()).position(|w| w == needle).map(|p| p + from)
+}
+
+/// One `.name(...)` / `.name::<...>(...)` method-call site.
+pub struct MethodCall {
+    /// Byte position of the method name.
+    pub pos: usize,
+    /// Byte position of the `.` receiver dot.
+    pub dot: usize,
+    /// The turbofish text (e.g. `<f64>`), empty when absent.
+    pub turbofish: Vec<u8>,
+}
+
+/// All `.name(` / `.name::<...>(` call sites of a method.
+pub fn method_calls(blanked: &[u8], name: &[u8]) -> Vec<MethodCall> {
+    let mut res = Vec::new();
+    for pos in word_occurrences(blanked, name, false) {
+        // left: previous non-space byte must be the receiver dot
+        let mut q = pos;
+        while q > 0 && is_space(blanked[q - 1]) {
+            q -= 1;
+        }
+        if q == 0 || blanked[q - 1] != b'.' {
+            continue;
+        }
+        let dot = q - 1;
+        // right: optional `::<...>` turbofish, then `(`
+        let mut r = pos + name.len();
+        while r < blanked.len() && is_space(blanked[r]) {
+            r += 1;
+        }
+        let mut turbofish = Vec::new();
+        if blanked[r..].starts_with(b"::") {
+            r += 2;
+            while r < blanked.len() && is_space(blanked[r]) {
+                r += 1;
+            }
+            if r < blanked.len() && blanked[r] == b'<' {
+                let t0 = r;
+                let mut depth = 0i32;
+                while r < blanked.len() {
+                    if blanked[r] == b'<' {
+                        depth += 1;
+                    } else if blanked[r] == b'>' {
+                        depth -= 1;
+                        if depth == 0 {
+                            r += 1;
+                            break;
+                        }
+                    }
+                    r += 1;
+                }
+                turbofish = blanked[t0..r].to_vec();
+                while r < blanked.len() && is_space(blanked[r]) {
+                    r += 1;
+                }
+            }
+        }
+        if r < blanked.len() && blanked[r] == b'(' {
+            res.push(MethodCall { pos, dot, turbofish });
+        }
+    }
+    res
+}
+
+/// The plain identifier directly left of the receiver dot (`self.archs.` →
+/// `archs` for the second dot). `None` when the receiver is a call chain
+/// (`)`), an index (`]`), or anything else that is not a bare identifier.
+pub fn receiver_ident(blanked: &[u8], dot: usize) -> Option<&[u8]> {
+    let mut q = dot;
+    while q > 0 && is_space(blanked[q - 1]) {
+        q -= 1;
+    }
+    if q == 0 || !is_ident(blanked[q - 1]) {
+        return None;
+    }
+    let end = q;
+    while q > 0 && is_ident(blanked[q - 1]) {
+        q -= 1;
+    }
+    Some(&blanked[q..end])
+}
+
+/// Position just past the previous `;`, `{` or `}` before `pos` — the
+/// conservative start of the enclosing statement.
+pub fn stmt_start(blanked: &[u8], pos: usize) -> usize {
+    let mut j = pos;
+    while j > 0 {
+        let b = blanked[j - 1];
+        if b == b';' || b == b'{' || b == b'}' {
+            return j;
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// Position of the next `;` at/after `pos` (end of buffer when absent).
+pub fn stmt_end(blanked: &[u8], pos: usize) -> usize {
+    let mut j = pos;
+    while j < blanked.len() && blanked[j] != b';' {
+        j += 1;
+    }
+    j
+}
+
+/// Line spans of `#[cfg(test)] mod` bodies, by brace matching.
+fn test_spans(blanked: &[u8]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut search = 0usize;
+    while let Some(attr) = find_cfg_test(blanked, search) {
+        search = attr + 1;
+        // first `mod <ident> {` after the attribute
+        let Some(open) = find_mod_open(blanked, attr) else { continue };
+        let mut depth = 0i32;
+        let mut j = open;
+        while j < blanked.len() {
+            if blanked[j] == b'{' {
+                depth += 1;
+            } else if blanked[j] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let start_line = blanked[..attr].iter().filter(|&&b| b == b'\n').count() + 1;
+        let end_line = blanked[..j.min(blanked.len())].iter().filter(|&&b| b == b'\n').count() + 1;
+        spans.push((start_line, end_line));
+    }
+    spans
+}
+
+/// Next `#[cfg(test)]` (whitespace-tolerant) at/after `from`.
+fn find_cfg_test(blanked: &[u8], from: usize) -> Option<usize> {
+    let mut i = from;
+    while let Some(p) = find_from(blanked, b"#", i) {
+        i = p + 1;
+        let mut j = p + 1;
+        let mut ok = true;
+        for expected in [&b"["[..], b"cfg", b"(", b"test", b")", b"]"] {
+            while j < blanked.len() && is_space(blanked[j]) {
+                j += 1;
+            }
+            if blanked[j..].starts_with(expected) {
+                j += expected.len();
+            } else {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// The `{` of the first `mod <ident> {` after `from`.
+fn find_mod_open(blanked: &[u8], from: usize) -> Option<usize> {
+    for p in word_occurrences(&blanked[from..], b"mod", false) {
+        let mut j = from + p + 3;
+        while j < blanked.len() && is_space(blanked[j]) {
+            j += 1;
+        }
+        let id0 = j;
+        while j < blanked.len() && is_ident(blanked[j]) {
+            j += 1;
+        }
+        if j == id0 {
+            continue;
+        }
+        while j < blanked.len() && is_space(blanked[j]) {
+            j += 1;
+        }
+        if j < blanked.len() && blanked[j] == b'{' {
+            return Some(j);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_hides_comments_and_literal_contents() {
+        let src = "let a = \"HashMap.iter()\"; // Instant::now in comment\nlet b = 1;";
+        let m = SourceModel::new(src);
+        let s = String::from_utf8_lossy(&m.blanked).into_owned();
+        assert!(!s.contains("HashMap"), "{s}");
+        assert!(!s.contains("Instant"), "{s}");
+        assert!(s.contains("let b = 1;"));
+        assert_eq!(m.blanked.len(), src.len());
+    }
+
+    #[test]
+    fn safety_comments_are_recorded_by_line() {
+        let src = "// SAFETY: fine\nunsafe { x() };\n\n\n\n\n\n\n\nunsafe { y() };\n";
+        let m = SourceModel::new(src);
+        assert!(m.has_safety_comment(2));
+        assert!(m.has_safety_comment(7), "six-line lookback window");
+        assert!(!m.has_safety_comment(10));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_do_not_derail_the_lexer() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\"'; let d = '\\''; c }";
+        let m = SourceModel::new(src);
+        let s = String::from_utf8_lossy(&m.blanked).into_owned();
+        assert!(s.contains("fn f<'a>"), "{s}");
+        assert!(!s.contains('"') || !s.contains("'\"'"), "{s}");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let x = r#\"SystemTime .unwrap()\"#; let y = 2;";
+        let m = SourceModel::new(src);
+        let s = String::from_utf8_lossy(&m.blanked).into_owned();
+        assert!(!s.contains("SystemTime"), "{s}");
+        assert!(s.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn test_mod_spans_cover_the_brace_body() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let m = SourceModel::new(src);
+        assert_eq!(m.test_spans, vec![(2, 5)]);
+        assert!(m.in_test_span(4));
+        assert!(!m.in_test_span(6));
+    }
+
+    #[test]
+    fn method_call_matcher_handles_turbofish_and_receivers() {
+        let src = "let a: f64 = xs.iter().sum::<f64>(); self.expect(b'{')?; y.unwrap();";
+        let m = SourceModel::new(src);
+        let sums = method_calls(&m.blanked, b"sum");
+        assert_eq!(sums.len(), 1);
+        assert_eq!(sums[0].turbofish, b"<f64>".to_vec());
+        let exps = method_calls(&m.blanked, b"expect");
+        assert_eq!(exps.len(), 1);
+        assert_eq!(receiver_ident(&m.blanked, exps[0].dot), Some(&b"self"[..]));
+        let unw = method_calls(&m.blanked, b"unwrap");
+        assert_eq!(unw.len(), 1);
+        assert_eq!(receiver_ident(&m.blanked, unw[0].dot), Some(&b"y"[..]));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_an_unwrap_call() {
+        let src = "m.lock().unwrap_or_else(|e| e.into_inner());";
+        let m = SourceModel::new(src);
+        assert!(method_calls(&m.blanked, b"unwrap").is_empty());
+    }
+}

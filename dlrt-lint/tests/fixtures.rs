@@ -1,0 +1,69 @@
+//! Each fixture under `tests/fixtures/` trips exactly one finding of
+//! its named lint under the default (empty) policy; `clean.rs` trips
+//! none despite embedding every trigger pattern in comments, strings,
+//! and test modules.
+
+use dlrt_lint::{lint_single, Lint, Report};
+
+fn errors(virtual_path: &str, fixture: &str) -> Vec<(Lint, usize)> {
+    let path = format!("{}/tests/fixtures/{fixture}", env!("CARGO_MANIFEST_DIR"));
+    let src = std::fs::read_to_string(path).expect("fixture readable");
+    lint_single(virtual_path, &src)
+        .into_iter()
+        .filter_map(|r| match r {
+            Report::Error(f) => Some((f.lint, f.line)),
+            Report::Warning(_) => None,
+        })
+        .collect()
+}
+
+fn assert_single(fixture: &str, virtual_path: &str, lint: Lint) {
+    let found = errors(virtual_path, fixture);
+    assert_eq!(found.len(), 1, "{fixture}: expected exactly one finding, got {found:?}");
+    assert_eq!(found[0].0, lint, "{fixture}: wrong lint: {found:?}");
+}
+
+#[test]
+fn l1_fixture_trips_hashmap_iter() {
+    assert_single("l1_hashmap_iter.rs", "rust/src/runtime/reg.rs", Lint::L1HashIter);
+}
+
+#[test]
+fn l2_fixture_trips_unsafe_ledger() {
+    // The block has a SAFETY comment; the finding is the missing ledger row.
+    assert_single("l2_unsafe_unledgered.rs", "rust/src/util/bytes.rs", Lint::L2UnsafeLedger);
+}
+
+#[test]
+fn l3_fixture_trips_float_reduce() {
+    // Virtual path outside linalg/ + exec/, so the built-in zone can't excuse it.
+    assert_single("l3_float_sum.rs", "rust/src/dlrt/loss.rs", Lint::L3FloatReduce);
+}
+
+#[test]
+fn l4_fixture_trips_wallclock() {
+    assert_single("l4_wallclock.rs", "rust/src/dlrt/sched.rs", Lint::L4Wallclock);
+}
+
+#[test]
+fn l5_fixture_trips_panic_unwrap() {
+    // serve/ is a hard zone: no ratchet could ever excuse this.
+    assert_single("l5_unwrap_serve.rs", "rust/src/serve/queue.rs", Lint::L5PanicUnwrap);
+}
+
+#[test]
+fn clean_fixture_trips_nothing() {
+    let found = errors("rust/src/dlrt/report.rs", "clean.rs");
+    assert!(found.is_empty(), "clean.rs must not trip any lint: {found:?}");
+}
+
+#[test]
+fn whole_tree_is_clean() {
+    // The same invariant CI enforces via `cargo run -p dlrt-lint`: the
+    // committed tree has zero error-level findings.
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.parent().expect("workspace root");
+    let reports = dlrt_lint::run(root).expect("lint run");
+    let errs: Vec<_> = reports.iter().filter(|r| matches!(r, Report::Error(_))).collect();
+    assert!(errs.is_empty(), "tree has lint errors: {errs:#?}");
+}

@@ -1,0 +1,28 @@
+// Fixture: must produce zero findings. Every lint's trigger pattern
+// appears here only inside comments, strings, or exempt positions — a
+// regression in the blanking lexer shows up as a phantom finding.
+//
+// for (k, v) in map.iter() { } — commented-out HashMap iteration
+// let t = Instant::now(); — commented-out clock read
+use std::collections::BTreeMap;
+
+pub fn describe(m: &BTreeMap<String, u64>) -> String {
+    let mut out = String::from("unsafe { *p } and x.unwrap() are fine in strings");
+    out.push_str("xs.iter().sum::<f32>()");
+    for (k, v) in m.iter() {
+        out.push_str(k);
+        out.push_str(&v.to_string());
+    }
+    let total: u64 = m.values().map(|v| v + 1).sum();
+    out.push_str(&total.to_string());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwraps_are_fine_in_tests() {
+        let x: Option<u32> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+    }
+}

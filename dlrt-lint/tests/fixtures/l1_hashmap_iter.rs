@@ -1,0 +1,10 @@
+// Fixture: must trip exactly one L1 (hashmap-iter) finding.
+use std::collections::HashMap;
+
+pub fn checksum(m: &HashMap<String, u64>) -> u64 {
+    let mut acc = 0u64;
+    for (_, v) in m {
+        acc = acc.wrapping_add(*v);
+    }
+    acc
+}

@@ -1,0 +1,6 @@
+// Fixture: must trip exactly one L2 (unsafe-ledger) finding — the block
+// carries a SAFETY comment but the (empty) ledger has no row for it.
+pub fn first_byte(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees `p` points to at least one valid byte.
+    unsafe { *p }
+}

@@ -1,0 +1,4 @@
+// Fixture: must trip exactly one L3 (float-reduce) finding.
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

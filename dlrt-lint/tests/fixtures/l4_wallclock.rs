@@ -1,0 +1,4 @@
+// Fixture: must trip exactly one L4 (wallclock) finding.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

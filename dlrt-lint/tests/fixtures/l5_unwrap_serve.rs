@@ -1,0 +1,5 @@
+// Fixture: must trip exactly one L5 (panic-unwrap) finding. Linted
+// under a virtual serve/ path, so no ratchet can excuse it.
+pub fn front(queue: &[u32]) -> u32 {
+    *queue.first().unwrap()
+}

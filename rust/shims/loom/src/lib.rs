@@ -1,0 +1,96 @@
+//! Offline stand-in for [tokio-rs/loom](https://github.com/tokio-rs/loom).
+//!
+//! The workspace builds hermetically with no network dependencies
+//! (DESIGN.md §3), so this shim provides the subset of the loom 0.7 API
+//! that `rust/tests/loom_scratch.rs` uses: [`model`], [`thread`], and
+//! [`sync`] wrappers around std primitives. Instead of loom's exhaustive
+//! DPOR schedule exploration it runs the model body many times
+//! (`LOOM_MAX_ITERS`, default 200) and injects yields at every
+//! synchronization point, seeded differently per iteration, to shake out
+//! interleavings. Real loom is drop-in compatible: point the
+//! `[target.'cfg(loom)'.dependencies]` entry in `rust/Cargo.toml` at the
+//! upstream crate and the model gains exhaustive coverage with no source
+//! changes (see DESIGN.md §10 for the documented skip conditions).
+
+use std::sync::atomic::{AtomicU32, Ordering as O};
+
+/// Per-iteration schedule seed; [`maybe_yield`] derives its decisions
+/// from this so each model iteration perturbs different sync points.
+static SCHEDULE: AtomicU32 = AtomicU32::new(1);
+
+fn maybe_yield() {
+    // xorshift step on the shared schedule word: cheap, deterministic
+    // per-iteration-seed, and different threads observe different slices
+    // of the sequence, which is exactly the perturbation we want.
+    let mut x = SCHEDULE.load(O::Relaxed);
+    x ^= x << 13;
+    x ^= x >> 17;
+    x ^= x << 5;
+    SCHEDULE.store(x, O::Relaxed);
+    if x % 3 == 0 {
+        std::thread::yield_now();
+    }
+}
+
+/// Run `f` repeatedly with perturbed schedules. Loom-compatible entry
+/// point; panics from the model body propagate (failing the test).
+pub fn model<F: Fn() + Sync + Send + 'static>(f: F) {
+    let iters: u32 = std::env::var("LOOM_MAX_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    for i in 0..iters {
+        SCHEDULE.store(i.wrapping_mul(2654435761).wrapping_add(1) | 1, O::Relaxed);
+        f();
+    }
+}
+
+pub mod thread {
+    pub use std::thread::{yield_now, JoinHandle};
+
+    pub fn spawn<F, T>(f: F) -> std::thread::JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        super::maybe_yield();
+        std::thread::spawn(move || {
+            super::maybe_yield();
+            f()
+        })
+    }
+}
+
+pub mod sync {
+    pub use std::sync::{Arc, LockResult, MutexGuard};
+
+    /// std Mutex with yield injection on every acquire.
+    #[derive(Debug, Default)]
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Mutex<T> {
+            Mutex(std::sync::Mutex::new(t))
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            super::maybe_yield();
+            let r = self.0.lock();
+            super::maybe_yield();
+            r
+        }
+
+        pub fn try_lock(&self) -> std::sync::TryLockResult<MutexGuard<'_, T>> {
+            super::maybe_yield();
+            self.0.try_lock()
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.0.into_inner()
+        }
+    }
+
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+    }
+}

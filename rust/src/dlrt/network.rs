@@ -367,14 +367,13 @@ impl Network {
     /// counts.
     pub fn step(&mut self, rt: &Runtime, batch: &Batch, lr: f32) -> Result<StepStats> {
         let mut timings = StepTimings::default();
-        let t0 = std::time::Instant::now();
+        let mut clock = crate::metrics::PhaseClock::new();
 
         // ---- phase 1: one gradient sweep over the current parameters ----
         let params: Vec<LayerParams<'_>> = self.layers.iter().map(|l| l.params()).collect();
         let kl = rt.grads(&self.arch_name, &params, GradPhase::Kl, batch)?;
         drop(params);
-        timings.kl_graph_s = t0.elapsed().as_secs_f64();
-        let t0 = std::time::Instant::now();
+        timings.kl_graph_s = clock.lap();
 
         ensure!(
             kl.layers.len() == self.layers.len(),
@@ -422,18 +421,16 @@ impl Network {
                 ),
             }
         }
-        timings.host_kl_s = t0.elapsed().as_secs_f64();
+        timings.host_kl_s = clock.lap();
 
         // ---- S phase: skipped entirely when no layer is factored --------
         let mut loss_after_kl = kl.loss;
         if any_factored {
-            let t0 = std::time::Instant::now();
             let staged: Vec<LayerParams<'_>> =
                 self.layers.iter().map(|l| l.staged_params()).collect();
             let sg = rt.grads(&self.arch_name, &staged, GradPhase::S, batch)?;
             drop(staged);
-            timings.s_graph_s = t0.elapsed().as_secs_f64();
-            let t0 = std::time::Instant::now();
+            timings.s_graph_s = clock.lap();
 
             ensure!(
                 sg.layers.len() == self.layers.len(),
@@ -461,7 +458,7 @@ impl Network {
                 }
             }
             loss_after_kl = sg.loss;
-            timings.host_s_s = t0.elapsed().as_secs_f64();
+            timings.host_s_s = clock.lap();
         }
 
         Ok(StepStats { loss: kl.loss, ncorrect: kl.ncorrect, loss_after_kl, timings })

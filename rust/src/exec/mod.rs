@@ -41,7 +41,7 @@ use crate::data::Batch;
 use crate::util::pool;
 use crate::Result;
 use anyhow::{anyhow, ensure};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 /// Upper bound on configurable shard counts — far above any useful host
 /// fan-out, low enough to catch a mistyped config.
@@ -69,6 +69,15 @@ impl ShardedExecutor {
     /// The configured shard count.
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Never poison-panic on the recycling pool (same discipline as
+    /// `util::scratch::lock`): pooled sub-batch sets are fully overwritten
+    /// by `split_batch` before use, so any state a panicking peer left
+    /// behind is harmless — and a panic in one step must not wedge the
+    /// shard rendezvous of every later step.
+    fn lock_bufs(&self) -> MutexGuard<'_, Vec<Vec<Batch>>> {
+        self.bufs.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Evaluate one gradient sweep, sharded across worker replicas when
@@ -107,7 +116,7 @@ impl ShardedExecutor {
         let dim = batch.x.len() / bsz;
 
         // ---- split: contiguous, balanced row ranges ---------------------
-        let mut shards = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        let mut shards = self.lock_bufs().pop().unwrap_or_default();
         split_batch(batch, dim, k, &mut shards);
 
         // ---- evaluate: one worker per shard, shard 0 on this thread -----
@@ -134,16 +143,22 @@ impl ShardedExecutor {
         let mut parts: Vec<(GradsOut, f64)> = Vec::with_capacity(k);
         let mut first_err = None;
         for (res, sb) in results.into_iter().zip(shards.iter()) {
-            match res.expect("every shard slot is filled") {
-                Ok(out) => {
+            match res {
+                Some(Ok(out)) => {
                     let wsum: f64 = sb.w.iter().map(|&x| x as f64).sum();
                     parts.push((out, wsum));
                 }
-                Err(e) if first_err.is_none() => first_err = Some(e),
-                Err(_) => {}
+                Some(Err(e)) if first_err.is_none() => first_err = Some(e),
+                Some(Err(_)) => {}
+                // unreachable past the scope join, but a panicked worker
+                // must surface as an error, not a panic of our own
+                None if first_err.is_none() => {
+                    first_err = Some(anyhow!("shard grads worker left its slot empty"))
+                }
+                None => {}
             }
         }
-        let mut pool_guard = self.bufs.lock().unwrap();
+        let mut pool_guard = self.lock_bufs();
         if pool_guard.len() < MAX_POOLED_SETS {
             pool_guard.push(shards);
         }
@@ -191,7 +206,7 @@ impl ShardedExecutor {
         );
         let dim = batch.x.len() / bsz;
 
-        let mut shards = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        let mut shards = self.lock_bufs().pop().unwrap_or_default();
         split_batch(batch, dim, k, &mut shards);
 
         let inner_threads = pool::default_threads().div_ceil(k);
@@ -219,18 +234,22 @@ impl ShardedExecutor {
         let mut wtot = 0.0f64;
         let mut first_err = None;
         for (res, sb) in results.into_iter().zip(shards.iter()) {
-            match res.expect("every shard slot is filled") {
-                Ok(st) => {
+            match res {
+                Some(Ok(st)) => {
                     let wsum: f64 = sb.w.iter().map(|&x| x as f64).sum();
                     loss += wsum * st.loss as f64;
                     ncorrect += st.ncorrect as f64;
                     wtot += wsum;
                 }
-                Err(e) if first_err.is_none() => first_err = Some(e),
-                Err(_) => {}
+                Some(Err(e)) if first_err.is_none() => first_err = Some(e),
+                Some(Err(_)) => {}
+                None if first_err.is_none() => {
+                    first_err = Some(anyhow!("shard forward worker left its slot empty"))
+                }
+                None => {}
             }
         }
-        let mut pool_guard = self.bufs.lock().unwrap();
+        let mut pool_guard = self.lock_bufs();
         if pool_guard.len() < MAX_POOLED_SETS {
             pool_guard.push(shards);
         }

@@ -29,6 +29,9 @@ const RANK_TOL: f64 = 1e-7;
 /// disjoint columns, so the aliasing is safe by construction.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f64);
+// SAFETY: SendPtr is only handed to `pool::par_ranges` workers that index
+// disjoint column ranges of the underlying buffer (see the two call sites
+// below), so sharing the raw pointer across threads cannot alias.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 impl SendPtr {
@@ -83,7 +86,10 @@ pub fn householder_qr(a: &Matrix) -> Matrix {
             let base = SendPtr(tail.as_mut_ptr());
             pool::par_ranges(trailing, threads, |lo, hi| {
                 for t in lo..hi {
-                    // safety: each worker owns disjoint columns of `tail`
+                    // SAFETY: `par_ranges` hands each worker a disjoint
+                    // `lo..hi`, so every column slice `t` of `tail` has
+                    // exactly one writer; `t * m + j .. t * m + m` stays
+                    // in bounds because `tail` holds `trailing` columns.
                     let col = unsafe {
                         std::slice::from_raw_parts_mut(base.get().add(t * m + j), m - j)
                     };
@@ -116,6 +122,10 @@ pub fn householder_qr(a: &Matrix) -> Matrix {
         let base = SendPtr(q.as_mut_ptr());
         pool::par_ranges(k, threads, |lo, hi| {
             for t in lo..hi {
+                // SAFETY: disjoint `lo..hi` per worker ⇒ one writer per
+                // column `t` of `q`; the tail slice of column `t` (length
+                // `m - j` starting at row `j`) is in bounds of `q`'s
+                // `m * k` elements.
                 let col =
                     unsafe { std::slice::from_raw_parts_mut(base.get().add(t * m + j), m - j) };
                 let mut dot = 0.0;
@@ -249,6 +259,43 @@ mod tests {
         let q = householder_qr(&k.hcat(&u));
         let proj = matmul(&q, &matmul_tn(&q, &u));
         assert!(proj.fro_dist(&u) < 1e-4);
+    }
+
+    // The `miri_` tests are sized for the Miri interpreter (CI runs
+    // `cargo miri test ... linalg::qr::tests::miri_`): small shapes, but
+    // still crossing every unsafe site in this module.
+
+    #[test]
+    fn miri_small_qr_is_orthonormal() {
+        let mut rng = Rng::new(5);
+        let a = rng.normal_matrix(12, 5);
+        let q = householder_qr(&a);
+        assert!(orthonormality_error(&q) < 1e-4);
+        let proj = matmul(&q, &matmul_tn(&q, &a));
+        assert!(proj.fro_dist(&a) / a.fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn miri_sendptr_columns_have_one_writer_each() {
+        // the exact aliasing pattern of the trailing updates, in miniature:
+        // two workers split four columns of a shared column-major buffer
+        let m = 8;
+        let mut data = vec![0.0f64; m * 4];
+        let base = SendPtr(data.as_mut_ptr());
+        pool::par_ranges(4, 2, |lo, hi| {
+            for t in lo..hi {
+                // SAFETY: workers receive disjoint `lo..hi`, so column `t`
+                // has exactly one writer and `t * m .. (t + 1) * m` is in
+                // bounds of the `m * 4` buffer.
+                let col = unsafe { std::slice::from_raw_parts_mut(base.get().add(t * m), m) };
+                for (i, c) in col.iter_mut().enumerate() {
+                    *c = (t * m + i) as f64;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as f64, "column writes must neither alias nor skip");
+        }
     }
 
     #[test]

@@ -148,7 +148,7 @@ pub fn jacobi_svd(a: &Matrix) -> Svd {
     for j in 0..k {
         sig[j] = w[j * m..(j + 1) * m].iter().map(|x| x * x).sum::<f64>().sqrt();
     }
-    order.sort_by(|&a_, &b_| sig[b_].partial_cmp(&sig[a_]).unwrap());
+    order.sort_by(|&a_, &b_| sig[b_].total_cmp(&sig[a_]));
 
     let mut u = Matrix::zeros(m, k);
     let mut vt = Matrix::zeros(k, n);

@@ -30,11 +30,15 @@ USAGE:
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help"])?;
-    if args.has_flag("help") || args.subcommand.is_none() {
+    let Some(subcommand) = args.subcommand.as_deref() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    if args.has_flag("help") {
         print!("{USAGE}");
         return Ok(());
     }
-    match args.subcommand.as_deref().unwrap() {
+    match subcommand {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "export" => cmd_export(&args),

@@ -7,4 +7,4 @@ mod timer;
 
 pub use params::{compression_ratio, dense_params, lowrank_eval_params};
 pub use recorder::{EpochRecord, RunRecord};
-pub use timer::{StepTimer, TimingStats};
+pub use timer::{PhaseClock, StepTimer, TimingStats};

@@ -53,6 +53,34 @@ impl StepTimer {
     }
 }
 
+/// Sequential lap timer for phase breakdowns: `lap()` returns the seconds
+/// since construction or the previous lap. Keeps `Instant::now` calls
+/// inside `metrics/` (dlrt-lint L4) — callers timing a pipeline of phases
+/// take one lap per phase boundary instead of reading the clock directly.
+pub struct PhaseClock {
+    last: Instant,
+}
+
+impl Default for PhaseClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseClock {
+    pub fn new() -> Self {
+        PhaseClock { last: Instant::now() }
+    }
+
+    /// Seconds since the previous lap (or construction), then reset.
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
 /// Mean / std / min / max over recorded samples (seconds), as the paper's
 /// Tables 3-4 report them.
 #[derive(Debug, Clone, Copy, PartialEq)]

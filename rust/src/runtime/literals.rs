@@ -9,11 +9,15 @@ use crate::Result;
 use anyhow::{anyhow, ensure};
 
 fn bytes_of_f32(xs: &[f32]) -> &[u8] {
-    // safety: f32 has no invalid bit patterns; alignment of u8 is 1
+    // SAFETY: every f32 bit pattern is a valid u8 quadruple, u8 has
+    // alignment 1, and the byte length covers exactly the source slice;
+    // the borrow ties the view's lifetime to `xs`.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
 fn bytes_of_i32(xs: &[i32]) -> &[u8] {
+    // SAFETY: same as `bytes_of_f32` — plain-old-data reinterpretation at
+    // alignment 1, exact length, lifetime tied to `xs`.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 

@@ -6,7 +6,7 @@
 use crate::util::Json;
 use crate::Result;
 use anyhow::Context;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// One tensor in an artifact's ordered input/output list.
@@ -163,14 +163,17 @@ impl ArchInfo {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub version: usize,
-    pub archs: HashMap<String, ArchInfo>,
+    // BTreeMap, not HashMap: `archs` is iterated (inspect, arch
+    // listings), and every iteration in the crate must be order-stable
+    // (dlrt-lint L1).
+    pub archs: BTreeMap<String, ArchInfo>,
     pub artifacts: Vec<ArtifactInfo>,
 }
 
 impl Manifest {
     pub fn parse(src: &str) -> Result<Self> {
         let v = Json::parse(src).context("parsing manifest.json")?;
-        let mut archs = HashMap::new();
+        let mut archs = BTreeMap::new();
         for (name, a) in v.req("archs")?.as_obj()? {
             archs.insert(
                 name.clone(),

@@ -21,7 +21,7 @@ use anyhow::{anyhow, ensure};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Micro-batching knobs.
@@ -84,6 +84,15 @@ struct QueueState {
     shutdown: bool,
 }
 
+/// Never poison-panic on the queue mutex (same discipline as
+/// `util::scratch::lock`): a panicking peer can only leave the queue in a
+/// consistent state — `VecDeque` mutations happen through whole-element
+/// push/drain — and every parked requester still holds a channel receiver
+/// that reports the failure, so serving must keep going.
+fn lock_state(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 struct Shared {
     model: FrozenModel,
     cfg: EngineConfig,
@@ -113,15 +122,26 @@ impl Engine {
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
         });
-        let workers = (0..cfg.workers)
-            .map(|k| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("dlrt-serve-{k}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("spawn serve worker")
-            })
-            .collect();
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for k in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("dlrt-serve-{k}"))
+                .spawn(move || worker_loop(&sh));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // roll back: flag shutdown, wake and join the workers
+                    // that did start, and report the failure upward
+                    lock_state(&shared.state).shutdown = true;
+                    shared.cv.notify_all();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow!("spawning serve worker {k}: {e}"));
+                }
+            }
+        }
         Ok(Engine { shared, workers })
     }
 
@@ -161,7 +181,7 @@ impl Engine {
         }
         let mut pending = Vec::with_capacity(rows.len());
         {
-            let mut st = self.shared.state.lock().expect("serve queue poisoned");
+            let mut st = lock_state(&self.shared.state);
             ensure!(!st.shutdown, "engine is shut down");
             for (i, features) in rows.into_iter().enumerate() {
                 let (tx, rx) = mpsc::channel();
@@ -185,8 +205,7 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().expect("serve queue poisoned");
-            st.shutdown = true;
+            lock_state(&self.shared.state).shutdown = true;
         }
         self.shared.cv.notify_all();
         for h in self.workers.drain(..) {
@@ -207,9 +226,9 @@ fn recv_one(
 
 fn worker_loop(sh: &Shared) {
     loop {
-        let mut st = sh.state.lock().expect("serve queue poisoned");
+        let mut st = lock_state(&sh.state);
         while st.queue.is_empty() && !st.shutdown {
-            st = sh.cv.wait(st).expect("serve queue poisoned");
+            st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         if st.queue.is_empty() {
             return; // shutdown and fully drained
@@ -226,7 +245,7 @@ fn worker_loop(sh: &Shared) {
                 let (guard, timeout) = sh
                     .cv
                     .wait_timeout(st, deadline - now)
-                    .expect("serve queue poisoned");
+                    .unwrap_or_else(|e| e.into_inner());
                 st = guard;
                 if timeout.timed_out() {
                     break;

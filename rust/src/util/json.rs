@@ -369,7 +369,7 @@ impl<'a> Parser<'a> {
                     let start = self.pos - 1;
                     let s = std::str::from_utf8(&self.bytes[start..])
                         .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().ok_or_else(|| anyhow!("invalid UTF-8 in string"))?;
                     out.push(c);
                     self.pos = start + c.len_utf8();
                 }

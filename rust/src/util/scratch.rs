@@ -32,8 +32,20 @@
 //! cost more than the allocation.
 
 use std::ops::{Deref, DerefMut};
+use std::sync::OnceLock;
+
+// Under `--cfg loom` the pool's synchronization primitives come from the
+// loom model-checking facade (rust/tests/loom_scratch.rs drives the
+// checkout/return protocol through perturbed schedules); production builds
+// use std directly. The two APIs are identical for the subset used here.
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicU64, Ordering};
+#[cfg(loom)]
+use loom::sync::{Mutex, MutexGuard};
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
+use std::sync::{Mutex, MutexGuard};
 
 /// Requests below this many elements are allocator-served and uncounted:
 /// a pool round-trip (mutex + free-list scan) costs more than a small

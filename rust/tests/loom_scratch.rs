@@ -1,0 +1,85 @@
+//! Loom model of the `ScratchPool` checkout/return protocol (DESIGN.md
+//! §9/§10): concurrent `take`/`put` from shard workers must hand out
+//! exclusive buffers, reinitialize every recycled checkout, and keep the
+//! fresh/reuse accounting exact.
+//!
+//! Build with `RUSTFLAGS="--cfg loom" cargo test -p dlrt --test
+//! loom_scratch`. Without `--cfg loom` this target compiles to an empty
+//! test binary. The in-tree `loom` shim explores perturbed schedules
+//! rather than the exhaustive DPOR search of upstream loom — see
+//! rust/shims/loom and DESIGN.md §10 for the exact guarantees.
+#![cfg(loom)]
+
+use dlrt::util::scratch::{ScratchPool, MIN_POOL_LEN};
+use loom::sync::Arc;
+use loom::thread;
+
+/// Two workers race take → stamp → verify → put on a pool holding one
+/// recyclable buffer. If the pool ever handed the same buffer to both,
+/// one worker's stamp would clobber the other's and the verify fails.
+#[test]
+fn concurrent_checkouts_never_alias() {
+    loom::model(|| {
+        let pool = Arc::new(ScratchPool::new());
+        pool.put(vec![0.0f32; 256]);
+        let workers: Vec<_> = (0..2)
+            .map(|t| {
+                let p = Arc::clone(&pool);
+                thread::spawn(move || {
+                    let mut b = p.take(256);
+                    let stamp = (t + 1) as f32;
+                    for v in b.iter_mut() {
+                        *v = stamp;
+                    }
+                    thread::yield_now();
+                    assert!(
+                        b.iter().all(|&v| v == stamp),
+                        "buffer aliased across concurrent checkouts"
+                    );
+                    p.put(b);
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("worker");
+        }
+        // Every pool-class take is accounted exactly once, races included.
+        assert_eq!(pool.fresh_allocs() + pool.reuses(), 2);
+    });
+}
+
+/// A worker returns a NaN-poisoned buffer while the main thread takes:
+/// whichever buffer the taker gets (fresh or the recycled poisoned one),
+/// it must come back fully zeroed.
+#[test]
+fn recycled_buffers_are_reinitialized_under_races() {
+    loom::model(|| {
+        let pool = Arc::new(ScratchPool::new());
+        let mut dirty = pool.take(MIN_POOL_LEN);
+        for v in dirty.iter_mut() {
+            *v = f32::NAN;
+        }
+        let p2 = Arc::clone(&pool);
+        let returner = thread::spawn(move || p2.put(dirty));
+        let got = pool.take(MIN_POOL_LEN);
+        assert_eq!(got.len(), MIN_POOL_LEN);
+        assert!(got.iter().all(|&v| v == 0.0), "recycled checkout leaked values");
+        returner.join().expect("returner");
+        pool.put(got);
+    });
+}
+
+/// Checkout is exclusive: a buffer leaves the free list while in use, so
+/// two live checkouts are always distinct allocations.
+#[test]
+fn checkout_is_exclusive() {
+    loom::model(|| {
+        let pool = ScratchPool::new();
+        pool.put(vec![0.0f32; 128]);
+        let a = pool.take(128);
+        let b = pool.take(128);
+        assert_ne!(a.as_ptr(), b.as_ptr(), "double hand-out of a pooled buffer");
+        pool.put(a);
+        pool.put(b);
+    });
+}
