@@ -9,7 +9,7 @@
 
 use dlrt::config::presets;
 use dlrt::coordinator::{Trainer, ValOrTest};
-use dlrt::serve::{Engine, EngineConfig, FrozenModel};
+use dlrt::serve::{DrainPolicy, Engine, EngineConfig, FrozenModel};
 use std::time::Duration;
 
 fn main() -> dlrt::Result<()> {
@@ -44,7 +44,16 @@ fn main() -> dlrt::Result<()> {
     println!("\n=== serve: micro-batching engine ===");
     let engine = Engine::start(
         loaded,
-        EngineConfig { batch_cap: 16, max_delay: Duration::from_millis(2), workers: 2 },
+        EngineConfig {
+            batch_cap: 16,
+            replicas: 2,
+            queue_cap: 4096, // the whole test set enqueues at once below
+            slo: Duration::from_secs(30),
+            // eager: the demo's one-at-a-time requests have no co-riders
+            // to wait for
+            policy: DrainPolicy::Eager,
+            ..EngineConfig::default()
+        },
     )?;
     let test = &trainer.split.test;
     for i in 0..test.len().min(8) {

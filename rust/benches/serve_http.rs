@@ -1,0 +1,367 @@
+//! Bench: the HTTP front door under open-loop concurrent load — the
+//! replicated-engine claim of DESIGN.md §11 measured end to end (TCP +
+//! JSON + bounded queue + SLO micro-batching + load shedding).
+//!
+//! A trp_lenet-shaped frozen model (dense conv prefix, rank-10 low-rank
+//! tail) serves at `replicas ∈ {1, 4}`. A closed-loop pass first
+//! calibrates the replicas=1 capacity; each configuration then takes
+//! offered loads of 0.5x / 1x / 2x / 4x that capacity from scheduled
+//! keep-alive client threads. Emits `BENCH_serve_http.json`: achieved
+//! imgs/sec, p50/p99 latency, and shed rate per cell, plus the
+//! replicas-4 vs replicas-1 speedup at each side's saturating load —
+//! below capacity the shed rate should be ~0, at 2x+ it must be nonzero
+//! (that is the backpressure keeping p99 bounded).
+//!
+//! Smoke budget by default; `DLRT_FULL=1` for longer timing runs.
+
+use dlrt::coordinator::experiments;
+use dlrt::dlrt::{LayerSpec, Network, OptKind};
+use dlrt::linalg::Rng;
+use dlrt::runtime::Runtime;
+use dlrt::serve::{Engine, EngineConfig, FrozenModel, HttpConfig, HttpServer};
+use dlrt::util::bench::Table;
+use dlrt::util::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// The paper's deployment shape: dense convs, low-rank fully-connected
+/// tail (`presets::trp_lenet` trains exactly this split).
+fn trp_lenet_frozen() -> dlrt::Result<FrozenModel> {
+    let rt = Runtime::native();
+    let specs = [
+        LayerSpec::Dense,
+        LayerSpec::Dense,
+        LayerSpec::Fixed { rank: 10 },
+        LayerSpec::Fixed { rank: 10 },
+    ];
+    let mut rng = Rng::new(0x5EF);
+    let net = Network::new(&rt, "lenet", &specs, OptKind::Sgd, false, &mut rng)?;
+    Ok(net.export())
+}
+
+// ---------------------------------------------------------------------
+// Minimal keep-alive HTTP client (mirror of the one in tests/serve_http.rs
+// — bench targets cannot import test modules).
+// ---------------------------------------------------------------------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to the serve port");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { reader: BufReader::new(stream) }
+    }
+
+    /// One request/response round trip; returns the HTTP status.
+    fn infer(&mut self, body: &str) -> u16 {
+        let req = format!(
+            "POST /infer HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(req.as_bytes()).expect("writing request");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line: {line:?}"));
+        let mut content_length = 0usize;
+        loop {
+            line.clear();
+            self.reader.read_line(&mut line).expect("reading header");
+            let l = line.trim();
+            if l.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = l.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().expect("content-length");
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body).expect("reading body");
+        status
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Pre-serialized request bodies so client-side JSON formatting stays out
+/// of the measured loop.
+fn request_pool(dim: usize, n: usize) -> Vec<String> {
+    let mut rng = Rng::new(0xB0D7);
+    (0..n)
+        .map(|_| {
+            let row = rng.normal_matrix(1, dim).into_vec();
+            Json::obj(vec![("features", Json::f32_array(&row))]).to_string()
+        })
+        .collect()
+}
+
+fn engine_cfg(replicas: usize, slo: Duration) -> EngineConfig {
+    EngineConfig { batch_cap: 64, replicas, queue_cap: 4096, slo, ..EngineConfig::default() }
+}
+
+/// Closed-loop calibration: `clients` connections hammer back to back for
+/// `secs`; returns served requests per second. A long SLO keeps sheds out
+/// of the calibration.
+fn calibrate(model: &FrozenModel, bodies: &Arc<Vec<String>>, clients: usize, secs: f64) -> f64 {
+    let engine = Arc::new(
+        Engine::start(model.clone(), engine_cfg(1, Duration::from_secs(10))).unwrap(),
+    );
+    let server =
+        HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let addr = server.addr();
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let bodies = Arc::clone(bodies);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                barrier.wait();
+                let t0 = Instant::now();
+                let mut ok = 0u64;
+                let mut k = c;
+                while t0.elapsed().as_secs_f64() < secs {
+                    if client.infer(&bodies[k % bodies.len()]) == 200 {
+                        ok += 1;
+                    }
+                    k += 1;
+                }
+                ok
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    let ok: u64 = handles.into_iter().map(|h| h.join().expect("calibration client")).sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    engine.shutdown();
+    ok as f64 / elapsed
+}
+
+struct Cell {
+    replicas: usize,
+    offered_mult: f64,
+    offered_rps: f64,
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    achieved_rps: f64,
+    shed_rate: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// Open-loop cell: requests are scheduled at `offered_rps`, striped over
+/// enough keep-alive connections that a blocked connection (a request
+/// riding out its SLO) does not cap the offered rate. A thread that falls
+/// behind its schedule sends immediately — latency is measured from the
+/// scheduled time when on time, from the actual send when behind.
+fn run_cell(
+    model: &FrozenModel,
+    bodies: &Arc<Vec<String>>,
+    replicas: usize,
+    offered_mult: f64,
+    offered_rps: f64,
+    secs: f64,
+    slo: Duration,
+) -> Cell {
+    let engine = Arc::new(Engine::start(model.clone(), engine_cfg(replicas, slo)).unwrap());
+    let server =
+        HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let addr = server.addr();
+    let n_total = ((offered_rps * secs) as u64).max(1);
+    // each connection can hold a request for up to ~slo at overload
+    let clients =
+        ((offered_rps * slo.as_secs_f64() * 2.0).ceil() as usize).clamp(8, 96).min(n_total as usize);
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let bodies = Arc::clone(bodies);
+            let barrier = Arc::clone(&barrier);
+            let stride = clients as u64;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                barrier.wait();
+                let start = Instant::now();
+                let mut ok = 0u64;
+                let mut shed = 0u64;
+                let mut sent = 0u64;
+                let mut lat: Vec<f64> = Vec::new();
+                let mut k = c as u64;
+                while k < n_total {
+                    let target = Duration::from_secs_f64(k as f64 / offered_rps);
+                    if let Some(wait) = target.checked_sub(start.elapsed()) {
+                        if !wait.is_zero() {
+                            std::thread::sleep(wait);
+                        }
+                    }
+                    let t0 = start.elapsed().max(target);
+                    let status = client.infer(&bodies[k as usize % bodies.len()]);
+                    sent += 1;
+                    match status {
+                        200 => {
+                            ok += 1;
+                            lat.push(start.elapsed().saturating_sub(t0).as_secs_f64());
+                        }
+                        503 => shed += 1,
+                        _ => {}
+                    }
+                    k += stride;
+                }
+                (ok, shed, sent, lat)
+            })
+        })
+        .collect();
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    let mut sent = 0u64;
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        let (o, s, n, l) = h.join().expect("bench client");
+        ok += o;
+        shed += s;
+        sent += n;
+        lat.extend(l);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    engine.shutdown();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Cell {
+        replicas,
+        offered_mult,
+        offered_rps,
+        sent,
+        ok,
+        shed,
+        achieved_rps: ok as f64 / elapsed,
+        shed_rate: if sent == 0 { 0.0 } else { shed as f64 / sent as f64 },
+        p50_ms: percentile(&lat, 0.50) * 1e3,
+        p99_ms: percentile(&lat, 0.99) * 1e3,
+    }
+}
+
+fn main() -> dlrt::Result<()> {
+    let full = experiments::full_mode();
+    let (cal_secs, cell_secs) = if full { (1.5, 3.0) } else { (0.5, 0.8) };
+    let slo = Duration::from_millis(25);
+    let model = trp_lenet_frozen()?;
+    let bodies = Arc::new(request_pool(model.arch.input_dim, 64));
+    println!(
+        "serve_http: trp_lenet ranks {:?}, slo {}ms, {cell_secs}s per cell ({})",
+        model.ranks(),
+        slo.as_millis(),
+        if full { "full" } else { "smoke" }
+    );
+
+    let capacity = calibrate(&model, &bodies, 8, cal_secs);
+    println!("calibrated replicas=1 closed-loop capacity: {capacity:.0} req/s");
+
+    let mults = [0.5, 1.0, 2.0, 4.0];
+    let mut cells: Vec<Cell> = Vec::new();
+    for replicas in [1usize, 4] {
+        for mult in mults {
+            let cell =
+                run_cell(&model, &bodies, replicas, mult, mult * capacity, cell_secs, slo);
+            println!(
+                "replicas={} offered {:>4.1}x: achieved {:>7.0}/s shed {:>5.1}% p50 {:>6.2}ms p99 {:>6.2}ms",
+                cell.replicas,
+                cell.offered_mult,
+                cell.achieved_rps,
+                100.0 * cell.shed_rate,
+                cell.p50_ms,
+                cell.p99_ms
+            );
+            cells.push(cell);
+        }
+    }
+
+    let mut table = Table::new(&[
+        "replicas", "offered", "sent", "ok", "shed rate", "imgs/sec", "p50", "p99",
+    ]);
+    for c in &cells {
+        table.row(&[
+            c.replicas.to_string(),
+            format!("{:.1}x ({:.0}/s)", c.offered_mult, c.offered_rps),
+            c.sent.to_string(),
+            c.ok.to_string(),
+            format!("{:.1}%", 100.0 * c.shed_rate),
+            format!("{:.0}", c.achieved_rps),
+            format!("{:.2} ms", c.p50_ms),
+            format!("{:.2} ms", c.p99_ms),
+        ]);
+    }
+    table.print();
+
+    // saturated throughput: the best a configuration achieves anywhere on
+    // the offered-load sweep (its capacity under this harness)
+    let best = |replicas: usize| {
+        cells
+            .iter()
+            .filter(|c| c.replicas == replicas)
+            .map(|c| c.achieved_rps)
+            .fold(0.0f64, f64::max)
+    };
+    let speedup = best(4) / best(1).max(1e-9);
+    let overload_shed = cells
+        .iter()
+        .filter(|c| c.replicas == 1 && c.offered_mult >= 2.0)
+        .map(|c| c.shed_rate)
+        .fold(0.0f64, f64::max);
+    println!(
+        "shape check: replicas=4 saturated throughput >= 2x replicas=1: {} ({speedup:.2}x); \
+         replicas=1 sheds under overload: {} ({:.1}%)",
+        speedup >= 2.0,
+        overload_shed > 0.0,
+        100.0 * overload_shed
+    );
+
+    let json_rows = cells.iter().map(|c| {
+        Json::obj(vec![
+            ("replicas", Json::num(c.replicas as f64)),
+            ("offered_mult", Json::num(c.offered_mult)),
+            ("offered_rps", Json::num(c.offered_rps)),
+            ("sent", Json::num(c.sent as f64)),
+            ("ok", Json::num(c.ok as f64)),
+            ("shed", Json::num(c.shed as f64)),
+            ("achieved_rps", Json::num(c.achieved_rps)),
+            ("shed_rate", Json::num(c.shed_rate)),
+            ("p50_ms", Json::num(c.p50_ms)),
+            ("p99_ms", Json::num(c.p99_ms)),
+        ])
+    });
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_http")),
+        ("mode", Json::str(if full { "full" } else { "smoke" })),
+        ("arch", Json::str("lenet[dense,dense,rank10,rank10]")),
+        ("slo_ms", Json::num(slo.as_secs_f64() * 1e3)),
+        ("calibrated_rps_replicas1", Json::num(capacity)),
+        ("rows", Json::arr(json_rows)),
+        ("replicas4_vs_replicas1_saturated_speedup", Json::num(speedup)),
+        ("replicas1_overload_shed_rate", Json::num(overload_shed)),
+    ]);
+    std::fs::write("BENCH_serve_http.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_serve_http.json");
+    Ok(())
+}

@@ -10,7 +10,7 @@ use dlrt::coordinator::experiments;
 use dlrt::dlrt::{LayerSpec, Network, OptKind};
 use dlrt::linalg::Rng;
 use dlrt::runtime::Runtime;
-use dlrt::serve::{Engine, EngineConfig, FrozenModel};
+use dlrt::serve::{DrainPolicy, Engine, EngineConfig, FrozenModel};
 use dlrt::util::bench::{time_fn, Table};
 use dlrt::util::Json;
 use std::time::{Duration, Instant};
@@ -77,12 +77,18 @@ fn main() -> dlrt::Result<()> {
         let imgs_per_sec = batch as f64 / stats.mean;
 
         // --- request latency: single requests through the engine --------
-        // zero coalescing delay: sequential requests never have co-riders,
-        // so any positive max_delay would put a constant floor under every
-        // sample and mask the dense-vs-low-rank forward gap being measured
+        // eager drain policy: sequential requests never have co-riders,
+        // so any SLO coalescing wait would put a constant floor under
+        // every sample and mask the dense-vs-low-rank forward gap being
+        // measured (benches/serve_http.rs measures the SLO policy)
         let engine = Engine::start(
             model.clone(),
-            EngineConfig { batch_cap: 32, max_delay: Duration::ZERO, workers: 1 },
+            EngineConfig {
+                batch_cap: 32,
+                policy: DrainPolicy::Eager,
+                slo: Duration::from_secs(30),
+                ..EngineConfig::default()
+            },
         )?;
         let mut lat: Vec<f64> = Vec::with_capacity(n_requests);
         for _ in 0..n_requests {

@@ -62,7 +62,7 @@ pub mod thread {
 }
 
 pub mod sync {
-    pub use std::sync::{Arc, LockResult, MutexGuard};
+    pub use std::sync::{Arc, LockResult, MutexGuard, WaitTimeoutResult};
 
     /// std Mutex with yield injection on every acquire.
     #[derive(Debug, Default)]
@@ -87,6 +87,47 @@ pub mod sync {
 
         pub fn into_inner(self) -> LockResult<T> {
             self.0.into_inner()
+        }
+    }
+
+    /// std Condvar with yield injection around wait/notify. Timed waits
+    /// are clamped to 1ms: the serve queue re-checks its drain condition
+    /// on every wakeup, so an early timeout is indistinguishable from a
+    /// spurious wake, and perturbed-schedule iterations stay fast.
+    #[derive(Debug, Default)]
+    pub struct Condvar(std::sync::Condvar);
+
+    impl Condvar {
+        pub fn new() -> Condvar {
+            Condvar(std::sync::Condvar::new())
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            super::maybe_yield();
+            let r = self.0.wait(guard);
+            super::maybe_yield();
+            r
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: std::time::Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            super::maybe_yield();
+            let r = self.0.wait_timeout(guard, dur.min(std::time::Duration::from_millis(1)));
+            super::maybe_yield();
+            r
+        }
+
+        pub fn notify_one(&self) {
+            super::maybe_yield();
+            self.0.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            super::maybe_yield();
+            self.0.notify_all();
         }
     }
 

@@ -100,6 +100,29 @@ pub enum DataSource {
     Toy { n: usize },
 }
 
+/// Serving block: how `dlrt serve` fronts an exported model (flat
+/// `serve_*` keys in TOML). CLI flags override these per invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// TCP port for the HTTP front door; 0 = ephemeral.
+    pub port: u16,
+    /// Independent engine drain loops sharing the request queue.
+    pub replicas: usize,
+    /// Largest micro-batch one drain evaluates.
+    pub batch_cap: usize,
+    /// Bounded request-queue capacity; admissions beyond it are shed.
+    pub queue_cap: usize,
+    /// Default SLO: each request must be answered within this budget of
+    /// its admission or it is shed instead of served late.
+    pub slo_ms: f32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { port: 8080, replicas: 1, batch_cap: 64, queue_cap: 1024, slo_ms: 50.0 }
+    }
+}
+
 /// A complete experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -157,6 +180,8 @@ pub struct Config {
     /// sharded executor and is bitwise-identical to the unsharded
     /// pipeline. Only the native backend accepts values above 1.
     pub grad_shards: usize,
+    /// Serving block for `dlrt serve` (DESIGN.md §11).
+    pub serve: ServeConfig,
 }
 
 impl Config {
@@ -230,6 +255,16 @@ impl Config {
                 .collect::<Result<_>>()?,
             _ => Vec::new(),
         };
+        let serve_default = ServeConfig::default();
+        let serve_port = doc.get_usize("serve_port").unwrap_or(serve_default.port as usize);
+        ensure!(serve_port <= u16::MAX as usize, "serve_port must fit in u16 (got {serve_port})");
+        let serve = ServeConfig {
+            port: serve_port as u16,
+            replicas: doc.get_usize("serve_replicas").unwrap_or(serve_default.replicas),
+            batch_cap: doc.get_usize("serve_batch_cap").unwrap_or(serve_default.batch_cap),
+            queue_cap: doc.get_usize("serve_queue_cap").unwrap_or(serve_default.queue_cap),
+            slo_ms: doc.get_f32("serve_slo_ms").unwrap_or(serve_default.slo_ms),
+        };
         let cfg = Config {
             arch: doc
                 .get_str("arch")
@@ -256,6 +291,7 @@ impl Config {
             layer_ranks,
             layer_taus,
             grad_shards: doc.get_usize("grad_shards").unwrap_or(1),
+            serve,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -307,6 +343,11 @@ impl Config {
         );
         doc.insert("paranoid", KvValue::Bool(self.paranoid));
         doc.insert("grad_shards", KvValue::Num(self.grad_shards as f64));
+        doc.insert("serve_port", KvValue::Num(self.serve.port as f64));
+        doc.insert("serve_replicas", KvValue::Num(self.serve.replicas as f64));
+        doc.insert("serve_batch_cap", KvValue::Num(self.serve.batch_cap as f64));
+        doc.insert("serve_queue_cap", KvValue::Num(self.serve.queue_cap as f64));
+        doc.insert("serve_slo_ms", KvValue::Num(self.serve.slo_ms as f64));
         if !self.layer_modes.is_empty() {
             let joined: Vec<&str> = self.layer_modes.iter().map(|m| m.as_str()).collect();
             doc.insert("layer_modes", KvValue::Str(joined.join(",")));
@@ -364,6 +405,19 @@ impl Config {
             crate::exec::MAX_GRAD_SHARDS,
             self.grad_shards
         );
+        ensure!(
+            (1..=crate::serve::MAX_REPLICAS).contains(&self.serve.replicas),
+            "serve_replicas must be in [1, {}] (got {})",
+            crate::serve::MAX_REPLICAS,
+            self.serve.replicas
+        );
+        ensure!(self.serve.batch_cap >= 1, "serve_batch_cap must be >= 1");
+        ensure!(self.serve.queue_cap >= 1, "serve_queue_cap must be >= 1");
+        ensure!(
+            self.serve.slo_ms > 0.0 && self.serve.slo_ms.is_finite(),
+            "serve_slo_ms must be a positive number (got {})",
+            self.serve.slo_ms
+        );
         Ok(())
     }
 
@@ -399,7 +453,31 @@ mod tests {
             assert_eq!(back.layer_ranks, cfg.layer_ranks);
             assert_eq!(back.layer_taus, cfg.layer_taus);
             assert_eq!(back.grad_shards, cfg.grad_shards);
+            assert_eq!(back.serve, cfg.serve);
         }
+    }
+
+    #[test]
+    fn serve_block_parses_validates_and_roundtrips() {
+        // absent -> defaults
+        let cfg = Config::from_toml_str("arch = \"mlp_tiny\"").unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        let src = "arch = \"mlp_tiny\"\nserve_port = 9000\nserve_replicas = 4\n\
+                   serve_batch_cap = 32\nserve_queue_cap = 256\nserve_slo_ms = 25.0";
+        let cfg = Config::from_toml_str(src).unwrap();
+        assert_eq!(
+            cfg.serve,
+            ServeConfig { port: 9000, replicas: 4, batch_cap: 32, queue_cap: 256, slo_ms: 25.0 }
+        );
+        let back = Config::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.serve, cfg.serve);
+        // out-of-range values are rejected
+        assert!(Config::from_toml_str("arch = \"x\"\nserve_port = 70000").is_err());
+        assert!(Config::from_toml_str("arch = \"x\"\nserve_replicas = 0").is_err());
+        assert!(Config::from_toml_str("arch = \"x\"\nserve_slo_ms = 0").is_err());
+        let mut cfg = base();
+        cfg.serve.replicas = crate::serve::MAX_REPLICAS + 1;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

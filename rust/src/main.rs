@@ -6,6 +6,8 @@
 //! dlrt eval  --checkpoint runs/model.json             # evaluate a checkpoint
 //! dlrt export --checkpoint runs/model.json \
 //!             --out runs/model_frozen.json            # freeze for serving
+//! dlrt serve --model runs/model_frozen.json \
+//!            --replicas 4 --slo-ms 25                 # HTTP inference endpoint
 //! dlrt presets                                        # list presets
 //! dlrt inspect                                        # dump the manifest
 //! ```
@@ -24,6 +26,8 @@ USAGE:
              [--artifacts DIR] [--seed N] [--grad-shards K]
   dlrt eval --checkpoint FILE [--preset NAME]
   dlrt export --checkpoint FILE [--out FILE]
+  dlrt serve --model FILE [--config FILE] [--host ADDR] [--port N (0=ephemeral)]
+             [--replicas N] [--batch-cap N] [--queue-cap N] [--slo-ms MS]
   dlrt presets
   dlrt inspect [--artifacts DIR]
 ";
@@ -42,6 +46,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "export" => cmd_export(&args),
+        "serve" => cmd_serve(&args),
         "presets" => {
             for (name, cfg) in presets::all() {
                 println!(
@@ -148,6 +153,67 @@ fn cmd_export(args: &Args) -> Result<()> {
         100.0 * stored as f64 / dense as f64,
         out.display()
     );
+    Ok(())
+}
+
+/// Serve a frozen model over HTTP: replicated engines behind one
+/// listener, SLO-aware micro-batching, load shedding (DESIGN.md §11).
+/// Blocks until the process is killed. Prints a machine-readable
+/// `SERVE_ADDR=host:port` line so scripts can find an ephemeral port.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --model FILE (produce one with `dlrt export`)"))?;
+    let mut serve_cfg = if let Some(path) = args.get("config") {
+        Config::from_path(&PathBuf::from(path))?.serve
+    } else {
+        dlrt::config::ServeConfig::default()
+    };
+    if let Some(p) = args.get_usize("port")? {
+        anyhow::ensure!(p <= u16::MAX as usize, "--port must fit in u16 (got {p})");
+        serve_cfg.port = p as u16;
+    }
+    if let Some(r) = args.get_usize("replicas")? {
+        serve_cfg.replicas = r;
+    }
+    if let Some(b) = args.get_usize("batch-cap")? {
+        serve_cfg.batch_cap = b;
+    }
+    if let Some(q) = args.get_usize("queue-cap")? {
+        serve_cfg.queue_cap = q;
+    }
+    if let Some(ms) = args.get_f32("slo-ms")? {
+        serve_cfg.slo_ms = ms;
+    }
+    let host = args.get_or("host", "127.0.0.1");
+
+    let rt = dlrt::runtime::Runtime::native();
+    let model = dlrt::serve::FrozenModel::load(&PathBuf::from(model_path), &rt)?;
+    println!(
+        "serving '{}': {} layers, ranks {:?} | replicas={} batch_cap={} queue_cap={} slo={}ms",
+        model.arch_name,
+        model.layers.len(),
+        model.ranks(),
+        serve_cfg.replicas,
+        serve_cfg.batch_cap,
+        serve_cfg.queue_cap,
+        serve_cfg.slo_ms
+    );
+    let engine_cfg = dlrt::serve::EngineConfig::from_serve(&serve_cfg);
+    let engine = std::sync::Arc::new(dlrt::serve::Engine::start(model, engine_cfg)?);
+    let server = dlrt::serve::HttpServer::bind(
+        std::sync::Arc::clone(&engine),
+        &format!("{host}:{}", serve_cfg.port),
+        dlrt::serve::HttpConfig::default(),
+    )?;
+    println!("SERVE_ADDR={}", server.addr());
+    println!("endpoints: POST /infer | GET /stats | GET /healthz | POST /reload");
+    {
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    }
+    server.wait();
+    engine.shutdown();
     Ok(())
 }
 

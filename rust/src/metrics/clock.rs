@@ -1,0 +1,87 @@
+//! Injectable wall-clock source for the serve path.
+//!
+//! dlrt-lint L4 keeps `Instant::now` out of everything but `metrics/` and
+//! `util/pool.rs` so that timing reads stay auditable. The serve engine's
+//! deadline math needs the current time at admission and at every drain
+//! decision; rather than allowlisting `serve/`, it takes a [`Clock`] and
+//! the two implementations live here: [`SystemClock`] for production and
+//! [`ManualClock`] for deterministic shed/expiry tests.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonic time source. `serve/` only ever holds `Instant` values it
+/// got from one of these, so expired-deadline behaviour is testable
+/// without sleeping.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Instant;
+}
+
+/// The real monotonic clock.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn now(&self) -> Instant {
+        Instant::now()
+    }
+}
+
+/// A clock that only moves when told to. `now()` reports a fixed base
+/// instant plus the accumulated [`advance`](ManualClock::advance) offset,
+/// so tests can push requests past their deadlines without wall time
+/// passing.
+#[derive(Debug)]
+pub struct ManualClock {
+    base: Instant,
+    offset: Mutex<Duration>,
+}
+
+impl Default for ManualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        ManualClock { base: Instant::now(), offset: Mutex::new(Duration::ZERO) }
+    }
+
+    /// Move the clock forward by `d`.
+    pub fn advance(&self, d: Duration) {
+        let mut off = self.offset.lock().unwrap_or_else(|e| e.into_inner());
+        *off += d;
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Instant {
+        let off = *self.offset.lock().unwrap_or_else(|e| e.into_inner());
+        self.base + off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_only_moves_on_advance() {
+        let c = ManualClock::new();
+        let t0 = c.now();
+        assert_eq!(c.now(), t0);
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), t0 + Duration::from_millis(5));
+        c.advance(Duration::from_millis(5));
+        assert_eq!(c.now(), t0 + Duration::from_millis(10));
+    }
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock;
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

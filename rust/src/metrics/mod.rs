@@ -1,10 +1,12 @@
 //! Metrics: timers, per-epoch records, parameter/compression accounting,
 //! and CSV/JSON reporters — the numbers every paper table is made of.
 
+mod clock;
 pub mod params;
 mod recorder;
 mod timer;
 
+pub use clock::{Clock, ManualClock, SystemClock};
 pub use params::{compression_ratio, dense_params, lowrank_eval_params};
 pub use recorder::{EpochRecord, RunRecord};
 pub use timer::{PhaseClock, StepTimer, TimingStats};

@@ -1,47 +1,106 @@
-//! Micro-batching inference engine over one [`FrozenModel`].
+//! Replicated micro-batching inference engine over a hot-swappable
+//! [`FrozenModel`].
 //!
-//! Single requests enqueue on a shared queue; worker threads coalesce them
-//! up to [`EngineConfig::batch_cap`] rows or until
-//! [`EngineConfig::max_delay`] has elapsed since the first queued request,
-//! then drain the batch through one [`FrozenModel::forward_logits`] call —
-//! whose matmul/im2col kernels fan out over the scoped
-//! [`crate::util::pool`] workers, so one coalesced batch uses every core.
-//! Because every serving kernel is row-independent, a request's logits are
-//! bitwise identical whether it rode alone or in a full batch;
-//! micro-batching trades a bounded queueing delay for amortized GEMM
-//! throughput and nothing else.
+//! Requests enter a bounded [`BoundedQueue`] with an admission deadline
+//! (admit time + SLO) and fan out across [`EngineConfig::replicas`]
+//! independent drain loops. Each replica runs inside
+//! [`crate::util::pool::with_thread_cap`] with `total/replicas` kernel
+//! threads, so replica-parallelism *replaces* kernel-parallelism instead
+//! of multiplying it (the PR 5 pool contract). A replica drains either at
+//! [`EngineConfig::batch_cap`] rows or — under [`DrainPolicy::SloSlack`]
+//! — when the oldest queued request's slack falls to the EWMA-estimated
+//! batch forward cost, so batches grow as large as the SLO permits and no
+//! larger. Requests whose deadline has already passed are shed
+//! ([`Outcome::Shed`], HTTP 503) instead of evaluated, which is what
+//! keeps p99 bounded under overload.
 //!
-//! Shutdown is graceful: dropping the [`Engine`] flags the queue, workers
-//! drain every outstanding request (skipping the coalescing delay) and
-//! exit; requests submitted after shutdown are rejected.
+//! Every serving kernel is row-independent, so a request's logits are
+//! bitwise identical whether it rode alone or in a full batch, on one
+//! replica or four — `tests/serve_http.rs` asserts this at
+//! `replicas ∈ {1, 2, 4}`.
+//!
+//! The model lives behind `Mutex<Arc<FrozenModel>>`: each drain checks
+//! out one `Arc` clone and serves the whole batch against that snapshot,
+//! so a concurrent [`Engine::swap_model`] (HTTP `POST /reload`) can never
+//! mix layers from two models inside one batch.
+//!
+//! Shutdown is graceful: [`Engine::shutdown`] (also run on drop) closes
+//! the queue — rejecting new admissions — then joins the replicas, which
+//! drain every already-accepted request before exiting. No accepted
+//! request is left without a reply.
 
+use super::queue::{BoundedQueue, Drained, Pending, Push};
 use super::FrozenModel;
+use crate::metrics::{Clock, SystemClock};
+use crate::util::pool;
 use crate::Result;
 use anyhow::{anyhow, ensure};
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
-/// Micro-batching knobs.
+/// Most replicas an engine will fan out to; keeps config typos from
+/// spawning an absurd thread count.
+pub const MAX_REPLICAS: usize = 64;
+
+/// When does a replica stop waiting for co-riders and drain?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainPolicy {
+    /// Drain at `batch_cap`, or when the oldest request's remaining slack
+    /// falls to the estimated batch forward cost (EWMA per batch size,
+    /// plus a safety margin). Maximizes batching inside the SLO.
+    SloSlack,
+    /// Drain as soon as a replica is free. Deadlines are still enforced
+    /// for shedding; there is just no waiting for co-riders. This is the
+    /// latency-measuring mode benches use.
+    Eager,
+}
+
+/// Engine knobs. `..Default::default()` the fields you don't care about.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
-    /// Largest batch one drain evaluates (requests beyond it wait for the
-    /// next drain, which starts immediately while the queue is non-empty).
+    /// Largest batch one drain evaluates.
     pub batch_cap: usize,
-    /// Longest a queued request waits for co-riders before the batch is
-    /// evaluated anyway — the latency bound under light traffic.
-    pub max_delay: Duration,
-    /// Worker threads draining the queue. One worker already parallelizes
-    /// across cores through the threaded kernels; more workers overlap
-    /// batch assembly with compute under heavy traffic.
-    pub workers: usize,
+    /// Independent drain loops sharing the request queue.
+    pub replicas: usize,
+    /// Bounded queue capacity; pushes beyond it are shed (503), which is
+    /// the backpressure that keeps latency from growing without bound.
+    pub queue_cap: usize,
+    /// Default admission-to-answer budget. Each request's deadline is
+    /// admit time + SLO unless it carries its own budget.
+    pub slo: Duration,
+    /// See [`DrainPolicy`].
+    pub policy: DrainPolicy,
+    /// Kernel threads each replica may use; 0 = divide
+    /// [`pool::default_threads`] evenly across replicas.
+    pub threads_per_replica: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { batch_cap: 64, max_delay: Duration::from_millis(2), workers: 1 }
+        EngineConfig {
+            batch_cap: 64,
+            replicas: 1,
+            queue_cap: 1024,
+            slo: Duration::from_millis(50),
+            policy: DrainPolicy::SloSlack,
+            threads_per_replica: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Engine view of the `[serve]` config block. Policy and thread split
+    /// stay at their defaults — those are operator flags, not config.
+    pub fn from_serve(cfg: &crate::config::ServeConfig) -> EngineConfig {
+        EngineConfig {
+            batch_cap: cfg.batch_cap,
+            replicas: cfg.replicas,
+            queue_cap: cfg.queue_cap,
+            slo: Duration::from_secs_f64((f64::from(cfg.slo_ms) / 1000.0).clamp(0.0, 3600.0)),
+            policy: DrainPolicy::SloSlack,
+            threads_per_replica: 0,
+        }
     }
 }
 
@@ -52,13 +111,88 @@ pub struct Prediction {
     pub label: usize,
 }
 
-/// Lifetime counters of an engine.
+/// Why a request was refused without being evaluated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded queue was at capacity at admission.
+    QueueFull,
+    /// The admission deadline passed before a replica reached it.
+    DeadlineExpired,
+    /// The engine is shutting down.
+    ShuttingDown,
+}
+
+impl ShedReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::DeadlineExpired => "deadline_expired",
+            ShedReason::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+/// Terminal state of one request. The HTTP layer maps these onto
+/// 200 / 503 / 500.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Answer(Prediction),
+    Shed(ShedReason),
+    /// The batched forward itself failed; the whole batch shares one
+    /// message, fanned out per requester.
+    Failed(String),
+}
+
+/// A claim on one in-flight request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Outcome>,
+}
+
+impl Ticket {
+    /// Block until the request reaches a terminal state. A worker that
+    /// vanished without replying (it cannot, by construction — see the
+    /// module docs) reports as [`Outcome::Failed`] rather than a panic.
+    pub fn wait(self) -> Outcome {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Outcome::Failed("engine dropped the request".into()))
+    }
+}
+
+/// Number of batch-size histogram buckets in [`EngineStats`].
+pub const HIST_BUCKETS: usize = 8;
+
+/// Power-of-two batch-size buckets for [`EngineStats::batch_hist`].
+pub fn hist_labels() -> [&'static str; HIST_BUCKETS] {
+    ["1", "2", "3-4", "5-8", "9-16", "17-32", "33-64", "65+"]
+}
+
+fn hist_bucket(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (((n - 1).ilog2() as usize) + 1).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Lifetime counters of an engine. Plain counters — the only wall-clock
+/// reads feeding them happen through the injected [`Clock`].
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
     /// Requests answered.
     pub requests: u64,
     /// Batched forward evaluations that answered them.
     pub batches: u64,
+    /// Requests shed because their deadline passed in the queue.
+    pub shed_expired: u64,
+    /// Requests shed at admission because the queue was full.
+    pub shed_full: u64,
+    /// Requests shed because the engine was shutting down.
+    pub shed_shutdown: u64,
+    /// Requests queued right now.
+    pub queue_depth: u64,
+    /// Drains per batch-size bucket; see [`hist_labels`].
+    pub batch_hist: [u64; HIST_BUCKETS],
 }
 
 impl EngineStats {
@@ -70,222 +204,378 @@ impl EngineStats {
             self.requests as f64 / self.batches as f64
         }
     }
+
+    /// All sheds, whatever the reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_expired + self.shed_full + self.shed_shutdown
+    }
 }
 
-/// One queued request. Errors cross the worker boundary as strings (the
-/// whole failed batch shares one message, fanned out per requester).
-struct Request {
+/// One queued request.
+struct Job {
     features: Vec<f32>,
-    tx: mpsc::Sender<std::result::Result<Prediction, String>>,
+    tx: mpsc::Sender<Outcome>,
 }
 
-struct QueueState {
-    queue: VecDeque<Request>,
-    shutdown: bool,
+const COST_ALPHA: f64 = 0.2;
+
+/// EWMA of observed batch forward cost, per batch size with a per-row
+/// fallback for sizes not yet seen. Drives the SloSlack drain decision.
+struct CostEwma {
+    /// Seconds for a batch of size `i`; 0.0 = unseeded.
+    per_size: Vec<f64>,
+    /// Seconds per row across all sizes; 0.0 = unseeded.
+    per_row: f64,
 }
 
-/// Never poison-panic on the queue mutex (same discipline as
-/// `util::scratch::lock`): a panicking peer can only leave the queue in a
-/// consistent state — `VecDeque` mutations happen through whole-element
-/// push/drain — and every parked requester still holds a channel receiver
-/// that reports the failure, so serving must keep going.
-fn lock_state(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
+struct CostModel {
+    state: Mutex<CostEwma>,
+}
+
+impl CostModel {
+    fn new(batch_cap: usize) -> CostModel {
+        CostModel {
+            state: Mutex::new(CostEwma { per_size: vec![0.0; batch_cap + 1], per_row: 0.0 }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CostEwma> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn observe(&self, n: usize, secs: f64) {
+        if n == 0 || !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let mut st = self.lock();
+        let hi = st.per_size.len() - 1;
+        let slot = &mut st.per_size[n.min(hi)];
+        *slot = if *slot == 0.0 { secs } else { COST_ALPHA * secs + (1.0 - COST_ALPHA) * *slot };
+        let row = secs / n as f64;
+        st.per_row =
+            if st.per_row == 0.0 { row } else { COST_ALPHA * row + (1.0 - COST_ALPHA) * st.per_row };
+    }
+
+    /// How far before the oldest deadline a drain of `n` rows must start:
+    /// estimated cost plus a 25% + 1ms margin (the millisecond absorbs
+    /// condvar wake-up jitter, so a request that waited out its slack is
+    /// served at the edge instead of shed by oversleep). Unseeded returns
+    /// `Duration::MAX`, so the first batches drain immediately and seed
+    /// the estimate.
+    fn lead(&self, n: usize) -> Duration {
+        let st = self.lock();
+        let hi = st.per_size.len() - 1;
+        let size_est = st.per_size[n.min(hi)];
+        let est = if size_est > 0.0 {
+            size_est
+        } else if st.per_row > 0.0 {
+            st.per_row * n as f64
+        } else {
+            return Duration::MAX;
+        };
+        Duration::from_secs_f64((est * 1.25 + 1e-3).clamp(0.0, 3600.0))
+    }
 }
 
 struct Shared {
-    model: FrozenModel,
+    /// The serving snapshot; replicas check out one `Arc` clone per drain.
+    model: Mutex<Arc<FrozenModel>>,
+    /// Serving contract frozen at start — hot-swaps must preserve it.
+    arch_name: String,
+    input_dim: usize,
+    num_classes: usize,
     cfg: EngineConfig,
-    state: Mutex<QueueState>,
-    cv: Condvar,
+    queue: BoundedQueue<Job>,
+    clock: Arc<dyn Clock>,
+    cost: CostModel,
     requests: AtomicU64,
     batches: AtomicU64,
+    shed_expired: AtomicU64,
+    shed_full: AtomicU64,
+    shed_shutdown: AtomicU64,
+    batch_hist: [AtomicU64; HIST_BUCKETS],
 }
 
-/// The serving engine: owns the frozen model and its worker threads.
+impl Shared {
+    fn lock_model(&self) -> std::sync::MutexGuard<'_, Arc<FrozenModel>> {
+        // Poison-tolerant (same discipline as `util::scratch::lock`): the
+        // slot only ever holds a whole Arc, so a panicking peer cannot
+        // leave it torn.
+        self.model.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The serving engine: owns the model slot and the replica threads.
 pub struct Engine {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Engine {
-    /// Validate the model and spin up the workers.
+    /// Validate the model and spin up the replicas on the system clock.
     pub fn start(model: FrozenModel, cfg: EngineConfig) -> Result<Engine> {
+        Engine::start_with_clock(model, cfg, Arc::new(SystemClock))
+    }
+
+    /// As [`Engine::start`] but with an injected time source, so expiry
+    /// behaviour is testable without sleeping.
+    pub fn start_with_clock(
+        model: FrozenModel,
+        cfg: EngineConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Engine> {
         ensure!(cfg.batch_cap >= 1, "engine batch_cap must be >= 1");
-        ensure!(cfg.workers >= 1, "engine needs at least one worker");
+        ensure!(
+            cfg.replicas >= 1 && cfg.replicas <= MAX_REPLICAS,
+            "engine replicas must be in 1..={MAX_REPLICAS}, got {}",
+            cfg.replicas
+        );
+        ensure!(cfg.queue_cap >= 1, "engine queue_cap must be >= 1");
+        ensure!(cfg.slo > Duration::ZERO, "engine slo must be positive");
         model.validate()?;
+        let threads_per_replica = if cfg.threads_per_replica > 0 {
+            cfg.threads_per_replica
+        } else {
+            (pool::default_threads() / cfg.replicas).max(1)
+        };
         let shared = Arc::new(Shared {
-            model,
+            arch_name: model.arch_name.clone(),
+            input_dim: model.arch.input_dim,
+            num_classes: model.arch.num_classes,
+            model: Mutex::new(Arc::new(model)),
             cfg,
-            state: Mutex::new(QueueState { queue: VecDeque::new(), shutdown: false }),
-            cv: Condvar::new(),
+            queue: BoundedQueue::new(cfg.queue_cap),
+            clock,
+            cost: CostModel::new(cfg.batch_cap),
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            shed_full: AtomicU64::new(0),
+            shed_shutdown: AtomicU64::new(0),
+            batch_hist: Default::default(),
         });
-        let mut workers = Vec::with_capacity(cfg.workers);
-        for k in 0..cfg.workers {
+        let mut workers = Vec::with_capacity(cfg.replicas);
+        for k in 0..cfg.replicas {
             let sh = Arc::clone(&shared);
             let spawned = std::thread::Builder::new()
-                .name(format!("dlrt-serve-{k}"))
-                .spawn(move || worker_loop(&sh));
+                .name(format!("dlrt-replica-{k}"))
+                .spawn(move || pool::with_thread_cap(threads_per_replica, || worker_loop(&sh)));
             match spawned {
                 Ok(h) => workers.push(h),
                 Err(e) => {
-                    // roll back: flag shutdown, wake and join the workers
-                    // that did start, and report the failure upward
-                    lock_state(&shared.state).shutdown = true;
-                    shared.cv.notify_all();
+                    // roll back: close the queue, join the replicas that
+                    // did start, and report the failure upward
+                    shared.queue.close();
                     for h in workers {
                         let _ = h.join();
                     }
-                    return Err(anyhow!("spawning serve worker {k}: {e}"));
+                    return Err(anyhow!("spawning serve replica {k}: {e}"));
                 }
             }
         }
-        Ok(Engine { shared, workers })
+        Ok(Engine { shared, workers: Mutex::new(workers) })
     }
 
-    /// The model being served.
-    pub fn model(&self) -> &FrozenModel {
-        &self.shared.model
+    /// The model currently being served (a snapshot; a concurrent
+    /// `/reload` does not invalidate it).
+    pub fn model(&self) -> Arc<FrozenModel> {
+        Arc::clone(&self.shared.lock_model())
+    }
+
+    /// Atomically replace the served model. The replacement must pass
+    /// validation and serve the same arch (name, input width, classes) —
+    /// in-flight batches finish on the snapshot they checked out.
+    pub fn swap_model(&self, model: FrozenModel) -> Result<()> {
+        model.validate()?;
+        let sh = &self.shared;
+        ensure!(
+            model.arch_name == sh.arch_name
+                && model.arch.input_dim == sh.input_dim
+                && model.arch.num_classes == sh.num_classes,
+            "hot-swap rejected: replacement is arch '{}' ({} -> {}), engine serves arch '{}' ({} -> {})",
+            model.arch_name,
+            model.arch.input_dim,
+            model.arch.num_classes,
+            sh.arch_name,
+            sh.input_dim,
+            sh.num_classes,
+        );
+        *sh.lock_model() = Arc::new(model);
+        Ok(())
+    }
+
+    /// Admit one request. Returns a [`Ticket`] even when the request is
+    /// shed at admission (the shed outcome is already waiting on it);
+    /// `Err` is reserved for malformed requests (wrong feature width).
+    /// `budget` overrides the engine-wide SLO for this request.
+    pub fn enqueue(&self, features: Vec<f32>, budget: Option<Duration>) -> Result<Ticket> {
+        let mut tickets = self.enqueue_many(vec![features], budget)?;
+        match tickets.pop() {
+            Some(t) => Ok(t),
+            None => Err(anyhow!("enqueue produced no ticket")),
+        }
+    }
+
+    /// Admit many requests under one queue lock (so they coalesce into
+    /// common batches rather than interleaving with drains). One ticket
+    /// per row, in input order.
+    pub fn enqueue_many(
+        &self,
+        rows: Vec<Vec<f32>>,
+        budget: Option<Duration>,
+    ) -> Result<Vec<Ticket>> {
+        let sh = &self.shared;
+        for (i, row) in rows.iter().enumerate() {
+            ensure!(
+                row.len() == sh.input_dim,
+                "request {i}: feature width {} != arch '{}' input dim {}",
+                row.len(),
+                sh.arch_name,
+                sh.input_dim
+            );
+        }
+        let deadline = sh.clock.now() + budget.unwrap_or(sh.cfg.slo);
+        let mut tickets = Vec::with_capacity(rows.len());
+        let mut items = Vec::with_capacity(rows.len());
+        for features in rows {
+            let (tx, rx) = mpsc::channel();
+            items.push((deadline, Job { features, tx }));
+            tickets.push(Ticket { rx });
+        }
+        for result in sh.queue.push_many(items) {
+            match result {
+                Push::Accepted => {}
+                Push::Full(job) => {
+                    sh.shed_full.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.tx.send(Outcome::Shed(ShedReason::QueueFull));
+                }
+                Push::Closed(job) => {
+                    sh.shed_shutdown.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.tx.send(Outcome::Shed(ShedReason::ShuttingDown));
+                }
+            }
+        }
+        Ok(tickets)
     }
 
     /// Serve one request, blocking until its micro-batch is evaluated.
+    /// Sheds surface as errors here; callers that need to tell a shed
+    /// from a failure use [`Engine::enqueue`] and match the [`Outcome`].
     pub fn infer(&self, features: Vec<f32>) -> Result<Prediction> {
-        let mut out = self.submit(vec![features])?;
-        recv_one(&mut out[0].1)
+        outcome_to_result(self.enqueue(features, None)?.wait())
     }
 
-    /// Serve many requests at once: all rows enqueue under one lock (so up
-    /// to `batch_cap` of them coalesce into common batches), then block
-    /// for every answer, in input order.
+    /// Serve many requests at once, blocking for every answer in input
+    /// order. Keep `rows.len()` within `queue_cap` or overflow rows come
+    /// back as shed errors.
     pub fn infer_many(&self, rows: Vec<Vec<f32>>) -> Result<Vec<Prediction>> {
-        let mut pending = self.submit(rows)?;
-        pending.iter_mut().map(|(_, rx)| recv_one(rx)).collect()
+        let tickets = self.enqueue_many(rows, None)?;
+        tickets.into_iter().map(|t| outcome_to_result(t.wait())).collect()
     }
 
-    /// Validate and enqueue rows, returning one receiver per row.
-    #[allow(clippy::type_complexity)]
-    fn submit(
-        &self,
-        rows: Vec<Vec<f32>>,
-    ) -> Result<Vec<(usize, mpsc::Receiver<std::result::Result<Prediction, String>>)>> {
-        let dim = self.shared.model.arch.input_dim;
-        for (i, row) in rows.iter().enumerate() {
-            ensure!(
-                row.len() == dim,
-                "request {i}: feature width {} != arch '{}' input dim {dim}",
-                row.len(),
-                self.shared.model.arch_name
-            );
-        }
-        let mut pending = Vec::with_capacity(rows.len());
-        {
-            let mut st = lock_state(&self.shared.state);
-            ensure!(!st.shutdown, "engine is shut down");
-            for (i, features) in rows.into_iter().enumerate() {
-                let (tx, rx) = mpsc::channel();
-                st.queue.push_back(Request { features, tx });
-                pending.push((i, rx));
-            }
-        }
-        self.shared.cv.notify_all();
-        Ok(pending)
-    }
-
-    /// Lifetime request/batch counters.
+    /// Lifetime counters plus the instantaneous queue depth.
     pub fn stats(&self) -> EngineStats {
+        let sh = &self.shared;
+        let mut batch_hist = [0u64; HIST_BUCKETS];
+        for (slot, c) in batch_hist.iter_mut().zip(sh.batch_hist.iter()) {
+            *slot = c.load(Ordering::Relaxed);
+        }
         EngineStats {
-            requests: self.shared.requests.load(Ordering::Relaxed),
-            batches: self.shared.batches.load(Ordering::Relaxed),
+            requests: sh.requests.load(Ordering::Relaxed),
+            batches: sh.batches.load(Ordering::Relaxed),
+            shed_expired: sh.shed_expired.load(Ordering::Relaxed),
+            shed_full: sh.shed_full.load(Ordering::Relaxed),
+            shed_shutdown: sh.shed_shutdown.load(Ordering::Relaxed),
+            queue_depth: sh.queue.depth() as u64,
+            batch_hist,
+        }
+    }
+
+    /// Close the queue (new admissions shed as shutting-down), drain
+    /// every accepted request, and join the replicas. Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&self) {
+        self.shared.queue.close();
+        let handles: Vec<_> = {
+            let mut g = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
         }
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        {
-            lock_state(&self.shared.state).shutdown = true;
-        }
-        self.shared.cv.notify_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
-fn recv_one(
-    rx: &mut mpsc::Receiver<std::result::Result<Prediction, String>>,
-) -> Result<Prediction> {
-    match rx.recv() {
-        Ok(Ok(p)) => Ok(p),
-        Ok(Err(msg)) => Err(anyhow!("serving batch failed: {msg}")),
-        Err(_) => Err(anyhow!("engine worker dropped the request (engine shut down?)")),
+fn outcome_to_result(out: Outcome) -> Result<Prediction> {
+    match out {
+        Outcome::Answer(p) => Ok(p),
+        Outcome::Shed(reason) => Err(anyhow!("request shed: {}", reason.as_str())),
+        Outcome::Failed(msg) => Err(anyhow!("serving batch failed: {msg}")),
     }
 }
 
 fn worker_loop(sh: &Shared) {
+    let now = || sh.clock.now();
+    let lead = |n: usize| sh.cost.lead(n);
     loop {
-        let mut st = lock_state(&sh.state);
-        while st.queue.is_empty() && !st.shutdown {
-            st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
-        }
-        if st.queue.is_empty() {
-            return; // shutdown and fully drained
-        }
-        // Coalesce: wait for co-riders up to batch_cap or the deadline.
-        // On shutdown the delay is skipped so the tail drains immediately.
-        if st.queue.len() < sh.cfg.batch_cap && !st.shutdown {
-            let deadline = Instant::now() + sh.cfg.max_delay;
-            loop {
-                let now = Instant::now();
-                if now >= deadline || st.queue.len() >= sh.cfg.batch_cap || st.shutdown {
-                    break;
+        let drained = match sh.cfg.policy {
+            DrainPolicy::Eager => sh.queue.pop_batch(sh.cfg.batch_cap, &now, None),
+            DrainPolicy::SloSlack => sh.queue.pop_batch(sh.cfg.batch_cap, &now, Some(&lead)),
+        };
+        match drained {
+            Drained::Closed => return,
+            Drained::Batch { serve, expired } => {
+                if !expired.is_empty() {
+                    sh.shed_expired.fetch_add(expired.len() as u64, Ordering::Relaxed);
+                    for p in expired {
+                        let _ = p.item.tx.send(Outcome::Shed(ShedReason::DeadlineExpired));
+                    }
                 }
-                let (guard, timeout) = sh
-                    .cv
-                    .wait_timeout(st, deadline - now)
-                    .unwrap_or_else(|e| e.into_inner());
-                st = guard;
-                if timeout.timed_out() {
-                    break;
+                if !serve.is_empty() {
+                    serve_batch(sh, serve);
                 }
             }
         }
-        let take = st.queue.len().min(sh.cfg.batch_cap);
-        let reqs: Vec<Request> = st.queue.drain(..take).collect();
-        drop(st);
-        if reqs.is_empty() {
-            // a peer drained the queue while this worker sat in the
-            // coalescing wait — nothing to serve this round
-            continue;
-        }
-        serve_batch(sh, reqs);
     }
 }
 
-fn serve_batch(sh: &Shared, reqs: Vec<Request>) {
-    let dim = sh.model.arch.input_dim;
-    let mut x = crate::linalg::Matrix::zeros(reqs.len(), dim);
-    for (i, r) in reqs.iter().enumerate() {
-        x.row_mut(i).copy_from_slice(&r.features);
+fn serve_batch(sh: &Shared, batch: Vec<Pending<Job>>) {
+    // One checkout per drain: the whole batch runs against this snapshot,
+    // so a concurrent hot-swap can never mix layers inside a batch.
+    let model = Arc::clone(&sh.lock_model());
+    let n = batch.len();
+    let mut x = crate::linalg::Matrix::zeros(n, sh.input_dim);
+    for (i, p) in batch.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&p.item.features);
     }
-    match sh.model.forward_logits(&x) {
+    let t0 = sh.clock.now();
+    let result = model.forward_logits(&x);
+    let elapsed = sh.clock.now().saturating_duration_since(t0);
+    sh.cost.observe(n, elapsed.as_secs_f64());
+    match result {
         Ok(logits) => {
             let labels = logits.argmax_rows();
-            sh.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+            sh.requests.fetch_add(n as u64, Ordering::Relaxed);
             sh.batches.fetch_add(1, Ordering::Relaxed);
-            for (i, r) in reqs.into_iter().enumerate() {
+            sh.batch_hist[hist_bucket(n)].fetch_add(1, Ordering::Relaxed);
+            for (i, p) in batch.into_iter().enumerate() {
                 // a receiver that gave up is not an engine error
-                let _ = r
-                    .tx
-                    .send(Ok(Prediction { logits: logits.row(i).to_vec(), label: labels[i] }));
+                let _ = p.item.tx.send(Outcome::Answer(Prediction {
+                    logits: logits.row(i).to_vec(),
+                    label: labels[i],
+                }));
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            for r in reqs {
-                let _ = r.tx.send(Err(msg.clone()));
+            for p in batch {
+                let _ = p.item.tx.send(Outcome::Failed(msg.clone()));
             }
         }
     }
@@ -322,7 +612,12 @@ mod tests {
         let direct = model.forward_logits(&x).unwrap();
         let engine = Engine::start(
             model,
-            EngineConfig { batch_cap: 4, max_delay: Duration::from_millis(1), workers: 2 },
+            EngineConfig {
+                batch_cap: 4,
+                replicas: 2,
+                policy: DrainPolicy::Eager,
+                ..EngineConfig::default()
+            },
         )
         .unwrap();
         for i in 0..x.rows() {
@@ -333,6 +628,7 @@ mod tests {
         let st = engine.stats();
         assert_eq!(st.requests, 9);
         assert!(st.batches >= 1 && st.batches <= 9);
+        assert_eq!(st.shed_total(), 0);
     }
 
     #[test]
@@ -343,11 +639,17 @@ mod tests {
             (0..32).map(|_| rng.normal_matrix(1, 64).into_vec()).collect();
         let x = Matrix::from_vec(32, 64, rows.concat());
         let direct = model.forward_logits(&x).unwrap();
-        // one worker + all 32 rows enqueued under one lock: the worker
-        // drains exactly ceil(32/8) = 4 full batches, no deadline waits
+        // one replica + all 32 rows enqueued under one lock: the replica
+        // drains exactly ceil(32/8) = 4 full batches (len >= batch_cap
+        // drains immediately under either policy, no SLO waits)
         let engine = Engine::start(
             model,
-            EngineConfig { batch_cap: 8, max_delay: Duration::from_millis(50), workers: 1 },
+            EngineConfig {
+                batch_cap: 8,
+                replicas: 1,
+                slo: Duration::from_secs(5),
+                ..EngineConfig::default()
+            },
         )
         .unwrap();
         let preds = engine.infer_many(rows).unwrap();
@@ -358,18 +660,97 @@ mod tests {
         assert_eq!(st.requests, 32);
         assert_eq!(st.batches, 4, "micro-batching must coalesce, got {st:?}");
         assert!((st.mean_batch() - 8.0).abs() < 1e-9);
+        // every drain was 8 rows -> all in the "5-8" bucket
+        assert_eq!(st.batch_hist[3], 4, "{st:?}");
+        assert_eq!(st.batch_hist.iter().sum::<u64>(), 4);
+        assert_eq!(st.queue_depth, 0);
     }
 
     #[test]
-    fn bad_requests_and_shutdown_are_clean_errors() {
+    fn bad_requests_and_bad_configs_are_clean_errors() {
         let engine = Engine::start(tiny_model(15), EngineConfig::default()).unwrap();
         let err = engine.infer(vec![0.0; 3]).unwrap_err().to_string();
         assert!(err.contains("input dim"), "{err}");
-        // zero-size config rejected up front
-        assert!(Engine::start(
-            tiny_model(16),
-            EngineConfig { batch_cap: 0, ..EngineConfig::default() }
+        // zero-size configs rejected up front
+        for bad in [
+            EngineConfig { batch_cap: 0, ..EngineConfig::default() },
+            EngineConfig { replicas: 0, ..EngineConfig::default() },
+            EngineConfig { replicas: MAX_REPLICAS + 1, ..EngineConfig::default() },
+            EngineConfig { queue_cap: 0, ..EngineConfig::default() },
+            EngineConfig { slo: Duration::ZERO, ..EngineConfig::default() },
+        ] {
+            assert!(Engine::start(tiny_model(16), bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_and_rejects_new() {
+        let model = tiny_model(17);
+        let mut rng = Rng::new(18);
+        let x = rng.normal_matrix(5, 64);
+        let direct = model.forward_logits(&x).unwrap();
+        let engine = Engine::start(
+            model,
+            EngineConfig { replicas: 2, slo: Duration::from_secs(30), ..EngineConfig::default() },
         )
-        .is_err());
+        .unwrap();
+        let rows: Vec<Vec<f32>> = (0..x.rows()).map(|i| x.row(i).to_vec()).collect();
+        let tickets = engine.enqueue_many(rows, None).unwrap();
+        engine.shutdown();
+        // every request accepted before the close gets a real answer
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.wait() {
+                Outcome::Answer(p) => {
+                    assert_eq!(p.logits, direct.row(i).to_vec(), "row {i}");
+                }
+                other => panic!("accepted request {i} lost its answer: {other:?}"),
+            }
+        }
+        // admissions after the close are shed, not hung
+        match engine.enqueue(vec![0.0; 64], None).unwrap().wait() {
+            Outcome::Shed(ShedReason::ShuttingDown) => {}
+            other => panic!("expected shutdown shed, got {other:?}"),
+        }
+        let st = engine.stats();
+        assert_eq!(st.shed_shutdown, 1);
+        assert!(engine.infer(vec![0.0; 64]).is_err());
+    }
+
+    #[test]
+    fn hot_swap_serves_new_model_and_rejects_mismatch() {
+        let model_a = tiny_model(21);
+        let model_b = tiny_model(22);
+        let mut rng = Rng::new(23);
+        let x = rng.normal_matrix(3, 64);
+        let direct_b = model_b.forward_logits(&x).unwrap();
+        let engine = Engine::start(
+            model_a,
+            EngineConfig { policy: DrainPolicy::Eager, ..EngineConfig::default() },
+        )
+        .unwrap();
+        engine.swap_model(model_b).unwrap();
+        for i in 0..x.rows() {
+            let p = engine.infer(x.row(i).to_vec()).unwrap();
+            assert_eq!(p.logits, direct_b.row(i).to_vec(), "row {i} not from swapped model");
+        }
+        // a model with a different serving contract is refused
+        let mut alien = tiny_model(24);
+        alien.arch_name = "not_mlp_tiny".into();
+        let err = engine.swap_model(alien).unwrap_err().to_string();
+        assert!(err.contains("hot-swap rejected"), "{err}");
+    }
+
+    #[test]
+    fn hist_buckets_cover_the_line() {
+        assert_eq!(hist_bucket(1), 0);
+        assert_eq!(hist_bucket(2), 1);
+        assert_eq!(hist_bucket(3), 2);
+        assert_eq!(hist_bucket(4), 2);
+        assert_eq!(hist_bucket(5), 3);
+        assert_eq!(hist_bucket(8), 3);
+        assert_eq!(hist_bucket(64), 6);
+        assert_eq!(hist_bucket(65), 7);
+        assert_eq!(hist_bucket(4096), 7);
+        assert_eq!(hist_labels().len(), HIST_BUCKETS);
     }
 }

@@ -1,0 +1,481 @@
+//! Dependency-free HTTP/JSON front door for the serve engine.
+//!
+//! One `std::net::TcpListener` accept loop hands each connection to its
+//! own handler thread (keep-alive, bounded by
+//! [`HttpConfig::max_connections`]); handlers parse a minimal HTTP/1.1
+//! subset (request line, headers, `Content-Length` body) and feed
+//! [`Engine::enqueue`], so every request flows through the same bounded
+//! queue and SLO-aware micro-batcher as embedded callers. Endpoints:
+//!
+//! - `POST /infer` `{"features": [...], "slo_ms": 25}` → `200` with
+//!   `{"label", "logits"}`, `503` when shed (queue full, deadline
+//!   expired, or shutting down), `400` on malformed input.
+//! - `GET /stats` → [`crate::serve::EngineStats`] as JSON.
+//! - `GET /healthz` → serving contract (arch, input width, ranks).
+//! - `POST /reload` `{"path": "frozen.json"}` → atomic model hot-swap;
+//!   `409` when the replacement breaks the serving contract.
+//!
+//! Shutdown order matters: [`HttpServer::shutdown`] stops the listener
+//! and joins the handlers first, then the owner shuts the engine down —
+//! so every request admitted over HTTP still gets its reply. This file
+//! reads no wall clock (dlrt-lint L4): admission deadlines are stamped
+//! inside the engine through its injected [`crate::metrics::Clock`].
+
+use super::engine::{hist_labels, Engine, Outcome};
+use super::FrozenModel;
+use crate::util::Json;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Longest tolerated request/header line, header count, and body, so a
+/// misbehaving client cannot balloon a handler's memory.
+const MAX_LINE_BYTES: usize = 16 * 1024;
+const MAX_HEADERS: usize = 64;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Front-door knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Concurrent connections beyond this are refused with a 503.
+    pub max_connections: usize,
+    /// Socket read timeout. Idle keep-alive connections wake this often
+    /// to check for shutdown, so it also bounds shutdown latency.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { max_connections: 256, read_timeout: Duration::from_millis(500) }
+    }
+}
+
+struct HttpShared {
+    engine: Arc<Engine>,
+    cfg: HttpConfig,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// The listening server. Dropping it (or calling
+/// [`shutdown`](HttpServer::shutdown)) stops the accept loop and joins
+/// every connection handler; the engine it serves is left running.
+pub struct HttpServer {
+    shared: Arc<HttpShared>,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+    addr: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks an ephemeral
+    /// port — read it back from [`HttpServer::addr`]) and start serving
+    /// `engine`.
+    pub fn bind(engine: Arc<Engine>, addr: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        let shared = Arc::new(HttpShared {
+            engine,
+            cfg,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("dlrt-http-accept".into())
+            .spawn(move || accept_loop(&sh, &listener))
+            .map_err(|e| anyhow!("spawning accept thread: {e}"))?;
+        Ok(HttpServer { shared, accept: Mutex::new(Some(accept)), addr: local })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The engine behind the door.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.shared.engine
+    }
+
+    /// Block until the accept loop exits — the CLI's serve loop.
+    pub fn wait(&self) {
+        let handle = self.accept.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, wake the accept loop, and join every connection
+    /// handler. Idempotent; also runs on drop. The engine keeps running —
+    /// shut it down after this so in-flight HTTP requests drain first.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        self.wait();
+        let handles: Vec<_> = {
+            let mut g = self.shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+            g.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(sh: &Arc<HttpShared>, listener: &TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if sh.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return; // the shutdown wake-up connection
+        }
+        let mut conns = sh.conns.lock().unwrap_or_else(|e| e.into_inner());
+        conns.retain(|h| !h.is_finished());
+        if conns.len() >= sh.cfg.max_connections {
+            drop(conns);
+            let mut stream = stream;
+            let _ = write_response(&mut stream, 503, &err_json("connection limit reached"), false);
+            continue;
+        }
+        let sh2 = Arc::clone(sh);
+        let spawned = std::thread::Builder::new()
+            .name("dlrt-http-conn".into())
+            .spawn(move || handle_conn(&sh2, stream));
+        if let Ok(h) = spawned {
+            conns.push(h);
+        }
+        // spawn failure drops the stream, which closes the connection —
+        // the client sees a reset instead of a hang
+    }
+}
+
+fn handle_conn(sh: &HttpShared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(sh.cfg.read_timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let req = match read_request(sh, &mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean EOF or shutdown while idle
+            Err(ReadError::Malformed(msg)) => {
+                let _ = write_response(&mut writer, 400, &err_json(&msg), false);
+                return;
+            }
+            Err(ReadError::Io) => return,
+        };
+        let (status, body) = dispatch(sh, &req.method, &req.path, &req.body);
+        let keep = !req.close && !sh.shutdown.load(Ordering::Relaxed);
+        if write_response(&mut writer, status, &body, keep).is_err() || !keep {
+            return;
+        }
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+    close: bool,
+}
+
+enum ReadError {
+    /// Transport-level failure (or shutdown mid-request): close silently.
+    Io,
+    /// Protocol violation worth a 400 before closing.
+    Malformed(String),
+}
+
+/// Append one complete `\n`-terminated line to `line`. Read timeouts are
+/// idle ticks, not errors: re-check the shutdown flag and keep waiting.
+/// Returns `false` on clean EOF (only when nothing was buffered).
+fn read_line_patient(
+    sh: &HttpShared,
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> std::result::Result<bool, ReadError> {
+    loop {
+        match reader.read_line(line) {
+            Ok(0) => {
+                return if line.is_empty() {
+                    Ok(false)
+                } else {
+                    Err(ReadError::Malformed("truncated request".into()))
+                };
+            }
+            Ok(_) => {
+                if line.ends_with('\n') {
+                    return Ok(true);
+                }
+                // bytes without a newline only happen at EOF; the next
+                // read reports it
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if sh.shutdown.load(Ordering::Relaxed) {
+                    return if line.is_empty() { Ok(false) } else { Err(ReadError::Io) };
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(ReadError::Io),
+        }
+        if line.len() > MAX_LINE_BYTES {
+            return Err(ReadError::Malformed("header line too long".into()));
+        }
+    }
+}
+
+fn read_body_patient(
+    sh: &HttpShared,
+    reader: &mut BufReader<TcpStream>,
+    len: usize,
+) -> std::result::Result<Vec<u8>, ReadError> {
+    let mut buf = vec![0u8; len];
+    let mut off = 0usize;
+    while off < len {
+        match reader.read(&mut buf[off..]) {
+            Ok(0) => return Err(ReadError::Malformed("truncated body".into())),
+            Ok(n) => off += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if sh.shutdown.load(Ordering::Relaxed) {
+                    return Err(ReadError::Io);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(ReadError::Io),
+        }
+    }
+    Ok(buf)
+}
+
+fn read_request(
+    sh: &HttpShared,
+    reader: &mut BufReader<TcpStream>,
+) -> std::result::Result<Option<HttpRequest>, ReadError> {
+    // Request line; tolerate blank lines between keep-alive requests.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if !read_line_patient(sh, reader, &mut line)? {
+            return Ok(None);
+        }
+        if !line.trim().is_empty() {
+            break;
+        }
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(ReadError::Malformed(format!("bad request line: {}", line.trim())));
+    }
+    let mut content_length = 0usize;
+    let mut close = false;
+    let mut saw_blank = false;
+    for _ in 0..MAX_HEADERS {
+        line.clear();
+        if !read_line_patient(sh, reader, &mut line)? {
+            return Err(ReadError::Malformed("truncated headers".into()));
+        }
+        let l = line.trim();
+        if l.is_empty() {
+            saw_blank = true;
+            break;
+        }
+        if let Some((k, v)) = l.split_once(':') {
+            let v = v.trim();
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .parse::<usize>()
+                    .map_err(|_| ReadError::Malformed(format!("bad content-length: {v}")))?;
+            } else if k.trim().eq_ignore_ascii_case("connection")
+                && v.eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    if !saw_blank {
+        return Err(ReadError::Malformed("too many headers".into()));
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(ReadError::Malformed(format!("body too large: {content_length} bytes")));
+    }
+    let body_bytes = read_body_patient(sh, reader, content_length)?;
+    let body = String::from_utf8(body_bytes)
+        .map_err(|_| ReadError::Malformed("body is not UTF-8".into()))?;
+    Ok(Some(HttpRequest { method, path, body, close }))
+}
+
+fn dispatch(sh: &HttpShared, method: &str, path: &str, body: &str) -> (u16, Json) {
+    match (method, path) {
+        ("POST", "/infer") => infer_endpoint(sh, body),
+        ("GET", "/stats") => (200, stats_json(&sh.engine)),
+        ("GET", "/healthz") => (200, healthz_json(&sh.engine)),
+        ("POST", "/reload") => reload_endpoint(sh, body),
+        ("GET" | "POST", _) => (404, err_json(&format!("no such endpoint: {path}"))),
+        _ => (405, err_json(&format!("method not allowed: {method}"))),
+    }
+}
+
+fn infer_endpoint(sh: &HttpShared, body: &str) -> (u16, Json) {
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_json(&format!("bad JSON: {e:#}"))),
+    };
+    let features = match parsed.req("features").and_then(Json::to_f32_vec) {
+        Ok(f) => f,
+        Err(e) => return (400, err_json(&format!("bad features: {e:#}"))),
+    };
+    let budget = match parsed.get("slo_ms").map(Json::as_f64) {
+        None => None,
+        Some(Ok(ms)) if ms > 0.0 && ms.is_finite() => {
+            Some(Duration::from_secs_f64((ms / 1000.0).clamp(0.0, 3600.0)))
+        }
+        Some(_) => return (400, err_json("slo_ms must be a positive number")),
+    };
+    let ticket = match sh.engine.enqueue(features, budget) {
+        Ok(t) => t,
+        Err(e) => return (400, err_json(&format!("{e:#}"))),
+    };
+    match ticket.wait() {
+        Outcome::Answer(p) => (
+            200,
+            Json::obj(vec![
+                ("label", Json::Num(p.label as f64)),
+                ("logits", Json::f32_array(&p.logits)),
+            ]),
+        ),
+        Outcome::Shed(reason) => (
+            503,
+            Json::obj(vec![
+                ("error", Json::str("shed")),
+                ("reason", Json::str(reason.as_str())),
+            ]),
+        ),
+        Outcome::Failed(msg) => (500, err_json(&msg)),
+    }
+}
+
+fn stats_json(engine: &Engine) -> Json {
+    let st = engine.stats();
+    let hist = Json::Arr(
+        hist_labels()
+            .iter()
+            .zip(st.batch_hist.iter())
+            .map(|(label, &drains)| {
+                Json::obj(vec![
+                    ("batch", Json::str(*label)),
+                    ("drains", Json::Num(drains as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("requests", Json::Num(st.requests as f64)),
+        ("batches", Json::Num(st.batches as f64)),
+        ("mean_batch", Json::Num(st.mean_batch())),
+        ("queue_depth", Json::Num(st.queue_depth as f64)),
+        ("shed_expired", Json::Num(st.shed_expired as f64)),
+        ("shed_full", Json::Num(st.shed_full as f64)),
+        ("shed_shutdown", Json::Num(st.shed_shutdown as f64)),
+        ("shed_total", Json::Num(st.shed_total() as f64)),
+        ("batch_hist", hist),
+    ])
+}
+
+fn healthz_json(engine: &Engine) -> Json {
+    let model = engine.model();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("arch", Json::str(model.arch_name.clone())),
+        ("input_dim", Json::Num(model.arch.input_dim as f64)),
+        ("num_classes", Json::Num(model.arch.num_classes as f64)),
+        ("ranks", Json::usize_array(&model.ranks())),
+    ])
+}
+
+fn reload_endpoint(sh: &HttpShared, body: &str) -> (u16, Json) {
+    let path = match Json::parse(body).and_then(|v| Ok(v.req("path")?.as_str()?.to_string())) {
+        Ok(p) => p,
+        Err(e) => return (400, err_json(&format!("bad reload request: {e:#}"))),
+    };
+    let rt = crate::runtime::Runtime::native();
+    let model = match FrozenModel::load(Path::new(&path), &rt) {
+        Ok(m) => m,
+        Err(e) => return (409, err_json(&format!("loading '{path}': {e:#}"))),
+    };
+    if let Err(e) = sh.engine.swap_model(model) {
+        return (409, err_json(&format!("{e:#}")));
+    }
+    let ranks = sh.engine.model().ranks();
+    (200, Json::obj(vec![("ok", Json::Bool(true)), ("ranks", Json::usize_array(&ranks))]))
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {len}\r\nConnection: {conn}\r\n\r\n{body}",
+        reason = status_reason(status),
+        len = body.len(),
+    )?;
+    stream.flush()
+}

@@ -7,7 +7,7 @@
 //! `x · (S Vᵀ)ᵀ · Uᵀ` instead of the full `m x n` weight — the same
 //! merged-factor deployment story Trained Rank Pruning ships (Xu+ 2019).
 //!
-//! Two pieces:
+//! Four pieces:
 //!
 //! * [`FrozenModel`] ([`frozen`]) — the inference form of a trained
 //!   [`crate::dlrt::Network`]. Each layer freezes to either a dense `W` or
@@ -18,13 +18,22 @@
 //!   ([`FrozenModel::from_checkpoint`] — the `dlrt export` CLI), and
 //!   serialized to a versioned JSON model file whose load → forward is
 //!   bitwise-reproducible.
-//! * [`Engine`] ([`engine`]) — a thread-pooled micro-batching server over
-//!   one frozen model: single requests queue, coalesce up to `batch_cap`
-//!   or a deadline, and drain as one batched forward whose matmuls run on
-//!   the threaded [`crate::linalg`] kernels ([`crate::util::pool`]).
-//!   Per-sample logits are independent of batch composition (every kernel
-//!   is row-independent), so micro-batching changes latency, never
-//!   answers.
+//! * [`BoundedQueue`] ([`queue`]) — the bounded MPMC deadline queue
+//!   between admission and the replica drain loops: rejects (never
+//!   blocks) producers when full or closed, and blocks consumers until
+//!   the SLO-aware drain rule fires.
+//! * [`Engine`] ([`engine`]) — `replicas` independent drain loops over a
+//!   hot-swappable frozen model: requests coalesce up to `batch_cap` or
+//!   until the oldest request's slack hits the EWMA-estimated batch
+//!   cost, expired requests are shed, and each replica's batched forward
+//!   runs on a `total/replicas` slice of the kernel threads
+//!   ([`crate::util::pool`]). Per-sample logits are independent of batch
+//!   composition and replica placement (every kernel is
+//!   row-independent), so fan-out changes latency, never answers.
+//! * [`HttpServer`] ([`http`]) — the dependency-free HTTP/JSON front
+//!   door (`POST /infer`, `GET /stats`, `GET /healthz`, `POST /reload`)
+//!   behind `dlrt serve`; sheds map to 503 so overload degrades
+//!   gracefully. DESIGN.md §11 documents the architecture.
 //!
 //! Parity with training is locked down three ways (`tests/serve_parity.rs`):
 //! the backend's `forward_logits` agrees exactly with
@@ -35,6 +44,13 @@
 
 pub mod engine;
 pub mod frozen;
+pub mod http;
+pub mod queue;
 
-pub use engine::{Engine, EngineConfig, EngineStats, Prediction};
+pub use engine::{
+    hist_labels, DrainPolicy, Engine, EngineConfig, EngineStats, Outcome, Prediction, ShedReason,
+    Ticket, HIST_BUCKETS, MAX_REPLICAS,
+};
 pub use frozen::{eval_logits, FrozenLayer, FrozenModel, FROZEN_FORMAT, FROZEN_VERSION};
+pub use http::{HttpConfig, HttpServer};
+pub use queue::{BoundedQueue, Drained, Pending, Push};

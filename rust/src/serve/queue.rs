@@ -1,0 +1,359 @@
+//! Bounded MPMC deadline queue: the hand-off between the HTTP front door
+//! and the replica drain loops.
+//!
+//! Every queued item carries an admission deadline (admit time + SLO).
+//! Producers [`push`](BoundedQueue::push) and are rejected — never
+//! blocked — when the queue is full or closed; the caller sheds the
+//! request with a 503. Consumers block in
+//! [`pop_batch`](BoundedQueue::pop_batch), which implements the SLO-aware
+//! drain rule (DESIGN.md §11): drain when the queue reaches `batch_cap`,
+//! or when the oldest live item's slack falls to the caller-estimated
+//! batch cost, or immediately once the queue is closed. Items whose
+//! deadline has already passed are returned separately (`expired`) so the
+//! replica can shed them instead of wasting a forward pass.
+//!
+//! Close/shutdown linearizes under the one state lock: `close()` flips
+//! `closed` under the same mutex every `push` checks, so a push either
+//! lands before the close (and is drained — consumers only see
+//! [`Drained::Closed`] after the queue is empty) or observes `closed` and
+//! is rejected. No accepted item is ever dropped without being returned
+//! from a `pop_batch`.
+//!
+//! Under `--cfg loom` the mutex/condvar switch to the in-tree loom shim
+//! so `rust/tests/loom_serve_queue.rs` can model push/pop/close
+//! interleavings (same pattern as `util/scratch.rs`).
+
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One queued item plus its admission deadline.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub deadline: Instant,
+    pub item: T,
+}
+
+/// Outcome of a push. Rejections hand the item back so the caller can
+/// reply to it (shed with 503) without a clone.
+#[derive(Debug)]
+pub enum Push<T> {
+    Accepted,
+    /// Queue at capacity; admission refused.
+    Full(T),
+    /// Queue closed (engine shutting down); admission refused.
+    Closed(T),
+}
+
+/// Outcome of a blocking batch pop.
+#[derive(Debug)]
+pub enum Drained<T> {
+    /// `serve` is the batch to evaluate (possibly empty); `expired` are
+    /// items whose deadline passed before a replica reached them — the
+    /// caller sheds those. At least one of the two is non-empty.
+    Batch { serve: Vec<Pending<T>>, expired: Vec<Pending<T>> },
+    /// The queue is closed and fully drained; the consumer should exit.
+    Closed,
+}
+
+struct State<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer FIFO with deadlines and close
+/// semantics. See the module docs for the drain policy.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            cap: cap.max(1),
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, State<T>> {
+        // Poison-tolerant: a consumer that panicked mid-drain must not
+        // wedge every producer behind a PoisonError.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Admit one item. Never blocks.
+    pub fn push(&self, deadline: Instant, item: T) -> Push<T> {
+        {
+            let mut st = self.lock_state();
+            if st.closed {
+                return Push::Closed(item);
+            }
+            if st.queue.len() >= self.cap {
+                return Push::Full(item);
+            }
+            st.queue.push_back(Pending { deadline, item });
+        }
+        self.cv.notify_one();
+        Push::Accepted
+    }
+
+    /// Admit a batch under one lock, so a multi-row submit is enqueued
+    /// contiguously rather than interleaved with drains. Returns one
+    /// [`Push`] per item, in order.
+    pub fn push_many(&self, items: Vec<(Instant, T)>) -> Vec<Push<T>> {
+        let mut out = Vec::with_capacity(items.len());
+        let mut accepted = 0usize;
+        {
+            let mut st = self.lock_state();
+            for (deadline, item) in items {
+                if st.closed {
+                    out.push(Push::Closed(item));
+                } else if st.queue.len() >= self.cap {
+                    out.push(Push::Full(item));
+                } else {
+                    st.queue.push_back(Pending { deadline, item });
+                    out.push(Push::Accepted);
+                    accepted += 1;
+                }
+            }
+        }
+        if accepted > 0 {
+            self.cv.notify_all();
+        }
+        out
+    }
+
+    /// Reject all future pushes and wake every consumer. Items already
+    /// accepted stay queued and will be drained.
+    pub fn close(&self) {
+        {
+            let mut st = self.lock_state();
+            st.closed = true;
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock_state().closed
+    }
+
+    /// Current number of queued items.
+    pub fn depth(&self) -> usize {
+        self.lock_state().queue.len()
+    }
+
+    /// Block until there is something to do, then drain up to `batch_cap`
+    /// items. `now` supplies the current time (injectable for tests);
+    /// `lead` estimates how long before an item's deadline the drain must
+    /// start for a batch of the given size to finish in time — `None`
+    /// means drain as soon as a consumer is free (eager policy).
+    ///
+    /// Drain triggers: queue closed, `batch_cap` reached, oldest live
+    /// item's slack ≤ `lead(batch_size)`, or (eager) any item present.
+    /// Expired items short-circuit: they are returned without waiting so
+    /// their shed replies are not delayed by the coalescing window.
+    pub fn pop_batch(
+        &self,
+        batch_cap: usize,
+        now: &dyn Fn() -> Instant,
+        lead: Option<&dyn Fn(usize) -> Duration>,
+    ) -> Drained<T> {
+        let batch_cap = batch_cap.max(1);
+        let mut st = self.lock_state();
+        loop {
+            let now_ts = now();
+            // Strip already-expired items off the front. Deadlines are
+            // usually monotone (one shared SLO), so the front check
+            // catches nearly everything; per-request deadlines that
+            // expire mid-queue are caught at drain time below.
+            let mut expired: Vec<Pending<T>> = Vec::new();
+            while st.queue.front().is_some_and(|p| p.deadline < now_ts) {
+                if let Some(p) = st.queue.pop_front() {
+                    expired.push(p);
+                }
+            }
+            if st.queue.is_empty() {
+                if !expired.is_empty() {
+                    return Drained::Batch { serve: Vec::new(), expired };
+                }
+                if st.closed {
+                    return Drained::Closed;
+                }
+                st = match self.cv.wait(st) {
+                    Ok(g) => g,
+                    Err(e) => e.into_inner(),
+                };
+                continue;
+            }
+            let n = st.queue.len().min(batch_cap);
+            let wait_for: Option<Duration> = if st.closed || st.queue.len() >= batch_cap {
+                None
+            } else {
+                match lead {
+                    None => None,
+                    Some(lead_fn) => {
+                        let front_deadline = match st.queue.front() {
+                            Some(p) => p.deadline,
+                            None => continue,
+                        };
+                        let slack = front_deadline.saturating_duration_since(now_ts);
+                        let lead_d = lead_fn(n);
+                        if slack <= lead_d {
+                            None
+                        } else {
+                            Some(slack - lead_d)
+                        }
+                    }
+                }
+            };
+            match wait_for {
+                None => {
+                    let mut serve = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        if let Some(p) = st.queue.pop_front() {
+                            if p.deadline < now_ts {
+                                expired.push(p);
+                            } else {
+                                serve.push(p);
+                            }
+                        }
+                    }
+                    return Drained::Batch { serve, expired };
+                }
+                Some(d) => {
+                    if !expired.is_empty() {
+                        // Deliver the sheds now; the live remainder keeps
+                        // coalescing and a later pop picks it up.
+                        return Drained::Batch { serve: Vec::new(), expired };
+                    }
+                    st = match self.cv.wait_timeout(st, d) {
+                        Ok((g, _)) => g,
+                        Err(e) => e.into_inner().0,
+                    };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::metrics::{Clock, ManualClock};
+
+    fn far(clock: &ManualClock, ms: u64) -> Instant {
+        clock.now() + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn push_pop_fifo_order() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        for i in 0..5u32 {
+            assert!(matches!(q.push(far(&clock, 1000), i), Push::Accepted));
+        }
+        assert_eq!(q.depth(), 5);
+        match q.pop_batch(8, &|| clock.now(), None) {
+            Drained::Batch { serve, expired } => {
+                assert!(expired.is_empty());
+                let got: Vec<u32> = serve.into_iter().map(|p| p.item).collect();
+                assert_eq!(got, vec![0, 1, 2, 3, 4]);
+            }
+            Drained::Closed => panic!("queue is open"),
+        }
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn full_and_closed_pushes_hand_the_item_back() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert!(matches!(q.push(far(&clock, 1000), 1), Push::Accepted));
+        assert!(matches!(q.push(far(&clock, 1000), 2), Push::Accepted));
+        match q.push(far(&clock, 1000), 3) {
+            Push::Full(item) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        q.close();
+        match q.push(far(&clock, 1000), 4) {
+            Push::Closed(item) => assert_eq!(item, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // The two accepted items still drain after close.
+        match q.pop_batch(8, &|| clock.now(), None) {
+            Drained::Batch { serve, .. } => assert_eq!(serve.len(), 2),
+            Drained::Closed => panic!("items still queued"),
+        }
+        assert!(matches!(q.pop_batch(8, &|| clock.now(), None), Drained::Closed));
+    }
+
+    #[test]
+    fn expired_items_are_returned_as_shed_not_served() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        q.push(far(&clock, 10), 1);
+        q.push(far(&clock, 20), 2);
+        q.push(far(&clock, 1000), 3);
+        clock.advance(Duration::from_millis(50));
+        // Unseeded cost model drains immediately (lead = MAX).
+        match q.pop_batch(8, &|| clock.now(), Some(&|_| Duration::MAX)) {
+            Drained::Batch { serve, expired } => {
+                assert_eq!(expired.iter().map(|p| p.item).collect::<Vec<_>>(), vec![1, 2]);
+                assert_eq!(serve.iter().map(|p| p.item).collect::<Vec<_>>(), vec![3]);
+            }
+            Drained::Closed => panic!("queue is open"),
+        }
+    }
+
+    #[test]
+    fn deadline_exactly_now_is_not_expired() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        q.push(far(&clock, 10), 1);
+        clock.advance(Duration::from_millis(10));
+        match q.pop_batch(8, &|| clock.now(), None) {
+            Drained::Batch { serve, expired } => {
+                assert!(expired.is_empty());
+                assert_eq!(serve.len(), 1);
+            }
+            Drained::Closed => panic!("queue is open"),
+        }
+    }
+
+    #[test]
+    fn all_expired_returns_without_waiting() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        q.push(far(&clock, 1), 1);
+        clock.advance(Duration::from_secs(1));
+        match q.pop_batch(8, &|| clock.now(), Some(&|_| Duration::ZERO)) {
+            Drained::Batch { serve, expired } => {
+                assert!(serve.is_empty());
+                assert_eq!(expired.len(), 1);
+            }
+            Drained::Closed => panic!("queue is open"),
+        }
+    }
+
+    #[test]
+    fn batch_cap_bounds_the_drain() {
+        let clock = ManualClock::new();
+        let q: BoundedQueue<u32> = BoundedQueue::new(64);
+        let rows: Vec<(Instant, u32)> = (0..10u32).map(|i| (far(&clock, 1000), i)).collect();
+        let results = q.push_many(rows);
+        assert!(results.iter().all(|r| matches!(r, Push::Accepted)));
+        match q.pop_batch(4, &|| clock.now(), None) {
+            Drained::Batch { serve, .. } => assert_eq!(serve.len(), 4),
+            Drained::Closed => panic!("queue is open"),
+        }
+        assert_eq!(q.depth(), 6);
+    }
+}

@@ -1,0 +1,139 @@
+//! Loom model of the serve queue's push/pop/close protocol (DESIGN.md
+//! §11): the bounded MPMC deadline queue must deliver every accepted item
+//! exactly once, linearize push against close (an item is either rejected
+//! or drained — never silently dropped), and never hang a consumer once
+//! the queue is closed and empty.
+//!
+//! Build with `RUSTFLAGS="--cfg loom" cargo test -p dlrt --test
+//! loom_serve_queue`. Without `--cfg loom` this target compiles to an
+//! empty test binary. The in-tree `loom` shim explores perturbed
+//! schedules rather than exhaustive DPOR — see rust/shims/loom.
+#![cfg(loom)]
+
+use dlrt::serve::queue::{BoundedQueue, Drained, Push};
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+use std::time::{Duration, Instant};
+
+/// A deadline far enough out that nothing expires inside the model.
+fn far() -> Instant {
+    Instant::now() + Duration::from_secs(3600)
+}
+
+/// Two producers race a consumer and a close: every item the producers
+/// saw accepted comes out of pop_batch exactly once, and the consumer
+/// terminates.
+#[test]
+fn accepted_items_pop_exactly_once_across_close() {
+    loom::model(|| {
+        let q = Arc::new(BoundedQueue::new(8));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let producers: Vec<_> = (0..2usize)
+            .map(|t| {
+                let q = Arc::clone(&q);
+                let accepted = Arc::clone(&accepted);
+                thread::spawn(move || {
+                    for i in 0..3usize {
+                        if let Push::Accepted = q.push(far(), t * 10 + i) {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut got: Vec<usize> = Vec::new();
+                loop {
+                    match q.pop_batch(2, &Instant::now, None) {
+                        Drained::Closed => return got,
+                        Drained::Batch { serve, expired } => {
+                            assert!(expired.is_empty(), "far-future deadlines must not expire");
+                            got.extend(serve.into_iter().map(|p| p.item));
+                        }
+                    }
+                }
+            })
+        };
+        for p in producers {
+            p.join().expect("producer");
+        }
+        q.close();
+        let got = consumer.join().expect("consumer");
+        assert_eq!(got.len(), accepted.load(Ordering::Relaxed), "lost or phantom item");
+        let mut dedup = got.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), got.len(), "duplicate delivery: {got:?}");
+    });
+}
+
+/// Push races close: the push is either accepted (and then drained after
+/// the close) or rejected with `Push::Closed` — the two outcomes are the
+/// only ones, and they agree with what a later consumer observes.
+#[test]
+fn push_racing_close_never_loses_an_accepted_item() {
+    loom::model(|| {
+        let q = Arc::new(BoundedQueue::new(4));
+        let pusher = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || match q.push(far(), 1usize) {
+                Push::Accepted => true,
+                Push::Closed(_) => false,
+                Push::Full(_) => panic!("capacity 4 cannot be full after one push"),
+            })
+        };
+        let closer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.close())
+        };
+        let accepted = pusher.join().expect("pusher");
+        closer.join().expect("closer");
+        let mut got = 0usize;
+        loop {
+            match q.pop_batch(4, &Instant::now, None) {
+                Drained::Closed => break,
+                Drained::Batch { serve, expired } => got += serve.len() + expired.len(),
+            }
+        }
+        assert_eq!(got, usize::from(accepted), "push/close linearization violated");
+        assert!(matches!(q.push(far(), 9usize), Push::Closed(_)));
+    });
+}
+
+/// Two consumers split a closed queue's backlog without duplicating or
+/// dropping anything, and both terminate.
+#[test]
+fn two_consumers_split_items_without_duplication() {
+    loom::model(|| {
+        let q = Arc::new(BoundedQueue::new(16));
+        for i in 0..6usize {
+            assert!(matches!(q.push(far(), i), Push::Accepted));
+        }
+        q.close();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got: Vec<usize> = Vec::new();
+                    loop {
+                        match q.pop_batch(2, &Instant::now, None) {
+                            Drained::Closed => return got,
+                            Drained::Batch { serve, .. } => {
+                                got.extend(serve.into_iter().map(|p| p.item));
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().expect("consumer"));
+        }
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    });
+}

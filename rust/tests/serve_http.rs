@@ -1,0 +1,392 @@
+//! Front-door integration suite (DESIGN.md §11): replica-count and
+//! batch-composition invariance of served logits, the raw-HTTP contract
+//! of every endpoint, atomic hot-swap, and graceful-shutdown semantics.
+//!
+//! The invariance claims are *bitwise*: every serving kernel is
+//! row-independent, so a request's logits must be identical whether it
+//! rode alone or in a full batch, on one replica or four.
+
+use dlrt::dlrt::LowRankFactors;
+use dlrt::linalg::{Matrix, Rng};
+use dlrt::runtime::Runtime;
+use dlrt::serve::{
+    DrainPolicy, Engine, EngineConfig, FrozenLayer, FrozenModel, HttpConfig, HttpServer, Outcome,
+    ShedReason,
+};
+use dlrt::util::testutil::TestDir;
+use dlrt::util::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A small `mlp_tiny`-shaped frozen model (two low-rank layers + a dense
+/// head) whose weights depend only on `seed`.
+fn tiny_model(seed: u64) -> FrozenModel {
+    let rt = Runtime::native();
+    let arch = rt.arch("mlp_tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    FrozenModel {
+        arch_name: "mlp_tiny".into(),
+        arch,
+        layers: vec![
+            FrozenLayer::from_factors(&LowRankFactors::random(32, 64, 6, &mut rng)),
+            FrozenLayer::from_factors(&LowRankFactors::random(32, 32, 6, &mut rng)),
+            FrozenLayer::Dense { w: rng.normal_matrix(10, 32), bias: vec![0.0; 10] },
+        ],
+    }
+}
+
+fn serve_cfg(replicas: usize) -> EngineConfig {
+    // Eager drain: sequential solo requests would otherwise wait out
+    // their SLO slack hoping for co-riders. The SloSlack waiting path is
+    // covered by the queue's ManualClock tests and benches/serve_http.rs;
+    // the generous SLO means nothing expires on a loaded CI box.
+    EngineConfig {
+        batch_cap: 8,
+        replicas,
+        slo: Duration::from_secs(30),
+        policy: DrainPolicy::Eager,
+        ..EngineConfig::default()
+    }
+}
+
+/// Logits must be placement- and batch-composition-invariant: bitwise
+/// identical to the direct batch forward at replicas ∈ {1, 2, 4}, via
+/// both coalesced (`infer_many`) and per-request (`infer`) admission.
+#[test]
+fn replica_parity_is_bitwise_at_1_2_4() {
+    let model = tiny_model(41);
+    let mut rng = Rng::new(42);
+    let x = rng.normal_matrix(24, 64);
+    let direct = model.forward_logits(&x).unwrap();
+    let rows: Vec<Vec<f32>> = (0..x.rows()).map(|i| x.row(i).to_vec()).collect();
+    for replicas in [1usize, 2, 4] {
+        // coalesced through the default SloSlack policy: 24 rows admitted
+        // under one lock drain as full batch_cap batches (a full batch
+        // never waits), whatever the replica count
+        let engine = Engine::start(
+            model.clone(),
+            EngineConfig {
+                batch_cap: 8,
+                replicas,
+                slo: Duration::from_secs(30),
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let preds = engine.infer_many(rows.clone()).unwrap();
+        for (i, p) in preds.iter().enumerate() {
+            assert_eq!(
+                p.logits,
+                direct.row(i).to_vec(),
+                "replicas={replicas}: coalesced row {i} logits drifted"
+            );
+        }
+        engine.shutdown();
+
+        // solo requests through eager drains: same bitwise answers
+        let engine = Engine::start(model.clone(), serve_cfg(replicas)).unwrap();
+        for (i, row) in rows.iter().enumerate().take(6) {
+            let p = engine.infer(row.clone()).unwrap();
+            assert_eq!(
+                p.logits,
+                direct.row(i).to_vec(),
+                "replicas={replicas}: solo row {i} logits drifted"
+            );
+        }
+        engine.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal raw-HTTP client: one keep-alive connection, Content-Length
+// framing — exactly the subset the server speaks.
+// ---------------------------------------------------------------------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to the serve port");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: &str) {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(req.as_bytes()).expect("writing request");
+        stream.flush().unwrap();
+    }
+
+    fn read_response(&mut self) -> (u16, String) {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("bad status line: {line:?}"));
+        let mut content_length = 0usize;
+        loop {
+            line.clear();
+            self.reader.read_line(&mut line).expect("reading header");
+            let l = line.trim();
+            if l.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = l.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().expect("content-length");
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body).expect("reading body");
+        (status, String::from_utf8(body).expect("utf-8 body"))
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, Json) {
+        self.send(method, path, body);
+        let (status, body) = self.read_response();
+        (status, Json::parse(&body).unwrap_or_else(|e| panic!("bad JSON body {body:?}: {e:#}")))
+    }
+}
+
+fn infer_body(features: &[f32]) -> String {
+    Json::obj(vec![("features", Json::f32_array(features))]).to_string()
+}
+
+/// The full export-equivalence loop over the wire: save → load → serve →
+/// `POST /infer` answers are bitwise equal to the frozen file's own batch
+/// forward; `/healthz` and `/stats` report the serving contract.
+#[test]
+fn http_infer_matches_frozen_eval_bitwise() {
+    let dir = TestDir::new();
+    let path = dir.join("m_frozen.json");
+    tiny_model(51).save(&path).unwrap();
+    let rt = Runtime::native();
+    let model = FrozenModel::load(&path, &rt).unwrap();
+    let mut rng = Rng::new(52);
+    let x = rng.normal_matrix(6, 64);
+    let direct = model.forward_logits(&x).unwrap();
+    let labels = direct.argmax_rows();
+
+    let engine = Arc::new(Engine::start(model, serve_cfg(2)).unwrap());
+    let server =
+        HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    // the serving contract, before any traffic
+    let (status, health) = client.request("GET", "/healthz", "");
+    assert_eq!(status, 200, "{health:?}");
+    assert!(health.req("ok").unwrap().as_bool().unwrap());
+    assert_eq!(health.req("arch").unwrap().as_str().unwrap(), "mlp_tiny");
+    assert_eq!(health.req("input_dim").unwrap().as_usize().unwrap(), 64);
+    assert_eq!(health.req("num_classes").unwrap().as_usize().unwrap(), 10);
+    // dense head reports min(m, n) = 10
+    assert_eq!(health.req("ranks").unwrap().to_usize_vec().unwrap(), vec![6, 6, 10]);
+
+    // keep-alive: all rows over one connection, each answer bitwise
+    for i in 0..x.rows() {
+        let (status, reply) = client.request("POST", "/infer", &infer_body(x.row(i)));
+        assert_eq!(status, 200, "row {i}: {reply:?}");
+        let logits = reply.req("logits").unwrap().to_f32_vec().unwrap();
+        assert_eq!(logits, direct.row(i).to_vec(), "row {i}: HTTP logits drifted");
+        assert_eq!(reply.req("label").unwrap().as_usize().unwrap(), labels[i]);
+    }
+
+    let (status, stats) = client.request("GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert_eq!(stats.req("requests").unwrap().as_usize().unwrap(), x.rows());
+    assert_eq!(stats.req("shed_total").unwrap().as_usize().unwrap(), 0);
+    let hist = stats.req("batch_hist").unwrap().as_arr().unwrap();
+    let drains: usize =
+        hist.iter().map(|b| b.req("drains").unwrap().as_usize().unwrap()).sum();
+    assert_eq!(drains, stats.req("batches").unwrap().as_usize().unwrap());
+
+    // protocol errors are clean statuses, not hangs or resets
+    let (status, _) = client.request("GET", "/no_such_endpoint", "");
+    assert_eq!(status, 404);
+    let (status, _) = client.request("DELETE", "/infer", "");
+    assert_eq!(status, 405);
+    let mut fresh = Client::connect(server.addr());
+    let (status, err) = fresh.request("POST", "/infer", "this is not json");
+    assert_eq!(status, 400, "{err:?}");
+    let mut fresh = Client::connect(server.addr());
+    let (status, err) = fresh.request("POST", "/infer", &infer_body(&[1.0, 2.0]));
+    assert_eq!(status, 400, "wrong feature width must 400: {err:?}");
+    let mut fresh = Client::connect(server.addr());
+    let (status, err) =
+        fresh.request("POST", "/infer", r#"{"features": [0.0], "slo_ms": -5}"#);
+    assert_eq!(status, 400, "negative slo_ms must 400: {err:?}");
+
+    // front-door shutdown leaves the engine alive for embedded callers
+    server.shutdown();
+    assert!(engine.infer(x.row(0).to_vec()).is_ok());
+    engine.shutdown();
+}
+
+/// `POST /reload` atomically swaps the model (subsequent answers are
+/// bitwise the new model's), and refuses contract-breaking replacements
+/// with a 409 while continuing to serve the old model.
+#[test]
+fn http_reload_hot_swaps_and_rejects_mismatch() {
+    let dir = TestDir::new();
+    let (a_path, b_path, alien_path) =
+        (dir.join("a_frozen.json"), dir.join("b_frozen.json"), dir.join("alien_frozen.json"));
+    tiny_model(61).save(&a_path).unwrap();
+    let model_b = tiny_model(62);
+    model_b.save(&b_path).unwrap();
+    let mut alien = tiny_model(63);
+    alien.arch_name = "not_mlp_tiny".into();
+    alien.save(&alien_path).unwrap();
+
+    let rt = Runtime::native();
+    let mut rng = Rng::new(64);
+    let x = rng.normal_matrix(3, 64);
+    let direct_a = FrozenModel::load(&a_path, &rt).unwrap().forward_logits(&x).unwrap();
+    let direct_b = FrozenModel::load(&b_path, &rt).unwrap().forward_logits(&x).unwrap();
+
+    let engine =
+        Arc::new(Engine::start(FrozenModel::load(&a_path, &rt).unwrap(), serve_cfg(1)).unwrap());
+    let server =
+        HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0", HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    let (status, reply) = client.request("POST", "/infer", &infer_body(x.row(0)));
+    assert_eq!(status, 200);
+    assert_eq!(reply.req("logits").unwrap().to_f32_vec().unwrap(), direct_a.row(0).to_vec());
+
+    let reload = |client: &mut Client, path: &std::path::Path| {
+        let body =
+            Json::obj(vec![("path", Json::str(path.to_str().unwrap()))]).to_string();
+        client.request("POST", "/reload", &body)
+    };
+    let (status, reply) = reload(&mut client, &b_path);
+    assert_eq!(status, 200, "{reply:?}");
+    assert_eq!(reply.req("ranks").unwrap().to_usize_vec().unwrap(), vec![6, 6, 10]);
+    for i in 0..x.rows() {
+        let (status, reply) = client.request("POST", "/infer", &infer_body(x.row(i)));
+        assert_eq!(status, 200);
+        assert_eq!(
+            reply.req("logits").unwrap().to_f32_vec().unwrap(),
+            direct_b.row(i).to_vec(),
+            "row {i} not served by the swapped model"
+        );
+    }
+
+    // contract violations: wrong arch and unloadable path both 409 and
+    // leave the engine on the last good model
+    let (status, err) = reload(&mut client, &alien_path);
+    assert_eq!(status, 409, "{err:?}");
+    assert!(err.req("error").unwrap().as_str().unwrap().contains("hot-swap rejected"));
+    let (status, _) = reload(&mut client, &dir.join("missing_frozen.json"));
+    assert_eq!(status, 409);
+    let (status, reply) = client.request("POST", "/infer", &infer_body(x.row(0)));
+    assert_eq!(status, 200);
+    assert_eq!(reply.req("logits").unwrap().to_f32_vec().unwrap(), direct_b.row(0).to_vec());
+
+    server.shutdown();
+    engine.shutdown();
+}
+
+/// Hot-swap mid-stream never mixes layers inside one batch: while one
+/// thread flips the model between two snapshots, every concurrent answer
+/// is bitwise equal to one of the two direct forwards — never a blend.
+#[test]
+fn concurrent_hot_swap_never_mixes_models() {
+    let model_a = tiny_model(71);
+    let model_b = tiny_model(72);
+    let mut rng = Rng::new(73);
+    let x = rng.normal_matrix(4, 64);
+    let direct_a = model_a.forward_logits(&x).unwrap();
+    let direct_b = model_b.forward_logits(&x).unwrap();
+
+    let engine = Arc::new(
+        Engine::start(
+            model_a.clone(),
+            EngineConfig {
+                batch_cap: 4,
+                replicas: 2,
+                slo: Duration::from_secs(30),
+                policy: DrainPolicy::Eager,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+
+    let clients: Vec<_> = (0..3usize)
+        .map(|c| {
+            let engine = Arc::clone(&engine);
+            let rows: Vec<Vec<f32>> = (0..x.rows()).map(|i| x.row(i).to_vec()).collect();
+            let expect: Vec<(Vec<f32>, Vec<f32>)> = (0..x.rows())
+                .map(|i| (direct_a.row(i).to_vec(), direct_b.row(i).to_vec()))
+                .collect();
+            std::thread::spawn(move || {
+                for round in 0..30 {
+                    for (i, row) in rows.iter().enumerate() {
+                        let p = engine.infer(row.clone()).unwrap();
+                        let (ref ea, ref eb) = expect[i];
+                        assert!(
+                            p.logits == *ea || p.logits == *eb,
+                            "client {c} round {round} row {i}: blended logits — \
+                             hot-swap mixed models inside a batch"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for k in 0..40 {
+        let next = if k % 2 == 0 { model_b.clone() } else { model_a.clone() };
+        engine.swap_model(next).unwrap();
+        std::thread::yield_now();
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    engine.shutdown();
+}
+
+/// An engine that is shutting down sheds over HTTP with a 503 and the
+/// `shutting_down` reason — deterministic, since the queue is closed
+/// before the request arrives.
+#[test]
+fn http_sheds_503_when_engine_is_down() {
+    let model = tiny_model(81);
+    let row = vec![0.5f32; 64];
+    let engine = Arc::new(Engine::start(model, serve_cfg(1)).unwrap());
+    let server =
+        HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0", HttpConfig::default()).unwrap();
+    engine.shutdown();
+    let mut client = Client::connect(server.addr());
+    let (status, reply) = client.request("POST", "/infer", &infer_body(&row));
+    assert_eq!(status, 503, "{reply:?}");
+    assert_eq!(reply.req("error").unwrap().as_str().unwrap(), "shed");
+    assert_eq!(reply.req("reason").unwrap().as_str().unwrap(), "shutting_down");
+    let (status, stats) = client.request("GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert_eq!(stats.req("shed_shutdown").unwrap().as_usize().unwrap(), 1);
+    server.shutdown();
+}
+
+/// Direct engine-level shed sanity: a closed engine's tickets resolve as
+/// `Shed(ShuttingDown)` rather than hanging (the HTTP 503 above rides on
+/// exactly this path).
+#[test]
+fn closed_engine_tickets_resolve_without_hanging() {
+    let engine = Engine::start(tiny_model(91), serve_cfg(1)).unwrap();
+    engine.shutdown();
+    match engine.enqueue(vec![0.0; 64], Some(Duration::from_millis(5))).unwrap().wait() {
+        Outcome::Shed(ShedReason::ShuttingDown) => {}
+        other => panic!("expected shutdown shed, got {other:?}"),
+    }
+}

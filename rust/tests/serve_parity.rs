@@ -20,9 +20,8 @@ use dlrt::config::{presets, Config, DataSource, Integrator, Mode};
 use dlrt::coordinator::Trainer;
 use dlrt::data::Batcher;
 use dlrt::linalg::Matrix;
-use dlrt::serve::{self, Engine, EngineConfig, FrozenModel};
+use dlrt::serve::{self, DrainPolicy, Engine, EngineConfig, FrozenModel};
 use dlrt::util::testutil::TestDir;
-use std::time::Duration;
 
 fn toy_cfg(mode: Mode) -> Config {
     let mut cfg = presets::quickstart();
@@ -160,9 +159,17 @@ fn assert_serve_parity(cfg: Config, name: &str, exact_eval: bool) {
         "[{name}] export → save → load → forward must be bitwise-reproducible"
     );
 
+    // eager drains: sequential solo requests would wait out their SLO
+    // slack for co-riders under the default policy (tests/serve_http.rs
+    // and the queue unit tests cover SloSlack)
     let engine = Engine::start(
         loaded,
-        EngineConfig { batch_cap: 8, max_delay: Duration::from_millis(1), workers: 2 },
+        EngineConfig {
+            batch_cap: 8,
+            replicas: 2,
+            policy: DrainPolicy::Eager,
+            ..EngineConfig::default()
+        },
     )
     .unwrap();
     for i in 0..data.len().min(8) {

@@ -28,6 +28,10 @@ echo "== serve_throughput =="
 cargo bench --bench serve_throughput
 cp BENCH_serve.json "$dest/BENCH_serve.json"
 
+echo "== serve_http (open-loop HTTP front door) =="
+cargo bench --bench serve_http
+cp BENCH_serve_http.json "$dest/BENCH_serve_http.json"
+
 echo "== linalg_hotpath =="
 cargo bench --bench linalg_hotpath
 cp BENCH_linalg.json "$dest/BENCH_linalg.json"
