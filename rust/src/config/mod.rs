@@ -123,6 +123,29 @@ impl Default for ServeConfig {
     }
 }
 
+/// Distributed-execution block: how `grads` sweeps fan out across worker
+/// **processes** (flat `exec_*` keys in TOML, DESIGN.md §12). The default
+/// (`workers = 0`) keeps gradient sweeps in-process — bitwise-identical
+/// to the pre-distribution pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecConfig {
+    /// Worker processes to spawn; 0 = in-process execution (the exact
+    /// `ShardedExecutor` fast path, no sockets involved).
+    pub workers: usize,
+    /// Per-shard straggler deadline in milliseconds: a worker holding a
+    /// shard longer than this is struck and the shard reassigned.
+    pub worker_deadline_ms: u64,
+    /// Coordinator transport bind address; `127.0.0.1:0` picks an
+    /// ephemeral loopback port.
+    pub addr: String,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { workers: 0, worker_deadline_ms: 2000, addr: "127.0.0.1:0".to_string() }
+    }
+}
+
 /// A complete experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -182,6 +205,9 @@ pub struct Config {
     pub grad_shards: usize,
     /// Serving block for `dlrt serve` (DESIGN.md §11).
     pub serve: ServeConfig,
+    /// Distributed-execution block: multi-process gradient sweeps
+    /// (DESIGN.md §12). `workers = 0` keeps everything in-process.
+    pub exec: ExecConfig,
 }
 
 impl Config {
@@ -265,6 +291,14 @@ impl Config {
             queue_cap: doc.get_usize("serve_queue_cap").unwrap_or(serve_default.queue_cap),
             slo_ms: doc.get_f32("serve_slo_ms").unwrap_or(serve_default.slo_ms),
         };
+        let exec_default = ExecConfig::default();
+        let exec = ExecConfig {
+            workers: doc.get_usize("exec_workers").unwrap_or(exec_default.workers),
+            worker_deadline_ms: doc
+                .get_u64("exec_worker_deadline_ms")
+                .unwrap_or(exec_default.worker_deadline_ms),
+            addr: doc.get_str("exec_addr").unwrap_or(&exec_default.addr).to_string(),
+        };
         let cfg = Config {
             arch: doc
                 .get_str("arch")
@@ -292,6 +326,7 @@ impl Config {
             layer_taus,
             grad_shards: doc.get_usize("grad_shards").unwrap_or(1),
             serve,
+            exec,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -348,6 +383,12 @@ impl Config {
         doc.insert("serve_batch_cap", KvValue::Num(self.serve.batch_cap as f64));
         doc.insert("serve_queue_cap", KvValue::Num(self.serve.queue_cap as f64));
         doc.insert("serve_slo_ms", KvValue::Num(self.serve.slo_ms as f64));
+        doc.insert("exec_workers", KvValue::Num(self.exec.workers as f64));
+        doc.insert(
+            "exec_worker_deadline_ms",
+            KvValue::Num(self.exec.worker_deadline_ms as f64),
+        );
+        doc.insert("exec_addr", KvValue::Str(self.exec.addr.clone()));
         if !self.layer_modes.is_empty() {
             let joined: Vec<&str> = self.layer_modes.iter().map(|m| m.as_str()).collect();
             doc.insert("layer_modes", KvValue::Str(joined.join(",")));
@@ -418,6 +459,25 @@ impl Config {
             "serve_slo_ms must be a positive number (got {})",
             self.serve.slo_ms
         );
+        ensure!(
+            self.exec.workers <= crate::exec::dist::MAX_WORKERS,
+            "exec_workers must be in [0, {}] (got {})",
+            crate::exec::dist::MAX_WORKERS,
+            self.exec.workers
+        );
+        ensure!(
+            self.exec.worker_deadline_ms >= 1,
+            "exec_worker_deadline_ms must be >= 1 (got {})",
+            self.exec.worker_deadline_ms
+        );
+        ensure!(!self.exec.addr.trim().is_empty(), "exec_addr must be a bind address");
+        if self.exec.workers > 0 {
+            ensure!(
+                self.backend == "native",
+                "exec_workers > 0 requires the native backend (got {})",
+                self.backend
+            );
+        }
         Ok(())
     }
 
@@ -454,7 +514,40 @@ mod tests {
             assert_eq!(back.layer_taus, cfg.layer_taus);
             assert_eq!(back.grad_shards, cfg.grad_shards);
             assert_eq!(back.serve, cfg.serve);
+            assert_eq!(back.exec, cfg.exec);
         }
+    }
+
+    #[test]
+    fn exec_block_parses_validates_and_roundtrips() {
+        // absent -> the in-process default
+        let cfg = Config::from_toml_str("arch = \"mlp_tiny\"").unwrap();
+        assert_eq!(cfg.exec, ExecConfig::default());
+        let src = "arch = \"mlp_tiny\"\nexec_workers = 3\nexec_worker_deadline_ms = 750\n\
+                   exec_addr = \"127.0.0.1:7700\"";
+        let cfg = Config::from_toml_str(src).unwrap();
+        assert_eq!(
+            cfg.exec,
+            ExecConfig {
+                workers: 3,
+                worker_deadline_ms: 750,
+                addr: "127.0.0.1:7700".to_string()
+            }
+        );
+        let back = Config::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.exec, cfg.exec);
+        // out-of-range values are rejected
+        assert!(Config::from_toml_str("arch = \"x\"\nexec_worker_deadline_ms = 0").is_err());
+        assert!(Config::from_toml_str("arch = \"x\"\nexec_addr = \" \"").is_err());
+        let mut cfg = base();
+        cfg.exec.workers = crate::exec::dist::MAX_WORKERS + 1;
+        assert!(cfg.validate().is_err());
+        // worker processes run the native backend; artifact backends
+        // cannot fan out across processes
+        let mut cfg = base();
+        cfg.backend = "jnp".into();
+        cfg.exec.workers = 2;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

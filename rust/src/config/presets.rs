@@ -6,7 +6,7 @@
 //! im2col lowering — DESIGN.md §4); only `quickstart_pallas` opts into the
 //! compiled-artifact path.
 
-use super::{Config, DataSource, Integrator, LrSchedule, Mode, ServeConfig};
+use super::{Config, DataSource, ExecConfig, Integrator, LrSchedule, Mode, ServeConfig};
 
 fn base(arch: &str) -> Config {
     Config {
@@ -33,6 +33,7 @@ fn base(arch: &str) -> Config {
         layer_taus: Vec::new(),
         grad_shards: 1,
         serve: ServeConfig::default(),
+        exec: ExecConfig::default(),
     }
 }
 

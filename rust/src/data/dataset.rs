@@ -101,6 +101,9 @@ impl Dataset {
 }
 
 /// One padded batch, shaped for a compiled graph with batch size `cap`.
+/// `Clone` exists for the distributed executor, which ships sub-batches
+/// to worker processes while keeping the originals for reassignment.
+#[derive(Clone)]
 pub struct Batch {
     /// `cap * dim` features; rows past `count` are zero.
     pub x: Vec<f32>,

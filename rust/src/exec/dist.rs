@@ -1,0 +1,889 @@
+//! Multi-process sharded gradient execution (DESIGN.md §12).
+//!
+//! [`DistExecutor`] moves [`crate::exec::ShardedExecutor`]'s shard
+//! evaluation from in-process scoped threads to **worker processes**
+//! connected over the [`crate::exec::wire`] frame protocol, behind the
+//! same contract: the batch split is the same pure function
+//! ([`crate::exec::split_batch`]), per-shard Σw weights are computed
+//! coordinator-side from the split, and the final combine is the same
+//! fixed-order weighted tree ([`crate::backend::reduce_grad_shards`]).
+//!
+//! Determinism across failure: each shard's `GradsOut` is a pure function
+//! of `(params, sub-batch)` — the backend kernels are thread-count- and
+//! host-independent by the DESIGN.md §9 contract — and the reduction
+//! order is fixed by **shard index, never worker identity**. So when a
+//! worker dies (or blows its deadline) mid-sweep and its shards are
+//! reassigned to a live peer, the reassigned shard produces the same
+//! bytes and lands in the same reduction slot: the reduced gradient is
+//! bitwise-identical to the no-failure run. `tests/dist_chaos.rs` locks
+//! this.
+//!
+//! The bookkeeping that failure recovery races against — who owns which
+//! shard, which results have landed, which shards are orphaned — lives in
+//! [`ShardTracker`], a time-free state machine whose mutex/condvar switch
+//! to the in-tree loom shim under `--cfg loom` so
+//! `tests/loom_dist.rs` can model assignment/completion/failure
+//! interleavings (no shard double-reduced, none dropped, close
+//! linearized). Wall-clock policy (per-worker deadlines, straggler
+//! strikes) stays outside the tracker, driven by an injected
+//! [`Clock`] — `exec/` is an L4 zone, so the coordinator never reads
+//! `Instant::now` directly and the straggler path is testable with a
+//! manual clock.
+
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use crate::backend::{reduce_grad_shards, ComputeBackend, GradPhase, GradsOut, LayerParams};
+use crate::data::Batch;
+use crate::exec::wire::{self, Msg, WireLayer};
+use crate::exec::{split_batch, MAX_GRAD_SHARDS};
+use crate::metrics::Clock;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure, Context};
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Upper bound on configurable worker processes — one coordinator fanning
+/// wider than this is misconfigured, not ambitious.
+pub const MAX_WORKERS: usize = 16;
+
+/// How long the reassignment loop sleeps between orphan/straggler scans.
+const TICK: Duration = Duration::from_millis(10);
+
+/// Socket read timeout used as the reader threads' idle tick, and the
+/// write timeout that keeps a wedged worker from blocking the
+/// coordinator's send path.
+const IO_TICK: Duration = Duration::from_millis(50);
+const WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+// ---------------------------------------------------------------------------
+// ShardTracker: the loom-modelable coordinator state machine
+// ---------------------------------------------------------------------------
+
+struct TrackerState<T> {
+    /// Which worker currently owns each pending shard (`None` once the
+    /// result landed or while the shard sits in `orphans`).
+    owner: Vec<Option<usize>>,
+    /// First-wins result slot per shard.
+    results: Vec<Option<T>>,
+    /// Number of landed results.
+    done: usize,
+    /// Shards awaiting (re)assignment, in ascending shard order.
+    orphans: Vec<usize>,
+    /// Abandon flag: the sweep failed; completions are no longer accepted.
+    closed: bool,
+}
+
+/// Assignment/completion/reassignment bookkeeping for one gradient sweep.
+///
+/// Pure state machine — no sockets, no clocks — so the loom model in
+/// `tests/loom_dist.rs` can exhaustively perturb the races the chaos path
+/// depends on. Invariants (asserted there):
+///
+/// * **exactly-once reduce:** for each shard, [`complete`](Self::complete)
+///   returns `true` at most once; later completions (a struck straggler
+///   finishing after its shard was reassigned) are dropped.
+/// * **no shard lost:** a shard is always in exactly one of
+///   {owned, orphaned, completed} until `closed`.
+/// * **close linearizes:** after [`close`](Self::close) every `complete`
+///   and `assign` is rejected and every waiter wakes.
+pub struct ShardTracker<T> {
+    state: Mutex<TrackerState<T>>,
+    cv: Condvar,
+    n: usize,
+}
+
+impl<T> ShardTracker<T> {
+    /// A tracker for `n` shards, all initially orphaned (unassigned).
+    pub fn new(n: usize) -> ShardTracker<T> {
+        ShardTracker {
+            state: Mutex::new(TrackerState {
+                owner: (0..n).map(|_| None).collect(),
+                results: (0..n).map(|_| None).collect(),
+                done: 0,
+                orphans: (0..n).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            n,
+        }
+    }
+
+    /// Poison-tolerant lock (same discipline as the serve queue): a
+    /// panicking peer must not wedge the shard rendezvous.
+    fn lock(&self) -> MutexGuard<'_, TrackerState<T>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record `worker` as the owner of `shard`. Returns `false` if the
+    /// shard already completed or the tracker closed (nothing to send).
+    pub fn assign(&self, shard: usize, worker: usize) -> bool {
+        let mut st = self.lock();
+        if st.closed || shard >= self.n || st.results[shard].is_some() {
+            return false;
+        }
+        st.owner[shard] = Some(worker);
+        true
+    }
+
+    /// Land one shard result. First wins: returns `true` iff this call
+    /// filled the slot — duplicates (a reassigned shard finished twice)
+    /// and post-close completions return `false` and drop the value.
+    pub fn complete(&self, shard: usize, result: T) -> bool {
+        let accepted = {
+            let mut st = self.lock();
+            if st.closed || shard >= self.n || st.results[shard].is_some() {
+                false
+            } else {
+                st.results[shard] = Some(result);
+                st.owner[shard] = None;
+                st.orphans.retain(|&s| s != shard);
+                st.done += 1;
+                true
+            }
+        };
+        if accepted {
+            self.cv.notify_all();
+        }
+        accepted
+    }
+
+    /// A worker died or was struck: orphan every pending shard it owns so
+    /// the reassignment loop can hand them to a live peer. Returns how
+    /// many shards were orphaned.
+    pub fn fail_worker(&self, worker: usize) -> usize {
+        let moved = {
+            let mut st = self.lock();
+            if st.closed {
+                return 0;
+            }
+            let mut moved = 0usize;
+            for shard in 0..self.n {
+                if st.owner[shard] == Some(worker) && st.results[shard].is_none() {
+                    st.owner[shard] = None;
+                    if !st.orphans.contains(&shard) {
+                        st.orphans.push(shard);
+                    }
+                    moved += 1;
+                }
+            }
+            st.orphans.sort_unstable();
+            moved
+        };
+        if moved > 0 {
+            self.cv.notify_all();
+        }
+        moved
+    }
+
+    /// Drain the orphan list (ascending shard order).
+    pub fn take_orphans(&self) -> Vec<usize> {
+        let mut st = self.lock();
+        std::mem::take(&mut st.orphans)
+    }
+
+    /// Snapshot of `(shard, owner)` for every assigned-but-incomplete
+    /// shard — the straggler scan's worklist.
+    pub fn pending_assigned(&self) -> Vec<(usize, usize)> {
+        let st = self.lock();
+        (0..self.n)
+            .filter_map(|s| match (st.owner[s], st.results[s].is_some()) {
+                (Some(w), false) => Some((s, w)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Abandon the sweep: reject all future assigns/completes and wake
+    /// every waiter.
+    pub fn close(&self) {
+        {
+            let mut st = self.lock();
+            st.closed = true;
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// All results landed (the success exit condition).
+    pub fn is_complete(&self) -> bool {
+        self.lock().done == self.n
+    }
+
+    /// Complete or abandoned — either way the wait loop should stop.
+    pub fn is_finished(&self) -> bool {
+        let st = self.lock();
+        st.done == self.n || st.closed
+    }
+
+    /// Sleep until `d` elapses or something changes (a completion, a
+    /// failure, a close). Returns immediately if there is already work.
+    pub fn wait_tick(&self, d: Duration) {
+        let st = self.lock();
+        if st.done == self.n || st.closed || !st.orphans.is_empty() {
+            return;
+        }
+        let _ = match self.cv.wait_timeout(st, d) {
+            Ok(pair) => pair.0,
+            Err(e) => e.into_inner().0,
+        };
+    }
+
+    /// Take the landed results, in shard order. `None` unless every shard
+    /// completed.
+    pub fn take_results(&self) -> Option<Vec<T>> {
+        let mut st = self.lock();
+        if st.done != self.n {
+            return None;
+        }
+        let slots = std::mem::take(&mut st.results);
+        st.done = 0;
+        let mut out = Vec::with_capacity(self.n);
+        for slot in slots {
+            out.push(slot?);
+        }
+        Some(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DistExecutor: processes, sockets, deadlines
+// ---------------------------------------------------------------------------
+
+/// Construction parameters for a [`DistExecutor`] (mirrors the config's
+/// `exec_*` block).
+#[derive(Debug, Clone)]
+pub struct DistOptions {
+    /// Worker process count (the fan-out target; fewer may connect).
+    pub workers: usize,
+    /// Row-shard count per sweep — the determinism topology knob, shared
+    /// with the in-process executor.
+    pub shards: usize,
+    /// Per-shard deadline: a worker holding a shard longer than this is
+    /// struck and the shard reassigned.
+    pub deadline: Duration,
+    /// Listener bind address (`127.0.0.1:0` = ephemeral loopback).
+    pub addr: String,
+    /// How long to wait for workers to connect at startup.
+    pub connect_window: Duration,
+}
+
+impl Default for DistOptions {
+    fn default() -> DistOptions {
+        DistOptions {
+            workers: 0,
+            shards: 1,
+            deadline: Duration::from_millis(2000),
+            addr: "127.0.0.1:0".to_string(),
+            connect_window: Duration::from_millis(5000),
+        }
+    }
+}
+
+struct WorkerHandle {
+    id: usize,
+    /// Write side; reader threads clone the underlying socket per sweep.
+    stream: Mutex<TcpStream>,
+    alive: AtomicBool,
+}
+
+impl WorkerHandle {
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    fn strike(&self) {
+        self.alive.store(false, Ordering::Release);
+    }
+}
+
+/// The multi-process gradient executor. Owns the worker connections (and
+/// the child processes, when it spawned them), assigns contiguous shard
+/// ranges per sweep, reassigns on death or deadline, and reduces with the
+/// same fixed-order weighted tree as the in-process path.
+pub struct DistExecutor {
+    shards: usize,
+    deadline: Duration,
+    clock: Arc<dyn Clock>,
+    workers: Vec<WorkerHandle>,
+    children: Mutex<Vec<std::process::Child>>,
+    sweep: AtomicU64,
+}
+
+impl DistExecutor {
+    /// Bind `opts.addr`, launch `opts.workers` copies of this binary as
+    /// `<exe> worker --connect <addr> --id <i>`, and adopt whoever
+    /// connects within the window.
+    pub fn spawn(opts: &DistOptions, clock: Arc<dyn Clock>) -> Result<DistExecutor> {
+        let exe = std::env::current_exe().context("dist: locating the dlrt binary")?;
+        Self::spawn_with_exe(&exe, opts, clock)
+    }
+
+    /// [`spawn`](Self::spawn) with an explicit worker binary — tests use
+    /// this with `env!("CARGO_BIN_EXE_dlrt")`, since `current_exe()`
+    /// inside a test harness is the test binary.
+    pub fn spawn_with_exe(
+        exe: &std::path::Path,
+        opts: &DistOptions,
+        clock: Arc<dyn Clock>,
+    ) -> Result<DistExecutor> {
+        let listener = TcpListener::bind(opts.addr.as_str())
+            .with_context(|| format!("dist: binding coordinator listener on {}", opts.addr))?;
+        let local = listener.local_addr().context("dist: reading listener address")?;
+        let mut children = Vec::with_capacity(opts.workers);
+        for i in 0..opts.workers {
+            let child = std::process::Command::new(exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(local.to_string())
+                .arg("--id")
+                .arg(i.to_string())
+                .stdin(std::process::Stdio::null())
+                .spawn()
+                .with_context(|| format!("dist: launching worker {i}"))?;
+            children.push(child);
+        }
+        match Self::adopt(listener, opts, clock) {
+            Ok(ex) => {
+                *ex.lock_children() = children;
+                Ok(ex)
+            }
+            Err(e) => {
+                for child in children.iter_mut() {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Adopt externally launched workers: accept up to `opts.workers`
+    /// connections on `listener` until the connect window closes. At
+    /// least one worker must show up; missing stragglers are tolerated
+    /// (their shards simply never get assigned to them).
+    pub fn adopt(
+        listener: TcpListener,
+        opts: &DistOptions,
+        clock: Arc<dyn Clock>,
+    ) -> Result<DistExecutor> {
+        ensure!(
+            opts.workers >= 1 && opts.workers <= MAX_WORKERS,
+            "dist: worker count {} out of range 1..={MAX_WORKERS}",
+            opts.workers
+        );
+        ensure!(
+            opts.shards >= 1 && opts.shards <= MAX_GRAD_SHARDS,
+            "dist: shard count {} out of range 1..={MAX_GRAD_SHARDS}",
+            opts.shards
+        );
+        listener.set_nonblocking(true).context("dist: nonblocking accept")?;
+        let start = clock.now();
+        let mut workers = Vec::with_capacity(opts.workers);
+        while workers.len() < opts.workers {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let id = workers.len();
+                    match hello_handshake(stream, id) {
+                        Ok(h) => workers.push(h),
+                        Err(e) => eprintln!("dist: rejected connection: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if clock.now().saturating_duration_since(start) >= opts.connect_window {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context("dist: accepting worker connection"),
+            }
+        }
+        ensure!(
+            !workers.is_empty(),
+            "dist: no worker connected within {:?} (expected {})",
+            opts.connect_window,
+            opts.workers
+        );
+        if workers.len() < opts.workers {
+            eprintln!(
+                "dist: proceeding with {}/{} workers (connect window closed)",
+                workers.len(),
+                opts.workers
+            );
+        }
+        Ok(DistExecutor {
+            shards: opts.shards,
+            deadline: opts.deadline,
+            clock,
+            workers,
+            children: Mutex::new(Vec::new()),
+            sweep: AtomicU64::new(0),
+        })
+    }
+
+    fn lock_children(&self) -> MutexGuard<'_, Vec<std::process::Child>> {
+        self.children.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The configured shard count (the determinism topology).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// How many workers are currently believed alive.
+    pub fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_alive()).count()
+    }
+
+    /// How many workers connected at startup.
+    pub fn connected_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Evaluate one gradient sweep across the worker processes. Same
+    /// signature and determinism contract as
+    /// [`crate::exec::ShardedExecutor::grads`]; `shards = 1` (or a
+    /// single-row batch) bypasses the wire entirely.
+    pub fn grads(
+        &self,
+        backend: &dyn ComputeBackend,
+        arch: &str,
+        layers: &[LayerParams<'_>],
+        phase: GradPhase,
+        batch: &Batch,
+    ) -> Result<GradsOut> {
+        let bsz = batch.w.len();
+        let k = self.shards.min(bsz.max(1));
+        if k <= 1 {
+            return backend.grads(arch, layers, phase, batch);
+        }
+        ensure!(
+            batch.y.len() == bsz && batch.x.len() % bsz == 0,
+            "dist grads: malformed batch ({} features, {} labels, {} weights)",
+            batch.x.len(),
+            batch.y.len(),
+            bsz
+        );
+        let dim = batch.x.len() / bsz;
+        let mut shards: Vec<Batch> = Vec::new();
+        split_batch(batch, dim, k, &mut shards);
+        let wsums: Vec<f64> =
+            shards.iter().map(|sb| sb.w.iter().map(|&x| x as f64).sum()).collect();
+
+        let sweep_id = self.sweep.fetch_add(1, Ordering::Relaxed) + 1;
+        let snapshot = Msg::Sweep {
+            sweep: sweep_id,
+            arch: arch.to_string(),
+            phase,
+            layers: layers.iter().map(WireLayer::from_params).collect(),
+        };
+
+        // Broadcast the sweep snapshot; a write failure is a dead worker.
+        let mut briefed: Vec<bool> = vec![false; self.workers.len()];
+        for w in &self.workers {
+            if !w.is_alive() {
+                continue;
+            }
+            match self.send(w, &snapshot) {
+                Ok(()) => briefed[w.id] = true,
+                Err(e) => eprintln!("dist: worker {} lost at sweep brief: {e:#}", w.id),
+            }
+        }
+        ensure!(
+            briefed.iter().any(|&b| b),
+            "dist grads: no live workers to brief (all {} connections down)",
+            self.workers.len()
+        );
+
+        let tracker: ShardTracker<GradsOut> = ShardTracker::new(k);
+        let done = AtomicBool::new(false);
+        let err_slot: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let set_err = |e: anyhow::Error| {
+            let mut slot = err_slot.lock().unwrap_or_else(|p| p.into_inner());
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        };
+
+        std::thread::scope(|s| {
+            // One reader per briefed worker: land Grads frames, convert
+            // EOF / io errors into fail_worker so the main loop reassigns.
+            for w in &self.workers {
+                if !briefed[w.id] {
+                    continue;
+                }
+                let sock = {
+                    let guard = w.stream.lock().unwrap_or_else(|e| e.into_inner());
+                    guard.try_clone()
+                };
+                let sock = match sock {
+                    Ok(sock) => sock,
+                    Err(e) => {
+                        w.strike();
+                        tracker.fail_worker(w.id);
+                        set_err(anyhow!("dist: cloning worker {} socket: {e}", w.id));
+                        continue;
+                    }
+                };
+                let _ = sock.set_read_timeout(Some(IO_TICK));
+                let tracker = &tracker;
+                let done = &done;
+                let set_err = &set_err;
+                s.spawn(move || {
+                    let mut rdr = IdleReader { inner: sock, done };
+                    loop {
+                        match wire::read_msg_opt(&mut rdr) {
+                            Ok(Some(Msg::Grads { sweep, shard, out })) => {
+                                if sweep == sweep_id && (shard as usize) < k {
+                                    tracker.complete(shard as usize, out);
+                                }
+                                // stale frames from a previous sweep are
+                                // dropped (a struck straggler catching up)
+                            }
+                            Ok(Some(Msg::WorkerErr { sweep, shard, msg })) => {
+                                if sweep == sweep_id {
+                                    // deterministic compute error: every
+                                    // worker would fail identically, so
+                                    // abandon the sweep rather than retry
+                                    set_err(anyhow!(
+                                        "dist: worker {} failed shard {shard}: {msg}",
+                                        w.id
+                                    ));
+                                    tracker.close();
+                                    break;
+                                }
+                            }
+                            Ok(Some(_)) => {
+                                set_err(anyhow!(
+                                    "dist: worker {} sent an unexpected frame kind",
+                                    w.id
+                                ));
+                                tracker.close();
+                                break;
+                            }
+                            Ok(None) => {
+                                if !done.load(Ordering::Acquire) {
+                                    w.strike();
+                                    tracker.fail_worker(w.id);
+                                }
+                                break;
+                            }
+                            Err(e) => {
+                                if !done.load(Ordering::Acquire) {
+                                    w.strike();
+                                    tracker.fail_worker(w.id);
+                                    eprintln!("dist: worker {} stream error: {e:#}", w.id);
+                                }
+                                break;
+                            }
+                        }
+                        if done.load(Ordering::Acquire) {
+                            break;
+                        }
+                    }
+                });
+            }
+
+            // Assignment loop (runs on the caller's thread). Initial
+            // assignment hands contiguous shard ranges to the briefed
+            // workers; failures funnel every orphan back through the same
+            // round-robin reassignment.
+            let mut assign_time: Vec<Option<Instant>> = vec![None; k];
+            let mut rr = 0usize;
+            let mut initial = true;
+            loop {
+                let live: Vec<usize> = self
+                    .workers
+                    .iter()
+                    .filter(|w| briefed[w.id] && w.is_alive())
+                    .map(|w| w.id)
+                    .collect();
+                let orphans = tracker.take_orphans();
+                if !orphans.is_empty() {
+                    if live.is_empty() {
+                        set_err(anyhow!(
+                            "dist grads: {} shard(s) unassigned and no live workers remain",
+                            orphans.len()
+                        ));
+                        tracker.close();
+                    } else {
+                        for (slot, shard) in orphans.into_iter().enumerate() {
+                            // contiguous ranges on the first pass (shard
+                            // s → worker ⌊s·n/k⌋), round-robin after
+                            let wid = if initial {
+                                live[slot * live.len() / k.max(1)]
+                            } else {
+                                rr += 1;
+                                live[rr % live.len()]
+                            };
+                            if !tracker.assign(shard, wid) {
+                                continue; // completed in the meantime
+                            }
+                            let w = &self.workers[wid];
+                            let job = Msg::Job {
+                                sweep: sweep_id,
+                                shard: shard as u32,
+                                batch: shards[shard].clone(),
+                            };
+                            match self.send(w, &job) {
+                                Ok(()) => assign_time[shard] = Some(self.clock.now()),
+                                Err(e) => {
+                                    eprintln!(
+                                        "dist: worker {wid} lost at shard {shard} send: {e:#}"
+                                    );
+                                    w.strike();
+                                    tracker.fail_worker(wid);
+                                }
+                            }
+                        }
+                        initial = false;
+                    }
+                }
+                if tracker.is_finished() {
+                    break;
+                }
+                // Straggler scan: a shard pending past the deadline
+                // strikes its owner; fail_worker orphans every shard that
+                // worker still holds, and the next pass reassigns them.
+                let now = self.clock.now();
+                for (shard, wid) in tracker.pending_assigned() {
+                    let overdue = assign_time[shard]
+                        .is_some_and(|t0| now.saturating_duration_since(t0) >= self.deadline);
+                    if overdue && self.workers[wid].is_alive() {
+                        eprintln!(
+                            "dist: worker {wid} blew the {:?} deadline on shard {shard}; \
+                             reassigning",
+                            self.deadline
+                        );
+                        self.workers[wid].strike();
+                        tracker.fail_worker(wid);
+                    }
+                }
+                tracker.wait_tick(TICK);
+            }
+            done.store(true, Ordering::Release);
+            // readers notice `done` on their next idle tick and exit
+        });
+
+        if let Some(e) = err_slot.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            return Err(e);
+        }
+        let results = tracker
+            .take_results()
+            .ok_or_else(|| anyhow!("dist grads: sweep ended without all shard results"))?;
+        reduce_grad_shards(results.into_iter().zip(wsums).collect())
+    }
+
+    fn send(&self, w: &WorkerHandle, msg: &Msg) -> Result<()> {
+        let mut guard = w.stream.lock().unwrap_or_else(|e| e.into_inner());
+        wire::write_msg(&mut *guard, msg)
+    }
+
+    /// Politely stop every worker (and reap spawned children). Called by
+    /// [`Drop`]; safe to call twice.
+    pub fn shutdown(&self) {
+        for w in &self.workers {
+            if w.is_alive() {
+                let _ = self.send(w, &Msg::Shutdown);
+            }
+        }
+        let mut children = self.lock_children();
+        for child in children.iter_mut() {
+            // give the Shutdown frame a beat, then make sure
+            match child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if !matches!(child.try_wait(), Ok(Some(_))) {
+                        let _ = child.kill();
+                    }
+                    let _ = child.wait();
+                }
+            }
+        }
+        children.clear();
+    }
+}
+
+impl Drop for DistExecutor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one `Hello` off a fresh connection and wrap it as a worker
+/// handle. A short read timeout keeps a connect-and-stall peer from
+/// wedging the accept loop.
+fn hello_handshake(stream: TcpStream, id: usize) -> Result<WorkerHandle> {
+    stream.set_nonblocking(false).context("dist: worker socket mode")?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(1000))).context("dist: hello timeout")?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).context("dist: write timeout")?;
+    let mut s = stream;
+    match wire::read_msg(&mut s)? {
+        Msg::Hello { worker } => {
+            let _ = worker; // worker-reported ids are advisory; slot order rules
+        }
+        _ => bail!("dist: worker connection did not open with Hello"),
+    }
+    let _ = s.set_read_timeout(Some(IO_TICK));
+    Ok(WorkerHandle { id, stream: Mutex::new(s), alive: AtomicBool::new(true) })
+}
+
+/// Socket reader that absorbs idle-tick timeouts: `read` retries on
+/// `WouldBlock`/`TimedOut` until data arrives or the sweep's `done` flag
+/// is raised, at which point it reports a clean EOF so the frame reader
+/// unwinds at a message boundary.
+struct IdleReader<'a> {
+    inner: TcpStream,
+    done: &'a AtomicBool,
+}
+
+impl Read for IdleReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            match self.inner.read(buf) {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if self.done.load(Ordering::Acquire) {
+                        return Ok(0);
+                    }
+                }
+                r => return r,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// The `dlrt worker` entry point: connect to the coordinator, announce
+/// ourselves, and evaluate shard jobs until `Shutdown` or EOF.
+pub fn run_worker(addr: &str, id: u32) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("worker {id}: connecting to coordinator at {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let backend = crate::backend::NativeBackend::new();
+    serve_worker(stream, &backend, id)
+}
+
+/// The worker protocol loop, split out so chaos tests can drive it over
+/// an arbitrary stream. Holds the latest `Sweep` snapshot and answers
+/// each `Job` with `Grads` (or `WorkerErr` if the backend refuses).
+pub fn serve_worker(mut stream: TcpStream, backend: &dyn ComputeBackend, id: u32) -> Result<()> {
+    wire::write_msg(&mut stream, &Msg::Hello { worker: id })?;
+    let mut snapshot: Option<(u64, String, GradPhase, Vec<WireLayer>)> = None;
+    loop {
+        match wire::read_msg_opt(&mut stream)? {
+            None | Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::Sweep { sweep, arch, phase, layers }) => {
+                snapshot = Some((sweep, arch, phase, layers));
+            }
+            Some(Msg::Job { sweep, shard, batch }) => {
+                let reply = match &snapshot {
+                    Some((s, arch, phase, layers)) if *s == sweep => {
+                        let params: Vec<LayerParams<'_>> =
+                            layers.iter().map(|l| l.params()).collect();
+                        match backend.grads(arch, &params, *phase, &batch) {
+                            Ok(out) => Msg::Grads { sweep, shard, out },
+                            Err(e) => Msg::WorkerErr { sweep, shard, msg: format!("{e:#}") },
+                        }
+                    }
+                    _ => Msg::WorkerErr {
+                        sweep,
+                        shard,
+                        msg: format!("worker {id}: job for unknown sweep {sweep}"),
+                    },
+                };
+                wire::write_msg(&mut stream, &reply)?;
+            }
+            Some(_) => bail!("worker {id}: unexpected coordinator frame"),
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_first_completion_wins() {
+        let t: ShardTracker<u32> = ShardTracker::new(3);
+        assert_eq!(t.take_orphans(), vec![0, 1, 2]);
+        assert!(t.assign(0, 0));
+        assert!(t.complete(0, 10));
+        assert!(!t.complete(0, 99), "duplicate completion must be dropped");
+        assert!(!t.assign(0, 1), "completed shards are not reassignable");
+        assert!(t.complete(1, 11));
+        assert!(t.complete(2, 12));
+        assert!(t.is_complete());
+        assert_eq!(t.take_results(), Some(vec![10, 11, 12]));
+    }
+
+    #[test]
+    fn tracker_fail_worker_orphans_only_its_pending_shards() {
+        let t: ShardTracker<u32> = ShardTracker::new(4);
+        let _ = t.take_orphans();
+        for shard in 0..4 {
+            assert!(t.assign(shard, shard % 2));
+        }
+        assert!(t.complete(0, 0)); // worker 0 finished shard 0
+        assert_eq!(t.fail_worker(0), 1); // ...but still owed shard 2
+        assert_eq!(t.take_orphans(), vec![2]);
+        assert_eq!(t.pending_assigned(), vec![(1, 1), (3, 1)]);
+        // reassign the orphan and finish
+        assert!(t.assign(2, 1));
+        for (shard, v) in [(1usize, 1u32), (2, 2), (3, 3)] {
+            assert!(t.complete(shard, v));
+        }
+        assert_eq!(t.take_results(), Some(vec![0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn tracker_close_rejects_everything_after() {
+        let t: ShardTracker<u32> = ShardTracker::new(2);
+        let _ = t.take_orphans();
+        assert!(t.assign(0, 0));
+        t.close();
+        assert!(!t.complete(0, 1));
+        assert!(!t.assign(1, 0));
+        assert_eq!(t.fail_worker(0), 0);
+        assert!(t.is_finished() && !t.is_complete());
+        assert_eq!(t.take_results(), None);
+    }
+
+    #[test]
+    fn tracker_wait_tick_returns_when_orphans_pending() {
+        let t: ShardTracker<u32> = ShardTracker::new(1);
+        // orphan present → no sleep (would hang the reassignment loop)
+        t.wait_tick(Duration::from_secs(60));
+        let _ = t.take_orphans();
+        assert!(t.assign(0, 0));
+        assert!(t.complete(0, 7));
+        t.wait_tick(Duration::from_secs(60)); // finished → no sleep either
+    }
+
+    #[test]
+    fn options_default_is_the_in_process_fast_path() {
+        let opts = DistOptions::default();
+        assert_eq!(opts.workers, 0);
+        assert_eq!(opts.shards, 1);
+    }
+}

@@ -34,6 +34,9 @@
 //! internal pool — steady-state sharded steps copy rows into existing
 //! allocations instead of growing fresh ones.
 
+pub mod dist;
+pub mod wire;
+
 use crate::backend::{
     reduce_grad_shards, ComputeBackend, EvalStats, GradPhase, GradsOut, LayerParams,
 };
@@ -267,7 +270,9 @@ impl ShardedExecutor {
 /// Split a padded batch into `k` contiguous, balanced row shards, reusing
 /// the sub-batch buffers in `shards`. The split is a pure function of
 /// `(batch, k)` — shard boundaries never depend on thread scheduling.
-fn split_batch(batch: &Batch, dim: usize, k: usize, shards: &mut Vec<Batch>) {
+/// Shared with [`dist`]: the multi-process coordinator must produce the
+/// exact same sub-batches for the parity contract to be bitwise.
+pub(crate) fn split_batch(batch: &Batch, dim: usize, k: usize, shards: &mut Vec<Batch>) {
     let bsz = batch.w.len();
     shards.resize_with(k, || Batch { x: Vec::new(), y: Vec::new(), w: Vec::new(), count: 0 });
     let base = bsz / k;

@@ -1,0 +1,842 @@
+//! Binary wire layer for multi-process sharded training (DESIGN.md §12).
+//!
+//! The coordinator ([`crate::exec::dist`]) and `dlrt worker` processes
+//! exchange **length-prefixed binary frames** over a TCP stream — the
+//! std-only transport precedent set by `serve/http.rs`, no new crates.
+//! Every frame is `[tag: u8][len: u32 LE][payload: len bytes]`; the
+//! payload encodings are the binary twin of the checkpoint matrix wire
+//! format (`coordinator::checkpoint`'s `{rows, cols, data}` shape), with
+//! one crucial difference: floats travel as **raw little-endian f32 bit
+//! patterns**, so NaN/Inf payloads and signed zeros round-trip bitwise —
+//! the JSON checkpoint format cannot represent non-finite values, and the
+//! dist executor's determinism contract requires bit-exact parameter and
+//! gradient transport.
+//!
+//! Decoding is defensive by construction: `exec/` is an L5 hard zone, so
+//! a truncated, oversized, or corrupt frame must surface as a descriptive
+//! [`crate::Result`] error — never a panic, never an unbounded
+//! allocation. Every variable-length field is validated against the
+//! bytes actually present before anything is allocated.
+
+use crate::backend::{GradPhase, GradsOut, LayerGrads, LayerParams};
+use crate::data::Batch;
+use crate::linalg::Matrix;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{Read, Write};
+
+/// Hard cap on one frame's payload. A full VGG-sized sweep (every layer
+/// dense) is well under 256 MiB; anything larger is a corrupt or hostile
+/// length prefix, not a real message.
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+/// Cap on per-message element *counts* (layers, matrix rows/cols, batch
+/// rows) — catches nonsense before the byte-budget checks even run.
+const MAX_COUNT: usize = 1 << 26;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SWEEP: u8 = 2;
+const TAG_JOB: u8 = 3;
+const TAG_GRADS: u8 = 4;
+const TAG_WORKER_ERR: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+/// Owned mirror of [`LayerParams`] — the borrowed view can't cross a
+/// process boundary, so the wire layer clones it into owned factors on
+/// encode and lends it back out via [`WireLayer::params`] on the worker.
+pub enum WireLayer {
+    Factored { u: Matrix, s: Matrix, v: Matrix, bias: Vec<f32> },
+    Dense { w: Matrix, bias: Vec<f32> },
+    TwoFactor { u: Matrix, v: Matrix, bias: Vec<f32> },
+}
+
+impl WireLayer {
+    /// Clone a borrowed parameter view into its owned wire form.
+    pub fn from_params(p: &LayerParams<'_>) -> WireLayer {
+        match p {
+            LayerParams::Factored { u, s, v, bias } => WireLayer::Factored {
+                u: (*u).clone(),
+                s: (*s).clone(),
+                v: (*v).clone(),
+                bias: bias.to_vec(),
+            },
+            LayerParams::Dense { w, bias } => {
+                WireLayer::Dense { w: (*w).clone(), bias: bias.to_vec() }
+            }
+            LayerParams::TwoFactor { u, v, bias } => WireLayer::TwoFactor {
+                u: (*u).clone(),
+                v: (*v).clone(),
+                bias: bias.to_vec(),
+            },
+        }
+    }
+
+    /// Borrow this owned layer back as the backend's parameter view.
+    pub fn params(&self) -> LayerParams<'_> {
+        match self {
+            WireLayer::Factored { u, s, v, bias } => LayerParams::Factored { u, s, v, bias },
+            WireLayer::Dense { w, bias } => LayerParams::Dense { w, bias },
+            WireLayer::TwoFactor { u, v, bias } => LayerParams::TwoFactor { u, v, bias },
+        }
+    }
+}
+
+/// One coordinator↔worker message. See the module docs for framing.
+pub enum Msg {
+    /// Worker → coordinator, once per connection: self-identification.
+    Hello { worker: u32 },
+    /// Coordinator → worker: the model snapshot one gradient sweep
+    /// evaluates. Jobs for this sweep reference it by `sweep`.
+    Sweep { sweep: u64, arch: String, phase: GradPhase, layers: Vec<WireLayer> },
+    /// Coordinator → worker: evaluate one shard's sub-batch under the
+    /// current sweep's snapshot.
+    Job { sweep: u64, shard: u32, batch: Batch },
+    /// Worker → coordinator: one shard's gradient result.
+    Grads { sweep: u64, shard: u32, out: GradsOut },
+    /// Worker → coordinator: the shard evaluation failed (deterministic
+    /// compute error — reassigning it would fail identically elsewhere).
+    WorkerErr { sweep: u64, shard: u32, msg: String },
+    /// Coordinator → worker: exit cleanly.
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, xs: &[i32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    ensure!(s.len() <= MAX_COUNT, "wire: string of {} bytes exceeds the frame budget", s.len());
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, xs: &[f32]) -> Result<()> {
+    ensure!(xs.len() <= MAX_COUNT, "wire: f32 vector of {} entries is oversized", xs.len());
+    put_u32(out, xs.len() as u32);
+    put_f32s(out, xs);
+    Ok(())
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) -> Result<()> {
+    let (rows, cols) = m.shape();
+    ensure!(
+        rows <= MAX_COUNT && cols <= MAX_COUNT,
+        "wire: matrix extent {rows}x{cols} is oversized"
+    );
+    put_u32(out, rows as u32);
+    put_u32(out, cols as u32);
+    put_f32s(out, m.data());
+    Ok(())
+}
+
+fn put_layer(out: &mut Vec<u8>, l: &WireLayer) -> Result<()> {
+    match l {
+        WireLayer::Factored { u, s, v, bias } => {
+            out.push(0);
+            put_matrix(out, u)?;
+            put_matrix(out, s)?;
+            put_matrix(out, v)?;
+            put_vec_f32(out, bias)?;
+        }
+        WireLayer::Dense { w, bias } => {
+            out.push(1);
+            put_matrix(out, w)?;
+            put_vec_f32(out, bias)?;
+        }
+        WireLayer::TwoFactor { u, v, bias } => {
+            out.push(2);
+            put_matrix(out, u)?;
+            put_matrix(out, v)?;
+            put_vec_f32(out, bias)?;
+        }
+    }
+    Ok(())
+}
+
+fn put_grads(out: &mut Vec<u8>, g: &LayerGrads) -> Result<()> {
+    match g {
+        LayerGrads::Kl { dk, dl } => {
+            out.push(0);
+            put_matrix(out, dk)?;
+            put_matrix(out, dl)?;
+        }
+        LayerGrads::S { ds, db } => {
+            out.push(1);
+            put_matrix(out, ds)?;
+            put_vec_f32(out, db)?;
+        }
+        LayerGrads::Dense { dw, db } => {
+            out.push(2);
+            put_matrix(out, dw)?;
+            put_vec_f32(out, db)?;
+        }
+        LayerGrads::TwoFactor { du, dv, db } => {
+            out.push(3);
+            put_matrix(out, du)?;
+            put_matrix(out, dv)?;
+            put_vec_f32(out, db)?;
+        }
+        LayerGrads::None => out.push(4),
+    }
+    Ok(())
+}
+
+fn put_batch(out: &mut Vec<u8>, b: &Batch) -> Result<()> {
+    let bsz = b.w.len();
+    ensure!(bsz <= MAX_COUNT, "wire: batch of {bsz} rows is oversized");
+    ensure!(
+        b.y.len() == bsz && (bsz == 0 || b.x.len() % bsz == 0) && b.count <= bsz,
+        "wire: malformed batch ({} features, {} labels, {} weights, count {})",
+        b.x.len(),
+        b.y.len(),
+        bsz,
+        b.count
+    );
+    let dim = if bsz == 0 { 0 } else { b.x.len() / bsz };
+    ensure!(dim <= MAX_COUNT, "wire: batch feature dim {dim} is oversized");
+    put_u32(out, bsz as u32);
+    put_u32(out, dim as u32);
+    put_u32(out, b.count as u32);
+    put_f32s(out, &b.x);
+    put_i32s(out, &b.y);
+    put_f32s(out, &b.w);
+    Ok(())
+}
+
+fn encode_payload(msg: &Msg) -> Result<(u8, Vec<u8>)> {
+    let mut p = Vec::new();
+    let tag = match msg {
+        Msg::Hello { worker } => {
+            put_u32(&mut p, *worker);
+            TAG_HELLO
+        }
+        Msg::Sweep { sweep, arch, phase, layers } => {
+            put_u64(&mut p, *sweep);
+            put_str(&mut p, arch)?;
+            p.push(match phase {
+                GradPhase::Kl => 0,
+                GradPhase::S => 1,
+            });
+            ensure!(layers.len() <= MAX_COUNT, "wire: {} layers is oversized", layers.len());
+            put_u32(&mut p, layers.len() as u32);
+            for l in layers {
+                put_layer(&mut p, l)?;
+            }
+            TAG_SWEEP
+        }
+        Msg::Job { sweep, shard, batch } => {
+            put_u64(&mut p, *sweep);
+            put_u32(&mut p, *shard);
+            put_batch(&mut p, batch)?;
+            TAG_JOB
+        }
+        Msg::Grads { sweep, shard, out } => {
+            put_u64(&mut p, *sweep);
+            put_u32(&mut p, *shard);
+            ensure!(out.layers.len() <= MAX_COUNT, "wire: {} grads is oversized", out.layers.len());
+            put_u32(&mut p, out.layers.len() as u32);
+            for g in &out.layers {
+                put_grads(&mut p, g)?;
+            }
+            put_f32s(&mut p, &[out.loss, out.ncorrect]);
+            TAG_GRADS
+        }
+        Msg::WorkerErr { sweep, shard, msg } => {
+            put_u64(&mut p, *sweep);
+            put_u32(&mut p, *shard);
+            put_str(&mut p, msg)?;
+            TAG_WORKER_ERR
+        }
+        Msg::Shutdown => TAG_SHUTDOWN,
+    };
+    ensure!(p.len() <= MAX_FRAME_LEN, "wire: {}-byte payload exceeds MAX_FRAME_LEN", p.len());
+    Ok((tag, p))
+}
+
+/// Serialize one message as a length-prefixed frame and flush it.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let (tag, payload) = encode_payload(msg)?;
+    let mut header = [0u8; 5];
+    header[0] = tag;
+    header[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header).context("wire: writing frame header")?;
+    w.write_all(&payload).context("wire: writing frame payload")?;
+    w.flush().context("wire: flushing frame")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked payload reader: every take validates against the bytes
+/// actually present, so a lying length field is an error, not a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "wire: truncated frame — {what} needs {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// A length field that must also fit the bytes still in the frame
+    /// (each counted element being at least `elem_bytes` wide).
+    fn count(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32(what)? as usize;
+        ensure!(n <= MAX_COUNT, "wire: {what} count {n} exceeds the element cap");
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.remaining(),
+            "wire: truncated frame — {what} claims {n} elements, {} bytes left",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    fn i32s(&mut self, n: usize, what: &str) -> Result<Vec<i32>> {
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.count(1, what)?;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec()).with_context(|| format!("wire: {what} is not UTF-8"))
+    }
+
+    fn vec_f32(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.count(4, what)?;
+        self.f32s(n, what)
+    }
+
+    fn matrix(&mut self, what: &str) -> Result<Matrix> {
+        let rows = self.u32(what)? as usize;
+        let cols = self.u32(what)? as usize;
+        ensure!(
+            rows <= MAX_COUNT && cols <= MAX_COUNT,
+            "wire: {what} extent {rows}x{cols} exceeds the element cap"
+        );
+        let n = rows.checked_mul(cols).filter(|&n| n <= MAX_COUNT).ok_or_else(|| {
+            anyhow::anyhow!("wire: {what} extent {rows}x{cols} overflows the element cap")
+        })?;
+        ensure!(
+            n * 4 <= self.remaining(),
+            "wire: truncated frame — {what} ({rows}x{cols}) needs {} bytes, {} left",
+            n * 4,
+            self.remaining()
+        );
+        let data = self.f32s(n, what)?;
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    fn layer(&mut self) -> Result<WireLayer> {
+        Ok(match self.u8("layer kind")? {
+            0 => WireLayer::Factored {
+                u: self.matrix("layer U")?,
+                s: self.matrix("layer S")?,
+                v: self.matrix("layer V")?,
+                bias: self.vec_f32("layer bias")?,
+            },
+            1 => WireLayer::Dense {
+                w: self.matrix("layer W")?,
+                bias: self.vec_f32("layer bias")?,
+            },
+            2 => WireLayer::TwoFactor {
+                u: self.matrix("layer U")?,
+                v: self.matrix("layer V")?,
+                bias: self.vec_f32("layer bias")?,
+            },
+            k => bail!("wire: unknown layer kind {k}"),
+        })
+    }
+
+    fn grads(&mut self) -> Result<LayerGrads> {
+        Ok(match self.u8("grads kind")? {
+            0 => LayerGrads::Kl { dk: self.matrix("∂K")?, dl: self.matrix("∂L")? },
+            1 => LayerGrads::S { ds: self.matrix("∂S")?, db: self.vec_f32("∂b")? },
+            2 => LayerGrads::Dense { dw: self.matrix("∂W")?, db: self.vec_f32("∂b")? },
+            3 => LayerGrads::TwoFactor {
+                du: self.matrix("∂U")?,
+                dv: self.matrix("∂V")?,
+                db: self.vec_f32("∂b")?,
+            },
+            4 => LayerGrads::None,
+            k => bail!("wire: unknown grads kind {k}"),
+        })
+    }
+
+    fn batch(&mut self) -> Result<Batch> {
+        let bsz = self.u32("batch rows")? as usize;
+        let dim = self.u32("batch dim")? as usize;
+        let count = self.u32("batch count")? as usize;
+        ensure!(
+            bsz <= MAX_COUNT && dim <= MAX_COUNT,
+            "wire: batch extent {bsz}x{dim} exceeds the element cap"
+        );
+        ensure!(count <= bsz, "wire: batch count {count} exceeds its {bsz} rows");
+        let nx = bsz.checked_mul(dim).filter(|&n| n <= MAX_COUNT).ok_or_else(|| {
+            anyhow::anyhow!("wire: batch extent {bsz}x{dim} overflows the element cap")
+        })?;
+        ensure!(
+            nx.saturating_mul(4) + bsz.saturating_mul(8) <= self.remaining(),
+            "wire: truncated frame — batch ({bsz}x{dim}) larger than the {} bytes left",
+            self.remaining()
+        );
+        let x = self.f32s(nx, "batch features")?;
+        let y = self.i32s(bsz, "batch labels")?;
+        let w = self.f32s(bsz, "batch weights")?;
+        Ok(Batch { x, y, w, count })
+    }
+
+    /// A frame must be consumed exactly: trailing bytes mean the sender
+    /// and receiver disagree about the encoding.
+    fn finish(self, what: &str) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "wire: {what} frame has {} trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg> {
+    let mut d = Dec::new(payload);
+    let msg = match tag {
+        TAG_HELLO => Msg::Hello { worker: d.u32("hello worker id")? },
+        TAG_SWEEP => {
+            let sweep = d.u64("sweep id")?;
+            let arch = d.str("sweep arch")?;
+            let phase = match d.u8("sweep phase")? {
+                0 => GradPhase::Kl,
+                1 => GradPhase::S,
+                p => bail!("wire: unknown grad phase {p}"),
+            };
+            let n = d.count(1, "sweep layers")?;
+            let mut layers = Vec::with_capacity(n);
+            for _ in 0..n {
+                layers.push(d.layer()?);
+            }
+            Msg::Sweep { sweep, arch, phase, layers }
+        }
+        TAG_JOB => Msg::Job {
+            sweep: d.u64("job sweep id")?,
+            shard: d.u32("job shard")?,
+            batch: d.batch()?,
+        },
+        TAG_GRADS => {
+            let sweep = d.u64("grads sweep id")?;
+            let shard = d.u32("grads shard")?;
+            let n = d.count(1, "grads layers")?;
+            let mut layers = Vec::with_capacity(n);
+            for _ in 0..n {
+                layers.push(d.grads()?);
+            }
+            let tail = d.f32s(2, "grads loss/ncorrect")?;
+            Msg::Grads { sweep, shard, out: GradsOut { layers, loss: tail[0], ncorrect: tail[1] } }
+        }
+        TAG_WORKER_ERR => Msg::WorkerErr {
+            sweep: d.u64("err sweep id")?,
+            shard: d.u32("err shard")?,
+            msg: d.str("err message")?,
+        },
+        TAG_SHUTDOWN => Msg::Shutdown,
+        t => bail!("wire: unknown frame tag {t}"),
+    };
+    d.finish(match tag {
+        TAG_HELLO => "hello",
+        TAG_SWEEP => "sweep",
+        TAG_JOB => "job",
+        TAG_GRADS => "grads",
+        TAG_WORKER_ERR => "worker-err",
+        _ => "shutdown",
+    })?;
+    Ok(msg)
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean EOF at a frame boundary
+/// (the peer closed between messages); EOF *inside* a frame, a bad tag,
+/// an oversized length, or a malformed payload are descriptive errors.
+pub fn read_msg_opt(r: &mut impl Read) -> Result<Option<Msg>> {
+    let mut header = [0u8; 5];
+    let mut got = 0usize;
+    while got < header.len() {
+        let n = r.read(&mut header[got..]).context("wire: reading frame header")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("wire: connection closed {got} bytes into a frame header");
+        }
+        got += n;
+    }
+    let tag = header[0];
+    let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
+    ensure!(
+        (TAG_HELLO..=TAG_SHUTDOWN).contains(&tag),
+        "wire: unknown frame tag {tag} (corrupt stream?)"
+    );
+    ensure!(len <= MAX_FRAME_LEN, "wire: frame of {len} bytes exceeds MAX_FRAME_LEN");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("wire: reading {len}-byte frame payload (tag {tag})"))?;
+    decode_payload(tag, &payload).map(Some)
+}
+
+/// Read one frame, treating EOF (even at a frame boundary) as an error —
+/// for protocol points where a message is mandatory.
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    read_msg_opt(r)?.ok_or_else(|| anyhow::anyhow!("wire: connection closed mid-protocol"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(msg: &Msg) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        buf
+    }
+
+    fn decode(buf: &[u8]) -> Result<Option<Msg>> {
+        let mut r = &buf[..];
+        read_msg_opt(&mut r)
+    }
+
+    fn mat_bits_eq(a: &Matrix, b: &Matrix) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn vec_bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Adversarial shapes: zero-extent, 1×N, non-square, and a payload of
+    /// NaN / ±Inf / signed zeros — all must round-trip bitwise.
+    fn nasty_matrices() -> Vec<Matrix> {
+        vec![
+            Matrix::zeros(0, 5),
+            Matrix::zeros(3, 0),
+            Matrix::zeros(0, 0),
+            Matrix::from_vec(1, 4, vec![1.0, -2.5, 3.25, -0.0]),
+            Matrix::from_vec(4, 1, vec![f32::MIN_POSITIVE, f32::MAX, -f32::MAX, 1e-42]),
+            Matrix::from_vec(2, 3, vec![
+                f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                -0.0,
+                f32::from_bits(0x7fc0_dead), // payload-carrying NaN
+                0.0,
+            ]),
+        ]
+    }
+
+    #[test]
+    fn hello_and_shutdown_round_trip() {
+        match decode(&encode(&Msg::Hello { worker: 7 })).unwrap() {
+            Some(Msg::Hello { worker }) => assert_eq!(worker, 7),
+            _ => panic!("expected Hello"),
+        }
+        assert!(matches!(decode(&encode(&Msg::Shutdown)).unwrap(), Some(Msg::Shutdown)));
+    }
+
+    #[test]
+    fn eof_at_frame_boundary_is_none_not_error() {
+        assert!(decode(&[]).unwrap().is_none());
+    }
+
+    #[test]
+    fn sweep_round_trips_adversarial_matrices_bitwise() {
+        for (i, m) in nasty_matrices().into_iter().enumerate() {
+            let bias = vec![f32::NAN, -0.0, f32::INFINITY];
+            let msg = Msg::Sweep {
+                sweep: 0xDEAD_BEEF_0000 + i as u64,
+                arch: "lenet".into(),
+                phase: GradPhase::S,
+                layers: vec![
+                    WireLayer::Dense { w: m.clone(), bias: bias.clone() },
+                    WireLayer::Factored {
+                        u: m.clone(),
+                        s: Matrix::from_vec(1, 1, vec![f32::NEG_INFINITY]),
+                        v: m.clone(),
+                        bias: Vec::new(),
+                    },
+                    WireLayer::TwoFactor { u: m.clone(), v: m.clone(), bias: vec![0.5] },
+                ],
+            };
+            let Some(Msg::Sweep { sweep, arch, phase, layers }) = decode(&encode(&msg)).unwrap()
+            else {
+                panic!("expected Sweep back");
+            };
+            assert_eq!(sweep, 0xDEAD_BEEF_0000 + i as u64);
+            assert_eq!(arch, "lenet");
+            assert_eq!(phase, GradPhase::S);
+            assert_eq!(layers.len(), 3);
+            match (&layers[0], &layers[1], &layers[2]) {
+                (
+                    WireLayer::Dense { w, bias: b0 },
+                    WireLayer::Factored { u, s, v, bias: b1 },
+                    WireLayer::TwoFactor { u: u2, v: v2, bias: b2 },
+                ) => {
+                    assert!(mat_bits_eq(w, &m), "dense W drifted (case {i})");
+                    assert!(vec_bits_eq(b0, &bias), "bias bits drifted (case {i})");
+                    assert!(mat_bits_eq(u, &m) && mat_bits_eq(v, &m));
+                    assert!(s.data()[0].to_bits() == f32::NEG_INFINITY.to_bits());
+                    assert!(b1.is_empty());
+                    assert!(mat_bits_eq(u2, &m) && mat_bits_eq(v2, &m));
+                    assert_eq!(b2, &[0.5]);
+                }
+                _ => panic!("layer kinds shuffled (case {i})"),
+            }
+        }
+    }
+
+    #[test]
+    fn grads_round_trip_every_variant_bitwise() {
+        let out = GradsOut {
+            layers: vec![
+                LayerGrads::Kl {
+                    dk: Matrix::from_vec(2, 2, vec![1.0, f32::NAN, -0.0, 4.0]),
+                    dl: Matrix::zeros(0, 3),
+                },
+                LayerGrads::S { ds: Matrix::from_vec(1, 1, vec![9.5]), db: vec![-1.0, 2.0] },
+                LayerGrads::Dense { dw: Matrix::from_vec(1, 2, vec![5.0, 6.0]), db: vec![7.0] },
+                LayerGrads::TwoFactor {
+                    du: Matrix::from_vec(2, 1, vec![1.5, 2.5]),
+                    dv: Matrix::from_vec(1, 2, vec![3.5, 4.5]),
+                    db: vec![f32::INFINITY],
+                },
+                LayerGrads::None,
+            ],
+            loss: f32::NAN,
+            ncorrect: 12.5,
+        };
+        let msg = Msg::Grads { sweep: 3, shard: 1, out };
+        let Some(Msg::Grads { sweep, shard, out }) = decode(&encode(&msg)).unwrap() else {
+            panic!("expected Grads back");
+        };
+        assert_eq!((sweep, shard), (3, 1));
+        assert_eq!(out.loss.to_bits(), f32::NAN.to_bits());
+        assert_eq!(out.ncorrect, 12.5);
+        assert_eq!(out.layers.len(), 5);
+        match &out.layers[0] {
+            LayerGrads::Kl { dk, dl } => {
+                assert_eq!(dk.data()[1].to_bits(), f32::NAN.to_bits());
+                assert_eq!(dk.data()[2].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(dl.shape(), (0, 3));
+            }
+            _ => panic!("variant 0"),
+        }
+        assert!(matches!(&out.layers[4], LayerGrads::None));
+    }
+
+    #[test]
+    fn job_batch_round_trips_including_padding_and_weights() {
+        let batch = Batch {
+            x: vec![1.0, -0.0, f32::NAN, 4.0, 5.0, 6.0],
+            y: vec![3, -1, 0],
+            w: vec![1.0, 0.5, 0.0],
+            count: 2,
+        };
+        let msg = Msg::Job { sweep: 11, shard: 2, batch };
+        let Some(Msg::Job { sweep, shard, batch }) = decode(&encode(&msg)).unwrap() else {
+            panic!("expected Job back");
+        };
+        assert_eq!((sweep, shard), (11, 2));
+        assert_eq!(batch.count, 2);
+        assert_eq!(batch.y, vec![3, -1, 0]);
+        assert!(vec_bits_eq(&batch.w, &[1.0, 0.5, 0.0]));
+        assert!(vec_bits_eq(&batch.x, &[1.0, -0.0, f32::NAN, 4.0, 5.0, 6.0]));
+    }
+
+    #[test]
+    fn worker_err_round_trips() {
+        let msg = Msg::WorkerErr { sweep: 5, shard: 0, msg: "rank cap exceeded: ∂S".into() };
+        let Some(Msg::WorkerErr { sweep, shard, msg }) = decode(&encode(&msg)).unwrap() else {
+            panic!("expected WorkerErr back");
+        };
+        assert_eq!((sweep, shard), (5, 0));
+        assert_eq!(msg, "rank cap exceeded: ∂S");
+    }
+
+    /// Every strict prefix of every message must produce a descriptive
+    /// error (or a clean `None` for the empty prefix) — never a panic.
+    #[test]
+    fn truncated_frames_error_never_panic() {
+        let msgs = vec![
+            Msg::Hello { worker: 1 },
+            Msg::Sweep {
+                sweep: 1,
+                arch: "mlp_tiny".into(),
+                phase: GradPhase::Kl,
+                layers: vec![WireLayer::Dense {
+                    w: Matrix::from_vec(2, 3, vec![1.0; 6]),
+                    bias: vec![0.0, 1.0],
+                }],
+            },
+            Msg::Job {
+                sweep: 2,
+                shard: 0,
+                batch: Batch { x: vec![1.0, 2.0], y: vec![0], w: vec![1.0], count: 1 },
+            },
+            Msg::Grads {
+                sweep: 2,
+                shard: 0,
+                out: GradsOut {
+                    layers: vec![LayerGrads::Dense {
+                        dw: Matrix::from_vec(1, 2, vec![1.0, 2.0]),
+                        db: vec![0.5],
+                    }],
+                    loss: 1.0,
+                    ncorrect: 1.0,
+                },
+            },
+            Msg::WorkerErr { sweep: 2, shard: 0, msg: "boom".into() },
+        ];
+        for msg in &msgs {
+            let full = encode(msg);
+            for cut in 0..full.len() {
+                match decode(&full[..cut]) {
+                    Ok(None) => assert_eq!(cut, 0, "EOF mid-frame must be an error"),
+                    Ok(Some(_)) => panic!("{cut}-byte prefix of {}-byte frame parsed", full.len()),
+                    Err(e) => {
+                        let s = e.to_string();
+                        assert!(s.contains("wire"), "undiagnostic error at cut {cut}: {s}");
+                    }
+                }
+            }
+            assert!(decode(&full).unwrap().is_some(), "full frame must still parse");
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_descriptive_errors() {
+        // unknown tag
+        assert!(decode(&[99, 0, 0, 0, 0]).unwrap_err().to_string().contains("tag"));
+        // hostile length prefix: no allocation, immediate error
+        let mut huge = vec![TAG_HELLO];
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode(&huge).unwrap_err().to_string().contains("MAX_FRAME_LEN"));
+        // trailing garbage inside a declared payload
+        let mut msg = encode(&Msg::Hello { worker: 3 });
+        let len = (msg.len() - 5 + 2) as u32;
+        msg[1..5].copy_from_slice(&len.to_le_bytes());
+        msg.extend_from_slice(&[0xAB, 0xCD]);
+        assert!(decode(&msg).unwrap_err().to_string().contains("trailing"));
+        // matrix whose extent outruns the payload
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_str(&mut p, "mlp_tiny").unwrap();
+        p.push(0); // phase Kl
+        put_u32(&mut p, 1); // one layer
+        p.push(1); // dense
+        put_u32(&mut p, 1000);
+        put_u32(&mut p, 1000); // claims 4MB of data, none present
+        let mut frame = vec![TAG_SWEEP];
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&p);
+        assert!(decode(&frame).unwrap_err().to_string().contains("truncated"));
+        // bad phase byte
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_str(&mut p, "x").unwrap();
+        p.push(9);
+        put_u32(&mut p, 0);
+        let mut frame = vec![TAG_SWEEP];
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&p);
+        assert!(decode(&frame).unwrap_err().to_string().contains("phase"));
+        // batch count > rows
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_u32(&mut p, 0);
+        put_u32(&mut p, 1); // bsz
+        put_u32(&mut p, 1); // dim
+        put_u32(&mut p, 2); // count 2 > 1 row
+        put_f32s(&mut p, &[0.0]);
+        put_i32s(&mut p, &[0]);
+        put_f32s(&mut p, &[1.0]);
+        let mut frame = vec![TAG_JOB];
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&p);
+        assert!(decode(&frame).unwrap_err().to_string().contains("count"));
+    }
+
+    #[test]
+    fn wire_layer_lends_params_back() {
+        let w = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let bias = vec![0.1, 0.2];
+        let owned = WireLayer::from_params(&LayerParams::Dense { w: &w, bias: &bias });
+        match owned.params() {
+            LayerParams::Dense { w: w2, bias: b2 } => {
+                assert!(mat_bits_eq(w2, &w));
+                assert_eq!(b2, &bias[..]);
+            }
+            _ => panic!("kind changed through the wire type"),
+        }
+    }
+}

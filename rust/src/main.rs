@@ -24,10 +24,12 @@ dlrt — Dynamical Low-Rank Training (NeurIPS 2022 reproduction)
 USAGE:
   dlrt train [--preset NAME | --config FILE] [--out DIR] [--epochs N]
              [--artifacts DIR] [--seed N] [--grad-shards K]
+             [--exec-workers N] [--exec-deadline-ms MS]
   dlrt eval --checkpoint FILE [--preset NAME]
   dlrt export --checkpoint FILE [--out FILE]
   dlrt serve --model FILE [--config FILE] [--host ADDR] [--port N (0=ephemeral)]
              [--replicas N] [--batch-cap N] [--queue-cap N] [--slo-ms MS]
+  dlrt worker --connect ADDR [--id N]
   dlrt presets
   dlrt inspect [--artifacts DIR]
 ";
@@ -47,6 +49,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "presets" => {
             for (name, cfg) in presets::all() {
                 println!(
@@ -86,6 +89,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(k) = args.get_usize("grad-shards")? {
         cfg.grad_shards = k;
+        cfg.validate()?;
+    }
+    if let Some(w) = args.get_usize("exec-workers")? {
+        cfg.exec.workers = w;
+        cfg.validate()?;
+    }
+    if let Some(ms) = args.get_usize("exec-deadline-ms")? {
+        cfg.exec.worker_deadline_ms = ms as u64;
         cfg.validate()?;
     }
     let name = args.get_or("preset", "custom").to_string();
@@ -215,6 +226,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.wait();
     engine.shutdown();
     Ok(())
+}
+
+/// Gradient worker process: connect back to a coordinator (`dlrt train
+/// --exec-workers N` spawns these itself; a multi-host deployment launches
+/// them by hand against the coordinator's `exec_addr`) and evaluate shard
+/// jobs until the coordinator says stop.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --connect HOST:PORT"))?;
+    let id = args.get_usize("id")?.unwrap_or(0) as u32;
+    dlrt::exec::dist::run_worker(addr, id)
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

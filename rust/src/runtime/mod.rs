@@ -31,8 +31,10 @@ use crate::backend::{
 };
 use crate::config::Config;
 use crate::data::Batch;
+use crate::exec::dist::{DistExecutor, DistOptions};
 use crate::exec::ShardedExecutor;
 use crate::Result;
+use std::time::Duration;
 
 /// The compute-backend dispatcher every trainer holds. Gradient *and*
 /// evaluation sweeps route through the owned [`ShardedExecutor`]: at the
@@ -40,9 +42,18 @@ use crate::Result;
 /// to calling the backend directly); at higher counts each
 /// [`Runtime::grads`] / [`Runtime::forward`] call splits its batch across
 /// worker replicas (DESIGN.md §8).
+///
+/// With `exec_workers > 0` in the config, gradient sweeps instead fan
+/// out across **worker processes** through a [`DistExecutor`]
+/// (DESIGN.md §12) — same split, same fixed-order reduction, bitwise-
+/// identical results per `(batch, grad_shards)` topology. Evaluation
+/// forwards deliberately stay on the in-process executor: they are
+/// light relative to gradient sweeps and run between epochs, so wire
+/// cost would dominate any fan-out win.
 pub struct Runtime {
     backend: Box<dyn ComputeBackend>,
     exec: ShardedExecutor,
+    dist: Option<DistExecutor>,
 }
 
 impl Runtime {
@@ -53,7 +64,7 @@ impl Runtime {
 
     /// Wrap an arbitrary backend (tests, custom architectures).
     pub fn with_backend(backend: Box<dyn ComputeBackend>) -> Runtime {
-        Runtime { backend, exec: ShardedExecutor::new(1) }
+        Runtime { backend, exec: ShardedExecutor::new(1), dist: None }
     }
 
     /// Reconfigure how many row shards every gradient sweep splits into.
@@ -80,14 +91,48 @@ impl Runtime {
     }
 
     /// Build the backend a config asks for (`backend = "native" | "jnp" |
-    /// "pallas"`), honoring its `grad_shards` knob.
+    /// "pallas"`), honoring its `grad_shards` knob and — when
+    /// `exec_workers > 0` — spawning the worker processes of the
+    /// distributed gradient executor (native backend only: worker
+    /// processes run `NativeBackend`, so fanning an artifact backend out
+    /// across them would silently change the kernels).
     pub fn for_config(cfg: &Config) -> Result<Runtime> {
         let rt = match cfg.backend.as_str() {
             "native" => Runtime::native(),
             "jnp" | "pallas" => pjrt_for_config(cfg)?,
             other => anyhow::bail!("unknown backend '{other}' (expected native|jnp|pallas)"),
         };
-        rt.with_grad_shards(cfg.grad_shards.max(1))
+        let mut rt = rt.with_grad_shards(cfg.grad_shards.max(1))?;
+        if cfg.exec.workers > 0 {
+            anyhow::ensure!(
+                cfg.backend == "native",
+                "exec_workers > 0 requires the native backend (worker processes run native \
+                 kernels; got backend '{}')",
+                cfg.backend
+            );
+            let opts = DistOptions {
+                workers: cfg.exec.workers,
+                shards: cfg.grad_shards.max(1),
+                deadline: Duration::from_millis(cfg.exec.worker_deadline_ms),
+                addr: cfg.exec.addr.clone(),
+                ..DistOptions::default()
+            };
+            let clock = std::sync::Arc::new(crate::metrics::SystemClock);
+            rt.dist = Some(DistExecutor::spawn(&opts, clock)?);
+        }
+        Ok(rt)
+    }
+
+    /// Attach an already-constructed distributed executor (tests adopt
+    /// pre-connected workers instead of spawning children).
+    pub fn with_dist(mut self, dist: DistExecutor) -> Runtime {
+        self.dist = Some(dist);
+        self
+    }
+
+    /// The distributed executor, when gradient sweeps are multi-process.
+    pub fn dist(&self) -> Option<&DistExecutor> {
+        self.dist.as_ref()
     }
 
     pub fn backend(&self) -> &dyn ComputeBackend {
@@ -120,6 +165,9 @@ impl Runtime {
         phase: GradPhase,
         batch: &Batch,
     ) -> Result<GradsOut> {
+        if let Some(dist) = &self.dist {
+            return dist.grads(self.backend.as_ref(), arch, layers, phase, batch);
+        }
         self.exec.grads(self.backend.as_ref(), arch, layers, phase, batch)
     }
 

@@ -1,0 +1,356 @@
+//! Chaos suite for the distributed gradient coordinator (DESIGN.md §12).
+//!
+//! Every fault here ends in one of exactly two outcomes: the sweep
+//! completes **bitwise-identical** to the in-process `ShardedExecutor`
+//! at the same `grad_shards` (reassignment is invisible in the output),
+//! or it fails with a descriptive error (never a hang, never a panic).
+//!
+//! Faulty workers are modeled two ways: in-test threads speaking the
+//! wire protocol by hand (deterministic misbehavior — die mid-sweep,
+//! hang forever, report an error), and a real `dlrt worker` subprocess
+//! killed outright.
+
+use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams, NativeBackend};
+use dlrt::data::Batch;
+use dlrt::dlrt::LowRankFactors;
+use dlrt::exec::dist::{self, DistExecutor, DistOptions};
+use dlrt::exec::wire::{self, Msg};
+use dlrt::linalg::{Matrix, Rng};
+use dlrt::metrics::SystemClock;
+use dlrt::runtime::Runtime;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// All-factored net on the `mlp_tiny` geometry (64 → 32 → 32 → 10):
+/// small enough that a chaos run with reassignment finishes in well
+/// under a second per sweep.
+struct TinyNet {
+    f: Vec<LowRankFactors>,
+}
+
+impl TinyNet {
+    fn new(seed: u64) -> TinyNet {
+        let mut rng = Rng::new(seed);
+        let mut f = vec![
+            LowRankFactors::random(32, 64, 8, &mut rng),
+            LowRankFactors::random(32, 32, 8, &mut rng),
+            LowRankFactors::random(10, 32, 10, &mut rng),
+        ];
+        for layer in &mut f {
+            for b in layer.bias.iter_mut() {
+                *b = 0.1 * rng.normal();
+            }
+        }
+        TinyNet { f }
+    }
+
+    fn params(&self) -> Vec<LayerParams<'_>> {
+        self.f
+            .iter()
+            .map(|l| LayerParams::Factored { u: &l.u, s: &l.s, v: &l.v, bias: &l.bias })
+            .collect()
+    }
+}
+
+/// 16-row toy batch (dim 64) with a padding tail and a fractional weight.
+fn tiny_batch(seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let bsz = 16;
+    let count = 14;
+    let mut b = Batch {
+        x: (0..bsz * 64).map(|_| rng.normal()).collect(),
+        y: (0..bsz).map(|_| rng.below(10) as i32).collect(),
+        w: vec![1.0; bsz],
+        count,
+    };
+    for i in count..bsz {
+        b.w[i] = 0.0;
+        for v in &mut b.x[i * 64..(i + 1) * 64] {
+            *v = 0.0;
+        }
+    }
+    b.w[3] = 0.25;
+    b
+}
+
+fn grads_bitwise_eq(a: &GradsOut, b: &GradsOut) -> bool {
+    if a.loss.to_bits() != b.loss.to_bits() || a.ncorrect.to_bits() != b.ncorrect.to_bits() {
+        return false;
+    }
+    let bits = |m: &Matrix, n: &Matrix| {
+        m.shape() == n.shape()
+            && m.data().iter().zip(n.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    let vbits = |p: &[f32], q: &[f32]| {
+        p.len() == q.len() && p.iter().zip(q).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(&b.layers).all(|(x, y)| match (x, y) {
+            (LayerGrads::Kl { dk, dl }, LayerGrads::Kl { dk: a1, dl: a2 }) => {
+                bits(dk, a1) && bits(dl, a2)
+            }
+            (LayerGrads::S { ds, db }, LayerGrads::S { ds: a1, db: a2 }) => {
+                bits(ds, a1) && vbits(db, a2)
+            }
+            (LayerGrads::Dense { dw, db }, LayerGrads::Dense { dw: a1, db: a2 }) => {
+                bits(dw, a1) && vbits(db, a2)
+            }
+            (
+                LayerGrads::TwoFactor { du, dv, db },
+                LayerGrads::TwoFactor { du: a1, dv: a2, db: a3 },
+            ) => bits(du, a1) && bits(dv, a2) && vbits(db, a3),
+            (LayerGrads::None, LayerGrads::None) => true,
+            _ => false,
+        })
+}
+
+/// A well-behaved in-test worker: the production loop over a client
+/// socket, exactly what `dlrt worker` runs after connecting.
+fn good_worker(addr: SocketAddr, id: u32) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let stream = TcpStream::connect(addr).expect("good worker connect");
+        let backend = NativeBackend::new();
+        let _ = dist::serve_worker(stream, &backend, id);
+    })
+}
+
+/// A worker that accepts its first job and dies mid-sweep without ever
+/// answering — the "kill -9 between Job and Grads" failure.
+fn dying_worker(addr: SocketAddr) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("dying worker connect");
+        wire::write_msg(&mut stream, &Msg::Hello { worker: 100 }).expect("hello");
+        // brief (Sweep), then the first Job, then vanish
+        let _ = wire::read_msg(&mut stream).expect("read sweep brief");
+        let _ = wire::read_msg(&mut stream).expect("read first job");
+        drop(stream);
+    })
+}
+
+/// A worker that connects, reads everything, and never answers anything
+/// — the straggler that must be struck by the per-worker deadline.
+fn hung_worker(addr: SocketAddr) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("hung worker connect");
+        wire::write_msg(&mut stream, &Msg::Hello { worker: 200 }).expect("hello");
+        while let Ok(Some(_)) = wire::read_msg_opt(&mut stream) {}
+    })
+}
+
+/// A worker that answers its first job with a `WorkerErr` frame.
+fn faulting_worker(addr: SocketAddr) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).expect("faulting worker connect");
+        wire::write_msg(&mut stream, &Msg::Hello { worker: 300 }).expect("hello");
+        let sweep = match wire::read_msg(&mut stream).expect("read sweep brief") {
+            Msg::Sweep { sweep, .. } => sweep,
+            _ => panic!("expected sweep brief"),
+        };
+        let shard = match wire::read_msg(&mut stream).expect("read first job") {
+            Msg::Job { shard, .. } => shard,
+            _ => panic!("expected job"),
+        };
+        let err = Msg::WorkerErr { sweep, shard, msg: "injected compute fault".into() };
+        let _ = wire::write_msg(&mut stream, &err);
+        // stay readable so coordinator writes don't race a closed socket
+        while let Ok(Some(_)) = wire::read_msg_opt(&mut stream) {}
+    })
+}
+
+fn adopt(
+    listener: TcpListener,
+    workers: usize,
+    shards: usize,
+    deadline: Duration,
+    connect_window: Duration,
+) -> dlrt::Result<DistExecutor> {
+    let addr = listener.local_addr().expect("listener addr").to_string();
+    let opts = DistOptions { workers, shards, deadline, addr, connect_window };
+    DistExecutor::adopt(listener, &opts, Arc::new(SystemClock))
+}
+
+fn in_process_reference(
+    params: &[LayerParams<'_>],
+    phase: GradPhase,
+    batch: &Batch,
+    shards: usize,
+) -> GradsOut {
+    Runtime::native()
+        .with_grad_shards(shards)
+        .expect("sharded runtime")
+        .grads("mlp_tiny", params, phase, batch)
+        .expect("in-process reference")
+}
+
+#[test]
+fn killed_worker_mid_sweep_is_reassigned_and_stays_bitwise() {
+    let net = TinyNet::new(0xC4A05);
+    let params = net.params();
+    let batch = tiny_batch(1);
+    let shards = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let h1 = dying_worker(addr);
+    let h2 = good_worker(addr, 1);
+    let dist = adopt(listener, 2, shards, Duration::from_secs(10), Duration::from_secs(10))
+        .expect("adopt");
+    assert_eq!(dist.connected_workers(), 2);
+    let backend = NativeBackend::new();
+    for phase in [GradPhase::Kl, GradPhase::S] {
+        let out = dist
+            .grads(&backend, "mlp_tiny", &params, phase, &batch)
+            .expect("sweep must survive a worker dying mid-flight");
+        let reference = in_process_reference(&params, phase, &batch, shards);
+        assert!(
+            grads_bitwise_eq(&out, &reference),
+            "{phase:?}: reassigned sweep drifted from the no-failure in-process result"
+        );
+    }
+    // the dead worker must be off the roster; the survivor carried it
+    assert_eq!(dist.live_workers(), 1);
+    dist.shutdown();
+    drop(dist);
+    h1.join().expect("dying worker thread");
+    h2.join().expect("good worker thread");
+}
+
+#[test]
+fn killed_real_worker_process_is_reassigned_and_stays_bitwise() {
+    let net = TinyNet::new(0xDEAD);
+    let params = net.params();
+    let batch = tiny_batch(2);
+    let shards = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let exe = env!("CARGO_BIN_EXE_dlrt");
+    let mut children: Vec<_> = (0..2)
+        .map(|i| {
+            Command::new(exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--id")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .expect("spawn dlrt worker")
+        })
+        .collect();
+    let dist = adopt(listener, 2, shards, Duration::from_secs(10), Duration::from_secs(30))
+        .expect("adopt");
+    assert_eq!(dist.connected_workers(), 2);
+    // kill one real process before the sweep; the coordinator sees EOF on
+    // its socket mid-sweep and must shift every shard to the survivor
+    children[0].kill().expect("kill worker 0");
+    children[0].wait().expect("reap worker 0");
+    let backend = NativeBackend::new();
+    let out = dist
+        .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect("sweep must survive a killed worker process");
+    let reference = in_process_reference(&params, GradPhase::Kl, &batch, shards);
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "sweep after a real process kill drifted from the in-process result"
+    );
+    dist.shutdown();
+    drop(dist);
+    for child in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+#[test]
+fn worker_that_never_connects_is_tolerated() {
+    let net = TinyNet::new(0x90057);
+    let params = net.params();
+    let batch = tiny_batch(3);
+    let shards = 3;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    // 2 workers expected, only 1 ever shows up; the connect window
+    // expires and the coordinator proceeds short-handed
+    let h = good_worker(addr, 0);
+    let dist = adopt(listener, 2, shards, Duration::from_secs(10), Duration::from_millis(500))
+        .expect("adopt must tolerate a no-show when at least one connects");
+    assert_eq!(dist.connected_workers(), 1);
+    let backend = NativeBackend::new();
+    let out = dist
+        .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect("short-handed sweep");
+    let reference = in_process_reference(&params, GradPhase::Kl, &batch, shards);
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "short-handed sweep drifted from the in-process result"
+    );
+    dist.shutdown();
+    drop(dist);
+    h.join().expect("good worker thread");
+}
+
+#[test]
+fn no_workers_at_all_is_a_descriptive_error_not_a_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let err = adopt(listener, 2, 4, Duration::from_secs(1), Duration::from_millis(250))
+        .expect_err("adopt with zero connections must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker"), "unhelpful adopt error: {msg}");
+}
+
+#[test]
+fn hung_worker_past_deadline_is_struck_and_its_shards_reassigned() {
+    let net = TinyNet::new(0x4A46);
+    let params = net.params();
+    let batch = tiny_batch(4);
+    let shards = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let h1 = hung_worker(addr);
+    let h2 = good_worker(addr, 1);
+    // tight per-worker deadline: the hung worker's shards must time out,
+    // strike it, and land on the live one
+    let dist = adopt(listener, 2, shards, Duration::from_millis(200), Duration::from_secs(10))
+        .expect("adopt");
+    assert_eq!(dist.connected_workers(), 2);
+    let backend = NativeBackend::new();
+    let out = dist
+        .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect("sweep must survive a hung worker");
+    let reference = in_process_reference(&params, GradPhase::Kl, &batch, shards);
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "sweep with a struck straggler drifted from the in-process result"
+    );
+    assert_eq!(dist.live_workers(), 1, "the straggler must be struck from the roster");
+    dist.shutdown();
+    drop(dist);
+    h1.join().expect("hung worker thread");
+    h2.join().expect("good worker thread");
+}
+
+#[test]
+fn worker_reported_fault_surfaces_as_an_error() {
+    let net = TinyNet::new(0xE44);
+    let params = net.params();
+    let batch = tiny_batch(5);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let h1 = faulting_worker(addr);
+    let h2 = good_worker(addr, 1);
+    let dist = adopt(listener, 2, 4, Duration::from_secs(10), Duration::from_secs(10))
+        .expect("adopt");
+    assert_eq!(dist.connected_workers(), 2);
+    let backend = NativeBackend::new();
+    let err = dist
+        .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect_err("a worker-reported compute fault must fail the sweep");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected compute fault"), "fault text lost: {msg}");
+    dist.shutdown();
+    drop(dist);
+    h1.join().expect("faulting worker thread");
+    h2.join().expect("good worker thread");
+}

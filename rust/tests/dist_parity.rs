@@ -1,0 +1,263 @@
+//! Multi-process parity suite (DESIGN.md §12): gradients computed by
+//! real `dlrt worker` subprocesses behind the [`DistExecutor`] must be
+//! **bitwise-identical** to the in-process [`ShardedExecutor`] at the
+//! same `grad_shards` — the wire layer round-trips f32 bit patterns, the
+//! batch split is the same pure function, and the reduction order is
+//! fixed by shard index, so nothing about crossing a process boundary is
+//! allowed to move a single bit.
+//!
+//! The worker binary comes from `env!("CARGO_BIN_EXE_dlrt")` (Cargo
+//! builds and exposes the real CLI to integration tests); the test binds
+//! its own loopback listener and adopts the spawned workers.
+
+use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams, NativeBackend};
+use dlrt::baselines::he_normal;
+use dlrt::data::Batch;
+use dlrt::dlrt::LowRankFactors;
+use dlrt::exec::dist::{DistExecutor, DistOptions};
+use dlrt::linalg::{Matrix, Rng};
+use dlrt::metrics::SystemClock;
+use dlrt::runtime::Runtime;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Dense-conv prefix + adaptive low-rank tail on the `lenet` geometry
+/// (same property net as `tests/shard_exec.rs`): conv 20x25, conv 50x500
+/// (dense kernels) | fc 500x800, fc 10x500 (factored).
+struct MixedNet {
+    w0: Matrix,
+    b0: Vec<f32>,
+    w1: Matrix,
+    b1: Vec<f32>,
+    f2: LowRankFactors,
+    f3: LowRankFactors,
+}
+
+impl MixedNet {
+    fn new(seed: u64) -> MixedNet {
+        let mut rng = Rng::new(seed);
+        let mut net = MixedNet {
+            w0: he_normal(20, 25, &mut rng),
+            b0: (0..20).map(|_| 0.1 * rng.normal()).collect(),
+            w1: he_normal(50, 500, &mut rng),
+            b1: (0..50).map(|_| 0.1 * rng.normal()).collect(),
+            f2: LowRankFactors::random(500, 800, 16, &mut rng),
+            f3: LowRankFactors::random(10, 500, 10, &mut rng),
+        };
+        for b in net.f2.bias.iter_mut().chain(net.f3.bias.iter_mut()) {
+            *b = 0.1 * rng.normal();
+        }
+        net
+    }
+
+    fn params(&self) -> Vec<LayerParams<'_>> {
+        vec![
+            LayerParams::Dense { w: &self.w0, bias: &self.b0 },
+            LayerParams::Dense { w: &self.w1, bias: &self.b1 },
+            LayerParams::Factored {
+                u: &self.f2.u,
+                s: &self.f2.s,
+                v: &self.f2.v,
+                bias: &self.f2.bias,
+            },
+            LayerParams::Factored {
+                u: &self.f3.u,
+                s: &self.f3.s,
+                v: &self.f3.v,
+                bias: &self.f3.bias,
+            },
+        ]
+    }
+}
+
+/// A 24-row MNIST-shaped batch with a padding tail and one fractional
+/// weight, so the Σw-weighted reduction is actually exercised.
+fn lenet_batch(seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let bsz = 24;
+    let count = 20;
+    let mut b = Batch {
+        x: (0..bsz * 784).map(|_| rng.normal()).collect(),
+        y: (0..bsz).map(|_| rng.below(10) as i32).collect(),
+        w: vec![1.0; bsz],
+        count,
+    };
+    for i in count..bsz {
+        b.w[i] = 0.0;
+        for v in &mut b.x[i * 784..(i + 1) * 784] {
+            *v = 0.0;
+        }
+    }
+    b.w[5] = 0.5;
+    b
+}
+
+fn grads_bitwise_eq(a: &GradsOut, b: &GradsOut) -> bool {
+    if a.loss.to_bits() != b.loss.to_bits() || a.ncorrect.to_bits() != b.ncorrect.to_bits() {
+        return false;
+    }
+    let bits = |m: &Matrix, n: &Matrix| {
+        m.shape() == n.shape()
+            && m.data().iter().zip(n.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    let vbits = |p: &[f32], q: &[f32]| {
+        p.len() == q.len() && p.iter().zip(q).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(&b.layers).all(|(x, y)| match (x, y) {
+            (LayerGrads::Kl { dk, dl }, LayerGrads::Kl { dk: a1, dl: a2 }) => {
+                bits(dk, a1) && bits(dl, a2)
+            }
+            (LayerGrads::S { ds, db }, LayerGrads::S { ds: a1, db: a2 }) => {
+                bits(ds, a1) && vbits(db, a2)
+            }
+            (LayerGrads::Dense { dw, db }, LayerGrads::Dense { dw: a1, db: a2 }) => {
+                bits(dw, a1) && vbits(db, a2)
+            }
+            (
+                LayerGrads::TwoFactor { du, dv, db },
+                LayerGrads::TwoFactor { du: a1, dv: a2, db: a3 },
+            ) => bits(du, a1) && bits(dv, a2) && vbits(db, a3),
+            (LayerGrads::None, LayerGrads::None) => true,
+            _ => false,
+        })
+}
+
+/// Bind a loopback listener, launch `workers` real `dlrt worker`
+/// subprocesses pointed at it, and adopt them into a coordinator.
+/// Callers must [`reap`] the children when done.
+fn real_worker_cluster(workers: usize, shards: usize) -> (DistExecutor, Vec<Child>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback listener");
+    let addr = listener.local_addr().expect("listener addr");
+    let exe = env!("CARGO_BIN_EXE_dlrt");
+    let children: Vec<Child> = (0..workers)
+        .map(|i| {
+            Command::new(exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--id")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .expect("spawn dlrt worker")
+        })
+        .collect();
+    let opts = DistOptions {
+        workers,
+        shards,
+        deadline: Duration::from_secs(30),
+        addr: addr.to_string(),
+        connect_window: Duration::from_secs(30),
+    };
+    let dist = DistExecutor::adopt(listener, &opts, Arc::new(SystemClock))
+        .expect("adopt spawned workers");
+    assert_eq!(dist.connected_workers(), workers, "every worker must connect");
+    (dist, children)
+}
+
+fn reap(dist: DistExecutor, mut children: Vec<Child>) {
+    dist.shutdown();
+    drop(dist);
+    for child in children.iter_mut() {
+        // Shutdown frame lets workers exit on their own; kill is the
+        // backstop so a wedged worker can't hang the test suite
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}
+
+#[test]
+fn multi_process_grads_bitwise_match_in_process_sharded() {
+    let net = MixedNet::new(0xA11CE);
+    let params = net.params();
+    let batch = lenet_batch(7);
+    let shards = 4;
+    let in_process = Runtime::native().with_grad_shards(shards).expect("sharded runtime");
+    let backend = NativeBackend::new();
+    for workers in [2usize, 3] {
+        let (dist, children) = real_worker_cluster(workers, shards);
+        for phase in [GradPhase::Kl, GradPhase::S] {
+            let reference = in_process.grads("lenet", &params, phase, &batch).expect("in-process");
+            let distributed =
+                dist.grads(&backend, "lenet", &params, phase, &batch).expect("multi-process");
+            assert!(
+                grads_bitwise_eq(&distributed, &reference),
+                "workers={workers} {phase:?}: multi-process gradients drifted from the \
+                 in-process ShardedExecutor at grad_shards={shards}"
+            );
+        }
+        reap(dist, children);
+    }
+}
+
+#[test]
+fn repeated_distributed_sweeps_are_bitwise_deterministic() {
+    // sweep ids advance and streams are reused across calls; neither may
+    // move a bit
+    let net = MixedNet::new(0xDE7);
+    let params = net.params();
+    let batch = lenet_batch(8);
+    let backend = NativeBackend::new();
+    let (dist, children) = real_worker_cluster(2, 3);
+    let a = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("first sweep");
+    let b = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("second sweep");
+    let c = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("third sweep");
+    assert!(grads_bitwise_eq(&a, &b), "distributed rerun drifted");
+    assert!(grads_bitwise_eq(&a, &c), "distributed rerun drifted on the third sweep");
+    reap(dist, children);
+}
+
+#[test]
+fn shards_one_is_a_direct_backend_passthrough() {
+    // the in-process fast path must not even touch the wire: results are
+    // bitwise-identical to the direct backend call
+    let net = MixedNet::new(0xF00D);
+    let params = net.params();
+    let batch = lenet_batch(9);
+    let backend = NativeBackend::new();
+    let (dist, children) = real_worker_cluster(2, 1);
+    for phase in [GradPhase::Kl, GradPhase::S] {
+        let direct = backend.grads("lenet", &params, phase, &batch).expect("direct");
+        let through = dist.grads(&backend, "lenet", &params, phase, &batch).expect("dist k=1");
+        assert!(
+            grads_bitwise_eq(&through, &direct),
+            "shards=1 through the DistExecutor is not a bitwise passthrough ({phase:?})"
+        );
+    }
+    reap(dist, children);
+}
+
+#[test]
+fn runtime_routes_grads_through_an_attached_dist_executor() {
+    // the Runtime::grads dispatch: with a dist executor attached, sweeps
+    // go multi-process and still match the in-process sharded runtime
+    let net = MixedNet::new(0xBEEF);
+    let params = net.params();
+    let batch = lenet_batch(11);
+    let shards = 2;
+    let reference = Runtime::native()
+        .with_grad_shards(shards)
+        .expect("sharded runtime")
+        .grads("lenet", &params, GradPhase::Kl, &batch)
+        .expect("in-process");
+    let (dist, children) = real_worker_cluster(2, shards);
+    let rt = Runtime::native().with_grad_shards(shards).expect("runtime").with_dist(dist);
+    assert!(rt.dist().is_some());
+    let out = rt.grads("lenet", &params, GradPhase::Kl, &batch).expect("runtime dist grads");
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "Runtime-attached dist executor drifted from the in-process path"
+    );
+    // evaluation forwards stay in-process by design — they must still work
+    let stats = rt.forward("lenet", &params, &batch).expect("in-process forward");
+    assert!(stats.loss.is_finite());
+    let mut children = children;
+    drop(rt); // drops the dist executor → Shutdown frames
+    for child in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+}

@@ -1,0 +1,154 @@
+//! Loom model of the distributed coordinator's shard rendezvous
+//! (DESIGN.md §12): the [`ShardTracker`] state machine under racing
+//! completions, worker failures, and close.
+//!
+//! Invariants checked here are exactly the ones the bitwise-determinism
+//! argument leans on:
+//!
+//! * **no shard double-reduced** — `complete` is first-wins, so a struck
+//!   straggler finishing after its shard was reassigned contributes
+//!   nothing;
+//! * **no shard dropped** — `fail_worker` racing a completion leaves every
+//!   shard in exactly one of {completed, orphaned}, never limbo;
+//! * **close linearizes** — a completion racing `close` either lands (and
+//!   is visible in `take_results`) or is rejected, with the boolean return
+//!   agreeing with what the coordinator later observes.
+//!
+//! Build with `RUSTFLAGS="--cfg loom" cargo test -p dlrt --test
+//! loom_dist`. Without `--cfg loom` this compiles to an empty test
+//! binary. The in-tree `loom` shim explores perturbed schedules rather
+//! than exhaustive DPOR — see rust/shims/loom.
+#![cfg(loom)]
+
+use dlrt::exec::dist::ShardTracker;
+use loom::sync::Arc;
+use loom::thread;
+use std::time::Duration;
+
+/// Two workers race to complete the same shard (the reassignment double-
+/// fire): exactly one completion is accepted and its value is the one
+/// that surfaces.
+#[test]
+fn racing_completions_reduce_a_shard_exactly_once() {
+    loom::model(|| {
+        let t: Arc<ShardTracker<u32>> = Arc::new(ShardTracker::new(1));
+        let orphans = t.take_orphans();
+        assert_eq!(orphans, vec![0], "all shards start orphaned");
+        assert!(t.assign(0, 0));
+        let a = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.complete(0, 111))
+        };
+        let b = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.complete(0, 222))
+        };
+        let a = a.join().expect("first completer");
+        let b = b.join().expect("second completer");
+        assert!(a ^ b, "exactly one completion must win (got {a} and {b})");
+        assert!(t.is_complete());
+        let results = t.take_results().expect("complete tracker yields results");
+        if a {
+            assert_eq!(results, vec![111]);
+        } else {
+            assert_eq!(results, vec![222]);
+        }
+        // the winner's shard can never be re-assigned afterwards
+        assert!(!t.assign(0, 1), "completed shard must reject assignment");
+    });
+}
+
+/// A worker failure races one of its own completions: whatever the
+/// interleaving, shard 0 ends completed (exactly once) and shard 1 ends
+/// orphaned — nothing is lost, nothing is duplicated, and draining the
+/// orphans finishes the sweep.
+#[test]
+fn fail_worker_racing_completion_never_loses_or_duplicates_a_shard() {
+    loom::model(|| {
+        let t: Arc<ShardTracker<u32>> = Arc::new(ShardTracker::new(2));
+        let _ = t.take_orphans();
+        assert!(t.assign(0, 0));
+        assert!(t.assign(1, 0));
+        let completer = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.complete(0, 10))
+        };
+        let failer = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.fail_worker(0))
+        };
+        let landed = completer.join().expect("completer");
+        let orphaned = failer.join().expect("failer");
+        assert!(landed, "no competitor: the completion must land");
+        assert!(
+            orphaned == 1 || orphaned == 2,
+            "fail_worker must orphan the worker's pending shards (got {orphaned})"
+        );
+        // shard 1 is pending either way; shard 0 must NOT be re-runnable
+        let orphans = t.take_orphans();
+        assert_eq!(orphans, vec![1], "exactly the unfinished shard is orphaned");
+        assert!(t.assign(1, 1));
+        assert!(t.complete(1, 99));
+        let results = t.take_results().expect("drained tracker yields results");
+        assert_eq!(results, vec![10, 99]);
+    });
+}
+
+/// A completion races `close`: the boolean return must agree with what
+/// the coordinator observes afterwards — landed-and-visible, or
+/// rejected-and-absent. Either way every waiter wakes and the tracker is
+/// finished.
+#[test]
+fn close_linearizes_against_completion() {
+    loom::model(|| {
+        let t: Arc<ShardTracker<u32>> = Arc::new(ShardTracker::new(1));
+        let _ = t.take_orphans();
+        assert!(t.assign(0, 0));
+        let completer = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.complete(0, 5))
+        };
+        let closer = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || t.close())
+        };
+        let landed = completer.join().expect("completer");
+        closer.join().expect("closer");
+        assert!(t.is_closed());
+        assert!(t.is_finished(), "closed tracker must end every wait loop");
+        match t.take_results() {
+            Some(results) => {
+                assert!(landed, "results visible yet the completion reported rejection");
+                assert_eq!(results, vec![5]);
+            }
+            None => assert!(!landed, "completion reported accepted yet results are absent"),
+        }
+        // post-close everything bounces
+        assert!(!t.assign(0, 1));
+        assert!(!t.complete(0, 7));
+    });
+}
+
+/// `wait_tick` racing a completion must never hang: it returns on the
+/// notification (or the timeout backstop) and the main loop then sees
+/// the finished tracker.
+#[test]
+fn wait_tick_wakes_on_completion_and_never_hangs() {
+    loom::model(|| {
+        let t: Arc<ShardTracker<u32>> = Arc::new(ShardTracker::new(1));
+        let _ = t.take_orphans();
+        assert!(t.assign(0, 0));
+        let completer = {
+            let t = Arc::clone(&t);
+            thread::spawn(move || {
+                assert!(t.complete(0, 1));
+            })
+        };
+        // bounded wait: either the notify lands or the timeout fires —
+        // both return control to the reassignment loop
+        t.wait_tick(Duration::from_millis(1));
+        completer.join().expect("completer");
+        assert!(t.is_finished());
+        assert_eq!(t.take_results().expect("results"), vec![1]);
+    });
+}
