@@ -1,0 +1,269 @@
+//! Bench: bytes-on-wire and encode time per sweep brief for the
+//! distributed executor — full `Sweep` frames vs delta-encoded
+//! `SweepDelta` frames (DESIGN.md §13) on briefs shaped exactly like the
+//! TRP-style mixed LeNet (`trp_lenet`: dense conv prefix + adaptive
+//! low-rank tail), across both gradient phases. Emits `BENCH_wire.json`;
+//! the CI `dist-train` job gates `delta_bytes_ratio <= 0.5` for the
+//! S-phase schedule.
+//!
+//! Measured schedule per phase: one cold sweep (no worker holds a cache,
+//! so the brief is the full frame either way) followed by three hot
+//! re-sweeps of an *unchanged* snapshot — the multi-sweep scenario where
+//! caches actually engage (repeated sweeps on unchanged params: retries,
+//! re-briefs after worker adoption, eval re-runs). On a hot sweep the
+//! delta frame carries the hash list and zero layers. A consecutive
+//! *training-step* brief is also reported (`kl_step_ratio`): there the
+//! adaptive tail changed but the dense conv prefix did not, so the delta
+//! ships 2 of 4 layers. During real S-phase training steps every layer's
+//! content changes (the host K/L update lands between sweeps), and the
+//! coordinator deliberately short-circuits an all-layers delta to the
+//! full frame — the hit rate in the train log reflects that honestly.
+
+use dlrt::exec::wire::{self, Msg, WireLayer};
+use dlrt::linalg::Matrix;
+use dlrt::util::bench::Table;
+use dlrt::util::scratch::ScratchPool;
+use dlrt::util::Json;
+use std::time::Instant;
+
+/// xorshift64* — deterministic parameter fill, no external RNG.
+struct Rng(u64);
+
+impl Rng {
+    fn next_f32(&mut self) -> f32 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        ((self.0 >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+    }
+
+    fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        let data: Vec<f32> = (0..rows * cols).map(|_| self.next_f32()).collect();
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn bias(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_f32()).collect()
+    }
+}
+
+/// The `trp_lenet` brief geometry: dense conv prefix (20x25, 50x500),
+/// adaptive fc 500x800 at rank 64, adaptive fc 10x500 pinned at its full
+/// min-dimension rank 10 (below the pin threshold, so it never stages).
+/// In the S phase the non-pinned adaptive layer ships its augmented
+/// staged bases at 2r.
+fn trp_lenet_brief(rng: &mut Rng, s_phase: bool) -> Vec<WireLayer> {
+    let fc_rank = if s_phase { 128 } else { 64 };
+    vec![
+        WireLayer::Dense { w: rng.matrix(20, 25), bias: rng.bias(20) },
+        WireLayer::Dense { w: rng.matrix(50, 500), bias: rng.bias(50) },
+        WireLayer::Factored {
+            u: rng.matrix(500, fc_rank),
+            s: rng.matrix(fc_rank, fc_rank),
+            v: rng.matrix(800, fc_rank),
+            bias: rng.bias(500),
+        },
+        WireLayer::Factored {
+            u: rng.matrix(10, 10),
+            s: rng.matrix(10, 10),
+            v: rng.matrix(500, 10),
+            bias: rng.bias(10),
+        },
+    ]
+}
+
+struct Row {
+    phase: &'static str,
+    full_bytes: usize,
+    hot_delta_bytes: usize,
+    /// Mean brief bytes over the 1-cold + 3-hot schedule with deltas on.
+    delta_sweep_bytes: f64,
+    /// `delta_sweep_bytes / full_bytes` — the CI-gated headline.
+    delta_bytes_ratio: f64,
+    /// Hot-sweep delta frame vs the full frame.
+    hot_ratio: f64,
+    /// Consecutive-training-step brief (adaptive tail changed, dense
+    /// prefix unchanged) vs the full frame. Informational.
+    kl_step_ratio: f64,
+    encode_us_full: f64,
+    encode_us_delta: f64,
+}
+
+fn encoded_len(msg: &Msg) -> dlrt::Result<usize> {
+    let mut buf = Vec::new();
+    wire::encode_frame_into(&mut buf, msg)?;
+    Ok(buf.len())
+}
+
+/// Mean encode time over `iters` runs reusing one buffer (the
+/// coordinator's steady-state shape).
+fn encode_us(msg: &Msg, iters: usize) -> dlrt::Result<f64> {
+    let mut buf = Vec::new();
+    wire::encode_frame_into(&mut buf, msg)?; // warmup sizes the buffer
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        wire::encode_frame_into(&mut buf, msg)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e6 / iters as f64)
+}
+
+fn bench_phase(phase: &'static str, s_phase: bool, iters: usize) -> dlrt::Result<Row> {
+    let grad_phase = if s_phase {
+        dlrt::backend::GradPhase::S
+    } else {
+        dlrt::backend::GradPhase::Kl
+    };
+    let mut rng = Rng(0x5eed_0000 + s_phase as u64);
+    let layers = trp_lenet_brief(&mut rng, s_phase);
+    let hashes: Vec<u64> = layers.iter().map(|l| wire::layer_hash(l)).collect::<Result<_, _>>()?;
+
+    let full = Msg::Sweep { sweep: 1, arch: "lenet".into(), phase: grad_phase, layers };
+    let full_bytes = encoded_len(&full)?;
+    let Msg::Sweep { layers, .. } = full else { unreachable!() };
+
+    // Hot re-sweep of an unchanged snapshot: hash-only delta.
+    let hot = Msg::SweepDelta {
+        sweep: 2,
+        arch: "lenet".into(),
+        phase: grad_phase,
+        layer_hashes: hashes.clone(),
+        changed: Vec::new(),
+    };
+    let hot_delta_bytes = encoded_len(&hot)?;
+
+    // Consecutive training-step brief: the adaptive tail changed, the
+    // dense conv prefix did not — the delta ships layers 2 and 3 only.
+    let step = Msg::SweepDelta {
+        sweep: 3,
+        arch: "lenet".into(),
+        phase: grad_phase,
+        layer_hashes: hashes,
+        changed: vec![(2, layers[2].clone()), (3, layers[3].clone())],
+    };
+    let kl_step_bytes = encoded_len(&step)?;
+
+    let delta_sweep_bytes = (full_bytes + 3 * hot_delta_bytes) as f64 / 4.0;
+    Ok(Row {
+        phase,
+        full_bytes,
+        hot_delta_bytes,
+        delta_sweep_bytes,
+        delta_bytes_ratio: delta_sweep_bytes / full_bytes as f64,
+        hot_ratio: hot_delta_bytes as f64 / full_bytes as f64,
+        kl_step_ratio: kl_step_bytes as f64 / full_bytes as f64,
+        encode_us_full: encode_us(&full2(&layers, grad_phase), iters)?,
+        encode_us_delta: encode_us(&hot, iters)?,
+    })
+}
+
+/// Rebuild a full sweep message borrowing nothing (encode timing needs an
+/// owned message after `layers` was moved around).
+fn full2(layers: &[WireLayer], phase: dlrt::backend::GradPhase) -> Msg {
+    Msg::Sweep { sweep: 1, arch: "lenet".into(), phase, layers: layers.to_vec() }
+}
+
+/// The coordinator's steady-state pool discipline: after one warmup sweep
+/// has sized the pooled encode buffers, further sweeps draw every buffer
+/// from the free list — `fresh_allocs` stays flat.
+fn steady_state_fresh_allocs_flat() -> dlrt::Result<bool> {
+    let pool = ScratchPool::new();
+    let mut rng = Rng(0xfeed);
+    let layers = trp_lenet_brief(&mut rng, true);
+    let hashes: Vec<u64> = layers.iter().map(|l| wire::layer_hash(l)).collect::<Result<_, _>>()?;
+    let full = Msg::Sweep { sweep: 1, arch: "lenet".into(), phase: dlrt::backend::GradPhase::S, layers };
+    let delta = Msg::SweepDelta {
+        sweep: 2,
+        arch: "lenet".into(),
+        phase: dlrt::backend::GradPhase::S,
+        layer_hashes: hashes,
+        changed: Vec::new(),
+    };
+    let mut sweep = |hint_full: usize, hint_delta: usize| -> dlrt::Result<(usize, usize)> {
+        let mut f = pool.take_bytes(hint_full);
+        wire::encode_frame_into(&mut f, &full)?;
+        let mut d = pool.take_bytes(hint_delta);
+        wire::encode_frame_into(&mut d, &delta)?;
+        let lens = (f.len(), d.len());
+        pool.put_bytes(f);
+        pool.put_bytes(d);
+        Ok(lens)
+    };
+    let (mut hf, mut hd) = (0, 0);
+    for _ in 0..2 {
+        (hf, hd) = sweep(hf, hd)?; // warmup: populate the shelf
+    }
+    let fresh_after_warmup = pool.fresh_allocs();
+    for _ in 0..20 {
+        (hf, hd) = sweep(hf, hd)?;
+    }
+    Ok(pool.fresh_allocs() == fresh_after_warmup)
+}
+
+fn main() -> dlrt::Result<()> {
+    let full_mode = dlrt::coordinator::experiments::full_mode();
+    let iters = if full_mode { 200 } else { 20 };
+    println!(
+        "wire_bytes: trp_lenet brief geometry, 1 cold + 3 hot sweeps per phase, {iters} encode \
+         timing iters ({})",
+        if full_mode { "full" } else { "smoke" }
+    );
+
+    let rows = vec![bench_phase("Kl", false, iters)?, bench_phase("S", true, iters)?];
+
+    let mut table = Table::new(&[
+        "phase",
+        "full B",
+        "hot-delta B",
+        "delta B/sweep",
+        "ratio",
+        "hot ratio",
+        "step ratio",
+        "enc full us",
+        "enc delta us",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.phase.to_string(),
+            r.full_bytes.to_string(),
+            r.hot_delta_bytes.to_string(),
+            format!("{:.0}", r.delta_sweep_bytes),
+            format!("{:.3}", r.delta_bytes_ratio),
+            format!("{:.4}", r.hot_ratio),
+            format!("{:.3}", r.kl_step_ratio),
+            format!("{:.1}", r.encode_us_full),
+            format!("{:.1}", r.encode_us_delta),
+        ]);
+    }
+    table.print();
+
+    let steady = steady_state_fresh_allocs_flat()?;
+    anyhow::ensure!(steady, "steady-state encode sweeps allocated fresh buffers");
+    println!("steady-state pooled encode: fresh_allocs flat after warmup: {steady}");
+
+    let json_rows = rows.iter().map(|r| {
+        Json::obj(vec![
+            ("phase", Json::str(r.phase)),
+            ("full_bytes_per_sweep", Json::num(r.full_bytes as f64)),
+            ("hot_delta_bytes", Json::num(r.hot_delta_bytes as f64)),
+            ("delta_bytes_per_sweep", Json::num(r.delta_sweep_bytes)),
+            ("delta_bytes_ratio", Json::num(r.delta_bytes_ratio)),
+            ("hot_ratio", Json::num(r.hot_ratio)),
+            ("kl_step_ratio", Json::num(r.kl_step_ratio)),
+            ("encode_us_full", Json::num(r.encode_us_full)),
+            ("encode_us_delta", Json::num(r.encode_us_delta)),
+        ])
+    });
+    let s_ratio = rows.iter().find(|r| r.phase == "S").map(|r| r.delta_bytes_ratio).unwrap_or(1.0);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("wire_bytes")),
+        ("mode", Json::str(if full_mode { "full" } else { "smoke" })),
+        ("arch", Json::str("trp_lenet")),
+        ("schedule", Json::str("1 cold + 3 hot sweeps")),
+        ("rows", Json::arr(json_rows)),
+        ("s_phase_delta_bytes_ratio", Json::num(s_ratio)),
+        ("encode_steady_state_fresh_allocs_flat", Json::Bool(steady)),
+    ]);
+    std::fs::write("BENCH_wire.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_wire.json (S-phase delta_bytes_ratio {s_ratio:.3})");
+    Ok(())
+}

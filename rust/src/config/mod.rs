@@ -138,11 +138,20 @@ pub struct ExecConfig {
     /// Coordinator transport bind address; `127.0.0.1:0` picks an
     /// ephemeral loopback port.
     pub addr: String,
+    /// Delta-encode sweep briefs (DESIGN.md §13): ship up-to-date workers
+    /// only the layers whose content changed. Purely a transport
+    /// optimization — gradients are bitwise-identical either way.
+    pub delta: bool,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { workers: 0, worker_deadline_ms: 2000, addr: "127.0.0.1:0".to_string() }
+        ExecConfig {
+            workers: 0,
+            worker_deadline_ms: 2000,
+            addr: "127.0.0.1:0".to_string(),
+            delta: true,
+        }
     }
 }
 
@@ -298,6 +307,7 @@ impl Config {
                 .get_u64("exec_worker_deadline_ms")
                 .unwrap_or(exec_default.worker_deadline_ms),
             addr: doc.get_str("exec_addr").unwrap_or(&exec_default.addr).to_string(),
+            delta: doc.get_bool("exec_delta").unwrap_or(exec_default.delta),
         };
         let cfg = Config {
             arch: doc
@@ -389,6 +399,7 @@ impl Config {
             KvValue::Num(self.exec.worker_deadline_ms as f64),
         );
         doc.insert("exec_addr", KvValue::Str(self.exec.addr.clone()));
+        doc.insert("exec_delta", KvValue::Bool(self.exec.delta));
         if !self.layer_modes.is_empty() {
             let joined: Vec<&str> = self.layer_modes.iter().map(|m| m.as_str()).collect();
             doc.insert("layer_modes", KvValue::Str(joined.join(",")));
@@ -524,18 +535,24 @@ mod tests {
         let cfg = Config::from_toml_str("arch = \"mlp_tiny\"").unwrap();
         assert_eq!(cfg.exec, ExecConfig::default());
         let src = "arch = \"mlp_tiny\"\nexec_workers = 3\nexec_worker_deadline_ms = 750\n\
-                   exec_addr = \"127.0.0.1:7700\"";
+                   exec_addr = \"127.0.0.1:7700\"\nexec_delta = false";
         let cfg = Config::from_toml_str(src).unwrap();
         assert_eq!(
             cfg.exec,
             ExecConfig {
                 workers: 3,
                 worker_deadline_ms: 750,
-                addr: "127.0.0.1:7700".to_string()
+                addr: "127.0.0.1:7700".to_string(),
+                delta: false,
             }
         );
         let back = Config::from_toml_str(&cfg.to_toml()).unwrap();
         assert_eq!(back.exec, cfg.exec);
+        // exec_delta defaults on and parses standalone
+        assert!(Config::from_toml_str("arch = \"x\"").unwrap().exec.delta);
+        assert!(
+            !Config::from_toml_str("arch = \"x\"\nexec_delta = false").unwrap().exec.delta
+        );
         // out-of-range values are rejected
         assert!(Config::from_toml_str("arch = \"x\"\nexec_worker_deadline_ms = 0").is_err());
         assert!(Config::from_toml_str("arch = \"x\"\nexec_addr = \" \"").is_err());

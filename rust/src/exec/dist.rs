@@ -18,6 +18,25 @@
 //! bitwise-identical to the no-failure run. `tests/dist_chaos.rs` locks
 //! this.
 //!
+//! Sweep briefs are **delta-encoded** (DESIGN.md §13, `exec_delta`,
+//! default on): the coordinator hashes every layer's wire encoding
+//! (FNV-1a over the exact frame bytes), diffs against the last broadcast
+//! list, and ships up-to-date workers a [`Msg::SweepDelta`] carrying only
+//! the changed layers — encoded **once** and broadcast as the same byte
+//! buffer, with the full [`Msg::Sweep`] likewise encoded once for cold
+//! workers and `NeedFull` resyncs. Encode buffers come from the global
+//! scratch pool, so steady-state sweeps allocate nothing on the
+//! coordinator. The determinism argument survives because delta
+//! acceptance is *verified, not assumed*: a worker accepts a patched
+//! cache only when the resulting per-layer hashes equal the
+//! coordinator's full list — and since the hash is computed over each
+//! layer's exact wire encoding, matching hashes mean the patched
+//! parameters are byte-identical to the full snapshot. Anything else
+//! (cold cache, layer-count drift, hash mismatch) answers
+//! [`Msg::NeedFull`] and computes only after the full brief lands —
+//! never on stale parameters. `tests/dist_parity.rs` locks delta ≡ full
+//! ≡ in-process bitwise.
+//!
 //! The bookkeeping that failure recovery races against — who owns which
 //! shard, which results have landed, which shards are orphaned — lives in
 //! [`ShardTracker`], a time-free state machine whose mutex/condvar switch
@@ -39,12 +58,13 @@ use crate::backend::{reduce_grad_shards, ComputeBackend, GradPhase, GradsOut, La
 use crate::data::Batch;
 use crate::exec::wire::{self, Msg, WireLayer};
 use crate::exec::{split_batch, MAX_GRAD_SHARDS};
-use crate::metrics::Clock;
+use crate::metrics::{Clock, WireStats};
+use crate::util::scratch;
 use crate::Result;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{self, Read};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -274,6 +294,12 @@ pub struct DistOptions {
     pub addr: String,
     /// How long to wait for workers to connect at startup.
     pub connect_window: Duration,
+    /// Delta-encode sweep briefs (DESIGN.md §13): workers holding the
+    /// previous snapshot get a `SweepDelta` with only the changed layers;
+    /// everyone else (and every worker when this is off) gets the full
+    /// `Sweep`. Purely a transport optimization — the computed gradients
+    /// are bitwise-identical either way.
+    pub delta: bool,
 }
 
 impl Default for DistOptions {
@@ -284,6 +310,7 @@ impl Default for DistOptions {
             deadline: Duration::from_millis(2000),
             addr: "127.0.0.1:0".to_string(),
             connect_window: Duration::from_millis(5000),
+            delta: true,
         }
     }
 }
@@ -293,6 +320,11 @@ struct WorkerHandle {
     /// Write side; reader threads clone the underlying socket per sweep.
     stream: Mutex<TcpStream>,
     alive: AtomicBool,
+    /// The per-layer content-hash list this worker last acknowledged a
+    /// brief for (empty = cold: fresh spawn, adopted mid-run, or struck).
+    /// Written at every successful brief/resync send; compared against
+    /// the coordinator's last broadcast list to pick full vs delta.
+    cache: Mutex<Vec<u64>>,
 }
 
 impl WorkerHandle {
@@ -302,6 +334,19 @@ impl WorkerHandle {
 
     fn strike(&self) {
         self.alive.store(false, Ordering::Release);
+    }
+
+    /// Record the hash list this worker now holds (capacity is retained,
+    /// so steady-state updates allocate nothing).
+    fn set_cache(&self, hashes: &[u64]) {
+        let mut c = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        c.clear();
+        c.extend_from_slice(hashes);
+    }
+
+    fn cache_matches(&self, hashes: &[u64]) -> bool {
+        let c = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        !hashes.is_empty() && c.as_slice() == hashes
     }
 }
 
@@ -316,6 +361,21 @@ pub struct DistExecutor {
     workers: Vec<WorkerHandle>,
     children: Mutex<Vec<std::process::Child>>,
     sweep: AtomicU64,
+    /// Delta-brief toggle (`exec_delta`, default on).
+    delta: bool,
+    /// The hash list of the last broadcast snapshot — the base the shared
+    /// `SweepDelta` frame is diffed against. Workers whose cache matches
+    /// it are "up to date" and receive the identical delta bytes.
+    last_hashes: Mutex<Vec<u64>>,
+    /// Wire-level transport counters (shared with reader threads and the
+    /// train log).
+    stats: Arc<WireStats>,
+    /// Scratch-pool checkout size hints: the byte lengths of the previous
+    /// sweep's brief frames and the largest per-message send, so each
+    /// take lands on the buffer that served the same role last sweep.
+    full_hint: AtomicUsize,
+    delta_hint: AtomicUsize,
+    send_hint: AtomicUsize,
 }
 
 impl DistExecutor {
@@ -427,6 +487,12 @@ impl DistExecutor {
             workers,
             children: Mutex::new(Vec::new()),
             sweep: AtomicU64::new(0),
+            delta: opts.delta,
+            last_hashes: Mutex::new(Vec::new()),
+            stats: Arc::new(WireStats::new()),
+            full_hint: AtomicUsize::new(0),
+            delta_hint: AtomicUsize::new(0),
+            send_hint: AtomicUsize::new(0),
         })
     }
 
@@ -447,6 +513,17 @@ impl DistExecutor {
     /// How many workers connected at startup.
     pub fn connected_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Whether sweep briefs are delta-encoded (`exec_delta`).
+    pub fn delta_enabled(&self) -> bool {
+        self.delta
+    }
+
+    /// The coordinator's wire-level transport counters — cloneable for
+    /// the train log, which reads them between epochs while sweeps run.
+    pub fn wire_stats(&self) -> Arc<WireStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Evaluate one gradient sweep across the worker processes. Same
@@ -480,29 +557,101 @@ impl DistExecutor {
             shards.iter().map(|sb| sb.w.iter().map(|&x| x as f64).sum()).collect();
 
         let sweep_id = self.sweep.fetch_add(1, Ordering::Relaxed) + 1;
-        let snapshot = Msg::Sweep {
-            sweep: sweep_id,
-            arch: arch.to_string(),
-            phase,
-            layers: layers.iter().map(WireLayer::from_params).collect(),
+        let pool = scratch::global();
+
+        // Snapshot the brief once: owned wire layers plus their content
+        // hashes (hashing folds the encoder's byte stream directly — no
+        // intermediate buffer).
+        let wire_layers: Vec<WireLayer> = layers.iter().map(WireLayer::from_params).collect();
+        let mut hashes: Vec<u64> = Vec::with_capacity(wire_layers.len());
+        for l in &wire_layers {
+            hashes.push(wire::layer_hash(l)?);
+        }
+
+        // Encode the full `Sweep` frame exactly once. Every recipient —
+        // cold workers at brief time, `NeedFull` resyncs on the reader
+        // threads — gets these same bytes.
+        let mut full_buf = pool.take_bytes(self.full_hint.load(Ordering::Relaxed));
+        let full_msg = Msg::Sweep { sweep: sweep_id, arch: arch.to_string(), phase, layers: wire_layers };
+        wire::encode_frame_into(&mut full_buf, &full_msg)?;
+        self.full_hint.store(full_buf.len(), Ordering::Relaxed);
+        let wire_layers = match full_msg {
+            Msg::Sweep { layers, .. } => layers,
+            _ => bail!("dist: internal: sweep message changed kind"),
         };
 
-        // Broadcast the sweep snapshot; a write failure is a dead worker.
+        // Diff against the last broadcast list and encode the shared
+        // `SweepDelta` frame once — but only when it actually saves bytes
+        // (when every layer changed, the full frame is the smaller brief
+        // and cache patching buys nothing).
+        let prev: Vec<u64> = {
+            let g = self.last_hashes.lock().unwrap_or_else(|e| e.into_inner());
+            g.clone()
+        };
+        let changed: Vec<(u32, WireLayer)> = if self.delta && prev.len() == hashes.len() {
+            prev.iter()
+                .zip(&hashes)
+                .enumerate()
+                .filter(|(_, (p, h))| p != h)
+                .map(|(i, _)| (i as u32, wire_layers[i].clone()))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let delta_usable =
+            self.delta && prev.len() == hashes.len() && changed.len() < hashes.len();
+        let mut delta_buf = pool.take_bytes(self.delta_hint.load(Ordering::Relaxed));
+        if delta_usable {
+            let delta_msg = Msg::SweepDelta {
+                sweep: sweep_id,
+                arch: arch.to_string(),
+                phase,
+                layer_hashes: hashes.clone(),
+                changed,
+            };
+            wire::encode_frame_into(&mut delta_buf, &delta_msg)?;
+            self.delta_hint.store(delta_buf.len(), Ordering::Relaxed);
+        }
+        {
+            let mut g = self.last_hashes.lock().unwrap_or_else(|e| e.into_inner());
+            g.clear();
+            g.extend_from_slice(&hashes);
+        }
+
+        // Broadcast: identical delta bytes to every up-to-date worker,
+        // identical full bytes to the rest. A write failure is a dead
+        // worker.
         let mut briefed: Vec<bool> = vec![false; self.workers.len()];
         for w in &self.workers {
             if !w.is_alive() {
                 continue;
             }
-            match self.send(w, &snapshot) {
-                Ok(()) => briefed[w.id] = true,
+            let use_delta = delta_usable && w.cache_matches(&prev);
+            let frame: &[u8] = if use_delta { &delta_buf } else { &full_buf };
+            match self.send_frame(w, frame) {
+                Ok(()) => {
+                    briefed[w.id] = true;
+                    w.set_cache(&hashes);
+                    if self.delta {
+                        if use_delta {
+                            self.stats.delta_hit();
+                        } else {
+                            self.stats.delta_miss();
+                        }
+                    }
+                }
                 Err(e) => eprintln!("dist: worker {} lost at sweep brief: {e:#}", w.id),
             }
         }
-        ensure!(
-            briefed.iter().any(|&b| b),
-            "dist grads: no live workers to brief (all {} connections down)",
-            self.workers.len()
-        );
+        let brief_ok = briefed.iter().any(|&b| b);
+        if !brief_ok {
+            pool.put_bytes(full_buf);
+            pool.put_bytes(delta_buf);
+            bail!(
+                "dist grads: no live workers to brief (all {} connections down)",
+                self.workers.len()
+            );
+        }
 
         let tracker: ShardTracker<GradsOut> = ShardTracker::new(k);
         let done = AtomicBool::new(false);
@@ -515,8 +664,10 @@ impl DistExecutor {
         };
 
         std::thread::scope(|s| {
-            // One reader per briefed worker: land Grads frames, convert
-            // EOF / io errors into fail_worker so the main loop reassigns.
+            // One reader per briefed worker: land Grads frames, serve
+            // NeedFull resyncs from the already-encoded full frame, and
+            // convert EOF / io errors into fail_worker so the main loop
+            // reassigns.
             for w in &self.workers {
                 if !briefed[w.id] {
                     continue;
@@ -538,18 +689,47 @@ impl DistExecutor {
                 let tracker = &tracker;
                 let done = &done;
                 let set_err = &set_err;
+                let full_frame: &[u8] = &full_buf;
+                let hashes = &hashes;
                 s.spawn(move || {
-                    let mut rdr = IdleReader { inner: sock, done };
+                    let mut rdr = IdleReader { inner: sock, done, stats: self.stats.as_ref() };
                     loop {
                         match wire::read_msg_opt(&mut rdr) {
                             Ok(Some(Msg::Grads { sweep, shard, out })) => {
+                                self.stats.frames_rx.fetch_add(1, Ordering::Relaxed);
                                 if sweep == sweep_id && (shard as usize) < k {
                                     tracker.complete(shard as usize, out);
                                 }
                                 // stale frames from a previous sweep are
                                 // dropped (a struck straggler catching up)
                             }
+                            Ok(Some(Msg::NeedFull { sweep })) => {
+                                self.stats.frames_rx.fetch_add(1, Ordering::Relaxed);
+                                if sweep != sweep_id {
+                                    continue; // stale resync request
+                                }
+                                // The worker's cache missed the delta's
+                                // base (fresh spawn, struck-and-replaced,
+                                // adopted mid-run): resend the shared full
+                                // frame, already encoded.
+                                match self.send_frame(w, full_frame) {
+                                    Ok(()) => {
+                                        w.set_cache(hashes);
+                                        self.stats.delta_miss();
+                                    }
+                                    Err(e) => {
+                                        eprintln!(
+                                            "dist: worker {} lost at full resync: {e:#}",
+                                            w.id
+                                        );
+                                        w.strike();
+                                        tracker.fail_worker(w.id);
+                                        break;
+                                    }
+                                }
+                            }
                             Ok(Some(Msg::WorkerErr { sweep, shard, msg })) => {
+                                self.stats.frames_rx.fetch_add(1, Ordering::Relaxed);
                                 if sweep == sweep_id {
                                     // deterministic compute error: every
                                     // worker would fail identically, so
@@ -563,6 +743,7 @@ impl DistExecutor {
                                 }
                             }
                             Ok(Some(_)) => {
+                                self.stats.frames_rx.fetch_add(1, Ordering::Relaxed);
                                 set_err(anyhow!(
                                     "dist: worker {} sent an unexpected frame kind",
                                     w.id
@@ -674,6 +855,8 @@ impl DistExecutor {
             // readers notice `done` on their next idle tick and exit
         });
 
+        pool.put_bytes(full_buf);
+        pool.put_bytes(delta_buf);
         if let Some(e) = err_slot.lock().unwrap_or_else(|p| p.into_inner()).take() {
             return Err(e);
         }
@@ -683,9 +866,27 @@ impl DistExecutor {
         reduce_grad_shards(results.into_iter().zip(wsums).collect())
     }
 
+    /// Encode `msg` into a pooled buffer and ship it. The hint remembers
+    /// the largest per-message frame so far, so steady-state job sends
+    /// reuse one pooled buffer instead of growing a fresh one each time.
     fn send(&self, w: &WorkerHandle, msg: &Msg) -> Result<()> {
-        let mut guard = w.stream.lock().unwrap_or_else(|e| e.into_inner());
-        wire::write_msg(&mut *guard, msg)
+        let pool = scratch::global();
+        let mut buf = pool.take_bytes(self.send_hint.load(Ordering::Relaxed));
+        let r = wire::encode_frame_into(&mut buf, msg).and_then(|()| self.send_frame(w, &buf));
+        self.send_hint.fetch_max(buf.len(), Ordering::Relaxed);
+        pool.put_bytes(buf);
+        r
+    }
+
+    /// Write pre-encoded frame bytes to one worker (the shared-buffer
+    /// broadcast path) and count them.
+    fn send_frame(&self, w: &WorkerHandle, frame: &[u8]) -> Result<()> {
+        {
+            let mut guard = w.stream.lock().unwrap_or_else(|e| e.into_inner());
+            wire::write_frame(&mut *guard, frame)?;
+        }
+        self.stats.add_tx(frame.len() as u64, 1);
+        Ok(())
     }
 
     /// Politely stop every worker (and reap spawned children). Called by
@@ -736,16 +937,23 @@ fn hello_handshake(stream: TcpStream, id: usize) -> Result<WorkerHandle> {
         _ => bail!("dist: worker connection did not open with Hello"),
     }
     let _ = s.set_read_timeout(Some(IO_TICK));
-    Ok(WorkerHandle { id, stream: Mutex::new(s), alive: AtomicBool::new(true) })
+    Ok(WorkerHandle {
+        id,
+        stream: Mutex::new(s),
+        alive: AtomicBool::new(true),
+        cache: Mutex::new(Vec::new()),
+    })
 }
 
 /// Socket reader that absorbs idle-tick timeouts: `read` retries on
 /// `WouldBlock`/`TimedOut` until data arrives or the sweep's `done` flag
 /// is raised, at which point it reports a clean EOF so the frame reader
-/// unwinds at a message boundary.
+/// unwinds at a message boundary. Every byte that arrives is counted
+/// against the coordinator's wire stats.
 struct IdleReader<'a> {
     inner: TcpStream,
     done: &'a AtomicBool,
+    stats: &'a WireStats,
 }
 
 impl Read for IdleReader<'_> {
@@ -764,6 +972,10 @@ impl Read for IdleReader<'_> {
                         return Ok(0);
                     }
                 }
+                Ok(n) => {
+                    self.stats.bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                    return Ok(n);
+                }
                 r => return r,
             }
         }
@@ -774,37 +986,181 @@ impl Read for IdleReader<'_> {
 // worker side
 // ---------------------------------------------------------------------------
 
+/// `dlrt worker` exit code: could not reach the coordinator at all.
+pub const EXIT_CONNECT: i32 = 3;
+/// `dlrt worker` exit code: the coordinator socket died mid-protocol
+/// (reset, broken pipe, short read) — a supervisor may restart and
+/// reconnect; the fresh worker resyncs via `NeedFull`.
+pub const EXIT_SOCKET_LOST: i32 = 4;
+/// `dlrt worker` exit code: the coordinator violated the protocol (e.g.
+/// refused a `NeedFull` by re-sending a delta for the same sweep) —
+/// restarting against the same coordinator will fail the same way.
+pub const EXIT_PROTOCOL: i32 = 5;
+
+/// A classified worker death. `run_worker` wraps every failure in one of
+/// these so `dlrt worker` can exit with a distinct non-zero code and a
+/// one-line reason, letting supervisors tell "restart me" (socket loss)
+/// from "don't bother" (protocol violation).
+#[derive(Debug)]
+pub struct WorkerFailure {
+    pub code: i32,
+    pub reason: String,
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.reason)
+    }
+}
+
+impl std::error::Error for WorkerFailure {}
+
+/// Wrap an un-classified serve error: anything with an I/O error in its
+/// chain is a lost socket; everything else is a protocol violation.
+fn classify_worker_err(id: u32, e: anyhow::Error) -> anyhow::Error {
+    if e.downcast_ref::<WorkerFailure>().is_some() {
+        return e;
+    }
+    let code = if e.chain().any(|c| c.downcast_ref::<io::Error>().is_some()) {
+        EXIT_SOCKET_LOST
+    } else {
+        EXIT_PROTOCOL
+    };
+    anyhow::Error::new(WorkerFailure { code, reason: format!("worker {id}: {e:#}") })
+}
+
 /// The `dlrt worker` entry point: connect to the coordinator, announce
-/// ourselves, and evaluate shard jobs until `Shutdown` or EOF.
+/// ourselves, and evaluate shard jobs until `Shutdown` or EOF. Every
+/// error path carries a [`WorkerFailure`] so `main` can exit with the
+/// matching code.
 pub fn run_worker(addr: &str, id: u32) -> Result<()> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("worker {id}: connecting to coordinator at {addr}"))?;
+    let stream = TcpStream::connect(addr).map_err(|e| {
+        anyhow::Error::new(WorkerFailure {
+            code: EXIT_CONNECT,
+            reason: format!("worker {id}: connecting to coordinator at {addr}: {e}"),
+        })
+    })?;
     let _ = stream.set_nodelay(true);
     let backend = crate::backend::NativeBackend::new();
-    serve_worker(stream, &backend, id)
+    serve_worker(stream, &backend, id).map_err(|e| classify_worker_err(id, e))
+}
+
+/// The worker's cached sweep brief: the snapshot plus the per-layer
+/// content hashes that [`wire::apply_delta`] reconciles deltas against.
+struct WorkerSnapshot {
+    sweep: u64,
+    arch: String,
+    phase: GradPhase,
+    layers: Vec<WireLayer>,
+    hashes: Vec<u64>,
+}
+
+impl WorkerSnapshot {
+    fn from_full(sweep: u64, arch: String, phase: GradPhase, layers: Vec<WireLayer>) -> Result<WorkerSnapshot> {
+        let mut hashes = Vec::with_capacity(layers.len());
+        for l in &layers {
+            hashes.push(wire::layer_hash(l)?);
+        }
+        Ok(WorkerSnapshot { sweep, arch, phase, layers, hashes })
+    }
+
+    fn job_reply(&self, backend: &dyn ComputeBackend, sweep: u64, shard: u32, batch: &Batch) -> Msg {
+        let params: Vec<LayerParams<'_>> = self.layers.iter().map(|l| l.params()).collect();
+        match backend.grads(&self.arch, &params, self.phase, batch) {
+            Ok(out) => Msg::Grads { sweep, shard, out },
+            Err(e) => Msg::WorkerErr { sweep, shard, msg: format!("{e:#}") },
+        }
+    }
 }
 
 /// The worker protocol loop, split out so chaos tests can drive it over
-/// an arbitrary stream. Holds the latest `Sweep` snapshot and answers
-/// each `Job` with `Grads` (or `WorkerErr` if the backend refuses).
+/// an arbitrary stream. Holds the latest snapshot (from a full `Sweep` or
+/// a reconciled `SweepDelta`) and answers each `Job` with `Grads` (or
+/// `WorkerErr` if the backend refuses).
+///
+/// Delta reconciliation is content-addressed, not sweep-addressed: a
+/// delta patches whatever snapshot the worker holds, and acceptance is
+/// decided purely by the hash verification in [`wire::apply_delta`] —
+/// cached-and-patched parameters are accepted only if their hashes match
+/// the coordinator's full list, which (hashing the exact wire encoding)
+/// makes them byte-identical to the full snapshot. Any mismatch drops
+/// the cache and answers [`Msg::NeedFull`]; `Job`s for the awaited sweep
+/// buffer until the full brief lands, so a resync costs latency, never
+/// correctness.
 pub fn serve_worker(mut stream: TcpStream, backend: &dyn ComputeBackend, id: u32) -> Result<()> {
     wire::write_msg(&mut stream, &Msg::Hello { worker: id })?;
-    let mut snapshot: Option<(u64, String, GradPhase, Vec<WireLayer>)> = None;
+    let mut snapshot: Option<WorkerSnapshot> = None;
+    // Sweep we answered NeedFull for; jobs for it park in `pending`.
+    let mut awaiting_full: Option<u64> = None;
+    let mut pending: Vec<(u32, Batch)> = Vec::new();
     loop {
         match wire::read_msg_opt(&mut stream)? {
             None | Some(Msg::Shutdown) => return Ok(()),
             Some(Msg::Sweep { sweep, arch, phase, layers }) => {
-                snapshot = Some((sweep, arch, phase, layers));
+                let snap = WorkerSnapshot::from_full(sweep, arch, phase, layers)?;
+                if awaiting_full == Some(sweep) {
+                    awaiting_full = None;
+                    for (shard, batch) in pending.drain(..) {
+                        let reply = snap.job_reply(backend, sweep, shard, &batch);
+                        wire::write_msg(&mut stream, &reply)?;
+                    }
+                } else {
+                    // an unrelated new sweep obsoletes any parked jobs
+                    awaiting_full = None;
+                    pending.clear();
+                }
+                snapshot = Some(snap);
+            }
+            Some(Msg::SweepDelta { sweep, arch, phase, layer_hashes, changed }) => {
+                if awaiting_full == Some(sweep) {
+                    // We already asked for the full snapshot of this very
+                    // sweep; a second delta for it means the coordinator
+                    // refuses to resync us.
+                    return Err(anyhow::Error::new(WorkerFailure {
+                        code: EXIT_PROTOCOL,
+                        reason: format!(
+                            "worker {id}: coordinator refused NeedFull for sweep {sweep} \
+                             (re-sent a delta instead of the full snapshot)"
+                        ),
+                    }));
+                }
+                awaiting_full = None;
+                pending.clear();
+                let reconciled = match snapshot.as_mut() {
+                    Some(snap) => {
+                        wire::apply_delta(&mut snap.layers, &mut snap.hashes, &layer_hashes, changed)?
+                    }
+                    None => false, // cold cache: nothing to patch
+                };
+                if reconciled {
+                    if let Some(snap) = snapshot.as_mut() {
+                        snap.sweep = sweep;
+                        snap.arch = arch;
+                        snap.phase = phase;
+                    }
+                } else {
+                    // A failed patch may have partially mutated the cache;
+                    // drop it and fall back to a full brief.
+                    snapshot = None;
+                    awaiting_full = Some(sweep);
+                    wire::write_msg(&mut stream, &Msg::NeedFull { sweep })?;
+                }
             }
             Some(Msg::Job { sweep, shard, batch }) => {
+                if awaiting_full == Some(sweep) {
+                    // brief still in flight — park the job, bounded by the
+                    // shard cap so a hostile coordinator can't balloon us
+                    if pending.len() < MAX_GRAD_SHARDS {
+                        pending.push((shard, batch));
+                    } else {
+                        let msg = format!("worker {id}: too many parked jobs for sweep {sweep}");
+                        wire::write_msg(&mut stream, &Msg::WorkerErr { sweep, shard, msg })?;
+                    }
+                    continue;
+                }
                 let reply = match &snapshot {
-                    Some((s, arch, phase, layers)) if *s == sweep => {
-                        let params: Vec<LayerParams<'_>> =
-                            layers.iter().map(|l| l.params()).collect();
-                        match backend.grads(arch, &params, *phase, &batch) {
-                            Ok(out) => Msg::Grads { sweep, shard, out },
-                            Err(e) => Msg::WorkerErr { sweep, shard, msg: format!("{e:#}") },
-                        }
+                    Some(snap) if snap.sweep == sweep => {
+                        snap.job_reply(backend, sweep, shard, &batch)
                     }
                     _ => Msg::WorkerErr {
                         sweep,
@@ -885,5 +1241,47 @@ mod tests {
         let opts = DistOptions::default();
         assert_eq!(opts.workers, 0);
         assert_eq!(opts.shards, 1);
+        assert!(opts.delta, "delta briefs default on");
+    }
+
+    #[test]
+    fn worker_cache_tracks_last_acked_hash_list() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        let w = WorkerHandle {
+            id: 0,
+            stream: Mutex::new(server),
+            alive: AtomicBool::new(true),
+            cache: Mutex::new(Vec::new()),
+        };
+        drop(client);
+        assert!(!w.cache_matches(&[1, 2, 3]), "cold cache matches nothing");
+        assert!(!w.cache_matches(&[]), "the empty list never counts as a match");
+        w.set_cache(&[1, 2, 3]);
+        assert!(w.cache_matches(&[1, 2, 3]));
+        assert!(!w.cache_matches(&[1, 2, 4]));
+        w.set_cache(&[9]);
+        assert!(w.cache_matches(&[9]), "set_cache replaces, not appends");
+    }
+
+    #[test]
+    fn worker_errors_classify_to_distinct_exit_codes() {
+        let io_err = anyhow::Error::new(io::Error::new(io::ErrorKind::BrokenPipe, "gone"))
+            .context("wire: writing frame");
+        let f = classify_worker_err(3, io_err);
+        let wf = f.downcast_ref::<WorkerFailure>().expect("classified");
+        assert_eq!(wf.code, EXIT_SOCKET_LOST);
+        assert!(wf.reason.contains("worker 3"), "{}", wf.reason);
+
+        let proto = classify_worker_err(1, anyhow!("unexpected coordinator frame"));
+        let wf = proto.downcast_ref::<WorkerFailure>().expect("classified");
+        assert_eq!(wf.code, EXIT_PROTOCOL);
+
+        // already-classified failures pass through untouched
+        let pre = anyhow::Error::new(WorkerFailure { code: EXIT_CONNECT, reason: "x".into() });
+        let wf2 = classify_worker_err(0, pre);
+        assert_eq!(wf2.downcast_ref::<WorkerFailure>().map(|w| w.code), Some(EXIT_CONNECT));
     }
 }

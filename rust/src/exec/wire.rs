@@ -40,10 +40,16 @@ const TAG_JOB: u8 = 3;
 const TAG_GRADS: u8 = 4;
 const TAG_WORKER_ERR: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
+const TAG_SWEEP_DELTA: u8 = 7;
+const TAG_NEED_FULL: u8 = 8;
+/// Highest assigned tag — the header validity check admits exactly
+/// `TAG_HELLO..=TAG_MAX`.
+const TAG_MAX: u8 = TAG_NEED_FULL;
 
 /// Owned mirror of [`LayerParams`] — the borrowed view can't cross a
 /// process boundary, so the wire layer clones it into owned factors on
 /// encode and lends it back out via [`WireLayer::params`] on the worker.
+#[derive(Clone)]
 pub enum WireLayer {
     Factored { u: Matrix, s: Matrix, v: Matrix, bias: Vec<f32> },
     Dense { w: Matrix, bias: Vec<f32> },
@@ -98,24 +104,95 @@ pub enum Msg {
     WorkerErr { sweep: u64, shard: u32, msg: String },
     /// Coordinator → worker: exit cleanly.
     Shutdown,
+    /// Coordinator → worker: a sweep brief for a worker already holding
+    /// the previous snapshot — the complete per-layer content-hash list
+    /// (its length is the layer count) plus only the layers whose content
+    /// changed, as strictly increasing `(index, layer)` pairs. A worker
+    /// that cannot reconcile its cache against `layer_hashes` answers
+    /// [`Msg::NeedFull`] instead of computing on stale parameters.
+    SweepDelta {
+        sweep: u64,
+        arch: String,
+        phase: GradPhase,
+        layer_hashes: Vec<u64>,
+        changed: Vec<(u32, WireLayer)>,
+    },
+    /// Worker → coordinator: the delta for `sweep` did not reconcile (no
+    /// cached snapshot, layer count drift, or a post-patch hash mismatch)
+    /// — re-send the full [`Msg::Sweep`].
+    NeedFull { sweep: u64 },
 }
 
 // ---------------------------------------------------------------------------
 // encode
 // ---------------------------------------------------------------------------
 
-fn put_u32(out: &mut Vec<u8>, x: u32) {
-    out.extend_from_slice(&x.to_le_bytes());
+/// Byte-stream consumer for the encode helpers. `Vec<u8>` accumulates
+/// actual wire bytes; [`Fnv`] folds the identical byte stream into a
+/// content hash — one encoder, two sinks, so [`layer_hash`] is by
+/// construction the FNV-1a of the layer's wire encoding (locked by a
+/// property test below).
+trait Sink {
+    fn put(&mut self, bytes: &[u8]);
+    fn reserve(&mut self, _additional: usize) {}
 }
 
-fn put_u64(out: &mut Vec<u8>, x: u64) {
-    out.extend_from_slice(&x.to_le_bytes());
+impl Sink for Vec<u8> {
+    fn put(&mut self, bytes: &[u8]) {
+        self.extend_from_slice(bytes);
+    }
+    fn reserve(&mut self, additional: usize) {
+        Vec::reserve(self, additional);
+    }
 }
 
-fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher (std-only, deterministic across
+/// platforms — it folds the little-endian wire bytes, never native-endian
+/// memory).
+struct Fnv(u64);
+
+impl Sink for Fnv {
+    fn put(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut f = Fnv(FNV_OFFSET);
+    f.put(bytes);
+    f.0
+}
+
+/// Deterministic content hash of one layer: FNV-1a 64-bit over the
+/// layer's exact wire encoding (kind byte, matrix extents as u32 LE, f32
+/// bit patterns as LE) — so equal hashes ⇔ byte-identical briefs, and
+/// NaN payloads / signed zeros are distinguished exactly as the wire is.
+pub fn layer_hash(l: &WireLayer) -> Result<u64> {
+    let mut f = Fnv(FNV_OFFSET);
+    put_layer(&mut f, l)?;
+    Ok(f.0)
+}
+
+fn put_u32<S: Sink>(out: &mut S, x: u32) {
+    out.put(&x.to_le_bytes());
+}
+
+fn put_u64<S: Sink>(out: &mut S, x: u64) {
+    out.put(&x.to_le_bytes());
+}
+
+fn put_f32s<S: Sink>(out: &mut S, xs: &[f32]) {
     out.reserve(xs.len() * 4);
     for &x in xs {
-        out.extend_from_slice(&x.to_bits().to_le_bytes());
+        out.put(&x.to_bits().to_le_bytes());
     }
 }
 
@@ -133,14 +210,14 @@ fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
     Ok(())
 }
 
-fn put_vec_f32(out: &mut Vec<u8>, xs: &[f32]) -> Result<()> {
+fn put_vec_f32<S: Sink>(out: &mut S, xs: &[f32]) -> Result<()> {
     ensure!(xs.len() <= MAX_COUNT, "wire: f32 vector of {} entries is oversized", xs.len());
     put_u32(out, xs.len() as u32);
     put_f32s(out, xs);
     Ok(())
 }
 
-fn put_matrix(out: &mut Vec<u8>, m: &Matrix) -> Result<()> {
+fn put_matrix<S: Sink>(out: &mut S, m: &Matrix) -> Result<()> {
     let (rows, cols) = m.shape();
     ensure!(
         rows <= MAX_COUNT && cols <= MAX_COUNT,
@@ -152,22 +229,22 @@ fn put_matrix(out: &mut Vec<u8>, m: &Matrix) -> Result<()> {
     Ok(())
 }
 
-fn put_layer(out: &mut Vec<u8>, l: &WireLayer) -> Result<()> {
+fn put_layer<S: Sink>(out: &mut S, l: &WireLayer) -> Result<()> {
     match l {
         WireLayer::Factored { u, s, v, bias } => {
-            out.push(0);
+            out.put(&[0]);
             put_matrix(out, u)?;
             put_matrix(out, s)?;
             put_matrix(out, v)?;
             put_vec_f32(out, bias)?;
         }
         WireLayer::Dense { w, bias } => {
-            out.push(1);
+            out.put(&[1]);
             put_matrix(out, w)?;
             put_vec_f32(out, bias)?;
         }
         WireLayer::TwoFactor { u, v, bias } => {
-            out.push(2);
+            out.put(&[2]);
             put_matrix(out, u)?;
             put_matrix(out, v)?;
             put_vec_f32(out, bias)?;
@@ -226,66 +303,123 @@ fn put_batch(out: &mut Vec<u8>, b: &Batch) -> Result<()> {
     Ok(())
 }
 
-fn encode_payload(msg: &Msg) -> Result<(u8, Vec<u8>)> {
-    let mut p = Vec::new();
+/// Append `msg`'s payload bytes to `p`, returning the frame tag.
+fn encode_payload_into(p: &mut Vec<u8>, msg: &Msg) -> Result<u8> {
     let tag = match msg {
         Msg::Hello { worker } => {
-            put_u32(&mut p, *worker);
+            put_u32(p, *worker);
             TAG_HELLO
         }
         Msg::Sweep { sweep, arch, phase, layers } => {
-            put_u64(&mut p, *sweep);
-            put_str(&mut p, arch)?;
+            put_u64(p, *sweep);
+            put_str(p, arch)?;
             p.push(match phase {
                 GradPhase::Kl => 0,
                 GradPhase::S => 1,
             });
             ensure!(layers.len() <= MAX_COUNT, "wire: {} layers is oversized", layers.len());
-            put_u32(&mut p, layers.len() as u32);
+            put_u32(p, layers.len() as u32);
             for l in layers {
-                put_layer(&mut p, l)?;
+                put_layer(p, l)?;
             }
             TAG_SWEEP
         }
         Msg::Job { sweep, shard, batch } => {
-            put_u64(&mut p, *sweep);
-            put_u32(&mut p, *shard);
-            put_batch(&mut p, batch)?;
+            put_u64(p, *sweep);
+            put_u32(p, *shard);
+            put_batch(p, batch)?;
             TAG_JOB
         }
         Msg::Grads { sweep, shard, out } => {
-            put_u64(&mut p, *sweep);
-            put_u32(&mut p, *shard);
+            put_u64(p, *sweep);
+            put_u32(p, *shard);
             ensure!(out.layers.len() <= MAX_COUNT, "wire: {} grads is oversized", out.layers.len());
-            put_u32(&mut p, out.layers.len() as u32);
+            put_u32(p, out.layers.len() as u32);
             for g in &out.layers {
-                put_grads(&mut p, g)?;
+                put_grads(p, g)?;
             }
-            put_f32s(&mut p, &[out.loss, out.ncorrect]);
+            put_f32s(p, &[out.loss, out.ncorrect]);
             TAG_GRADS
         }
         Msg::WorkerErr { sweep, shard, msg } => {
-            put_u64(&mut p, *sweep);
-            put_u32(&mut p, *shard);
-            put_str(&mut p, msg)?;
+            put_u64(p, *sweep);
+            put_u32(p, *shard);
+            put_str(p, msg)?;
             TAG_WORKER_ERR
         }
         Msg::Shutdown => TAG_SHUTDOWN,
+        Msg::SweepDelta { sweep, arch, phase, layer_hashes, changed } => {
+            put_u64(p, *sweep);
+            put_str(p, arch)?;
+            p.push(match phase {
+                GradPhase::Kl => 0,
+                GradPhase::S => 1,
+            });
+            let n = layer_hashes.len();
+            ensure!(n <= MAX_COUNT, "wire: {n} layer hashes is oversized");
+            put_u32(p, n as u32);
+            for &h in layer_hashes {
+                put_u64(p, h);
+            }
+            ensure!(
+                changed.len() <= n,
+                "wire: delta with {} changed layers but only {n} slots",
+                changed.len()
+            );
+            put_u32(p, changed.len() as u32);
+            let mut prev: Option<u32> = None;
+            for (i, l) in changed {
+                ensure!(
+                    (*i as usize) < n && prev.map_or(true, |p| p < *i),
+                    "wire: delta indices must be strictly increasing and < {n} (got {i})"
+                );
+                prev = Some(*i);
+                put_u32(p, *i);
+                put_layer(p, l)?;
+            }
+            TAG_SWEEP_DELTA
+        }
+        Msg::NeedFull { sweep } => {
+            put_u64(p, *sweep);
+            TAG_NEED_FULL
+        }
     };
-    ensure!(p.len() <= MAX_FRAME_LEN, "wire: {}-byte payload exceeds MAX_FRAME_LEN", p.len());
-    Ok((tag, p))
+    Ok(tag)
 }
 
-/// Serialize one message as a length-prefixed frame and flush it.
-pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
-    let (tag, payload) = encode_payload(msg)?;
-    let mut header = [0u8; 5];
-    header[0] = tag;
-    header[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    w.write_all(&header).context("wire: writing frame header")?;
-    w.write_all(&payload).context("wire: writing frame payload")?;
-    w.flush().context("wire: flushing frame")?;
+/// Serialize one message as a complete `[tag][len][payload]` frame into
+/// `buf` (cleared first). This is the encode-once broadcast primitive:
+/// the same bytes can then go to any number of sockets via
+/// [`write_frame`], and `buf`'s capacity — typically a scratch-pool
+/// checkout — is reused across sweeps, so steady-state encoding touches
+/// no allocator.
+pub fn encode_frame_into(buf: &mut Vec<u8>, msg: &Msg) -> Result<()> {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 5]);
+    let tag = encode_payload_into(buf, msg)?;
+    let len = buf.len() - 5;
+    ensure!(len <= MAX_FRAME_LEN, "wire: {len}-byte payload exceeds MAX_FRAME_LEN");
+    buf[0] = tag;
+    buf[1..5].copy_from_slice(&(len as u32).to_le_bytes());
     Ok(())
+}
+
+/// Write one pre-encoded frame (from [`encode_frame_into`]) and flush.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> Result<()> {
+    w.write_all(frame).context("wire: writing frame")?;
+    w.flush().context("wire: flushing frame")
+}
+
+/// Serialize one message as a length-prefixed frame and flush it. The
+/// encode buffer is a scratch-pool checkout, so per-message senders (job
+/// dispatch, worker replies) stop allocating once the pool has seen
+/// their largest frame.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let pool = crate::util::scratch::global();
+    let mut buf = pool.take_bytes(0);
+    let r = encode_frame_into(&mut buf, msg).and_then(|()| write_frame(w, &buf));
+    pool.put_bytes(buf);
+    r
 }
 
 // ---------------------------------------------------------------------------
@@ -503,6 +637,36 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg> {
             msg: d.str("err message")?,
         },
         TAG_SHUTDOWN => Msg::Shutdown,
+        TAG_SWEEP_DELTA => {
+            let sweep = d.u64("delta sweep id")?;
+            let arch = d.str("delta arch")?;
+            let phase = match d.u8("delta phase")? {
+                0 => GradPhase::Kl,
+                1 => GradPhase::S,
+                p => bail!("wire: unknown grad phase {p}"),
+            };
+            let n = d.count(8, "delta layer hashes")?;
+            let mut layer_hashes = Vec::with_capacity(n);
+            for _ in 0..n {
+                layer_hashes.push(d.u64("delta layer hash")?);
+            }
+            // each changed entry is at least an index + a layer kind byte
+            let nc = d.count(5, "delta changed layers")?;
+            ensure!(nc <= n, "wire: delta with {nc} changed layers but only {n} slots");
+            let mut changed = Vec::with_capacity(nc);
+            let mut prev: Option<u32> = None;
+            for _ in 0..nc {
+                let i = d.u32("delta changed index")?;
+                ensure!(
+                    (i as usize) < n && prev.map_or(true, |p| p < i),
+                    "wire: delta indices must be strictly increasing and < {n} (got {i})"
+                );
+                prev = Some(i);
+                changed.push((i, d.layer()?));
+            }
+            Msg::SweepDelta { sweep, arch, phase, layer_hashes, changed }
+        }
+        TAG_NEED_FULL => Msg::NeedFull { sweep: d.u64("need-full sweep id")? },
         t => bail!("wire: unknown frame tag {t}"),
     };
     d.finish(match tag {
@@ -511,9 +675,43 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<Msg> {
         TAG_JOB => "job",
         TAG_GRADS => "grads",
         TAG_WORKER_ERR => "worker-err",
+        TAG_SWEEP_DELTA => "sweep-delta",
+        TAG_NEED_FULL => "need-full",
         _ => "shutdown",
     })?;
     Ok(msg)
+}
+
+/// Reconcile a worker's cached snapshot with a [`Msg::SweepDelta`]:
+/// replace the changed entries (hashing each received layer's actual
+/// content), then verify the complete per-layer hash list. Returns
+/// `Ok(false)` when the delta does not reconcile — layer-count drift, or
+/// any slot whose hash disagrees with the coordinator's list — in which
+/// case the cache must be dropped and a full snapshot requested; a
+/// partially patched cache is never computed on.
+///
+/// The verification chain is exact without rehashing unchanged layers:
+/// every cached hash was itself computed from received wire bytes when
+/// that layer last arrived, so comparing cached hashes for unchanged
+/// slots and freshly computed hashes for patched slots checks every
+/// entry of `layer_hashes` against content this worker actually holds.
+pub fn apply_delta(
+    layers: &mut [WireLayer],
+    hashes: &mut [u64],
+    layer_hashes: &[u64],
+    changed: Vec<(u32, WireLayer)>,
+) -> Result<bool> {
+    if layers.len() != layer_hashes.len() || hashes.len() != layer_hashes.len() {
+        return Ok(false);
+    }
+    for (i, l) in changed {
+        let i = i as usize;
+        // decode validated i against the hash-list length == layers.len()
+        ensure!(i < layers.len(), "wire: delta index {i} out of range");
+        hashes[i] = layer_hash(&l)?;
+        layers[i] = l;
+    }
+    Ok(hashes == layer_hashes)
 }
 
 /// Read one frame. Returns `Ok(None)` on a clean EOF at a frame boundary
@@ -535,7 +733,7 @@ pub fn read_msg_opt(r: &mut impl Read) -> Result<Option<Msg>> {
     let tag = header[0];
     let len = u32::from_le_bytes([header[1], header[2], header[3], header[4]]) as usize;
     ensure!(
-        (TAG_HELLO..=TAG_SHUTDOWN).contains(&tag),
+        (TAG_HELLO..=TAG_MAX).contains(&tag),
         "wire: unknown frame tag {tag} (corrupt stream?)"
     );
     ensure!(len <= MAX_FRAME_LEN, "wire: frame of {len} bytes exceeds MAX_FRAME_LEN");
@@ -756,6 +954,17 @@ mod tests {
                 },
             },
             Msg::WorkerErr { sweep: 2, shard: 0, msg: "boom".into() },
+            Msg::SweepDelta {
+                sweep: 3,
+                arch: "mlp_tiny".into(),
+                phase: GradPhase::S,
+                layer_hashes: vec![5, 6, 7],
+                changed: vec![(2, WireLayer::Dense {
+                    w: Matrix::from_vec(1, 2, vec![1.0, -0.0]),
+                    bias: vec![0.25],
+                })],
+            },
+            Msg::NeedFull { sweep: 3 },
         ];
         for msg in &msgs {
             let full = encode(msg);
@@ -824,6 +1033,214 @@ mod tests {
         frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
         frame.extend_from_slice(&p);
         assert!(decode(&frame).unwrap_err().to_string().contains("count"));
+    }
+
+    #[test]
+    fn layer_hash_is_fnv1a_of_the_wire_encoding() {
+        for m in nasty_matrices() {
+            for l in [
+                WireLayer::Dense { w: m.clone(), bias: vec![f32::NAN, -0.0] },
+                WireLayer::Factored { u: m.clone(), s: m.clone(), v: m.clone(), bias: vec![] },
+                WireLayer::TwoFactor { u: m.clone(), v: m.clone(), bias: vec![1.0] },
+            ] {
+                let mut bytes = Vec::new();
+                put_layer(&mut bytes, &l).unwrap();
+                assert_eq!(layer_hash(&l).unwrap(), fnv1a(&bytes));
+            }
+        }
+    }
+
+    #[test]
+    fn layer_hash_distinguishes_bit_level_and_framing_differences() {
+        let dense = |data: Vec<f32>, rows, cols, bias: Vec<f32>| {
+            layer_hash(&WireLayer::Dense { w: Matrix::from_vec(rows, cols, data), bias }).unwrap()
+        };
+        // -0.0 vs 0.0 and distinct NaN payloads are different content
+        assert_ne!(dense(vec![0.0], 1, 1, vec![]), dense(vec![-0.0], 1, 1, vec![]));
+        assert_ne!(
+            dense(vec![f32::NAN], 1, 1, vec![]),
+            dense(vec![f32::from_bits(0x7fc0_dead)], 1, 1, vec![])
+        );
+        // same data, transposed extent — framing is part of the hash
+        let d = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_ne!(dense(d.clone(), 2, 3, vec![]), dense(d.clone(), 3, 2, vec![]));
+        // identical content hashes identically (fresh allocations)
+        assert_eq!(dense(d.clone(), 2, 3, vec![0.5]), dense(d, 2, 3, vec![0.5]));
+        // kind byte is part of the hash: a dense W and a two-factor U of
+        // identical bytes must not collide structurally
+        let m = Matrix::from_vec(1, 1, vec![7.0]);
+        let a = layer_hash(&WireLayer::Dense { w: m.clone(), bias: vec![] }).unwrap();
+        let b =
+            layer_hash(&WireLayer::TwoFactor { u: m.clone(), v: m.clone(), bias: vec![] }).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sweep_delta_round_trips_adversarial_matrices_bitwise() {
+        for (i, m) in nasty_matrices().into_iter().enumerate() {
+            let changed_layer = WireLayer::Factored {
+                u: m.clone(),
+                s: Matrix::from_vec(1, 1, vec![f32::NAN]),
+                v: m.clone(),
+                bias: vec![-0.0, f32::INFINITY],
+            };
+            let msg = Msg::SweepDelta {
+                sweep: 42 + i as u64,
+                arch: "lenet".into(),
+                phase: GradPhase::S,
+                layer_hashes: vec![1, 0xdead_beef, u64::MAX, 0],
+                changed: vec![
+                    (1, changed_layer),
+                    (3, WireLayer::Dense { w: m.clone(), bias: vec![] }),
+                ],
+            };
+            let Some(Msg::SweepDelta { sweep, arch, phase, layer_hashes, changed }) =
+                decode(&encode(&msg)).unwrap()
+            else {
+                panic!("expected SweepDelta back");
+            };
+            assert_eq!(sweep, 42 + i as u64);
+            assert_eq!(arch, "lenet");
+            assert_eq!(phase, GradPhase::S);
+            assert_eq!(layer_hashes, vec![1, 0xdead_beef, u64::MAX, 0]);
+            assert_eq!(changed.len(), 2);
+            assert_eq!((changed[0].0, changed[1].0), (1, 3));
+            match (&changed[0].1, &changed[1].1) {
+                (WireLayer::Factored { u, s, v, bias }, WireLayer::Dense { w, bias: b2 }) => {
+                    assert!(mat_bits_eq(u, &m) && mat_bits_eq(v, &m), "case {i}");
+                    assert_eq!(s.data()[0].to_bits(), f32::NAN.to_bits());
+                    assert!(vec_bits_eq(bias, &[-0.0, f32::INFINITY]));
+                    assert!(mat_bits_eq(w, &m) && b2.is_empty());
+                }
+                _ => panic!("layer kinds shuffled (case {i})"),
+            }
+        }
+    }
+
+    #[test]
+    fn hash_only_delta_and_need_full_round_trip() {
+        // the steady-state frame: all hashes match, no layers shipped
+        let msg = Msg::SweepDelta {
+            sweep: 9,
+            arch: "mlp_tiny".into(),
+            phase: GradPhase::Kl,
+            layer_hashes: vec![11, 22, 33],
+            changed: vec![],
+        };
+        let Some(Msg::SweepDelta { layer_hashes, changed, .. }) = decode(&encode(&msg)).unwrap()
+        else {
+            panic!("expected SweepDelta back");
+        };
+        assert_eq!(layer_hashes, vec![11, 22, 33]);
+        assert!(changed.is_empty());
+
+        match decode(&encode(&Msg::NeedFull { sweep: 77 })).unwrap() {
+            Some(Msg::NeedFull { sweep }) => assert_eq!(sweep, 77),
+            _ => panic!("expected NeedFull"),
+        }
+    }
+
+    /// Hand-build a delta payload so decode-side validation is exercised
+    /// (the encoder refuses to produce these frames).
+    fn raw_delta_frame(hashes: usize, indices: &[u32]) -> Vec<u8> {
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_str(&mut p, "x").unwrap();
+        p.push(0); // phase Kl
+        put_u32(&mut p, hashes as u32);
+        for h in 0..hashes {
+            put_u64(&mut p, h as u64);
+        }
+        put_u32(&mut p, indices.len() as u32);
+        for &i in indices {
+            put_u32(&mut p, i);
+            put_layer(&mut p, &WireLayer::Dense { w: Matrix::zeros(0, 0), bias: vec![] }).unwrap();
+        }
+        let mut frame = vec![TAG_SWEEP_DELTA];
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&p);
+        frame
+    }
+
+    #[test]
+    fn corrupt_delta_frames_are_descriptive_errors() {
+        // changed index out of range
+        let e = decode(&raw_delta_frame(2, &[2])).unwrap_err().to_string();
+        assert!(e.contains("strictly increasing"), "{e}");
+        // non-increasing indices
+        let e = decode(&raw_delta_frame(3, &[1, 1])).unwrap_err().to_string();
+        assert!(e.contains("strictly increasing"), "{e}");
+        // more changed layers than slots
+        let e = decode(&raw_delta_frame(1, &[0, 0])).unwrap_err().to_string();
+        assert!(e.contains("changed layers"), "{e}");
+        // hash list larger than the bytes present
+        let mut p = Vec::new();
+        put_u64(&mut p, 1);
+        put_str(&mut p, "x").unwrap();
+        p.push(0);
+        put_u32(&mut p, 1_000_000); // claims 8MB of hashes, none present
+        let mut frame = vec![TAG_SWEEP_DELTA];
+        frame.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&p);
+        let e = decode(&frame).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn apply_delta_patches_verifies_and_rejects() {
+        let mk = |x: f32| WireLayer::Dense { w: Matrix::from_vec(1, 1, vec![x]), bias: vec![] };
+        let base: Vec<WireLayer> = vec![mk(1.0), mk(2.0), mk(3.0)];
+        let base_hashes: Vec<u64> = base.iter().map(|l| layer_hash(l).unwrap()).collect();
+
+        // patch slot 1, keep the rest — reconciles
+        let mut layers: Vec<WireLayer> = vec![mk(1.0), mk(2.0), mk(3.0)];
+        let mut hashes = base_hashes.clone();
+        let next = mk(9.0);
+        let mut want = base_hashes.clone();
+        want[1] = layer_hash(&next).unwrap();
+        assert!(apply_delta(&mut layers, &mut hashes, &want, vec![(1, next)]).unwrap());
+        match &layers[1] {
+            WireLayer::Dense { w, .. } => assert_eq!(w.data(), &[9.0]),
+            _ => panic!("patch missed"),
+        }
+
+        // hash-only delta over an unchanged cache — reconciles
+        assert!(apply_delta(&mut layers, &mut hashes, &want, vec![]).unwrap());
+
+        // a hash list disagreeing with the cache — rejected
+        let mut bad = want.clone();
+        bad[0] ^= 1;
+        assert!(!apply_delta(&mut layers, &mut hashes, &bad, vec![]).unwrap());
+
+        // layer-count drift — rejected before any patch
+        let mut short_layers = vec![mk(1.0)];
+        let mut short_hashes = vec![base_hashes[0]];
+        assert!(!apply_delta(&mut short_layers, &mut short_hashes, &want, vec![]).unwrap());
+    }
+
+    #[test]
+    fn encode_frame_into_matches_write_msg_bytes_and_reuses_capacity() {
+        let msg = Msg::Sweep {
+            sweep: 5,
+            arch: "mlp_tiny".into(),
+            phase: GradPhase::Kl,
+            layers: vec![WireLayer::Dense {
+                w: Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]),
+                bias: vec![0.1],
+            }],
+        };
+        let mut buf = Vec::new();
+        encode_frame_into(&mut buf, &msg).unwrap();
+        assert_eq!(buf, encode(&msg), "broadcast bytes must equal the per-socket path");
+        // re-encoding a smaller frame into the same buffer reuses capacity
+        let cap = buf.capacity();
+        encode_frame_into(&mut buf, &Msg::NeedFull { sweep: 1 }).unwrap();
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.len(), 5 + 8);
+        match decode(&buf).unwrap() {
+            Some(Msg::NeedFull { sweep }) => assert_eq!(sweep, 1),
+            _ => panic!("re-encoded frame corrupt"),
+        }
     }
 
     #[test]

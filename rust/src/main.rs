@@ -24,7 +24,7 @@ dlrt — Dynamical Low-Rank Training (NeurIPS 2022 reproduction)
 USAGE:
   dlrt train [--preset NAME | --config FILE] [--out DIR] [--epochs N]
              [--artifacts DIR] [--seed N] [--grad-shards K]
-             [--exec-workers N] [--exec-deadline-ms MS]
+             [--exec-workers N] [--exec-deadline-ms MS] [--exec-delta 0|1]
   dlrt eval --checkpoint FILE [--preset NAME]
   dlrt export --checkpoint FILE [--out FILE]
   dlrt serve --model FILE [--config FILE] [--host ADDR] [--port N (0=ephemeral)]
@@ -99,17 +99,34 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.exec.worker_deadline_ms = ms as u64;
         cfg.validate()?;
     }
+    if let Some(d) = args.get_usize("exec-delta")? {
+        anyhow::ensure!(d <= 1, "--exec-delta takes 0 or 1 (got {d})");
+        cfg.exec.delta = d == 1;
+        cfg.validate()?;
+    }
     let name = args.get_or("preset", "custom").to_string();
     let out = PathBuf::from(args.get_or("out", "runs"));
 
     let mut trainer = Trainer::new(cfg)?;
+    // Multi-process runs get a per-epoch wire line: bytes moved and the
+    // delta-brief hit rate for that epoch's window.
+    let wire = trainer.rt.dist().map(|d| d.wire_stats());
+    let mut wire_prev = dlrt::metrics::WireSnapshot::default();
     let record = trainer.run(&name, |e| {
         println!(
             "epoch {:>3}: train loss {:.4} acc {:.3} | val loss {:.4} acc {:.3} | ranks {:?} | {:.2}s",
             e.epoch, e.train_loss, e.train_acc, e.val_loss, e.val_acc, e.ranks, e.train_seconds
         );
+        if let Some(w) = &wire {
+            let snap = w.snapshot();
+            println!("           {}", snap.since(&wire_prev).summary());
+            wire_prev = snap;
+        }
     })?;
     println!("{}", record.summary());
+    if let Some(w) = &wire {
+        println!("{}", w.snapshot().summary());
+    }
     std::fs::create_dir_all(&out)?;
     record.save_json(&out.join(format!("{name}.json")))?;
     record.save_epochs_csv(&out.join(format!("{name}_epochs.csv")))?;
@@ -232,12 +249,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// --exec-workers N` spawns these itself; a multi-host deployment launches
 /// them by hand against the coordinator's `exec_addr`) and evaluate shard
 /// jobs until the coordinator says stop.
+///
+/// Failure exits are classified for supervisors: 3 = could not connect,
+/// 4 = coordinator socket lost mid-run (restart + reconnect is sensible;
+/// the fresh worker resyncs via `NeedFull`), 5 = protocol violation
+/// (restarting won't help). Each prints a one-line reason on stderr.
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("worker requires --connect HOST:PORT"))?;
     let id = args.get_usize("id")?.unwrap_or(0) as u32;
-    dlrt::exec::dist::run_worker(addr, id)
+    match dlrt::exec::dist::run_worker(addr, id) {
+        Ok(()) => Ok(()),
+        Err(e) => match e.downcast_ref::<dlrt::exec::dist::WorkerFailure>() {
+            Some(f) => {
+                eprintln!("dlrt worker: {f}");
+                std::process::exit(f.code);
+            }
+            None => Err(e),
+        },
+    }
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

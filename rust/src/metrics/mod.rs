@@ -5,8 +5,10 @@ mod clock;
 pub mod params;
 mod recorder;
 mod timer;
+mod wire;
 
 pub use clock::{Clock, ManualClock, SystemClock};
 pub use params::{compression_ratio, dense_params, lowrank_eval_params};
 pub use recorder::{EpochRecord, RunRecord};
 pub use timer::{PhaseClock, StepTimer, TimingStats};
+pub use wire::{WireSnapshot, WireStats};

@@ -1,0 +1,172 @@
+//! Wire-level transport counters for the distributed executor
+//! (DESIGN.md §13).
+//!
+//! One [`WireStats`] instance lives on the coordinator for the lifetime
+//! of a `DistExecutor`; every brief broadcast, job dispatch, and received
+//! reply bumps its atomics. The counters are diagnostics only — nothing
+//! in training state reads them back — so all accesses are `Relaxed` and
+//! the snapshot is advisory, not a synchronization point.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic transport counters, shared by reference between the
+/// coordinator's sweep loop and its per-worker reader threads.
+#[derive(Default)]
+pub struct WireStats {
+    /// Bytes written to worker sockets (headers included).
+    pub bytes_tx: AtomicU64,
+    /// Bytes received from worker sockets (payloads; measured at decode).
+    pub bytes_rx: AtomicU64,
+    /// Frames written to worker sockets.
+    pub frames_tx: AtomicU64,
+    /// Frames received from worker sockets.
+    pub frames_rx: AtomicU64,
+    /// Per-worker brief deliveries that went out as a `SweepDelta`.
+    pub delta_hits: AtomicU64,
+    /// Per-worker brief deliveries that needed the full `Sweep` (cold
+    /// cache, divergent cache, or a worker-requested `NeedFull` resync).
+    pub delta_misses: AtomicU64,
+}
+
+/// A point-in-time copy of [`WireStats`] — subtraction-friendly for
+/// per-epoch or per-bench windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireSnapshot {
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    pub frames_tx: u64,
+    pub frames_rx: u64,
+    pub delta_hits: u64,
+    pub delta_misses: u64,
+}
+
+impl WireStats {
+    pub fn new() -> WireStats {
+        WireStats::default()
+    }
+
+    pub fn add_tx(&self, bytes: u64, frames: u64) {
+        self.bytes_tx.fetch_add(bytes, Ordering::Relaxed);
+        self.frames_tx.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    pub fn add_rx(&self, bytes: u64) {
+        self.bytes_rx.fetch_add(bytes, Ordering::Relaxed);
+        self.frames_rx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn delta_hit(&self) {
+        self.delta_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn delta_miss(&self) {
+        self.delta_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> WireSnapshot {
+        WireSnapshot {
+            bytes_tx: self.bytes_tx.load(Ordering::Relaxed),
+            bytes_rx: self.bytes_rx.load(Ordering::Relaxed),
+            frames_tx: self.frames_tx.load(Ordering::Relaxed),
+            frames_rx: self.frames_rx.load(Ordering::Relaxed),
+            delta_hits: self.delta_hits.load(Ordering::Relaxed),
+            delta_misses: self.delta_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl WireSnapshot {
+    /// Counter deltas since an earlier snapshot (counters are monotonic,
+    /// so saturating is defensive only).
+    pub fn since(&self, earlier: &WireSnapshot) -> WireSnapshot {
+        WireSnapshot {
+            bytes_tx: self.bytes_tx.saturating_sub(earlier.bytes_tx),
+            bytes_rx: self.bytes_rx.saturating_sub(earlier.bytes_rx),
+            frames_tx: self.frames_tx.saturating_sub(earlier.frames_tx),
+            frames_rx: self.frames_rx.saturating_sub(earlier.frames_rx),
+            delta_hits: self.delta_hits.saturating_sub(earlier.delta_hits),
+            delta_misses: self.delta_misses.saturating_sub(earlier.delta_misses),
+        }
+    }
+
+    /// Fraction of brief deliveries served as deltas, or `None` before
+    /// any brief went out.
+    pub fn delta_hit_rate(&self) -> Option<f64> {
+        let total = self.delta_hits + self.delta_misses;
+        (total > 0).then(|| self.delta_hits as f64 / total as f64)
+    }
+
+    /// One-line human summary for the train log.
+    pub fn summary(&self) -> String {
+        let rate = match self.delta_hit_rate() {
+            Some(r) => format!("{:.0}%", r * 100.0),
+            None => "n/a".to_string(),
+        };
+        format!(
+            "wire: {} tx / {} rx over {} frames, delta hit rate {rate}",
+            human_bytes(self.bytes_tx),
+            human_bytes(self.bytes_rx),
+            self.frames_tx + self.frames_rx,
+        )
+    }
+}
+
+/// `1536` → `"1.5 KiB"`, stable two-significant-figure formatting.
+fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_window() {
+        let s = WireStats::new();
+        s.add_tx(1000, 2);
+        s.add_rx(300);
+        s.delta_hit();
+        s.delta_hit();
+        s.delta_miss();
+        let a = s.snapshot();
+        assert_eq!((a.bytes_tx, a.frames_tx, a.bytes_rx, a.frames_rx), (1000, 2, 300, 1));
+        assert_eq!((a.delta_hits, a.delta_misses), (2, 1));
+        s.add_tx(24, 1);
+        let b = s.snapshot().since(&a);
+        assert_eq!((b.bytes_tx, b.frames_tx), (24, 1));
+        assert_eq!(b.delta_hits, 0);
+    }
+
+    #[test]
+    fn hit_rate_and_summary_render() {
+        let s = WireStats::new();
+        assert_eq!(s.snapshot().delta_hit_rate(), None);
+        assert!(s.snapshot().summary().contains("n/a"));
+        s.delta_hit();
+        s.delta_hit();
+        s.delta_hit();
+        s.delta_miss();
+        let snap = s.snapshot();
+        let r = snap.delta_hit_rate().unwrap();
+        assert!((r - 0.75).abs() < 1e-12);
+        assert!(snap.summary().contains("75%"), "{}", snap.summary());
+    }
+
+    #[test]
+    fn human_bytes_picks_sane_units() {
+        assert_eq!(human_bytes(64), "64 B");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(3 << 20), "3.0 MiB");
+    }
+}

@@ -115,6 +115,7 @@ impl Runtime {
                 shards: cfg.grad_shards.max(1),
                 deadline: Duration::from_millis(cfg.exec.worker_deadline_ms),
                 addr: cfg.exec.addr.clone(),
+                delta: cfg.exec.delta,
                 ..DistOptions::default()
             };
             let clock = std::sync::Arc::new(crate::metrics::SystemClock);

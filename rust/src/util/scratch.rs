@@ -65,6 +65,12 @@ const MAX_F32_ELEMS: usize = 128 << 20;
 const MAX_U32_BUFS: usize = 64;
 const MAX_U32_ELEMS: usize = 16 << 20;
 
+/// Retention caps for the `u8` shelf (wire-frame encode buffers — the
+/// coordinator keeps a full-snapshot frame, a delta frame, and a job
+/// frame in flight per sweep; workers one reply frame each).
+const MAX_U8_BUFS: usize = 32;
+const MAX_U8_ELEMS: usize = 64 << 20;
+
 /// One element type's free list. `elems` tracks the summed capacity so the
 /// byte cap is O(1) to enforce.
 struct Shelf<T> {
@@ -129,6 +135,7 @@ impl<T> Shelf<T> {
 pub struct ScratchPool {
     f32s: Mutex<Shelf<f32>>,
     u32s: Mutex<Shelf<u32>>,
+    u8s: Mutex<Shelf<u8>>,
     fresh: AtomicU64,
     reused: AtomicU64,
 }
@@ -150,6 +157,7 @@ impl ScratchPool {
         ScratchPool {
             f32s: Mutex::new(Shelf::new(MAX_F32_BUFS, MAX_F32_ELEMS)),
             u32s: Mutex::new(Shelf::new(MAX_U32_BUFS, MAX_U32_ELEMS)),
+            u8s: Mutex::new(Shelf::new(MAX_U8_BUFS, MAX_U8_ELEMS)),
             fresh: AtomicU64::new(0),
             reused: AtomicU64::new(0),
         }
@@ -240,6 +248,35 @@ impl ScratchPool {
         }
     }
 
+    /// An **empty** byte buffer with capacity ≥ `hint` — wire-frame encode
+    /// workspaces, which are appended to rather than indexed. Unlike the
+    /// element shelves there is no small-request bypass: the final frame
+    /// size is unknown at checkout, so even a zero hint goes through the
+    /// pool, where a recycled buffer carries the capacity of the largest
+    /// frame its rotation slot has seen and steady-state encodes never
+    /// touch the allocator.
+    pub fn take_bytes(&self, hint: usize) -> Vec<u8> {
+        match lock(&self.u8s).take_best(hint) {
+            Some(mut b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b
+            }
+            None => {
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(hint.max(MIN_POOL_LEN))
+            }
+        }
+    }
+
+    /// Return a byte buffer for reuse (sub-[`MIN_POOL_LEN`] capacities are
+    /// dropped — they would crowd frame-sized workspaces off the shelf).
+    pub fn put_bytes(&self, buf: Vec<u8>) {
+        if buf.capacity() >= MIN_POOL_LEN {
+            lock(&self.u8s).put(buf);
+        }
+    }
+
     /// Pool-class requests that missed the free list and allocated. Flat
     /// across steady-state training steps ⇔ the hot path allocates nothing.
     pub fn fresh_allocs(&self) -> u64 {
@@ -251,9 +288,9 @@ impl ScratchPool {
         self.reused.load(Ordering::Relaxed)
     }
 
-    /// Idle buffers currently pooled (both shelves) — retention-cap tests.
+    /// Idle buffers currently pooled (all shelves) — retention-cap tests.
     pub fn idle_buffers(&self) -> usize {
-        lock(&self.f32s).bufs.len() + lock(&self.u32s).bufs.len()
+        lock(&self.f32s).bufs.len() + lock(&self.u32s).bufs.len() + lock(&self.u8s).bufs.len()
     }
 }
 
@@ -370,6 +407,54 @@ mod tests {
         let got = p.take(100_000);
         assert!(got.capacity() >= 100_000, "the big buffer was retained");
         assert_eq!(p.reuses(), 1);
+    }
+
+    #[test]
+    fn byte_shelf_recycles_encode_buffers_empty() {
+        let p = ScratchPool::new();
+        let mut a = p.take_bytes(4096);
+        assert!(a.is_empty() && a.capacity() >= 4096);
+        a.extend_from_slice(&[0xAB; 5000]); // grow past the hint
+        let grown = a.capacity();
+        p.put_bytes(a);
+        let b = p.take_bytes(256);
+        assert!(b.is_empty(), "recycled byte buffers come back cleared");
+        assert_eq!(b.capacity(), grown, "capacity earned by growth is retained");
+        assert_eq!(p.fresh_allocs(), 1);
+        assert_eq!(p.reuses(), 1);
+    }
+
+    #[test]
+    fn byte_shelf_pools_even_zero_hints_and_drops_tiny_caps() {
+        let p = ScratchPool::new();
+        // zero hint still goes through the pool (final frame size unknown)
+        let a = p.take_bytes(0);
+        assert_eq!(p.fresh_allocs(), 1);
+        assert!(a.capacity() >= MIN_POOL_LEN);
+        p.put_bytes(a);
+        assert_eq!(p.idle_buffers(), 1);
+        // a buffer that never grew past MIN_POOL_LEN is not retained
+        p.put_bytes(Vec::with_capacity(MIN_POOL_LEN - 1));
+        assert_eq!(p.idle_buffers(), 1);
+    }
+
+    #[test]
+    fn byte_shelf_steady_state_take_put_cycle_stops_allocating() {
+        let p = ScratchPool::new();
+        // warmup: a sweep's working set is (full frame, delta frame, job frame)
+        let bufs = [p.take_bytes(1 << 20), p.take_bytes(8192), p.take_bytes(65536)];
+        assert_eq!(p.fresh_allocs(), 3);
+        for b in bufs {
+            p.put_bytes(b);
+        }
+        for _ in 0..10 {
+            let bufs = [p.take_bytes(1 << 20), p.take_bytes(8192), p.take_bytes(65536)];
+            for b in bufs {
+                p.put_bytes(b);
+            }
+        }
+        assert_eq!(p.fresh_allocs(), 3, "steady-state encode cycles must not allocate");
+        assert_eq!(p.reuses(), 30);
     }
 
     #[test]

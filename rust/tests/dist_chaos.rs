@@ -14,7 +14,7 @@ use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams
 use dlrt::data::Batch;
 use dlrt::dlrt::LowRankFactors;
 use dlrt::exec::dist::{self, DistExecutor, DistOptions};
-use dlrt::exec::wire::{self, Msg};
+use dlrt::exec::wire::{self, Msg, WireLayer};
 use dlrt::linalg::{Matrix, Rng};
 use dlrt::metrics::SystemClock;
 use dlrt::runtime::Runtime;
@@ -168,7 +168,7 @@ fn adopt(
     connect_window: Duration,
 ) -> dlrt::Result<DistExecutor> {
     let addr = listener.local_addr().expect("listener addr").to_string();
-    let opts = DistOptions { workers, shards, deadline, addr, connect_window };
+    let opts = DistOptions { workers, shards, deadline, addr, connect_window, delta: true };
     DistExecutor::adopt(listener, &opts, Arc::new(SystemClock))
 }
 
@@ -329,6 +329,175 @@ fn hung_worker_past_deadline_is_struck_and_its_shards_reassigned() {
     drop(dist);
     h1.join().expect("hung worker thread");
     h2.join().expect("good worker thread");
+}
+
+#[test]
+fn fresh_worker_answers_a_delta_with_need_full_and_still_computes_bitwise() {
+    // The fresh-spawn / struck-and-replaced scenario (DESIGN.md §13): a
+    // worker holding no snapshot receives a `SweepDelta` as its first
+    // brief. It must not compute on parameters it does not hold — it
+    // answers `NeedFull`, parks the job that raced ahead of the resync,
+    // and serves it only after the full brief lands, bitwise-identical to
+    // a direct backend call.
+    let net = TinyNet::new(0x4E5);
+    let params = net.params();
+    let batch = tiny_batch(6);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let h = good_worker(addr, 9);
+    let (mut coord, _) = listener.accept().expect("accept");
+    match wire::read_msg(&mut coord).expect("hello") {
+        Msg::Hello { .. } => {}
+        _ => panic!("worker must open with Hello"),
+    }
+    let layers: Vec<WireLayer> = params.iter().map(WireLayer::from_params).collect();
+    let hashes: Vec<u64> =
+        layers.iter().map(|l| wire::layer_hash(l).expect("layer hash")).collect();
+    let sweep = 41;
+    let delta = Msg::SweepDelta {
+        sweep,
+        arch: "mlp_tiny".into(),
+        phase: GradPhase::Kl,
+        layer_hashes: hashes,
+        changed: Vec::new(),
+    };
+    wire::write_msg(&mut coord, &delta).expect("send delta to cold worker");
+    // a job races ahead of the resync — it must park, not fail
+    let job = Msg::Job { sweep, shard: 0, batch: batch.clone() };
+    wire::write_msg(&mut coord, &job).expect("send job");
+    match wire::read_msg(&mut coord).expect("worker reply") {
+        Msg::NeedFull { sweep: s } => assert_eq!(s, sweep, "NeedFull names the wrong sweep"),
+        _ => panic!("a cold worker must answer a delta brief with NeedFull"),
+    }
+    let full = Msg::Sweep { sweep, arch: "mlp_tiny".into(), phase: GradPhase::Kl, layers };
+    wire::write_msg(&mut coord, &full).expect("send full resync");
+    let out = match wire::read_msg(&mut coord).expect("grads reply") {
+        Msg::Grads { sweep: s, shard, out } => {
+            assert_eq!((s, shard), (sweep, 0), "parked job answered under the wrong identity");
+            out
+        }
+        Msg::WorkerErr { msg, .. } => panic!("worker refused the parked job: {msg}"),
+        _ => panic!("expected Grads for the parked job"),
+    };
+    let reference = NativeBackend::new()
+        .grads("mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect("direct backend reference");
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "post-resync gradients drifted from the direct backend call"
+    );
+    wire::write_msg(&mut coord, &Msg::Shutdown).expect("shutdown");
+    h.join().expect("worker thread");
+}
+
+#[test]
+fn coordinator_refusing_need_full_is_a_protocol_failure_not_a_hang() {
+    // A second delta for the sweep the worker already answered `NeedFull`
+    // for means the coordinator refuses to resync it; the worker must die
+    // with the distinct protocol exit code instead of waiting forever (or
+    // worse, computing on parameters it never received).
+    let net = TinyNet::new(0xBAD5);
+    let params = net.params();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let h = thread::spawn(move || {
+        let stream = TcpStream::connect(addr).expect("worker connect");
+        let backend = NativeBackend::new();
+        dist::serve_worker(stream, &backend, 5)
+    });
+    let (mut coord, _) = listener.accept().expect("accept");
+    match wire::read_msg(&mut coord).expect("hello") {
+        Msg::Hello { .. } => {}
+        _ => panic!("worker must open with Hello"),
+    }
+    let layers: Vec<WireLayer> = params.iter().map(WireLayer::from_params).collect();
+    let hashes: Vec<u64> =
+        layers.iter().map(|l| wire::layer_hash(l).expect("layer hash")).collect();
+    let delta = Msg::SweepDelta {
+        sweep: 7,
+        arch: "mlp_tiny".into(),
+        phase: GradPhase::Kl,
+        layer_hashes: hashes,
+        changed: Vec::new(),
+    };
+    wire::write_msg(&mut coord, &delta).expect("first delta");
+    match wire::read_msg(&mut coord).expect("worker reply") {
+        Msg::NeedFull { sweep } => assert_eq!(sweep, 7),
+        _ => panic!("cold worker must answer NeedFull"),
+    }
+    wire::write_msg(&mut coord, &delta).expect("refuse the resync with a second delta");
+    let err = h
+        .join()
+        .expect("worker thread")
+        .expect_err("a refused NeedFull must fail the worker");
+    let wf = err
+        .downcast_ref::<dist::WorkerFailure>()
+        .expect("worker death must carry a classified WorkerFailure");
+    assert_eq!(wf.code, dist::EXIT_PROTOCOL, "refused resync is a protocol failure");
+    assert!(wf.reason.contains("NeedFull"), "reason must name the refusal: {}", wf.reason);
+}
+
+#[test]
+fn killed_worker_after_warm_caches_keeps_delta_sweeps_bitwise() {
+    // Kill-then-continue under delta briefs: warm both caches over two
+    // sweeps (the second rides the delta path), kill one real worker
+    // process, mutate a layer, and the next delta sweep must complete on
+    // the survivor — bitwise-identical to the in-process executor.
+    let mut net = TinyNet::new(0x5A17);
+    let batch = tiny_batch(7);
+    let shards = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let exe = env!("CARGO_BIN_EXE_dlrt");
+    let mut children: Vec<_> = (0..2)
+        .map(|i| {
+            Command::new(exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--id")
+                .arg(i.to_string())
+                .stdin(Stdio::null())
+                .spawn()
+                .expect("spawn dlrt worker")
+        })
+        .collect();
+    let dist = adopt(listener, 2, shards, Duration::from_secs(10), Duration::from_secs(30))
+        .expect("adopt");
+    assert_eq!(dist.connected_workers(), 2);
+    let backend = NativeBackend::new();
+    for _ in 0..2 {
+        let params = net.params();
+        let out = dist
+            .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+            .expect("warmup sweep");
+        let reference = in_process_reference(&params, GradPhase::Kl, &batch, shards);
+        assert!(grads_bitwise_eq(&out, &reference), "warmup sweep drifted");
+    }
+    assert!(
+        dist.wire_stats().snapshot().delta_hits > 0,
+        "the warm re-sweep must ride the delta path"
+    );
+    children[0].kill().expect("kill worker 0");
+    children[0].wait().expect("reap worker 0");
+    for b in net.f[0].bias.iter_mut() {
+        *b += 0.5;
+    }
+    let params = net.params();
+    let out = dist
+        .grads(&backend, "mlp_tiny", &params, GradPhase::Kl, &batch)
+        .expect("delta sweep must survive a killed worker");
+    let reference = in_process_reference(&params, GradPhase::Kl, &batch, shards);
+    assert!(
+        grads_bitwise_eq(&out, &reference),
+        "post-kill delta sweep drifted from the in-process result"
+    );
+    dist.shutdown();
+    drop(dist);
+    for child in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
 }
 
 #[test]

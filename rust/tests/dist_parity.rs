@@ -9,6 +9,12 @@
 //! The worker binary comes from `env!("CARGO_BIN_EXE_dlrt")` (Cargo
 //! builds and exposes the real CLI to integration tests); the test binds
 //! its own loopback listener and adopts the spawned workers.
+//!
+//! Delta-encoded sweep briefs (DESIGN.md §13) are covered here too: the
+//! same multi-sweep schedule runs through a delta-enabled cluster, a
+//! delta-disabled cluster, and the in-process executor, and all three
+//! must agree bitwise — the transport decision is not allowed to be
+//! visible in the output.
 
 use dlrt::backend::{ComputeBackend, GradPhase, GradsOut, LayerGrads, LayerParams, NativeBackend};
 use dlrt::baselines::he_normal;
@@ -128,7 +134,7 @@ fn grads_bitwise_eq(a: &GradsOut, b: &GradsOut) -> bool {
 /// Bind a loopback listener, launch `workers` real `dlrt worker`
 /// subprocesses pointed at it, and adopt them into a coordinator.
 /// Callers must [`reap`] the children when done.
-fn real_worker_cluster(workers: usize, shards: usize) -> (DistExecutor, Vec<Child>) {
+fn real_worker_cluster(workers: usize, shards: usize, delta: bool) -> (DistExecutor, Vec<Child>) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback listener");
     let addr = listener.local_addr().expect("listener addr");
     let exe = env!("CARGO_BIN_EXE_dlrt");
@@ -151,6 +157,7 @@ fn real_worker_cluster(workers: usize, shards: usize) -> (DistExecutor, Vec<Chil
         deadline: Duration::from_secs(30),
         addr: addr.to_string(),
         connect_window: Duration::from_secs(30),
+        delta,
     };
     let dist = DistExecutor::adopt(listener, &opts, Arc::new(SystemClock))
         .expect("adopt spawned workers");
@@ -178,7 +185,7 @@ fn multi_process_grads_bitwise_match_in_process_sharded() {
     let in_process = Runtime::native().with_grad_shards(shards).expect("sharded runtime");
     let backend = NativeBackend::new();
     for workers in [2usize, 3] {
-        let (dist, children) = real_worker_cluster(workers, shards);
+        let (dist, children) = real_worker_cluster(workers, shards, true);
         for phase in [GradPhase::Kl, GradPhase::S] {
             let reference = in_process.grads("lenet", &params, phase, &batch).expect("in-process");
             let distributed =
@@ -201,12 +208,117 @@ fn repeated_distributed_sweeps_are_bitwise_deterministic() {
     let params = net.params();
     let batch = lenet_batch(8);
     let backend = NativeBackend::new();
-    let (dist, children) = real_worker_cluster(2, 3);
+    let (dist, children) = real_worker_cluster(2, 3, true);
     let a = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("first sweep");
     let b = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("second sweep");
     let c = dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("third sweep");
     assert!(grads_bitwise_eq(&a, &b), "distributed rerun drifted");
     assert!(grads_bitwise_eq(&a, &c), "distributed rerun drifted on the third sweep");
+    // re-sweeps of an unchanged snapshot must ride the delta path: both
+    // workers hold sweep 1's brief, so sweeps 2 and 3 are hash-only deltas
+    let snap = dist.wire_stats().snapshot();
+    assert!(
+        snap.delta_hits >= 4,
+        "expected >= 4 delta brief deliveries (2 workers x 2 re-sweeps), got {}",
+        snap.delta_hits
+    );
+    reap(dist, children);
+}
+
+#[test]
+fn delta_briefs_match_full_briefs_and_in_process_bitwise() {
+    // The transport decision (delta vs full brief) must be invisible in
+    // the gradients. Run one multi-sweep schedule — repeated sweeps on an
+    // unchanged snapshot (caches engage, hash-only deltas), then a
+    // mutated layer (the delta ships exactly the changed layer) — through
+    // a delta-enabled cluster, a delta-disabled cluster, and the
+    // in-process sharded executor, and compare every sweep bitwise.
+    let shards = 4;
+    let batch = lenet_batch(13);
+    let backend = NativeBackend::new();
+    for workers in [2usize, 3] {
+        let (delta_dist, delta_children) = real_worker_cluster(workers, shards, true);
+        let (full_dist, full_children) = real_worker_cluster(workers, shards, false);
+        assert!(delta_dist.delta_enabled());
+        assert!(!full_dist.delta_enabled());
+        let in_process = Runtime::native().with_grad_shards(shards).expect("sharded runtime");
+        let mut net = MixedNet::new(0xD317A);
+        for step in 0..3 {
+            if step == 2 {
+                // one layer changes between sweeps: only it may ride the
+                // delta, and the worker-side patched cache must hash-match
+                // the full snapshot before any job is computed
+                for v in net.b1.iter_mut() {
+                    *v += 0.25;
+                }
+            }
+            let params = net.params();
+            for phase in [GradPhase::Kl, GradPhase::S] {
+                let reference =
+                    in_process.grads("lenet", &params, phase, &batch).expect("in-process");
+                let via_delta = delta_dist
+                    .grads(&backend, "lenet", &params, phase, &batch)
+                    .expect("delta-cluster sweep");
+                let via_full = full_dist
+                    .grads(&backend, "lenet", &params, phase, &batch)
+                    .expect("full-cluster sweep");
+                assert!(
+                    grads_bitwise_eq(&via_delta, &reference),
+                    "workers={workers} step={step} {phase:?}: delta-brief cluster drifted \
+                     from the in-process executor"
+                );
+                assert!(
+                    grads_bitwise_eq(&via_full, &reference),
+                    "workers={workers} step={step} {phase:?}: full-brief cluster drifted \
+                     from the in-process executor"
+                );
+            }
+        }
+        // the schedule must actually have exercised both transports
+        let d = delta_dist.wire_stats().snapshot();
+        assert!(d.delta_hits > 0, "delta cluster never delivered a delta brief");
+        let f = full_dist.wire_stats().snapshot();
+        assert_eq!(f.delta_hits, 0, "delta-disabled cluster delivered a delta brief");
+        assert!(
+            d.bytes_tx < f.bytes_tx,
+            "delta briefs did not reduce bytes on the wire ({} vs {})",
+            d.bytes_tx,
+            f.bytes_tx
+        );
+        reap(delta_dist, delta_children);
+        reap(full_dist, full_children);
+    }
+}
+
+#[test]
+fn steady_state_sweep_encode_draws_from_the_scratch_pool() {
+    // Acceptance (DESIGN.md §13): once the size hints are warm, the
+    // coordinator's sweep encode path (brief broadcast + job sends) draws
+    // every buffer from the global scratch pool instead of allocating.
+    let net = MixedNet::new(0x57EAD);
+    let params = net.params();
+    let batch = lenet_batch(17);
+    let backend = NativeBackend::new();
+    let (dist, children) = real_worker_cluster(2, 3, true);
+    let pool = dlrt::util::scratch::global();
+    for _ in 0..3 {
+        dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("warmup sweep");
+    }
+    // The global pool is shared with concurrently running tests, so one
+    // window can see a foreign checkout steal a pooled buffer; require a
+    // clean window rather than forbidding all interference.
+    let mut flat = false;
+    for _ in 0..8 {
+        let before = pool.fresh_allocs();
+        for _ in 0..2 {
+            dist.grads(&backend, "lenet", &params, GradPhase::Kl, &batch).expect("steady sweep");
+        }
+        if pool.fresh_allocs() == before {
+            flat = true;
+            break;
+        }
+    }
+    assert!(flat, "steady-state sweeps kept allocating fresh encode buffers");
     reap(dist, children);
 }
 
@@ -218,7 +330,7 @@ fn shards_one_is_a_direct_backend_passthrough() {
     let params = net.params();
     let batch = lenet_batch(9);
     let backend = NativeBackend::new();
-    let (dist, children) = real_worker_cluster(2, 1);
+    let (dist, children) = real_worker_cluster(2, 1, true);
     for phase in [GradPhase::Kl, GradPhase::S] {
         let direct = backend.grads("lenet", &params, phase, &batch).expect("direct");
         let through = dist.grads(&backend, "lenet", &params, phase, &batch).expect("dist k=1");
@@ -243,7 +355,7 @@ fn runtime_routes_grads_through_an_attached_dist_executor() {
         .expect("sharded runtime")
         .grads("lenet", &params, GradPhase::Kl, &batch)
         .expect("in-process");
-    let (dist, children) = real_worker_cluster(2, shards);
+    let (dist, children) = real_worker_cluster(2, shards, true);
     let rt = Runtime::native().with_grad_shards(shards).expect("runtime").with_dist(dist);
     assert!(rt.dist().is_some());
     let out = rt.grads("lenet", &params, GradPhase::Kl, &batch).expect("runtime dist grads");
